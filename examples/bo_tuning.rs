@@ -1,0 +1,62 @@
+//! BO autotuning walkthrough (paper Sec. 4.1 / Fig. 4): tune S_p for any
+//! preset model, print the sample trajectory, the GP posterior, and the
+//! Appendix K.2 re-tuning trigger in action on a degraded network.
+//!
+//! Run: `cargo run --release --example bo_tuning -- [--model NAME]`
+
+use flowmoe::bo::{should_retune, BoTuner};
+use flowmoe::cli::Args;
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::sched::{iteration_time, Policy};
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.get_or("model", "BERT-Large-MoE");
+    let cfg = preset(&model).expect("unknown model");
+    let cl = ClusterProfile::cluster1(args.usize_or("gpus", 16));
+
+    let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
+    let max = cfg.ar_bytes_per_block();
+    println!("tuning S_p for {model} (AR tensor/block = {:.2} MB)", max / 1e6);
+
+    let mut bo = BoTuner::new(max, args.usize_or("seed", 42) as u64);
+    for i in 0..8 {
+        let sp = bo.suggest();
+        let t = obj(sp);
+        bo.observe(sp, t);
+        println!("  trial {i}: S_p = {:7.3} MB -> {:8.2} ms", sp / 1e6, t * 1e3);
+    }
+    let (best_sp, best_t) = bo.best().unwrap();
+    println!("\nbest: S_p = {:.3} MB -> {:.2} ms", best_sp / 1e6, best_t * 1e3);
+
+    println!("\nGP posterior across the range:");
+    for i in 1..=10 {
+        let sp = max * i as f64 / 10.0;
+        let (mu, sigma) = bo.posterior(sp);
+        println!(
+            "  S_p {:7.2} MB: {:8.2} ms ± {:6.2}",
+            sp / 1e6,
+            mu * 1e3,
+            2.0 * sigma * 1e3
+        );
+    }
+
+    // Appendix K.2: simulate a network degradation and re-tune
+    let mut degraded = cl.clone();
+    degraded.net.ar_bw *= 0.3;
+    degraded.net.inter_bw *= 0.3;
+    let now = iteration_time(&cfg, &degraded, &Policy::flow_moe(2, best_sp)).0;
+    println!(
+        "\nnetwork degraded: iteration {:.2} ms vs tuned {:.2} ms -> retune? {}",
+        now * 1e3,
+        best_t * 1e3,
+        should_retune(now, best_t, 0.1)
+    );
+    let mut bo2 = BoTuner::new(max, 7);
+    let new_sp = bo2.tune(8, |sp| iteration_time(&cfg, &degraded, &Policy::flow_moe(2, sp)).0);
+    println!(
+        "re-tuned: S_p = {:.3} MB -> {:.2} ms",
+        new_sp / 1e6,
+        iteration_time(&cfg, &degraded, &Policy::flow_moe(2, new_sp)).0 * 1e3
+    );
+}

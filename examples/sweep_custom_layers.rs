@@ -1,0 +1,62 @@
+//! The paper's customized-MoE-layer sweep (Fig. 6): B x f x N x M x H
+//! grid with OOM filtering, FlowMoE-vs-ScheMoE speedup histogram on both
+//! clusters.
+//!
+//! Run: `cargo run --release --example sweep_custom_layers -- [--limit N]`
+
+use flowmoe::cli::Args;
+use flowmoe::config::{ClusterProfile, ModelCfg};
+use flowmoe::report::histogram;
+use flowmoe::sched::{iteration_time, Policy};
+
+fn main() {
+    let args = Args::from_env();
+    let limit = args.usize_or("limit", usize::MAX);
+    for (cl, gpus) in [(ClusterProfile::cluster1(16), 16usize), (ClusterProfile::cluster2(8), 8)] {
+        let mut speedups = Vec::new();
+        let mut oom = 0usize;
+        let mut wins = 0usize;
+        'outer: for b in [2usize, 4, 8] {
+            for f in [1.0, 1.1, 1.2] {
+                for n in [512usize, 1024, 2048] {
+                    for m in [512usize, 1024, 2048, 4096, 8192] {
+                        for h in [512usize, 1024, 2048, 4096, 8192] {
+                            if speedups.len() >= limit {
+                                break 'outer;
+                            }
+                            let cfg = ModelCfg::custom_layer(b, f, n, m, h, gpus);
+                            if flowmoe::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0) > cl.mem_bytes {
+                                oom += 1;
+                                continue;
+                            }
+                            let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(2)).0;
+                            let flow = [1e6, 4e6, 16e6, 64e6]
+                                .iter()
+                                .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, sp)).0)
+                                .fold(f64::INFINITY, f64::min);
+                            if flow < sche {
+                                wins += 1;
+                            }
+                            speedups.push(sche / flow);
+                        }
+                    }
+                }
+            }
+        }
+        println!(
+            "{}",
+            histogram(
+                &format!(
+                    "{} x{gpus}: FlowMoE/ScheMoE speedup over {} valid layers ({oom} OOM, win rate {:.0}%)",
+                    cl.name,
+                    speedups.len(),
+                    100.0 * wins as f64 / speedups.len().max(1) as f64
+                ),
+                &speedups,
+                12,
+                40
+            )
+        );
+        println!("mean speedup: {:.3} (paper: 1.26)", flowmoe::util::mean(&speedups));
+    }
+}

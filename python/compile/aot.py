@@ -1,0 +1,288 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for rust/PJRT.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+For every exported entry point we also emit a line-based manifest
+(``artifacts/manifest.txt``) describing the positional input/output buffers
+(name, shape, dtype, role) that the rust runtime parses to allocate and
+wire buffers — no shape knowledge is duplicated in rust.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--configs tiny,e2e]``
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import PRESETS, MoEConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_shape(shape):
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest_lines = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, in_specs, in_names, out_names, config: str, extra=""):
+        """Lower ``fn`` at ``in_specs`` and record manifest entries.
+
+        in_specs is a flat list of ShapeDtypeStructs; fn takes them as
+        positional args and returns a flat tuple.
+        """
+        path = f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        # output shapes from the lowered signature
+        out_avals = lowered.out_info
+        flat_out = jax.tree_util.tree_leaves(out_avals)
+        assert len(flat_out) == len(out_names), (
+            f"{name}: {len(flat_out)} outputs vs {len(out_names)} names"
+        )
+        lines = [f"artifact {name} file={path} config={config} {extra}".rstrip()]
+        for spec, nm in zip(in_specs, in_names):
+            dt = "i32" if spec.dtype == jnp.int32 else "f32"
+            lines.append(f"  input {nm} {_fmt_shape(spec.shape)} {dt}")
+        for out, nm in zip(flat_out, out_names):
+            dt = "i32" if out.dtype == jnp.int32 else "f32"
+            lines.append(f"  output {nm} {_fmt_shape(out.shape)} {dt}")
+        self.manifest_lines.extend(lines)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+    def finish(self, regenerated_configs):
+        """Write the manifest, keeping entries of configs not regenerated
+        this run (so partial re-exports don't clobber other configs)."""
+        path = os.path.join(self.out_dir, "manifest.txt")
+        kept = []
+        if os.path.exists(path):
+            keep = False
+            for line in open(path):
+                line = line.rstrip("\n")
+                if line.startswith("artifact "):
+                    keep = f"config={line.split('config=')[1].split()[0]}".split("=")[1] not in regenerated_configs
+                if keep and line:
+                    kept.append(line)
+        with open(path, "w") as f:
+            f.write("\n".join(kept + self.manifest_lines) + "\n")
+        print(f"wrote manifest.txt ({len(kept) + len(self.manifest_lines)} lines)")
+
+
+def param_specs(cfg: MoEConfig):
+    return [_spec(s) for _, s in model.param_spec(cfg)]
+
+
+def param_names(cfg: MoEConfig, prefix="param"):
+    return [f"{prefix}.{n}" for n, _ in model.param_spec(cfg)]
+
+
+def block_specs(cfg: MoEConfig):
+    return [_spec(s) for _, s in model.param_spec(cfg)[1 : 1 + model.BLOCK_TENSORS]]
+
+
+def block_names(cfg: MoEConfig, prefix):
+    names = [n.split(".", 1)[1] for n, _ in model.param_spec(cfg)[1 : 1 + model.BLOCK_TENSORS]]
+    return [f"{prefix}.{n}" for n in names]
+
+
+def export_config(ex: Exporter, cfg: MoEConfig, ep_workers: int = 0, micro_r: int = 2,
+                  use_pallas: bool = True):
+    # use_pallas=False lowers the pure-jnp oracle path instead of the
+    # interpret-mode Pallas kernels. Semantics are identical (the test
+    # suite asserts kernel == oracle everywhere); interpret-mode emulation
+    # is ~11x slower on the CPU PJRT backend (EXPERIMENTS.md §Perf), so
+    # the big e2e training config lowers the oracle path while the tiny
+    # config keeps the full Pallas path as the TPU-shaped artifact.
+    c = cfg.name
+    n_p = len(model.param_spec(cfg))
+    psp, pnm = param_specs(cfg), param_names(cfg)
+    tok = _spec((cfg.B, cfg.N), I32)
+
+    print(f"[{c}] fused train_step / grad_step", flush=True)
+
+    def ts(*args):
+        params = list(args[:n_p])
+        moms = list(args[n_p : 2 * n_p])
+        tokens, lr = args[2 * n_p], args[2 * n_p + 1]
+        np_, nm_, loss = model.train_step(params, moms, tokens, lr, cfg, use_pallas=use_pallas)
+        return tuple(np_) + tuple(nm_) + (loss,)
+
+    ex.export(
+        f"train_step_{c}", ts,
+        psp + psp + [tok, _spec(())],
+        pnm + param_names(cfg, "mom") + ["tokens", "lr"],
+        param_names(cfg, "new_param") + param_names(cfg, "new_mom") + ["loss"],
+        c,
+    )
+
+    def gs(*args):
+        params = list(args[:n_p])
+        tokens = args[n_p]
+        loss, grads = model.grad_step(params, tokens, cfg, use_pallas=use_pallas)
+        return (loss,) + tuple(grads)
+
+    ex.export(
+        f"grad_step_{c}", gs,
+        psp + [tok],
+        pnm + ["tokens"],
+        ["loss"] + param_names(cfg, "grad"),
+        c,
+    )
+
+    # --- per-block pieces at microbatch granularity (pipelined trainer) ---
+    bm = cfg.B // micro_r
+    assert cfg.B % micro_r == 0
+    tm = bm * cfg.N
+    mcfg = MoEConfig(**{**cfg.__dict__, "name": c, "B": bm})
+    bsp, x_sp = block_specs(cfg), _spec((tm, cfg.M))
+    tok_m = _spec((bm, cfg.N), I32)
+    print(f"[{c}] per-block microbatch pieces (R={micro_r}, Tm={tm})", flush=True)
+
+    def bf(*args):
+        return (model.block_fwd(list(args[:9]), args[9], mcfg, use_pallas=use_pallas),)
+
+    ex.export(
+        f"block_fwd_{c}", bf, bsp + [x_sp],
+        block_names(cfg, "bp") + ["x"], ["y"], c,
+        extra=f"micro_batch={bm}",
+    )
+
+    def bb(*args):
+        return tuple(model.block_bwd(list(args[:9]), args[9], args[10], mcfg, use_pallas=use_pallas))
+
+    ex.export(
+        f"block_bwd_{c}", bb, bsp + [x_sp, x_sp],
+        block_names(cfg, "bp") + ["x", "dy"],
+        block_names(cfg, "grad") + ["dx"], c,
+        extra=f"micro_batch={bm}",
+    )
+
+    emb_sp = _spec((cfg.vocab, cfg.M))
+    nf_sp = _spec((cfg.M,))
+
+    ex.export(
+        f"embed_fwd_{c}",
+        lambda e, t: (model.embed_fwd(e, t, mcfg),),
+        [emb_sp, tok_m], ["param.embed", "tokens"], ["x"], c,
+        extra=f"micro_batch={bm}",
+    )
+
+    def hl(e, nf, xf, t):
+        return model.head_loss_fwd_bwd(e, nf, xf, t, mcfg)
+
+    ex.export(
+        f"head_loss_{c}", hl, [emb_sp, nf_sp, x_sp, tok_m],
+        ["param.embed", "param.normf", "xf", "tokens"],
+        ["loss", "dxf", "grad.embed_head", "grad.normf"], c,
+        extra=f"micro_batch={bm}",
+    )
+
+    ex.export(
+        f"embed_bwd_{c}",
+        lambda t, dx: (model.embed_bwd(t, dx, mcfg),),
+        [tok_m, x_sp],
+        ["tokens", "dx"], ["grad.embed"], c,
+        extra=f"micro_batch={bm}",
+    )
+
+    # --- expert-parallel layer pieces (real-A2A path), fixed worker count ---
+    if ep_workers:
+        P = ep_workers
+        assert cfg.E % P == 0
+        el = cfg.E // P
+        C = cfg.capacity()  # per-source-worker per-expert capacity
+        cw = C * P  # tokens an expert owner may receive in total
+        atp_sp = bsp[:7]
+        atp_nm = block_names(cfg, "atp")[:7]
+        print(f"[{c}] EP pieces (P={P}, Elocal={el}, Cw={cw})", flush=True)
+
+        def af(*args):
+            h, u, probs, idx, gate = model.at_fwd(list(args[:7]), args[7], mcfg)
+            return h, u, probs, idx, gate
+
+        ex.export(
+            f"at_fwd_{c}", af, atp_sp + [x_sp],
+            atp_nm + ["x"], ["h", "u", "probs", "idx", "gate"], c,
+            extra=f"micro_batch={bm} ep_workers={P}",
+        )
+
+        def ab(*args):
+            return tuple(model.at_bwd(list(args[:7]), args[7], args[8], args[9], args[10], mcfg))
+
+        ex.export(
+            f"at_bwd_{c}", ab,
+            atp_sp + [x_sp, x_sp, x_sp, _spec((tm, cfg.k))],
+            atp_nm + ["x", "dh", "du", "dgate"],
+            [n.replace("atp.", "grad.") for n in atp_nm] + ["dx"], c,
+            extra=f"micro_batch={bm} ep_workers={P}",
+        )
+
+        w1_sp = _spec((el, cfg.M, cfg.H))
+        w2_sp = _spec((el, cfg.H, cfg.M))
+        xd_sp = _spec((el, cw, cfg.M))
+
+        ex.export(
+            f"exp_fwd_{c}",
+            lambda w1, w2, xd: (model.exp_fwd(w1, w2, xd),),
+            [w1_sp, w2_sp, xd_sp], ["w1", "w2", "xd"], ["yd"], c,
+            extra=f"ep_workers={P}",
+        )
+
+        def eb(w1, w2, xd, dyd):
+            return tuple(model.exp_bwd(w1, w2, xd, dyd))
+
+        ex.export(
+            f"exp_bwd_{c}", eb, [w1_sp, w2_sp, xd_sp, xd_sp],
+            ["w1", "w2", "xd", "dyd"], ["dw1", "dw2", "dxd"], c,
+            extra=f"ep_workers={P}",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,e2e")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    names = args.configs.split(",")
+    for name in names:
+        cfg = PRESETS[name]
+        # EP pieces only for the tiny config (2-worker integration tests).
+        export_config(ex, cfg, ep_workers=2 if name == "tiny" else 0,
+                      use_pallas=(name == "tiny"))
+    ex.finish(set(names))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Pallas fused attention kernel (L1) — the MHA hot spot (paper's AT task).
+
+Flash-attention-style streaming formulation adapted for TPU: the grid walks
+(batch*head, q-block); for each q-block the kernel streams over kv-blocks
+with an online-softmax accumulator, so the N x N score matrix only ever
+exists as a (Bq, Bk) tile in VMEM — the TPU analogue of the CUDA
+shared-memory tiling the GPU implementations use.
+
+Runs under interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bk, causal, q_block, scale):
+    q = q_ref[0].astype(jnp.float32) * scale  # (Bq, D)
+    n = k_ref.shape[1]
+    bq = q.shape[0]
+    qi = pl.program_id(1)
+
+    acc = jnp.zeros((bq, v_ref.shape[2]), jnp.float32)
+    m_i = jnp.full((bq, 1), _NEG, jnp.float32)
+    l_i = jnp.zeros((bq, 1), jnp.float32)
+
+    def body(s, carry):
+        acc, m_i, l_i = carry
+        kblk = jax.lax.dynamic_slice_in_dim(k_ref[0], s * bk, bk, axis=0)
+        vblk = jax.lax.dynamic_slice_in_dim(v_ref[0], s * bk, bk, axis=0)
+        scores = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32)  # (Bq, Bk)
+        if causal:
+            qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = s * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            scores = jnp.where(kpos <= qpos, scores, _NEG)
+        m_new = jnp.maximum(m_i, jnp.max(scores, axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, vblk.astype(jnp.float32))
+        return acc, m_new, l_new
+
+    acc, m_i, l_i = jax.lax.fori_loop(0, n // bk, body, (acc, m_i, l_i))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block"))
+def attention(q, k, v, causal: bool = False, q_block: int | None = None, kv_block: int | None = None):
+    """Fused scaled-dot-product attention via a Pallas kernel.
+
+    Args:
+        q, k, v: (B, NH, N, D).
+        causal:  apply a causal mask.
+        q_block / kv_block: tile sizes (must divide N); None = auto.
+    Returns:
+        (B, NH, N, D) attention outputs, matching ``ref.attention_ref`` /
+        ``ref.attention_causal_ref``.
+    """
+    B, NH, N, D = q.shape
+    bq = q_block or min(N, 128)
+    bk = kv_block or min(N, 128)
+    if N % bq != 0:
+        bq = N
+    if N % bk != 0:
+        bk = N
+    scale = 1.0 / (D ** 0.5)
+
+    qf = q.reshape(B * NH, N, D)
+    kf = k.reshape(B * NH, N, D)
+    vf = v.reshape(B * NH, N, D)
+    kern = functools.partial(_attn_kernel, bk=bk, causal=causal, q_block=bq, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * NH, N // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, N, D), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((1, N, D), lambda h, t: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, t: (h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * NH, N, D), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(B, NH, N, D)

@@ -1,0 +1,99 @@
+"""Pallas expert-FFN kernel (L1) — the MoE compute hot spot.
+
+The paper's E_r^(l) task: for every local expert e, compute
+``relu(x[e] @ w1[e]) @ w2[e]`` over the (C, M) token slab routed to it.
+
+TPU adaptation of the paper's CUDA formulation (DESIGN.md §2): what the GPU
+frameworks express as one CUDA stream per expert with shared-memory tiles
+becomes the Pallas *grid* — one grid step per (expert, token-tile) — with
+BlockSpecs staging an ``(Ct, M)`` token tile plus both weight matrices
+through VMEM. The intermediate ``(Ct, H)`` activation never round-trips to
+HBM: both matmuls and the relu fuse inside a single kernel invocation, each
+matmul mapping onto the 128x128 MXU.
+
+VMEM budget per grid step (f32): Ct*M + M*H + H*M + Ct*H + Ct*M floats.
+``_pick_token_tile`` chooses Ct so this stays under ~12 MiB of the 16 MiB
+VMEM, double-buffering headroom included. Must run with interpret=True on
+CPU (Mosaic custom-calls cannot execute on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Leave headroom below the 16 MiB VMEM for double buffering + spills.
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _pick_token_tile(C: int, M: int, H: int, bytes_per_el: int = 4) -> int:
+    """Largest power-of-two token tile Ct <= C whose working set fits VMEM."""
+    weights = (M * H + H * M) * bytes_per_el
+    ct = 1
+    best = 1
+    while ct <= C:
+        work = weights + (2 * ct * M + ct * H) * bytes_per_el
+        if work <= _VMEM_BUDGET_BYTES:
+            best = ct
+        ct *= 2
+    return best
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One grid step: (Ct, M) @ (M, H) -> relu -> @ (H, M)."""
+    h = jnp.dot(x_ref[0], w1_ref[0], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h, 0.0)
+    o_ref[0] = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile",))
+def expert_ffn(x, w1, w2, token_tile: int | None = None):
+    """Batched expert FFN via a Pallas kernel.
+
+    Args:
+        x:  (E, C, M) tokens routed to each expert.
+        w1: (E, M, H) first feed-forward weights.
+        w2: (E, H, M) second feed-forward weights.
+        token_tile: override the token tile Ct (must divide C); None =
+            auto-pick for the VMEM budget.
+    Returns:
+        (E, C, M) expert outputs; matches ``ref.expert_ffn_ref`` exactly.
+    """
+    E, C, M = x.shape
+    H = w1.shape[2]
+    ct = token_tile or _pick_token_tile(C, M, H)
+    if C % ct != 0:
+        ct = 1  # fallback: always divides
+    grid = (E, C // ct)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ct, M), lambda e, t: (e, t, 0)),
+            pl.BlockSpec((1, M, H), lambda e, t: (e, 0, 0)),
+            pl.BlockSpec((1, H, M), lambda e, t: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ct, M), lambda e, t: (e, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, M), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def vmem_report(C: int, M: int, H: int) -> dict:
+    """Static VMEM/MXU analysis for a config (used by DESIGN/EXPERIMENTS).
+
+    Returns the chosen tile, VMEM working-set bytes, and an MXU-utilization
+    estimate: fraction of matmul dims that are multiples of the 128-wide
+    systolic array (padding waste model).
+    """
+    ct = _pick_token_tile(C, M, H)
+    vmem = (M * H + H * M + 2 * ct * M + ct * H) * 4
+
+    def eff(d):
+        pad = (128 - d % 128) % 128
+        return d / (d + pad)
+
+    # Two matmuls: (ct,M)x(M,H) and (ct,H)x(H,M).
+    mxu = (eff(ct) * eff(M) * eff(H) + eff(ct) * eff(H) * eff(M)) / 2.0
+    return {"token_tile": ct, "vmem_bytes": vmem, "mxu_utilization_est": mxu}

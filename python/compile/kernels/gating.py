@@ -1,0 +1,92 @@
+"""Pallas top-k gating kernel (L1).
+
+The paper's gating function G: score each token against the expert
+embedding matrix, softmax, and pick the top-k experts. On GPU the reference
+frameworks use a radix/sort-based top-k; on TPU we use the branch-free
+iterative-argmax formulation — k passes of (max, one-hot mask-out) on the
+VPU — which avoids any sort network and keeps everything dense and
+vectorizable. The score matmul (T, M) x (M, E) targets the MXU.
+
+Runs under interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _gating_kernel(x_ref, wg_ref, probs_ref, idx_ref, gate_ref, *, k):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    # numerically stable softmax
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    probs_ref[...] = probs.astype(probs_ref.dtype)
+
+    # iterative argmax top-k (branch-free, VPU-friendly)
+    work = probs
+    E = probs.shape[-1]
+    eidx = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    total = jnp.zeros(probs.shape[:-1] + (1,), jnp.float32)
+    picked_g = []
+    picked_i = []
+    for j in range(k):
+        best = jnp.max(work, axis=-1, keepdims=True)
+        is_best = work == best
+        # break ties toward the smallest expert index
+        first = jnp.min(jnp.where(is_best, eidx, E), axis=-1, keepdims=True)
+        onehot = eidx == first
+        picked_g.append(best[..., 0])
+        picked_i.append(first[..., 0].astype(jnp.int32))
+        total = total + best
+        work = jnp.where(onehot, _NEG, work)
+    gate = jnp.stack(picked_g, axis=-1)
+    gate = gate / jnp.maximum(total, 1e-9)
+    idx_ref[...] = jnp.stack(picked_i, axis=-1)
+    gate_ref[...] = gate.astype(gate_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "token_tile"))
+def gating_topk(x, wg, k: int, token_tile: int | None = None):
+    """Top-k softmax gating via a Pallas kernel.
+
+    Args:
+        x:  (T, M) tokens.
+        wg: (M, E) gate projection.
+        k:  experts per token.
+        token_tile: tokens per grid step (None = all T in one step).
+    Returns:
+        (probs, topk_idx, topk_gate) matching ``ref.gating_ref`` (ties broken
+        toward the smaller expert index, as jax.lax.top_k does).
+    """
+    T, M = x.shape
+    E = wg.shape[1]
+    tt = token_tile or T
+    if T % tt != 0:
+        tt = T
+    grid = (T // tt,)
+    kern = functools.partial(_gating_kernel, k=k)
+    probs, idx, gate = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, M), lambda t: (t, 0)),
+            pl.BlockSpec((M, E), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tt, E), lambda t: (t, 0)),
+            pl.BlockSpec((tt, k), lambda t: (t, 0)),
+            pl.BlockSpec((tt, k), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, E), x.dtype),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), x.dtype),
+        ],
+        interpret=True,
+    )(x, wg)
+    return probs, idx, gate

@@ -1,0 +1,160 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has an exact reference here, written with
+nothing but ``jax.numpy`` ops so the semantics are unambiguous. The pytest
+suite asserts ``assert_allclose(kernel(...), ref(...))`` over hypothesis-
+generated shapes; these oracles are also what the L2 model uses when
+``use_pallas=False``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w2):
+    """Batched expert FFN: per expert e, relu(x[e] @ w1[e]) @ w2[e].
+
+    Args:
+        x:  (E, C, M) tokens routed to each expert.
+        w1: (E, M, H) first feed-forward weights.
+        w2: (E, H, M) second feed-forward weights.
+    Returns:
+        (E, C, M) expert outputs.
+    """
+    h = jnp.einsum("ecm,emh->ech", x, w1)
+    h = jax.nn.relu(h)
+    return jnp.einsum("ech,ehm->ecm", h, w2)
+
+
+def topk_ref(probs, k):
+    """Iterative-argmax top-k (ties to the smaller index, matching
+    ``jax.lax.top_k``). Used instead of ``lax.top_k`` because the latter
+    lowers to a ``topk(..., largest=true)`` HLO attribute that the rust
+    loader's xla_extension 0.5.1 text parser rejects; this decomposition
+    emits only plain reduce/select ops and is differentiable (gradients
+    scatter to the selected entries, like top_k's)."""
+    E = probs.shape[-1]
+    eidx = jax.lax.broadcasted_iota(jnp.int32, probs.shape, probs.ndim - 1)
+    work = probs
+    vals, idxs = [], []
+    for _ in range(k):
+        best = jnp.max(work, axis=-1, keepdims=True)
+        is_best = work == best
+        first = jnp.min(jnp.where(is_best, eidx, E), axis=-1, keepdims=True)
+        onehot = eidx == first
+        # differentiable gather of the selected value
+        vals.append(jnp.sum(jnp.where(onehot, probs, 0.0), axis=-1))
+        idxs.append(first[..., 0].astype(jnp.int32))
+        work = jnp.where(onehot, -jnp.inf, work)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def gating_ref(x, wg, k):
+    """Top-k softmax gating (GShard-style, normalized over selected experts).
+
+    Args:
+        x:  (T, M) tokens.
+        wg: (M, E) gate projection.
+        k:  number of experts per token.
+    Returns:
+        (probs, topk_idx, topk_gate):
+        probs:     (T, E) full softmax probabilities.
+        topk_idx:  (T, k) int32 selected expert ids, by descending prob.
+        topk_gate: (T, k) gate weights renormalized over the top-k.
+    """
+    logits = x @ wg
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_gate, topk_idx = topk_ref(probs, k)
+    denom = jnp.sum(topk_gate, axis=-1, keepdims=True)
+    topk_gate = topk_gate / jnp.maximum(denom, 1e-9)
+    return probs, topk_idx.astype(jnp.int32), topk_gate
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention over (B, NH, N, D) tensors, no mask."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def attention_causal_ref(q, k, v):
+    """Causal scaled dot-product attention over (B, NH, N, D)."""
+    d = q.shape[-1]
+    n = q.shape[-2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def dispatch_ref(x, topk_idx, topk_gate, E, C):
+    """Build the (E, C, M) dispatch tensor + combine metadata from routing.
+
+    Tokens beyond an expert's capacity C are dropped (GShard semantics).
+
+    Args:
+        x:         (T, M) tokens.
+        topk_idx:  (T, k) selected expert per token per slot.
+        topk_gate: (T, k) gate weights.
+    Returns:
+        (dispatched, comb):
+        dispatched: (E, C, M) routed tokens (zero-padded).
+        comb:       (T, k, 2) int32 [expert, slot] per token-choice; slot == C
+                    marks a dropped token.
+    """
+    T, k = topk_idx.shape
+    # position of each (token, choice) within its expert's queue
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos_within = jnp.cumsum(flat, axis=0) - flat  # (T*k, E)
+    slot = jnp.sum(pos_within * flat, axis=-1).reshape(T, k)  # (T, k)
+    expert = topk_idx
+    valid = slot < C
+    slot_c = jnp.where(valid, slot, C)  # C = drop bucket
+
+    disp = jnp.zeros((E, C + 1, x.shape[1]), x.dtype)
+    tok = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    disp = disp.at[expert.reshape(-1), slot_c.reshape(-1)].add(x[tok.reshape(-1)])
+    comb = jnp.stack([expert, slot_c], axis=-1).astype(jnp.int32)
+    return disp[:, :C, :], comb
+
+
+def combine_ref(expert_out, comb, topk_gate, T):
+    """Inverse of dispatch: weighted gather of expert outputs per token.
+
+    Args:
+        expert_out: (E, C, M).
+        comb:       (T, k, 2) [expert, slot] with slot == C meaning dropped.
+        topk_gate:  (T, k).
+    Returns:
+        (T, M) combined outputs.
+    """
+    E, C, M = expert_out.shape
+    padded = jnp.concatenate([expert_out, jnp.zeros((E, 1, M), expert_out.dtype)], axis=1)
+    e = comb[..., 0]
+    s = comb[..., 1]
+    gathered = padded[e, s]  # (T, k, M)
+    return jnp.einsum("tkm,tk->tm", gathered, topk_gate)
+
+
+def moe_layer_ref(x, wg, w1, w2, k, C):
+    """Full single-worker MoE layer: gate -> dispatch -> experts -> combine.
+
+    Args:
+        x: (T, M), wg: (M, E), w1: (E, M, H), w2: (E, H, M).
+    Returns:
+        (T, M) layer output.
+    """
+    E = wg.shape[1]
+    _, topk_idx, topk_gate = gating_ref(x, wg, k)
+    disp, comb = dispatch_ref(x, topk_idx, topk_gate, E, C)
+    out = expert_ffn_ref(disp, w1, w2)
+    return combine_ref(out, comb, topk_gate, x.shape[0])
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    """RMSNorm over the last axis with learnable gain g."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g

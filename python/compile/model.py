@@ -1,0 +1,352 @@
+"""L2: the MoE transformer in JAX, calling the L1 Pallas kernels.
+
+Build-time only — ``aot.py`` lowers the functions defined here to HLO text;
+python never runs on the training hot path. The model is a pre-norm
+decoder-only transformer whose feed-forward layers are MoE layers (paper
+Fig. 1a): RMSNorm -> MHA -> residual -> RMSNorm -> top-k gate -> dispatch
+-> expert FFN -> combine -> residual, with a tied-embedding LM head.
+
+Parameters use a canonical flat order (``param_spec``) so the rust runtime
+can address buffers positionally:
+
+    embed (V, M)
+    for each block l: n1 (M,), wq, wk, wv, wo (M, M), n2 (M,),
+                      wg (M, E), w1 (E, M, H), w2 (E, H, M)
+    normf (M,)
+
+The Pallas kernels are wrapped in ``jax.custom_vjp`` — forward runs the
+kernel, backward differentiates the pure-jnp oracle (Pallas interpret mode
+has no transpose rule). Numerics of fwd and bwd are therefore both
+oracle-exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MoEConfig
+from .kernels import ref
+from .kernels.attention import attention as attention_kernel
+from .kernels.expert_ffn import expert_ffn as expert_ffn_kernel
+from .kernels.gating import gating_topk as gating_kernel
+
+# ---------------------------------------------------------------------------
+# Pallas kernels with oracle-gradient custom VJPs
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def expert_ffn_op(x, w1, w2):
+    return expert_ffn_kernel(x, w1, w2)
+
+
+def _effn_fwd(x, w1, w2):
+    return expert_ffn_kernel(x, w1, w2), (x, w1, w2)
+
+
+def _effn_bwd(res, g):
+    return jax.vjp(ref.expert_ffn_ref, *res)[1](g)
+
+
+expert_ffn_op.defvjp(_effn_fwd, _effn_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def gating_op(x, wg, k):
+    return gating_kernel(x, wg, k)
+
+
+def _gate_fwd(x, wg, k):
+    return gating_kernel(x, wg, k), (x, wg)
+
+
+def _gate_bwd(k, res, g):
+    x, wg = res
+    dprobs, _didx, dgate = g
+
+    def f(x_, wg_):
+        probs, idx, gate = ref.gating_ref(x_, wg_, k)
+        return probs, gate
+
+    _, vjp = jax.vjp(f, x, wg)
+    return vjp((dprobs, dgate))
+
+
+gating_op.defvjp(_gate_fwd, _gate_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention_op(q, k, v, causal):
+    return attention_kernel(q, k, v, causal=causal)
+
+
+def _attn_fwd(q, k, v, causal):
+    return attention_kernel(q, k, v, causal=causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, g):
+    fn = ref.attention_causal_ref if causal else ref.attention_ref
+    return jax.vjp(fn, *res)[1](g)
+
+
+attention_op.defvjp(_attn_fwd, _attn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+BLOCK_TENSORS = 9  # n1, wq, wk, wv, wo, n2, wg, w1, w2
+
+
+def param_spec(cfg: MoEConfig):
+    """Canonical flat parameter order: list of (name, shape) tuples."""
+    spec = [("embed", (cfg.vocab, cfg.M))]
+    for l in range(cfg.L):
+        spec += [
+            (f"block{l}.n1", (cfg.M,)),
+            (f"block{l}.wq", (cfg.M, cfg.M)),
+            (f"block{l}.wk", (cfg.M, cfg.M)),
+            (f"block{l}.wv", (cfg.M, cfg.M)),
+            (f"block{l}.wo", (cfg.M, cfg.M)),
+            (f"block{l}.n2", (cfg.M,)),
+            (f"block{l}.wg", (cfg.M, cfg.E)),
+            (f"block{l}.w1", (cfg.E, cfg.M, cfg.H)),
+            (f"block{l}.w2", (cfg.E, cfg.H, cfg.M)),
+        ]
+    spec.append(("normf", (cfg.M,)))
+    return spec
+
+
+def init_params(cfg: MoEConfig, key):
+    """Scaled-normal init; norm gains start at 1."""
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".n1", ".n2")) or name == "normf":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params.append(jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5))
+    return params
+
+
+def block_params(params, cfg: MoEConfig, l: int):
+    base = 1 + l * BLOCK_TENSORS
+    return params[base : base + BLOCK_TENSORS]
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+
+def mha(p, x, cfg: MoEConfig, causal=True, use_pallas=True):
+    """Multi-head attention over (T, M) flat tokens, T = B*N."""
+    n1, wq, wk, wv, wo = p[0], p[1], p[2], p[3], p[4]
+    T = x.shape[0]
+    B = T // cfg.N
+    xn = ref.rmsnorm_ref(x, n1)
+    q = (xn @ wq).reshape(B, cfg.N, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (xn @ wk).reshape(B, cfg.N, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = (xn @ wv).reshape(B, cfg.N, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    if use_pallas:
+        o = attention_op(q, k, v, causal)
+    else:
+        o = (ref.attention_causal_ref if causal else ref.attention_ref)(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(T, cfg.M)
+    return x + o @ wo
+
+
+def at_task(p, x, cfg: MoEConfig, use_pallas=True):
+    """The paper's AT task: MHA + gating for one (micro)batch.
+
+    Returns (h, u, logits-as-probs tuple) where h is the residual stream
+    after attention and u the normed MoE input.
+    """
+    h = mha(p, x, cfg, use_pallas=use_pallas)
+    u = ref.rmsnorm_ref(h, p[5])
+    if use_pallas:
+        probs, idx, gate = gating_op(u, p[6], cfg.k)
+    else:
+        probs, idx, gate = ref.gating_ref(u, p[6], cfg.k)
+    return h, u, probs, idx, gate
+
+
+def moe_ffn(p, h, u, idx, gate, cfg: MoEConfig, C: int, use_pallas=True):
+    """Dispatch -> expert FFN -> combine -> residual (single-worker dense)."""
+    w1, w2 = p[7], p[8]
+    disp, comb = ref.dispatch_ref(u, idx, gate, cfg.E, C)
+    if use_pallas:
+        out = expert_ffn_op(disp, w1, w2)
+    else:
+        out = ref.expert_ffn_ref(disp, w1, w2)
+    y = ref.combine_ref(out, comb, gate, u.shape[0])
+    return h + y
+
+
+def transformer_block(p, x, cfg: MoEConfig, use_pallas=True):
+    C = cfg.capacity()
+    h, u, _probs, idx, gate = at_task(p, x, cfg, use_pallas=use_pallas)
+    return moe_ffn(p, h, u, idx, gate, cfg, C, use_pallas=use_pallas)
+
+
+def forward(params, tokens, cfg: MoEConfig, use_pallas=True):
+    """Full model: tokens (B, N) int32 -> logits (B*N, V)."""
+    embed = params[0]
+    x = embed[tokens.reshape(-1)] * (cfg.M ** 0.5)
+    for l in range(cfg.L):
+        x = transformer_block(block_params(params, cfg, l), x, cfg, use_pallas=use_pallas)
+    xf = ref.rmsnorm_ref(x, params[-1])
+    return xf @ embed.T
+
+
+def loss_fn(params, tokens, cfg: MoEConfig, use_pallas=True):
+    """Next-token cross-entropy, mean over B*(N-1) positions."""
+    logits = forward(params, tokens, cfg, use_pallas=use_pallas)
+    B, N = tokens.shape
+    logits = logits.reshape(B, N, -1)[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def train_step(params, moms, tokens, lr, cfg: MoEConfig, use_pallas=True, momentum=0.9):
+    """Fused single-process SGD+momentum step.
+
+    Returns (new_params, new_moms, loss) with params/moms flat lists in
+    canonical order.
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg, use_pallas))(params)
+    new_moms = [momentum * m + g for m, g in zip(moms, grads)]
+    new_params = [p - lr * m for p, m in zip(params, new_moms)]
+    return new_params, new_moms, loss
+
+
+def grad_step(params, tokens, cfg: MoEConfig, use_pallas=True):
+    """Per-worker gradient computation (loss, grads) for the distributed
+    data-parallel trainer: rust all-reduces the grads (chunked by S_p via
+    the comm pool) and applies the update host-side."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg, use_pallas))(params)
+    return loss, grads
+
+
+def block_fwd(bp, x, cfg: MoEConfig, use_pallas=True):
+    """Forward of one transformer block over flat (T, M) activations."""
+    return transformer_block(bp, x, cfg, use_pallas=use_pallas)
+
+
+def block_bwd(bp, x, dy, cfg: MoEConfig, use_pallas=True):
+    """Recompute-based VJP of one block: (grads_block[9], dx).
+
+    Rematerializes the forward inside the backward artifact so no residual
+    plumbing crosses the rust/HLO boundary (DESIGN.md §5).
+    """
+    _, vjp = jax.vjp(lambda p, x_: block_fwd(p, x_, cfg, use_pallas), list(bp), x)
+    dparams, dx = vjp(dy)
+    return list(dparams) + [dx]
+
+
+def embed_fwd(embed, tokens, cfg: MoEConfig):
+    return embed[tokens.reshape(-1)] * (cfg.M ** 0.5)
+
+
+def head_loss_fwd_bwd(embed, normf, xf, tokens, cfg: MoEConfig):
+    """Final norm + tied LM head + cross-entropy, fused fwd+bwd.
+
+    Returns (loss, dxf, dembed_head, dnormf).
+    """
+
+    def f(e, nf, x_):
+        xn = ref.rmsnorm_ref(x_, nf)
+        logits = (xn @ e.T).reshape(tokens.shape[0], tokens.shape[1], -1)[:, :-1]
+        targets = tokens[:, 1:]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    loss, vjp = jax.vjp(f, embed, normf, xf)
+    de, dn, dx = vjp(jnp.float32(1.0))
+    return loss, dx, de, dn
+
+
+def embed_bwd(tokens, dx, cfg: MoEConfig):
+    """Gradient of the input embedding lookup (scatter-add).
+
+    Takes no ``embed`` argument: the gradient depends only on its *shape*
+    (XLA prunes value-unused parameters at compile time, which would make
+    the artifact's runtime arity differ from its manifest arity)."""
+    z = jnp.zeros((cfg.vocab, cfg.M), jnp.float32)
+    return z.at[tokens.reshape(-1)].add(dx * (cfg.M ** 0.5))
+
+
+# --- Expert-parallel layer pieces (real-A2A path in rust/src/cluster) ---
+
+
+def at_fwd(atp, x, cfg: MoEConfig, use_pallas=True):
+    """AT piece for the EP path: atp = [n1,wq,wk,wv,wo,n2,wg].
+
+    Returns (h, u, probs, gate_topk, idx) — rust performs routing/dispatch
+    from idx/gate and the A2A exchange.
+    """
+    p = list(atp) + [None, None]
+    h, u, probs, idx, gate = at_task(p, x, cfg, use_pallas=use_pallas)
+    return h, u, probs, idx, gate
+
+
+def at_bwd(atp, x, dh, du, dgate, cfg: MoEConfig, use_pallas=True):
+    """Recompute-based VJP of the AT piece for the EP path.
+
+    Differentiates (atp, x) -> (h, u, gate); idx is recomputed identically
+    inside (routing is deterministic), probs only feed gate. Cotangents:
+    dh from the downstream residual add, du from dispatch-bwd, dgate from
+    combine-bwd. Returns grads for [n1,wq,wk,wv,wo,n2,wg] followed by dx.
+    """
+
+    def f(p, x_):
+        h, u, _probs, _idx, gate = at_fwd(p, x_, cfg, use_pallas=use_pallas)
+        return h, u, gate
+
+    _, vjp = jax.vjp(f, list(atp), x)
+    dparams, dx = vjp((dh, du, dgate))
+    return list(dparams) + [dx]
+
+
+def exp_fwd(w1, w2, xd, use_pallas=True):
+    """Expert piece for the EP path: xd (Elocal, Cw, M) tokens received via
+    A2A; w1 (Elocal, M, H), w2 (Elocal, H, M)."""
+    if use_pallas:
+        return expert_ffn_op(xd, w1, w2)
+    return ref.expert_ffn_ref(xd, w1, w2)
+
+
+def exp_bwd(w1, w2, xd, dyd, use_pallas=True):
+    """VJP of exp_fwd (recompute): returns (dw1, dw2, dxd)."""
+    _, vjp = jax.vjp(lambda a, b, c: exp_fwd(a, b, c, use_pallas), w1, w2, xd)
+    return vjp(dyd)
+
+
+def gate_bwd(logits_probs, sel_onehot, dgate):
+    """VJP of the renormalized top-k gate weights w.r.t. full probs.
+
+    Args:
+        logits_probs: (T, E) softmax probabilities (as produced by at_fwd).
+        sel_onehot:   (T, k, E) one-hot selection (fixed, non-diff).
+        dgate:        (T, k) cotangent of the renormalized gate weights.
+    Returns:
+        dprobs (T, E).
+    """
+
+    def f(probs):
+        g = jnp.einsum("te,tke->tk", probs, sel_onehot)
+        return g / jnp.maximum(jnp.sum(g, axis=-1, keepdims=True), 1e-9)
+
+    _, vjp = jax.vjp(f, logits_probs)
+    return vjp(dgate)[0]

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,89 @@
+"""AOT pipeline structural tests: manifest consistency and HLO sanity."""
+
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def parse_manifest():
+    arts = {}
+    cur = None
+    for line in open(os.path.join(ART, "manifest.txt")):
+        line = line.rstrip("\n")
+        if line.startswith("artifact "):
+            parts = line.split()
+            name = parts[1]
+            kv = dict(p.split("=", 1) for p in parts[2:] if "=" in p)
+            cur = {"file": kv["file"], "config": kv["config"], "inputs": [], "outputs": []}
+            arts[name] = cur
+        elif line.strip().startswith("input "):
+            _, nm, shape, dt = line.split()
+            cur["inputs"].append((nm, shape, dt))
+        elif line.strip().startswith("output "):
+            _, nm, shape, dt = line.split()
+            cur["outputs"].append((nm, shape, dt))
+    return arts
+
+
+def test_manifest_files_exist():
+    arts = parse_manifest()
+    assert len(arts) >= 16
+    for name, a in arts.items():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), f"{name}: missing {a['file']}"
+        head = open(path).read(4096)
+        assert "HloModule" in head, f"{name}: not HLO text"
+        assert "ENTRY" in open(path).read(), f"{name}: no ENTRY computation"
+
+
+def test_manifest_io_counts():
+    from compile import model
+    from compile.configs import PRESETS
+
+    arts = parse_manifest()
+    for cfgname in {a["config"] for a in arts.values()}:
+        cfg = PRESETS[cfgname]
+        n_p = len(model.param_spec(cfg))
+        ts = arts[f"train_step_{cfgname}"]
+        assert len(ts["inputs"]) == 2 * n_p + 2
+        assert len(ts["outputs"]) == 2 * n_p + 1
+        gs = arts[f"grad_step_{cfgname}"]
+        assert len(gs["inputs"]) == n_p + 1
+        assert len(gs["outputs"]) == n_p + 1
+        bf = arts[f"block_fwd_{cfgname}"]
+        assert len(bf["inputs"]) == 10 and len(bf["outputs"]) == 1
+        bb = arts[f"block_bwd_{cfgname}"]
+        assert len(bb["inputs"]) == 11 and len(bb["outputs"]) == 10
+
+
+def test_manifest_shapes_match_model_spec():
+    from compile import model
+    from compile.configs import PRESETS
+
+    arts = parse_manifest()
+    for cfgname in {a["config"] for a in arts.values()}:
+        cfg = PRESETS[cfgname]
+        spec = model.param_spec(cfg)
+        ts = arts[f"train_step_{cfgname}"]
+        for (mn, ms, dt), (sn, ss) in zip(ts["inputs"], spec):
+            assert mn == f"param.{sn}"
+            want = "x".join(str(d) for d in ss)
+            assert ms == want, f"{mn}: {ms} != {want}"
+            assert dt == "f32"
+
+
+def test_hlo_has_no_serialized_proto_markers():
+    """Interchange must be HLO text (xla_extension 0.5.1 rejects jax>=0.5
+    serialized protos)."""
+    arts = parse_manifest()
+    for a in arts.values():
+        with open(os.path.join(ART, a["file"]), "rb") as f:
+            head = f.read(64)
+        assert head.lstrip()[:9] == b"HloModule"

@@ -1,0 +1,199 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/k; assert_allclose against ref.py is the
+core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.expert_ffn import expert_ffn, vmem_report, _pick_token_tile
+from compile.kernels.gating import gating_topk
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rng(*shape, seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# expert FFN
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    E=st.integers(1, 6),
+    C=st.integers(1, 24),
+    M=st.sampled_from([8, 16, 33, 64]),
+    H=st.sampled_from([8, 24, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(E, C, M, H, seed):
+    x = rng(E, C, M, seed=seed)
+    w1 = rng(E, M, H, seed=seed + 1, scale=0.2)
+    w2 = rng(E, H, M, seed=seed + 2, scale=0.2)
+    got = expert_ffn(x, w1, w2)
+    want = ref.expert_ffn_ref(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 8])
+def test_expert_ffn_token_tiles_agree(tile):
+    x, w1, w2 = rng(2, 8, 16), rng(2, 16, 32, scale=0.2), rng(2, 32, 16, scale=0.2)
+    got = expert_ffn(x, w1, w2, token_tile=tile)
+    np.testing.assert_allclose(got, ref.expert_ffn_ref(x, w1, w2), rtol=1e-4, atol=1e-5)
+
+
+def test_expert_ffn_zero_input_is_zero():
+    x = jnp.zeros((2, 4, 8))
+    out = expert_ffn(x, rng(2, 8, 16), rng(2, 16, 8))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+def test_pick_token_tile_respects_budget():
+    for (C, M, H) in [(64, 512, 1024), (256, 1024, 4096), (128, 8192, 8192)]:
+        r = vmem_report(C, M, H)
+        assert r["vmem_bytes"] <= 12 * 1024 * 1024 or r["token_tile"] == 1
+        assert 0.0 < r["mxu_utilization_est"] <= 1.0
+
+
+def test_pick_token_tile_monotone_in_capacity():
+    assert _pick_token_tile(256, 128, 128) >= _pick_token_tile(4, 128, 128)
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    T=st.sampled_from([1, 4, 16, 30]),
+    M=st.sampled_from([8, 32]),
+    E=st.sampled_from([2, 4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gating_matches_ref(T, M, E, k, seed):
+    if k > E:
+        k = E
+    x = rng(T, M, seed=seed)
+    wg = rng(M, E, seed=seed + 1)
+    p1, i1, g1 = gating_topk(x, wg, k)
+    p0, i0, g0 = ref.gating_ref(x, wg, k)
+    np.testing.assert_allclose(p1, p0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-6)
+
+
+def test_gating_probs_sum_to_one():
+    p, _, _ = gating_topk(rng(8, 16), rng(16, 4, seed=1), 2)
+    np.testing.assert_allclose(jnp.sum(p, axis=-1), 1.0, rtol=1e-5)
+
+
+def test_gating_topk_gates_sum_to_one():
+    _, _, g = gating_topk(rng(8, 16), rng(16, 4, seed=1), 3)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), 1.0, rtol=1e-5)
+
+
+def test_gating_indices_in_range_and_distinct():
+    _, idx, _ = gating_topk(rng(32, 16), rng(16, 8, seed=2), 4)
+    idx = np.asarray(idx)
+    assert idx.min() >= 0 and idx.max() < 8
+    for row in idx:
+        assert len(set(row.tolist())) == 4
+
+
+def test_gating_token_tiling_agrees():
+    x, wg = rng(16, 8), rng(8, 4, seed=3)
+    p1, i1, g1 = gating_topk(x, wg, 2, token_tile=4)
+    p0, i0, g0 = gating_topk(x, wg, 2)
+    np.testing.assert_allclose(p1, p0, rtol=1e-6)
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_allclose(g1, g0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    B=st.integers(1, 3),
+    NH=st.integers(1, 4),
+    N=st.sampled_from([8, 16, 32]),
+    D=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(B, NH, N, D, causal, seed):
+    q = rng(B, NH, N, D, seed=seed)
+    k = rng(B, NH, N, D, seed=seed + 1)
+    v = rng(B, NH, N, D, seed=seed + 2)
+    got = attention(q, k, v, causal=causal)
+    want = (ref.attention_causal_ref if causal else ref.attention_ref)(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("qb,kb", [(4, 4), (4, 8), (8, 4), (16, 16)])
+def test_attention_tilings_agree(qb, kb):
+    q, k, v = rng(2, 2, 16, 8), rng(2, 2, 16, 8, seed=1), rng(2, 2, 16, 8, seed=2)
+    got = attention(q, k, v, causal=True, q_block=qb, kv_block=kb)
+    want = ref.attention_causal_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_softmax_rows_bounded():
+    # outputs are convex combinations of V rows => within [min(V), max(V)]
+    q, k = rng(1, 1, 8, 4), rng(1, 1, 8, 4, seed=1)
+    v = jnp.ones((1, 1, 8, 4))
+    out = attention(q, k, v)
+    np.testing.assert_allclose(out, 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine (routing oracle invariants used by rust EP path)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    T=st.sampled_from([4, 16, 64]),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    f=st.sampled_from([1.0, 1.2, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_combine_roundtrip_identity_experts(T, E, k, f, seed):
+    """With identity experts (out == in), combine(dispatch(x)) reproduces a
+    convex combination of x for every non-dropped token."""
+    M = 8
+    C = max(int(f * k * T / E), 1)
+    x = rng(T, M, seed=seed)
+    wg = rng(M, E, seed=seed + 1)
+    _, idx, gate = ref.gating_ref(x, wg, k)
+    disp, comb = ref.dispatch_ref(x, idx, gate, E, C)
+    y = ref.combine_ref(disp, comb, gate, T)
+    comb = np.asarray(comb)
+    gate = np.asarray(gate)
+    kept_w = np.where(comb[..., 1] < C, gate, 0.0).sum(-1)
+    np.testing.assert_allclose(y, np.asarray(x) * kept_w[:, None], rtol=1e-4, atol=1e-5)
+
+
+def test_dispatch_capacity_never_exceeded():
+    T, E, k, C, M = 64, 2, 2, 4, 8
+    x, wg = rng(T, M), rng(M, E, seed=1)
+    _, idx, gate = ref.gating_ref(x, wg, k)
+    disp, comb = ref.dispatch_ref(x, idx, gate, E, C)
+    assert disp.shape == (E, C, M)
+    slots = np.asarray(comb)[..., 1]
+    assert slots.max() <= C  # C == drop bucket

@@ -1,0 +1,46 @@
+//! Paper Fig. 4: BO tuning of S_p on BERT-Large-MoE (Cluster 1, 16 GPUs):
+//! sampled points, GP posterior mean + 95% CI over the range, optimum.
+
+use flowmoe::bo::BoTuner;
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::sched::{iteration_time, Policy};
+
+fn main() {
+    let cfg = preset("BERT-Large-MoE").unwrap();
+    let cl = ClusterProfile::cluster1(16);
+    let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
+
+    let max = 10.0e6; // paper Fig. 4 plots (0, 10] MB
+    let mut bo = BoTuner::new(max, 42);
+    bo.tune(8, obj);
+
+    println!("\n## Fig. 4 — BO tuning S_p on BERT-Large-MoE (8 samples)\n");
+    println!("samples:");
+    for (sp, t) in &bo.observations {
+        println!("  S_p = {:6.2} MB -> {:7.2} ms", sp / 1e6, t * 1e3);
+    }
+    let (best_sp, best_t) = bo.best().unwrap();
+    println!("\nBO optimum: S_p = {:.2} MB ({:.2} ms)   [paper: ~2.5 MB]", best_sp / 1e6, best_t * 1e3);
+
+    println!("\nGP posterior (mean ± 2sigma) and true objective:");
+    println!("{:>8} {:>10} {:>10} {:>10}", "S_p(MB)", "mean(ms)", "±95%(ms)", "true(ms)");
+    for i in 1..=20 {
+        let sp = max * i as f64 / 20.0;
+        let (mu, sigma) = bo.posterior(sp);
+        println!(
+            "{:8.2} {:10.2} {:10.2} {:10.2}",
+            sp / 1e6,
+            mu * 1e3,
+            2.0 * sigma * 1e3,
+            obj(sp) * 1e3
+        );
+    }
+    // ASCII profile of the true objective (the Fig. 4 curve shape)
+    let samples: Vec<f64> = (1..=40).map(|i| obj(max * i as f64 / 40.0) * 1e3).collect();
+    let lo = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    println!("\ntrue objective profile (each # = 1ms above minimum {lo:.1}ms):");
+    for (i, s) in samples.iter().enumerate() {
+        let bars = ((s - lo) / 1.0).round() as usize;
+        println!("  {:5.2}MB {}", max * (i + 1) as f64 / 40.0 / 1e6, "#".repeat(bars.min(60)));
+    }
+}

@@ -1,0 +1,109 @@
+//! Hot-path microbenchmarks (§Perf): DAG build + simulation throughput
+//! (the coordinator's scheduling cost) and the comm-pool / collective
+//! primitives. Paper bound: scheduling overhead < 1 % of iteration time.
+
+use std::sync::Arc;
+
+use flowmoe::commpool::{partition_ranges, Collective, CommPool};
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::cost::TaskCosts;
+use flowmoe::report::{bench_median, Table};
+use flowmoe::sched::{build_dag, Policy};
+use flowmoe::sim::simulate;
+
+fn main() {
+    let cl = ClusterProfile::cluster1(16);
+    let mut t = Table::new(
+        "Perf — coordinator hot paths",
+        &["case", "median", "derived"],
+    );
+
+    // 1) DAG build + simulate for the biggest model at R=8, tiny chunks
+    let cfg = preset("LLaMA2-MoE-L").unwrap();
+    let costs = TaskCosts::build(&cfg, &cl);
+    let pol = Policy::flow_moe(8, 0.25e6);
+    let dag = build_dag(&cfg, &costs, &pol);
+    let n_tasks = dag.len();
+    let s = bench_median(3, 10, || {
+        let d = build_dag(&cfg, &costs, &pol);
+        std::hint::black_box(simulate(&d).makespan);
+    });
+    t.row(vec![
+        format!("build+simulate LLaMA2-MoE-L R=8 ({n_tasks} tasks)"),
+        format!("{:.3} ms", s * 1e3),
+        format!("{:.1}k tasks/s", n_tasks as f64 / s / 1e3),
+    ]);
+
+    // simulated iteration is ~1.5s; scheduling cost must be <1% of that
+    let iter_s = simulate(&dag).makespan;
+    t.row(vec![
+        "scheduling overhead vs simulated iteration".into(),
+        format!("{:.3}%", s / iter_s * 100.0),
+        "paper bound: <1%".into(),
+    ]);
+
+    // 2) 675-layer sweep throughput (drives fig6)
+    let sweep_cfg = flowmoe::config::ModelCfg::custom_layer(4, 1.1, 1024, 2048, 2048, 16);
+    let sweep_costs = TaskCosts::build(&sweep_cfg, &cl);
+    let s2 = bench_median(3, 20, || {
+        for polx in [Policy::sche_moe(2), Policy::flow_moe_cc(2, 4e6)] {
+            let d = build_dag(&sweep_cfg, &sweep_costs, &polx);
+            std::hint::black_box(simulate(&d).makespan);
+        }
+    });
+    t.row(vec![
+        "one sweep case (2 policies)".into(),
+        format!("{:.1} us", s2 * 1e6),
+        format!("675 cases x 4 S_p in ~{:.2}s", s2 * 675.0 * 4.0 / 2.0),
+    ]);
+
+    // 3) partitioner
+    let s3 = bench_median(3, 50, || {
+        std::hint::black_box(partition_ranges(100_000_000 / 4, 1 << 18).len());
+    });
+    t.row(vec![
+        "partition 100MB grads into 1MB chunks".into(),
+        format!("{:.1} us", s3 * 1e6),
+        "-".into(),
+    ]);
+
+    // 4) comm pool submit+drain
+    let pool = CommPool::new();
+    let s4 = bench_median(2, 10, || {
+        for _ in 0..1000 {
+            pool.submit_ar(Box::new(|| std::hint::black_box(())));
+        }
+        pool.drain();
+    });
+    t.row(vec![
+        "comm pool: 1000 jobs submit+drain".into(),
+        format!("{:.1} us/job", s4 * 1e6 / 1000.0),
+        "-".into(),
+    ]);
+
+    // 5) flat all-reduce of 4MB across 4 threads
+    let s5 = bench_median(2, 8, || {
+        let coll = Collective::new(4);
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&coll);
+            hs.push(std::thread::spawn(move || {
+                let mut v = vec![1.0f32; 1 << 20];
+                for tag in 0..4u64 {
+                    c.all_reduce_sum(tag, &mut v);
+                }
+                std::hint::black_box(v[0]);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    });
+    t.row(vec![
+        "collective: 4x all-reduce 4MB, 4 workers".into(),
+        format!("{:.2} ms", s5 * 1e3),
+        format!("{:.2} GB/s effective", 4.0 * 4.0 * 4e6 / s5 / 1e9),
+    ]);
+
+    t.print();
+}

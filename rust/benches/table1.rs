@@ -1,0 +1,55 @@
+//! Paper Table 1: per-task time breakdown under vanilla expert
+//! parallelism, Cluster 1 / 16 GPUs. Prints measured vs paper values.
+
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::cost::TaskCosts;
+use flowmoe::report::{band_check, Table};
+use flowmoe::sched::{build_dag, Policy};
+use flowmoe::sim::simulate;
+use flowmoe::tasks::TaskKind;
+use flowmoe::util::fmt_ms;
+
+fn main() {
+    // paper values: (mha+gating ms, all-reduce ms, iteration ms)
+    let paper = [
+        ("GPT2-Tiny-MoE", 23.5, 32.6, 169.5),
+        ("BERT-Large-MoE", 61.9, 98.3, 537.8),
+        ("LLaMA2-MoE", 308.4, 368.8, 1987.7),
+        ("DeepSeek-V2-S", 870.2, 1247.8, 5843.3),
+    ];
+    let cl = ClusterProfile::cluster1(16);
+    let mut t = Table::new(
+        "Table 1 — vanillaEP task breakdown (Cluster 1, 16 GPUs) [measured | paper]",
+        &["model", "MHA+gating (ms)", "all-reduce (ms)", "iteration (ms)", "ratio", "paper ratio", "verdict"],
+    );
+    for (name, p_mha, p_ar, p_iter) in paper {
+        let cfg = preset(name).unwrap();
+        let costs = TaskCosts::build(&cfg, &cl);
+        let dag = build_dag(&cfg, &costs, &Policy::vanilla_ep());
+        let tl = simulate(&dag);
+        let mut mha = 0.0;
+        let mut ar = 0.0;
+        for task in &dag.tasks {
+            let span = tl.span_of(task.id).unwrap();
+            match task.kind {
+                TaskKind::At { .. } => mha += span.end - span.start,
+                TaskKind::Ar { .. } => ar += span.end - span.start,
+                _ => {}
+            }
+        }
+        let ratio = (mha + ar) / tl.makespan;
+        let p_ratio = (p_mha + p_ar) / p_iter;
+        t.row(vec![
+            name.into(),
+            format!("{} | {}", fmt_ms(mha * 1e3), fmt_ms(p_mha)),
+            format!("{} | {}", fmt_ms(ar * 1e3), fmt_ms(p_ar)),
+            format!("{} | {}", fmt_ms(tl.makespan * 1e3), fmt_ms(p_iter)),
+            format!("{:.1}%", ratio * 100.0),
+            format!("{:.1}%", p_ratio * 100.0),
+            band_check(ratio, 0.18, 0.55).into(),
+        ]);
+    }
+    t.print();
+    println!("\npaper claim: MHA+gating + all-reduce constitute 30-40% of iteration time;");
+    println!("reproduction target is the ratio band, not absolute milliseconds (calibrated cost models).");
+}

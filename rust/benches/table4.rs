@@ -1,0 +1,44 @@
+//! Paper Table 4: pipelining degree R in {2,4,8} on DeepSeek-V2-S,
+//! Cluster 1 / 16 GPUs — Tutel vs ScheMoE vs FlowMoE.
+
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::report::Table;
+use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::util::fmt_ms;
+
+fn main() {
+    let paper = [(2usize, 4481.4, 4093.7, 3205.3), (4, 4628.2, 4164.0, 3113.8), (8, 4588.9, 4308.7, 3295.9)];
+    let cfg = preset("DeepSeek-V2-S").unwrap();
+    let cl = ClusterProfile::cluster1(16);
+    let mut t = Table::new(
+        "Table 4 — R-degree on DeepSeek-V2-S (Cluster 1, 16 GPUs) [measured | paper]",
+        &["R", "Tutel (ms)", "ScheMoE (ms)", "FlowMoE-CC (ms)", "S1 (Tutel)", "S2 (ScheMoE)"],
+    );
+    for (r, p_tut, p_sche, p_flow) in paper {
+        let tut = iteration_time(&cfg, &cl, &Policy::tutel(r)).0 * 1e3;
+        let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(r)).0 * 1e3;
+        let flow = [2.5e6, 8e6, 32e6, 128e6]
+            .iter()
+            .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(r, sp)).0 * 1e3)
+            .fold(f64::INFINITY, f64::min);
+        t.row(vec![
+            r.to_string(),
+            format!("{} | {}", fmt_ms(tut), fmt_ms(p_tut)),
+            format!("{} | {}", fmt_ms(sche), fmt_ms(p_sche)),
+            format!("{} | {}", fmt_ms(flow), fmt_ms(p_flow)),
+            format!("{:.2}x", tut / flow),
+            format!("{:.2}x", sche / flow),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: FlowMoE wins at every R; gains flatten beyond R=4 (startup overhead).");
+
+    // Extension: automatic R selection (the paper defers to PipeMoE [21]
+    // for picking R; sched::autor implements that selection).
+    let (r, t_auto, evals) =
+        flowmoe::sched::autor::select_r(&cfg, &cl, |r| Policy::flow_moe_cc(r, 2.5e6));
+    println!("\nauto-R (sched::autor): picked R={r} ({:.1} ms); candidates:", t_auto * 1e3);
+    for (rc, tc) in evals {
+        println!("  R={rc}: {:.1} ms", tc * 1e3);
+    }
+}

@@ -1,0 +1,65 @@
+//! Paper Table 6: per-worker energy (J) and memory (GB) per iteration,
+//! 5 frameworks x 4 models, Cluster 1 / 16 GPUs.
+//!
+//! Energy absolute joules use our power profile (the paper's nvidia-smi
+//! integrals are testbed-specific); the comparison target is the
+//! *relative savings* of FlowMoE vs each baseline (paper: 10-16 % vs
+//! ScheMoE, 33-41 % vs vanilla).
+
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::cost::TaskCosts;
+use flowmoe::metrics::{energy_joules, peak_memory};
+use flowmoe::report::Table;
+use flowmoe::sched::{build_dag, Policy};
+use flowmoe::sim::simulate;
+
+fn main() {
+    let cl = ClusterProfile::cluster1(16);
+    let paper_mem = [
+        ("GPT2-Tiny-MoE", 2.45, 2.42),
+        ("BERT-Large-MoE", 4.19, 3.89),
+        ("LLaMA2-MoE", 12.43, 11.01),
+        ("DeepSeek-V2-S", 19.42, 17.57),
+    ];
+    let mut t = Table::new(
+        "Table 6 — per-worker energy (J) / memory (GB) per iteration (Cluster 1, 16 GPUs)",
+        &["model", "vanillaEP", "FasterMoE", "Tutel", "ScheMoE", "FlowMoE", "E saved vs vanilla", "M saved vs vanilla", "paper E/M saved"],
+    );
+    for (name, p_mem_van, p_mem_flow) in paper_mem {
+        let cfg = preset(name).unwrap();
+        let costs = TaskCosts::build(&cfg, &cl);
+        let run = |pol: &Policy| {
+            let dag = build_dag(&cfg, &costs, pol);
+            let tl = simulate(&dag);
+            (
+                energy_joules(&tl, &cl.power),
+                peak_memory(&cfg, &cl, pol, &dag, &tl) / 1e9,
+            )
+        };
+        let (ev, mv) = run(&Policy::vanilla_ep());
+        let (efm, mfm) = run(&Policy::faster_moe(2));
+        let (et, mt) = run(&Policy::tutel(2));
+        let (es, msc) = run(&Policy::sche_moe(2));
+        // FlowMoE at the BO-tuned S_p (fixed 2.5 MB is far off-optimum for
+        // the huge-AR DeepSeek configs)
+        let (ef, mf) = [1e6, 2.5e6, 8e6, 32e6, 128e6]
+            .iter()
+            .map(|&sp| run(&Policy::flow_moe(2, sp)))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap();
+        let fmt = |e: f64, m: f64| format!("{e:.1}J/{m:.2}GB");
+        t.row(vec![
+            name.into(),
+            fmt(ev, mv),
+            fmt(efm, mfm),
+            fmt(et, mt),
+            fmt(es, msc),
+            fmt(ef, mf),
+            format!("{:.0}%", (1.0 - ef / ev) * 100.0),
+            format!("{:.0}%", (1.0 - mf / mv) * 100.0),
+            format!("~41%/{:.0}%", (1.0 - p_mem_flow / p_mem_van) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: FlowMoE lowest energy and memory; FasterMoE highest memory (expert replication).");
+}

@@ -1,0 +1,50 @@
+//! Paper Table A.3: S_p tuning — BO vs grid search vs random number
+//! generation, 4 models on Cluster 1 / 16 GPUs. Also prints the BO
+//! overhead estimate of Table A.6.
+
+use flowmoe::bo::{grid_search, random_tuner, BoTuner};
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::report::Table;
+use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::util::fmt_ms;
+
+fn main() {
+    let paper = [
+        ("GPT2-Tiny-MoE", 95.6, 101.3, 109.3, 3.22),
+        ("BERT-Large-MoE", 351.9, 373.8, 388.96, 1.38),
+        ("LLaMA2-MoE", 1124.0, 1208.23, 1250.09, 0.43),
+        ("DeepSeek-V2-S", 3205.3, 3498.8, 3902.75, 0.16),
+    ];
+    let cl = ClusterProfile::cluster1(16);
+    let mut t = Table::new(
+        "Table A.3 — tuner comparison, per-iteration ms [measured | paper]",
+        &["model", "BO", "grid search", "random", "BO overhead % (A.6 paper)"],
+    );
+    for (name, p_bo, p_grid, p_rand, p_ovh) in paper {
+        let cfg = preset(name).unwrap();
+        let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
+        let max = cfg.ar_bytes_per_block();
+
+        let mut bo = BoTuner::new(max, 7);
+        let bo_best = obj(bo.tune(8, obj)) * 1e3;
+        let grid_best = obj(grid_search(max, 8, obj)) * 1e3;
+        let (_, rand_avg) = random_tuner(max, 8, 7, obj);
+        let rand_avg = rand_avg * 1e3;
+
+        // BO overhead (Table A.6): the 8x10 profiling iterations run at
+        // sub-optimal S_p; extra time relative to 1000 tuned iterations.
+        let profiled: f64 = bo.observations.iter().map(|(_, y)| y * 10.0).sum();
+        let tuned_1000 = (bo_best / 1e3) * 1000.0;
+        let overhead = (profiled - 80.0 * bo_best / 1e3).max(0.0) / tuned_1000 * 100.0;
+
+        t.row(vec![
+            name.into(),
+            format!("{} | {}", fmt_ms(bo_best), fmt_ms(p_bo)),
+            format!("{} | {}", fmt_ms(grid_best), fmt_ms(p_grid)),
+            format!("{} | {}", fmt_ms(rand_avg), fmt_ms(p_rand)),
+            format!("{overhead:.2}% | {p_ovh:.2}%"),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: BO <= grid < random on every model; BO overhead is negligible.");
+}

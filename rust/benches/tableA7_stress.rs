@@ -1,0 +1,64 @@
+//! Paper Table A.7: stress tests on scaled-up models (LLaMA2-MoE-L,
+//! DeepSeek-V2-M) at 4/8/16 GPUs, including the OOM detection at 16.
+
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::cost::peak_memory_bytes;
+use flowmoe::report::Table;
+use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::util::fmt_ms;
+
+fn main() {
+    let mut t = Table::new(
+        "Table A.7 — stress tests (Cluster 1) [measured | paper]",
+        &["GPUs", "model", "vanillaEP", "Tutel", "ScheMoE", "FlowMoE", "S3 (vanilla)"],
+    );
+    let paper: &[(usize, &str, Option<(f64, f64, f64, f64)>)] = &[
+        (4, "LLaMA2-MoE-L", Some((2405.1, 1927.0, 1806.1, 1493.8))),
+        (4, "DeepSeek-V2-M", Some((535.3, 468.4, 432.2, 352.2))),
+        (8, "LLaMA2-MoE-L", Some((2989.1, 2493.9, 2297.9, 1833.8))),
+        (8, "DeepSeek-V2-M", Some((944.6, 773.4, 723.6, 552.4))),
+        (16, "LLaMA2-MoE-L", None), // paper: OOM
+        (16, "DeepSeek-V2-M", Some((1254.6, 956.9, 893.4, 708.8))),
+    ];
+    for (gpus, name, paper_row) in paper {
+        let base = preset(name).unwrap();
+        let cfg = base.with_experts_for_workers((base.e / 16).max(1), *gpus);
+        let cl = ClusterProfile::cluster1(*gpus);
+        let mem = peak_memory_bytes(&cfg, *gpus, cfg.l as f64, 1.0);
+        if mem > cl.mem_bytes {
+            t.row(vec![
+                gpus.to_string(),
+                (*name).into(),
+                format!("OOM ({:.1}GB > {:.1}GB) | {}", mem / 1e9, cl.mem_bytes / 1e9,
+                        if paper_row.is_none() { "OOM" } else { "ran" }),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0 * 1e3;
+        let tut = iteration_time(&cfg, &cl, &Policy::tutel(2)).0 * 1e3;
+        let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(2)).0 * 1e3;
+        let flow = [2.5e6, 8e6, 32e6, 128e6]
+            .iter()
+            .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, sp)).0 * 1e3)
+            .fold(f64::INFINITY, f64::min);
+        let p = paper_row.unwrap_or((0.0, 0.0, 0.0, 0.0));
+        t.row(vec![
+            gpus.to_string(),
+            (*name).into(),
+            format!("{} | {}", fmt_ms(van), fmt_ms(p.0)),
+            format!("{} | {}", fmt_ms(tut), fmt_ms(p.1)),
+            format!("{} | {}", fmt_ms(sche), fmt_ms(p.2)),
+            format!("{} | {}", fmt_ms(flow), fmt_ms(p.3)),
+            format!("{:.2}x", van / flow),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: FlowMoE best on every non-OOM row; LLaMA2-MoE-L OOMs at 16 GPUs.");
+    println!("note: paper DeepSeek-V2-M rows are internally inconsistent with its Table 1 AR");
+    println!("bandwidth (2.9GB replicated grads cannot all-reduce inside 1254ms at 1.35GB/s);");
+    println!("we reproduce the Table-1-consistent behaviour (EXPERIMENTS.md §Findings).");
+}

@@ -1,0 +1,201 @@
+//! Minimal 1-D Gaussian-process regression (Cholesky-based) used by the
+//! BO tuner. Inputs/outputs are pre-normalized by the caller.
+
+/// Stationary covariance kernels (Appendix D.1 / Table A.5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// Matern nu=5/2 with length scale `len` (the paper's choice).
+    Matern52 { len: f64 },
+    /// Squared-exponential.
+    Rbf { len: f64 },
+    /// Rational quadratic with scale-mixture parameter `alpha`.
+    RationalQuadratic { len: f64, alpha: f64 },
+}
+
+impl Kernel {
+    pub fn eval(&self, a: f64, b: f64) -> f64 {
+        let r = (a - b).abs();
+        match *self {
+            Kernel::Matern52 { len } => {
+                let s = 5f64.sqrt() * r / len;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+            Kernel::Rbf { len } => (-(r * r) / (2.0 * len * len)).exp(),
+            Kernel::RationalQuadratic { len, alpha } => {
+                (1.0 + r * r / (2.0 * alpha * len * len)).powf(-alpha)
+            }
+        }
+    }
+}
+
+/// Fitted GP posterior over normalized 1-D inputs.
+pub struct Gp {
+    kernel: Kernel,
+    xs: Vec<f64>,
+    /// L from K = L L^T (lower triangular, row-major packed).
+    chol: Vec<Vec<f64>>,
+    /// alpha = K^{-1} y.
+    alpha: Vec<f64>,
+}
+
+impl Gp {
+    /// Fit on points (xs, ys) with observation-noise variance `noise`.
+    pub fn fit(kernel: Kernel, xs: &[f64], ys: &[f64], noise: f64) -> Gp {
+        assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = kernel.eval(xs[i], xs[j]);
+            }
+            k[i][i] += noise + 1e-9;
+        }
+        let chol = cholesky(&k);
+        let alpha = chol_solve(&chol, ys);
+        Gp {
+            kernel,
+            xs: xs.to_vec(),
+            chol,
+            alpha,
+        }
+    }
+
+    /// Posterior (mean, variance) at x.
+    pub fn predict(&self, x: f64) -> (f64, f64) {
+        let n = self.xs.len();
+        let kstar: Vec<f64> = self.xs.iter().map(|&xi| self.kernel.eval(x, xi)).collect();
+        let mu: f64 = kstar.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        // v = L^{-1} k*
+        let mut v = kstar.clone();
+        for i in 0..n {
+            let mut s = v[i];
+            for j in 0..i {
+                s -= self.chol[i][j] * v[j];
+            }
+            v[i] = s / self.chol[i][i];
+        }
+        let var = self.kernel.eval(x, x) - v.iter().map(|a| a * a).sum::<f64>();
+        (mu, var.max(0.0))
+    }
+}
+
+/// Dense Cholesky decomposition (lower triangular). Panics on non-PD
+/// input; callers add jitter to the diagonal.
+fn cholesky(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = a.len();
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                assert!(s > 0.0, "matrix not positive definite (s={s})");
+                l[i][j] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    l
+}
+
+/// Solve (L L^T) x = y.
+fn chol_solve(l: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    let n = y.len();
+    // forward: L z = y
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = y[i];
+        for j in 0..i {
+            s -= l[i][j] * z[j];
+        }
+        z[i] = s / l[i][i];
+    }
+    // backward: L^T x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for j in i + 1..n {
+            s -= l[j][i] * x[j];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = vec![
+            vec![4.0, 2.0, 0.6],
+            vec![2.0, 5.0, 1.0],
+            vec![0.6, 1.0, 3.0],
+        ];
+        let l = cholesky(&a);
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l[i][k] * l[j][k];
+                }
+                assert!((s - a[i][j]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn chol_solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let l = cholesky(&a);
+        let x = chol_solve(&l, &[3.0, -2.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let xs = [0.1, 0.4, 0.7, 0.95];
+        let ys = [1.0, -0.5, 0.3, 0.8];
+        let gp = Gp::fit(Kernel::Matern52 { len: 0.2 }, &xs, &ys, 1e-8);
+        for (x, y) in xs.iter().zip(&ys) {
+            let (mu, var) = gp.predict(*x);
+            assert!((mu - y).abs() < 1e-2, "mu={mu} y={y}");
+            assert!(var < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let gp = Gp::fit(Kernel::Rbf { len: 0.1 }, &[0.5], &[0.0], 1e-6);
+        let (_, v_near) = gp.predict(0.5);
+        let (_, v_far) = gp.predict(0.0);
+        assert!(v_far > v_near);
+    }
+
+    #[test]
+    fn kernels_are_one_at_zero_distance() {
+        for k in [
+            Kernel::Matern52 { len: 0.3 },
+            Kernel::Rbf { len: 0.3 },
+            Kernel::RationalQuadratic { len: 0.3, alpha: 2.0 },
+        ] {
+            assert!((k.eval(0.4, 0.4) - 1.0).abs() < 1e-12);
+            assert!(k.eval(0.0, 1.0) < 1.0);
+        }
+    }
+
+    #[test]
+    fn kernels_decay_with_distance() {
+        for k in [
+            Kernel::Matern52 { len: 0.3 },
+            Kernel::Rbf { len: 0.3 },
+            Kernel::RationalQuadratic { len: 0.3, alpha: 2.0 },
+        ] {
+            assert!(k.eval(0.0, 0.1) > k.eval(0.0, 0.5));
+        }
+    }
+}

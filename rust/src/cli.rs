@@ -1,0 +1,97 @@
+//! Minimal CLI argument parsing (no clap offline): `--key value` /
+//! `--flag` options plus positional arguments.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("simulate --model BERT --gpus 16 --verbose");
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.get("model"), Some("BERT"));
+        assert_eq!(a.usize_or("gpus", 4), 16);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--sp=2.5 --r=4");
+        assert_eq!(a.f64_or("sp", 0.0), 2.5);
+        assert_eq!(a.usize_or("r", 2), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.usize_or("steps", 10), 10);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --model GPT2");
+        assert!(a.has_flag("dry-run") || a.get("dry-run").is_some());
+        assert_eq!(a.get("model"), Some("GPT2"));
+    }
+}

@@ -1,0 +1,442 @@
+//! Expert-parallel execution over real A2A: the paper's Fig. 1b data
+//! path with actual buffers moving between in-process workers.
+//!
+//! Each worker owns `E/P` experts; per microbatch it runs the AT piece
+//! (MHA + gating HLO), routes its tokens in rust ([`dispatch`]), performs
+//! a **real dispatch A2A** through the [`Collective`], runs the expert
+//! FFN HLO on whatever tokens arrived, A2As the outputs back and combines
+//! them ([`combine`]). The backward chain mirrors it exactly
+//! (combine-bwd → A2A → expert-bwd → A2A → dispatch-bwd → AT-bwd),
+//! validated against the monolithic block oracle in
+//! `rust/tests/integration_cluster.rs` and mirrored in python by
+//! `python/tests/test_ep_pieces.py`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::commpool::Collective;
+use crate::runtime::{Engine, HostTensor};
+
+/// Routing decision for one worker's microbatch.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// (E, C, M) dispatch tensor, row-major flattened.
+    pub disp: Vec<f32>,
+    /// (T, k) [expert, slot] pairs; slot == C marks a dropped token.
+    pub comb: Vec<(u32, u32)>,
+    pub e: usize,
+    pub c: usize,
+    pub m: usize,
+    pub k: usize,
+}
+
+/// Build the dispatch tensor from gating outputs (GShard semantics with
+/// capacity dropping) — rust mirror of `ref.dispatch_ref`.
+pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: usize) -> Routing {
+    let t = u.len() / m;
+    let k = gate_len / t;
+    let mut counters = vec![0u32; e];
+    let mut disp = vec![0.0f32; e * c * m];
+    let mut comb = Vec::with_capacity(t * k);
+    for ti in 0..t {
+        for ki in 0..k {
+            let ex = idx[ti * k + ki] as usize;
+            let slot = counters[ex];
+            counters[ex] += 1;
+            if (slot as usize) < c {
+                let dst = (ex * c + slot as usize) * m;
+                let src = ti * m;
+                for j in 0..m {
+                    disp[dst + j] += u[src + j];
+                }
+                comb.push((ex as u32, slot));
+            } else {
+                comb.push((ex as u32, c as u32)); // dropped
+            }
+        }
+    }
+    Routing {
+        disp,
+        comb,
+        e,
+        c,
+        m,
+        k,
+    }
+}
+
+/// Weighted gather of expert outputs back to tokens — rust mirror of
+/// `ref.combine_ref`. `out` is (E, C, M) flattened.
+pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
+    let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
+    debug_assert_eq!(out.len(), e * c * m);
+    let t = routing.comb.len() / k;
+    let mut y = vec![0.0f32; t * m];
+    for ti in 0..t {
+        for ki in 0..k {
+            let (ex, slot) = routing.comb[ti * k + ki];
+            if (slot as usize) < c {
+                let g = gate[ti * k + ki];
+                let src = (ex as usize * c + slot as usize) * m;
+                for j in 0..m {
+                    y[ti * m + j] += g * out[src + j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Backward of [`combine`]: returns (d_out (E,C,M), d_gate (T,k)).
+pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
+    let t = routing.comb.len() / k;
+    let mut dout = vec![0.0f32; e * c * m];
+    let mut dgate = vec![0.0f32; t * k];
+    for ti in 0..t {
+        for ki in 0..k {
+            let (ex, slot) = routing.comb[ti * k + ki];
+            if (slot as usize) < c {
+                let g = gate[ti * k + ki];
+                let o = (ex as usize * c + slot as usize) * m;
+                let mut dot = 0.0f32;
+                for j in 0..m {
+                    dout[o + j] += g * dy[ti * m + j];
+                    dot += dy[ti * m + j] * out[o + j];
+                }
+                dgate[ti * k + ki] = dot;
+            }
+        }
+    }
+    (dout, dgate)
+}
+
+/// Backward of [`dispatch`]: scatter d_disp back onto token gradients.
+pub fn dispatch_bwd(d_disp: &[f32], routing: &Routing) -> Vec<f32> {
+    let (c, m, k) = (routing.c, routing.m, routing.k);
+    let t = routing.comb.len() / k;
+    let mut du = vec![0.0f32; t * m];
+    for ti in 0..t {
+        for ki in 0..k {
+            let (ex, slot) = routing.comb[ti * k + ki];
+            if (slot as usize) < c {
+                let src = (ex as usize * c + slot as usize) * m;
+                for j in 0..m {
+                    du[ti * m + j] += d_disp[src + j];
+                }
+            }
+        }
+    }
+    du
+}
+
+/// Geometry of the EP pieces, read from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct EpGeo {
+    pub p: usize,
+    pub e: usize,
+    pub e_local: usize,
+    pub c: usize,
+    pub cw: usize,
+    pub m: usize,
+    pub t: usize,
+    pub k: usize,
+}
+
+pub fn ep_geometry(engine: &Engine, cfg: &str, p: usize) -> Result<EpGeo> {
+    let ef = engine.manifest().get(&format!("exp_fwd_{cfg}"))?;
+    let xd = &ef.inputs[2]; // (el, cw, m)
+    let (e_local, cw, m) = (xd.shape[0], xd.shape[1], xd.shape[2]);
+    let ab = engine.manifest().get(&format!("at_bwd_{cfg}"))?;
+    let dg = ab.inputs.last().unwrap(); // dgate (T, k)
+    let (t, k) = (dg.shape[0], dg.shape[1]);
+    if cw % p != 0 {
+        return Err(anyhow!("cw {cw} not divisible by P {p}"));
+    }
+    Ok(EpGeo {
+        p,
+        e: e_local * p,
+        e_local,
+        c: cw / p,
+        cw,
+        m,
+        t,
+        k,
+    })
+}
+
+/// Per-worker result of one EP forward+backward over a transformer block.
+#[derive(Clone, Debug)]
+pub struct EpResult {
+    /// Block output y = h + combined (T*M).
+    pub y: Vec<f32>,
+    /// Gradients of the 7 AT tensors.
+    pub datp: Vec<Vec<f32>>,
+    /// dL/dx of the block input (T*M).
+    pub dx: Vec<f32>,
+    /// Local expert weight grads (el*M*H, el*H*M) — complete (sums over
+    /// all source workers' tokens, the EP property).
+    pub dw1: Vec<f32>,
+    pub dw2: Vec<f32>,
+}
+
+/// Run one expert-parallel block fwd+bwd on worker `w` of `p`.
+/// `atp` = 7 AT tensors, `w1/w2` = the worker's local expert shard,
+/// `x` = local tokens (T*M), `dy` = upstream gradient (T*M).
+#[allow(clippy::too_many_arguments)]
+pub fn ep_block_fwd_bwd(
+    engine: &mut Engine,
+    coll: &Arc<Collective>,
+    w: usize,
+    cfg: &str,
+    geo: &EpGeo,
+    atp: &[Vec<f32>],
+    w1: &[f32],
+    w2: &[f32],
+    x: &[f32],
+    dy: &[f32],
+    tag_base: u64,
+) -> Result<EpResult> {
+    let at_fwd = format!("at_fwd_{cfg}");
+    let at_bwd = format!("at_bwd_{cfg}");
+    let exp_fwd = format!("exp_fwd_{cfg}");
+    let exp_bwd = format!("exp_bwd_{cfg}");
+    let (p, el, c, m) = (geo.p, geo.e_local, geo.c, geo.m);
+
+    // ---- AT piece ----
+    let atp_t: Vec<HostTensor> = atp.iter().map(|v| HostTensor::F32(v.clone())).collect();
+    let x_t = HostTensor::F32(x.to_vec());
+    let mut inp: Vec<&HostTensor> = atp_t.iter().collect();
+    inp.push(&x_t);
+    let outs = engine.run(&at_fwd, &inp)?;
+    let h = outs[0].f32().to_vec();
+    let u = outs[1].f32().to_vec();
+    let idx = outs[3].i32().to_vec();
+    let gate = outs[4].f32().to_vec();
+
+    // ---- routing + dispatch A2A ----
+    let routing = dispatch(&u, &idx, gate.len(), geo.e, c, m);
+    let slab = el * c * m;
+    for o in 0..p {
+        let part = routing.disp[o * slab..(o + 1) * slab].to_vec();
+        coll.send(w, o, tag_base, part);
+    }
+    // xd: (el, cw, m) with cw = C*P, source s occupies columns [s*C, (s+1)*C)
+    let mut xd = vec![0.0f32; el * geo.cw * m];
+    for s in 0..p {
+        let part = coll.recv(s, w, tag_base);
+        for e in 0..el {
+            let dst = (e * geo.cw + s * c) * m;
+            let src = e * c * m;
+            xd[dst..dst + c * m].copy_from_slice(&part[src..src + c * m]);
+        }
+    }
+
+    // ---- expert fwd ----
+    let w1_t = HostTensor::F32(w1.to_vec());
+    let w2_t = HostTensor::F32(w2.to_vec());
+    let xd_t = HostTensor::F32(xd.clone());
+    let yd = engine.run(&exp_fwd, &[&w1_t, &w2_t, &xd_t])?;
+    let yd = yd.into_iter().next().unwrap();
+
+    // ---- combine A2A (outputs back to sources) ----
+    for s in 0..p {
+        let mut part = vec![0.0f32; slab];
+        for e in 0..el {
+            let src = (e * geo.cw + s * c) * m;
+            part[e * c * m..(e + 1) * c * m].copy_from_slice(&yd.f32()[src..src + c * m]);
+        }
+        coll.send(w, s, tag_base + 1, part);
+    }
+    let mut out_full = vec![0.0f32; geo.e * c * m];
+    for o in 0..p {
+        let part = coll.recv(o, w, tag_base + 1);
+        out_full[o * slab..(o + 1) * slab].copy_from_slice(&part);
+    }
+    let yc = combine(&out_full, &routing, &gate);
+    let mut y = h.clone();
+    for i in 0..y.len() {
+        y[i] += yc[i];
+    }
+
+    // ================= backward =================
+    // residual: dh = dy; combine-bwd
+    let (dout, dgate) = combine_bwd(dy, &out_full, &routing, &gate);
+    // A2A dout to owners (same layout as dispatch)
+    for o in 0..p {
+        coll.send(w, o, tag_base + 2, dout[o * slab..(o + 1) * slab].to_vec());
+    }
+    let mut dyd = vec![0.0f32; el * geo.cw * m];
+    for s in 0..p {
+        let part = coll.recv(s, w, tag_base + 2);
+        for e in 0..el {
+            let dst = (e * geo.cw + s * c) * m;
+            dyd[dst..dst + c * m].copy_from_slice(&part[e * c * m..(e + 1) * c * m]);
+        }
+    }
+    // expert bwd on the owner
+    let dyd_t = HostTensor::F32(dyd);
+    let outs = engine.run(&exp_bwd, &[&w1_t, &w2_t, &xd_t, &dyd_t])?;
+    let dw1 = outs[0].f32().to_vec();
+    let dw2 = outs[1].f32().to_vec();
+    let dxd = outs[2].f32().to_vec();
+    // A2A dxd back to sources
+    for s in 0..p {
+        let mut part = vec![0.0f32; slab];
+        for e in 0..el {
+            let src = (e * geo.cw + s * c) * m;
+            part[e * c * m..(e + 1) * c * m].copy_from_slice(&dxd[src..src + c * m]);
+        }
+        coll.send(w, s, tag_base + 3, part);
+    }
+    let mut d_disp = vec![0.0f32; geo.e * c * m];
+    for o in 0..p {
+        let part = coll.recv(o, w, tag_base + 3);
+        d_disp[o * slab..(o + 1) * slab].copy_from_slice(&part);
+    }
+    let du = dispatch_bwd(&d_disp, &routing);
+
+    // AT bwd closes the chain
+    let dh_t = HostTensor::F32(dy.to_vec());
+    let du_t = HostTensor::F32(du);
+    let dgate_t = HostTensor::F32(dgate);
+    let mut inp: Vec<&HostTensor> = atp_t.iter().collect();
+    inp.push(&x_t);
+    inp.push(&dh_t);
+    inp.push(&du_t);
+    inp.push(&dgate_t);
+    let outs = engine.run(&at_bwd, &inp)?;
+    let datp: Vec<Vec<f32>> = outs[..7].iter().map(|t| t.f32().to_vec()).collect();
+    let dx = outs[7].f32().to_vec();
+
+    Ok(EpResult {
+        y,
+        datp,
+        dx,
+        dw1,
+        dw2,
+    })
+}
+
+/// Spawn P workers, run one EP block fwd+bwd each, return per-worker
+/// results (used by integration tests and the quickstart example).
+pub fn run_ep_cluster(
+    artifacts: &Path,
+    cfg: &str,
+    p: usize,
+    atp: Vec<Vec<f32>>,
+    w1_full: Vec<f32>,
+    w2_full: Vec<f32>,
+    xs: Vec<Vec<f32>>,
+    dys: Vec<Vec<f32>>,
+) -> Result<Vec<EpResult>> {
+    let coll = Collective::new(p);
+    let dir = artifacts.to_path_buf();
+    let mut handles = Vec::new();
+    for w in 0..p {
+        let coll = Arc::clone(&coll);
+        let dir = dir.clone();
+        let cfg = cfg.to_string();
+        let atp = atp.clone();
+        let (w1_full, w2_full) = (w1_full.clone(), w2_full.clone());
+        let x = xs[w].clone();
+        let dy = dys[w].clone();
+        handles.push(std::thread::spawn(move || -> Result<EpResult> {
+            let mut engine = Engine::new(&dir)?;
+            let geo = ep_geometry(&engine, &cfg, p)?;
+            let shard = w1_full.len() / p;
+            let shard2 = w2_full.len() / p;
+            let w1 = &w1_full[w * shard..(w + 1) * shard];
+            let w2 = &w2_full[w * shard2..(w + 1) * shard2];
+            ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
+        }));
+    }
+    let mut out = Vec::new();
+    for h in handles {
+        out.push(h.join().map_err(|_| anyhow!("ep worker panicked"))??);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn routing_fixture() -> (Vec<f32>, Vec<i32>, Vec<f32>, usize, usize, usize) {
+        // 4 tokens, m=2, e=2, c=2, k=1
+        let u = vec![
+            1.0, 2.0, //
+            3.0, 4.0, //
+            5.0, 6.0, //
+            7.0, 8.0,
+        ];
+        let idx = vec![0, 1, 0, 0]; // token 3 overflows expert 0 (c=2)
+        let gate = vec![1.0, 1.0, 0.5, 1.0];
+        (u, idx, gate, 2, 2, 2)
+    }
+
+    #[test]
+    fn dispatch_places_and_drops() {
+        let (u, idx, gate, e, c, m) = routing_fixture();
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        // expert0 slot0 = token0, slot1 = token2; expert1 slot0 = token1
+        assert_eq!(&r.disp[0..2], &[1.0, 2.0]);
+        assert_eq!(&r.disp[2..4], &[5.0, 6.0]);
+        assert_eq!(&r.disp[4..6], &[3.0, 4.0]);
+        assert_eq!(r.comb[3], (0, 2)); // dropped (slot == c)
+    }
+
+    #[test]
+    fn combine_inverts_dispatch_with_unit_gates() {
+        let (u, idx, _gate, e, c, m) = routing_fixture();
+        let gate = vec![1.0f32; 4];
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        let y = combine(&r.disp, &r, &gate);
+        // kept tokens reproduce themselves; dropped token 3 becomes zero
+        assert_eq!(&y[0..6], &u[0..6]);
+        assert_eq!(&y[6..8], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn combine_bwd_transposes_combine() {
+        // <combine(out), dy> == <out, combine_bwd(dy).dout> (adjoint test)
+        let (u, idx, gate, e, c, m) = routing_fixture();
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        let mut rng = Rng::new(1);
+        let out: Vec<f32> = (0..e * c * m).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..u.len()).map(|_| rng.normal() as f32).collect();
+        let y = combine(&out, &r, &gate);
+        let (dout, _dg) = combine_bwd(&dy, &out, &r, &gate);
+        let lhs: f32 = y.iter().zip(&dy).map(|(a, b)| a * b).sum();
+        let rhs: f32 = out.iter().zip(&dout).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dispatch_bwd_transposes_dispatch() {
+        let (u, idx, gate, e, c, m) = routing_fixture();
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        let mut rng = Rng::new(2);
+        let dd: Vec<f32> = (0..e * c * m).map(|_| rng.normal() as f32).collect();
+        let du = dispatch_bwd(&dd, &r);
+        let lhs: f32 = r.disp.iter().zip(&dd).map(|(a, b)| a * b).sum();
+        let rhs: f32 = u.iter().zip(&du).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dgate_is_dot_of_dy_and_expert_out() {
+        let (u, idx, gate, e, c, m) = routing_fixture();
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        let out: Vec<f32> = (0..e * c * m).map(|i| i as f32).collect();
+        let dy = vec![1.0f32; u.len()];
+        let (_, dg) = combine_bwd(&dy, &out, &r, &gate);
+        // token0 -> expert0 slot0 -> out rows [0,1] => dot = 0+1 = 1
+        assert_eq!(dg[0], 1.0);
+        // dropped token 3 gets zero gate grad
+        assert_eq!(dg[3], 0.0);
+    }
+}

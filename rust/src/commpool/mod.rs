@@ -1,0 +1,402 @@
+//! Runtime communication pool (paper Algorithm 2) + real collectives.
+//!
+//! [`CommPool`] is the per-worker communication thread: two queues (A2A
+//! and all-reduce chunks); the pool executes A2A jobs whenever any are
+//! queued and AR-chunk jobs only otherwise — exactly the paper's
+//! COMMPOOLMANAGER priority rule, with no preemption (a running job
+//! completes before the next pick).
+//!
+//! [`Collective`] provides the real data-movement primitives between the
+//! in-process workers: tagged flat all-reduce, barriers and A2A
+//! mailboxes. Collective ops must be entered in the same order by every
+//! worker; the trainer guarantees this by enqueueing jobs in the
+//! deterministic schedule order the coordinator computed (DESIGN.md §5 —
+//! the same requirement NCCL imposes on the paper's implementation).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A communication job (runs on the pool thread).
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct Queues {
+    a2a: VecDeque<Job>,
+    ar: VecDeque<Job>,
+    closed: bool,
+    /// jobs executed so far (drain tracking)
+    done: u64,
+    submitted: u64,
+}
+
+/// Priority communication pool: one worker thread, A2A-before-AR.
+pub struct CommPool {
+    inner: Arc<(Mutex<Queues>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CommPool {
+    pub fn new() -> CommPool {
+        let inner = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
+        let inner2 = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("commpool".into())
+            .spawn(move || {
+                let (lock, cv) = &*inner2;
+                loop {
+                    let job = {
+                        let mut q = lock.lock().unwrap();
+                        loop {
+                            // Algorithm 2: A2A first, then AR chunks.
+                            if let Some(j) = q.a2a.pop_front() {
+                                break Some(j);
+                            }
+                            if let Some(j) = q.ar.pop_front() {
+                                break Some(j);
+                            }
+                            if q.closed {
+                                break None;
+                            }
+                            q = cv.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(j) => {
+                            j();
+                            let (lock, cv) = &*inner2;
+                            let mut q = lock.lock().unwrap();
+                            q.done += 1;
+                            cv.notify_all();
+                        }
+                        None => return,
+                    }
+                }
+            })
+            .expect("spawn commpool");
+        CommPool {
+            inner,
+            handle: Some(handle),
+        }
+    }
+
+    /// Enqueue a high-priority A2A job.
+    pub fn submit_a2a(&self, job: Job) {
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        q.a2a.push_back(job);
+        q.submitted += 1;
+        cv.notify_all();
+    }
+
+    /// Enqueue a low-priority all-reduce chunk job.
+    pub fn submit_ar(&self, job: Job) {
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        q.ar.push_back(job);
+        q.submitted += 1;
+        cv.notify_all();
+    }
+
+    /// Block until every submitted job has run.
+    pub fn drain(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        while q.done < q.submitted {
+            q = cv.wait(q).unwrap();
+        }
+    }
+}
+
+impl Default for CommPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for CommPool {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.inner;
+            let mut q = lock.lock().unwrap();
+            q.closed = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `len` elements into chunks of at most `chunk_elems` — the paper's
+/// PARTITION procedure over a flat gradient tensor. Returns (start, len)
+/// ranges covering [0, len) exactly.
+pub fn partition_ranges(len: usize, chunk_elems: usize) -> Vec<(usize, usize)> {
+    assert!(chunk_elems > 0);
+    let mut out = Vec::new();
+    let mut s = 0;
+    while s < len {
+        let l = chunk_elems.min(len - s);
+        out.push((s, l));
+        s += l;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Real in-process collectives
+// ---------------------------------------------------------------------------
+
+struct AllReduceSlot {
+    buf: Vec<f32>,
+    arrived: usize,
+    copied: usize,
+}
+
+struct CollectiveState {
+    reduce: HashMap<u64, AllReduceSlot>,
+    mail: HashMap<(usize, usize, u64), Vec<f32>>,
+    barrier_gen: u64,
+    barrier_arrived: usize,
+}
+
+/// In-process collective context shared by the P workers.
+pub struct Collective {
+    p: usize,
+    state: Mutex<CollectiveState>,
+    cv: Condvar,
+}
+
+impl Collective {
+    pub fn new(p: usize) -> Arc<Collective> {
+        Arc::new(Collective {
+            p,
+            state: Mutex::new(CollectiveState {
+                reduce: HashMap::new(),
+                mail: HashMap::new(),
+                barrier_gen: 0,
+                barrier_arrived: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.p
+    }
+
+    /// Flat all-reduce (sum) of `data` across all P workers under `tag`.
+    /// Every worker must call with the same tag and equal lengths; tags
+    /// must be globally ordered consistently (see module docs).
+    pub fn all_reduce_sum(&self, tag: u64, data: &mut [f32]) {
+        let mut st = self.state.lock().unwrap();
+        {
+            let slot = st.reduce.entry(tag).or_insert_with(|| AllReduceSlot {
+                buf: vec![0.0; data.len()],
+                arrived: 0,
+                copied: 0,
+            });
+            assert_eq!(slot.buf.len(), data.len(), "all_reduce length mismatch (tag {tag})");
+            for (b, d) in slot.buf.iter_mut().zip(data.iter()) {
+                *b += *d;
+            }
+            slot.arrived += 1;
+        }
+        if st.reduce[&tag].arrived == self.p {
+            self.cv.notify_all();
+        } else {
+            while st.reduce.get(&tag).map(|s| s.arrived) != Some(self.p) {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        // copy out; last reader removes the slot
+        let remove = {
+            let slot = st.reduce.get_mut(&tag).unwrap();
+            data.copy_from_slice(&slot.buf);
+            slot.copied += 1;
+            slot.copied == self.p
+        };
+        if remove {
+            st.reduce.remove(&tag);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Deposit a message for `to` (non-blocking).
+    pub fn send(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
+        let mut st = self.state.lock().unwrap();
+        let prev = st.mail.insert((from, to, tag), data);
+        assert!(prev.is_none(), "duplicate send ({from}->{to}, tag {tag})");
+        self.cv.notify_all();
+    }
+
+    /// Blocking receive from `from`.
+    pub fn recv(&self, from: usize, to: usize, tag: u64) -> Vec<f32> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.mail.remove(&(from, to, tag)) {
+                return v;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Generation barrier across all workers.
+    pub fn barrier(&self) {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.barrier_gen;
+        st.barrier_arrived += 1;
+        if st.barrier_arrived == self.p {
+            st.barrier_arrived = 0;
+            st.barrier_gen += 1;
+            self.cv.notify_all();
+        } else {
+            while st.barrier_gen == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_exactly() {
+        let r = partition_ranges(10, 3);
+        assert_eq!(r, vec![(0, 3), (3, 3), (6, 3), (9, 1)]);
+        let total: usize = r.iter().map(|(_, l)| l).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn partition_single_chunk() {
+        assert_eq!(partition_ranges(5, 100), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn partition_empty() {
+        assert!(partition_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_drains() {
+        let pool = CommPool::new();
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let n2 = Arc::clone(&n);
+            pool.submit_a2a(Box::new(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.drain();
+        assert_eq!(n.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn pool_prioritizes_a2a_over_ar() {
+        // Submit a blocker first so both queues fill before any pick.
+        let pool = CommPool::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+
+        let g2 = Arc::clone(&gate);
+        pool.submit_ar(Box::new(move || {
+            let (l, c) = &*g2;
+            let mut open = l.lock().unwrap();
+            while !*open {
+                open = c.wait(open).unwrap();
+            }
+        }));
+        let o1 = Arc::clone(&order);
+        pool.submit_ar(Box::new(move || o1.lock().unwrap().push("ar")));
+        let o2 = Arc::clone(&order);
+        pool.submit_a2a(Box::new(move || o2.lock().unwrap().push("a2a")));
+
+        // open the gate: pool should then pick a2a before the queued ar
+        {
+            let (l, c) = &*gate;
+            *l.lock().unwrap() = true;
+            c.notify_all();
+        }
+        pool.drain();
+        assert_eq!(*order.lock().unwrap(), vec!["a2a", "ar"]);
+    }
+
+    #[test]
+    fn all_reduce_sums_across_workers() {
+        let p = 4;
+        let coll = Collective::new(p);
+        let mut handles = Vec::new();
+        for w in 0..p {
+            let c = Arc::clone(&coll);
+            handles.push(std::thread::spawn(move || {
+                let mut v = vec![w as f32 + 1.0; 8];
+                c.all_reduce_sum(1, &mut v);
+                v
+            }));
+        }
+        for h in handles {
+            let v = h.join().unwrap();
+            assert!(v.iter().all(|&x| x == 10.0)); // 1+2+3+4
+        }
+    }
+
+    #[test]
+    fn all_reduce_multiple_tags_in_order() {
+        let p = 2;
+        let coll = Collective::new(p);
+        let mut handles = Vec::new();
+        for w in 0..p {
+            let c = Arc::clone(&coll);
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for tag in 0..20u64 {
+                    let mut v = vec![(w + 1) as f32 * (tag + 1) as f32; 4];
+                    c.all_reduce_sum(tag, &mut v);
+                    out.push(v[0]);
+                }
+                out
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            for (tag, v) in out.iter().enumerate() {
+                assert_eq!(*v, 3.0 * (tag + 1) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let coll = Collective::new(2);
+        let c1 = Arc::clone(&coll);
+        let t = std::thread::spawn(move || c1.recv(0, 1, 7));
+        coll.send(0, 1, 7, vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.join().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let p = 3;
+        let coll = Collective::new(p);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..p {
+            let c = Arc::clone(&coll);
+            let n = Arc::clone(&counter);
+            handles.push(std::thread::spawn(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+                c.barrier();
+                // after the barrier every increment must be visible
+                assert_eq!(n.load(Ordering::SeqCst), 3);
+                c.barrier();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

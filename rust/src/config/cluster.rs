@@ -1,0 +1,254 @@
+//! Hardware profiles for the two testbeds of the paper (Sec. 5.1) and the
+//! heterogeneous variant of Appendix K.
+//!
+//! The paper measured on real GPUs; we replace the testbed with calibrated
+//! analytic profiles (DESIGN.md §1). Constants are calibrated so that
+//! vanilla expert parallelism reproduces the *ratios* of the paper's
+//! Table 1 (MHA+gating + all-reduce ≈ 30–40 % of iteration time); all
+//! schedulers are then compared on identical task costs, which is the
+//! variable the paper isolates.
+
+/// Compute-side profile of one accelerator.
+#[derive(Clone, Debug)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Peak fp32 throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// Max achievable model-flops-utilization on large matmuls.
+    pub mfu_max: f64,
+    /// Matmul dim at which MFU reaches half of `mfu_max` (small-kernel
+    /// inefficiency: tiny M ⇒ tiny effective throughput).
+    pub mfu_half_dim: f64,
+    /// Fixed per-task launch/framework overhead (s).
+    pub comp_alpha: f64,
+    /// Relative compute speed multiplier (heterogeneous clusters scale
+    /// this; 1.0 = nominal).
+    pub speed: f64,
+}
+
+impl GpuProfile {
+    pub const RTX3090: GpuProfile = GpuProfile {
+        name: "RTX3090",
+        peak_flops: 35.6e12,
+        mfu_max: 0.30,
+        mfu_half_dim: 128.0,
+        comp_alpha: 400e-6,
+        speed: 1.0,
+    };
+
+    pub const RTX2080TI: GpuProfile = GpuProfile {
+        name: "RTX2080Ti",
+        peak_flops: 13.4e12,
+        mfu_max: 0.28,
+        mfu_half_dim: 128.0,
+        comp_alpha: 400e-6,
+        speed: 1.0,
+    };
+
+    /// Effective throughput (FLOP/s) for a matmul-dominated task whose
+    /// characteristic inner dimension is `dim`.
+    pub fn effective_flops(&self, dim: f64) -> f64 {
+        let mfu = self.mfu_max * dim / (dim + self.mfu_half_dim);
+        self.peak_flops * mfu * self.speed
+    }
+
+    /// Time (s) for `flops` of work at characteristic dim `dim`.
+    pub fn compute_time(&self, flops: f64, dim: f64) -> f64 {
+        self.comp_alpha + flops / self.effective_flops(dim)
+    }
+
+    /// A slowed copy (heterogeneous clusters / simulated degradation).
+    pub fn slowed(&self, factor: f64) -> GpuProfile {
+        let mut g = self.clone();
+        g.speed = factor;
+        g
+    }
+}
+
+/// Network-side profile of the cluster fabric.
+#[derive(Clone, Debug)]
+pub struct NetProfile {
+    /// Inter-node link bandwidth per node, bytes/s.
+    pub inter_bw: f64,
+    /// Intra-node (PCIe) bandwidth per GPU pair, bytes/s.
+    pub intra_bw: f64,
+    /// GPUs per node (share the node's NIC).
+    pub ranks_per_node: usize,
+    /// Per-message startup latency (s) — NCCL launch + protocol.
+    pub alpha: f64,
+    /// Algorithm/protocol efficiency of collectives (<= 1).
+    pub algo_eff: f64,
+    /// Effective end-to-end all-reduce bandwidth (bytes/s): the ring's
+    /// inter-node edges share the NIC, so this is well below `inter_bw`.
+    /// Calibrated so centralized AR reproduces the paper's Table 1
+    /// all-reduce column (BERT ~98 ms, DeepSeek ~1.25 s on Cluster 1).
+    pub ar_bw: f64,
+    /// Per-all-reduce-launch startup (s). Calibrated to the paper's Fig. 4
+    /// (the +100 ms penalty of S_p = 0.5 MB vs 2.5 MB on BERT-Large-MoE
+    /// implies ~0.5 ms per extra chunk launch).
+    pub ar_alpha: f64,
+}
+
+impl NetProfile {
+    /// Effective point-to-point bandwidth seen by one rank when all ranks
+    /// of a node drive the NIC simultaneously (collectives do).
+    pub fn rank_bw(&self) -> f64 {
+        (self.inter_bw / self.ranks_per_node as f64) * self.algo_eff
+    }
+}
+
+/// Per-GPU power states for the energy model (dynamic power above idle;
+/// the paper's nvidia-smi numbers are per-iteration averages — see
+/// metrics::energy for calibration notes).
+#[derive(Clone, Debug)]
+pub struct PowerProfile {
+    pub idle_w: f64,
+    pub compute_w: f64,
+    pub comm_w: f64,
+    /// Both streams busy (overlap) — less than compute+comm (shared rails).
+    pub both_w: f64,
+}
+
+impl PowerProfile {
+    pub const RTX3090: PowerProfile = PowerProfile {
+        idle_w: 25.0,
+        compute_w: 280.0,
+        comm_w: 95.0,
+        both_w: 320.0,
+    };
+    pub const RTX2080TI: PowerProfile = PowerProfile {
+        idle_w: 18.0,
+        compute_w: 180.0,
+        comm_w: 70.0,
+        both_w: 210.0,
+    };
+}
+
+/// A full cluster: P workers, compute + network + power profiles.
+#[derive(Clone, Debug)]
+pub struct ClusterProfile {
+    pub name: &'static str,
+    pub p: usize,
+    pub gpu: GpuProfile,
+    /// Per-worker overrides for heterogeneous clusters (empty = uniform).
+    pub gpu_overrides: Vec<(usize, GpuProfile)>,
+    pub net: NetProfile,
+    pub power: PowerProfile,
+    /// GPU memory per worker (bytes) — OOM detection for the sweeps.
+    pub mem_bytes: f64,
+}
+
+impl ClusterProfile {
+    /// Paper Cluster 1: 2 nodes x 8 RTX3090, 100 Gb/s inter-node, PCIe3.
+    pub fn cluster1(p: usize) -> ClusterProfile {
+        ClusterProfile {
+            name: "Cluster1",
+            p,
+            gpu: GpuProfile::RTX3090,
+            gpu_overrides: vec![],
+            net: NetProfile {
+                inter_bw: 12.5e9,
+                intra_bw: 12.0e9,
+                ranks_per_node: 8.min(p),
+                alpha: 35e-6,
+                algo_eff: 0.70,
+                ar_bw: 1.2e9,
+                ar_alpha: 0.5e-3,
+            },
+            power: PowerProfile::RTX3090,
+            // 24 GB card; ~21.5 GB usable after CUDA context, cudnn
+            // workspaces and allocator fragmentation.
+            mem_bytes: 21.5e9,
+        }
+    }
+
+    /// Paper Cluster 2: 4 nodes x 2 RTX2080Ti, 10 Gb/s inter-node.
+    pub fn cluster2(p: usize) -> ClusterProfile {
+        ClusterProfile {
+            name: "Cluster2",
+            p,
+            gpu: GpuProfile::RTX2080TI,
+            gpu_overrides: vec![],
+            net: NetProfile {
+                inter_bw: 1.25e9,
+                intra_bw: 8.0e9,
+                ranks_per_node: 2.min(p),
+                alpha: 40e-6,
+                algo_eff: 0.65,
+                ar_bw: 0.3e9,
+                ar_alpha: 0.6e-3,
+            },
+            power: PowerProfile::RTX2080TI,
+            // 12 GB card (the 2080 Ti in the paper's Cluster 2); ~10.5 GB
+            // usable.
+            mem_bytes: 10.5e9,
+        }
+    }
+
+    /// Appendix K heterogeneous variant: half the workers at half speed.
+    pub fn cluster1_heterogeneous(p: usize) -> ClusterProfile {
+        let mut c = Self::cluster1(p);
+        c.name = "Cluster1-hetero";
+        c.gpu_overrides = (0..p / 2).map(|w| (w, GpuProfile::RTX3090.slowed(0.5))).collect();
+        c
+    }
+
+    /// The slowest GPU dictates the collective-task timeline (Appendix K.1):
+    /// collectives can only start once the slowest worker's compute is done.
+    pub fn slowest_gpu(&self) -> GpuProfile {
+        let mut slow = self.gpu.clone();
+        for (_, g) in &self.gpu_overrides {
+            if g.speed < slow.speed {
+                slow = g.clone();
+            }
+        }
+        slow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_flops_monotone_in_dim() {
+        let g = GpuProfile::RTX3090;
+        assert!(g.effective_flops(256.0) < g.effective_flops(1024.0));
+        assert!(g.effective_flops(1024.0) < g.effective_flops(8192.0));
+    }
+
+    #[test]
+    fn effective_flops_below_peak() {
+        let g = GpuProfile::RTX3090;
+        assert!(g.effective_flops(1e9) < g.peak_flops);
+    }
+
+    #[test]
+    fn compute_time_has_floor() {
+        let g = GpuProfile::RTX3090;
+        assert!(g.compute_time(0.0, 512.0) >= g.comp_alpha);
+    }
+
+    #[test]
+    fn slowed_profile_is_slower() {
+        let g = GpuProfile::RTX3090;
+        let s = g.slowed(0.5);
+        assert!(s.compute_time(1e9, 512.0) > g.compute_time(1e9, 512.0));
+    }
+
+    #[test]
+    fn cluster_profiles() {
+        let c1 = ClusterProfile::cluster1(16);
+        let c2 = ClusterProfile::cluster2(8);
+        assert!(c1.net.rank_bw() > c2.net.rank_bw());
+        assert_eq!(c1.slowest_gpu().speed, 1.0);
+        let h = ClusterProfile::cluster1_heterogeneous(16);
+        assert_eq!(h.slowest_gpu().speed, 0.5);
+    }
+
+    #[test]
+    fn rank_bw_shares_nic() {
+        let c1 = ClusterProfile::cluster1(16);
+        assert!(c1.net.rank_bw() < c1.net.inter_bw);
+    }
+}

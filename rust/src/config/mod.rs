@@ -1,0 +1,21 @@
+//! Model and cluster configuration (paper Table 2 + testbed profiles).
+
+pub mod cluster;
+pub mod model;
+pub mod parse;
+
+pub use cluster::{ClusterProfile, GpuProfile, NetProfile, PowerProfile};
+pub use model::ModelCfg;
+
+/// Paper Table 2 presets plus the AOT configs (`tiny`, `e2e`).
+pub fn preset(name: &str) -> Option<ModelCfg> {
+    model::PRESETS.iter().find(|c| c.name == name).cloned()
+}
+
+/// All Table 2 benchmark models used across the paper's tables.
+pub fn table2_models() -> Vec<ModelCfg> {
+    ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"]
+        .iter()
+        .map(|n| preset(n).unwrap())
+        .collect()
+}

@@ -1,0 +1,189 @@
+//! Minimal config-file parsing (no serde offline): `key = value` lines
+//! with `[section]` headers, `#` comments. Lets deployments define custom
+//! models and cluster profiles without recompiling:
+//!
+//! ```text
+//! [model]
+//! name = my-moe
+//! L = 8
+//! B = 4
+//! N = 512
+//! M = 1024
+//! H = 4096
+//! E = 16
+//! k = 2
+//! f = 1.1
+//! n_heads = 16
+//! vocab = 32000
+//!
+//! [cluster]
+//! base = cluster1       # cluster1 | cluster2
+//! gpus = 16
+//! inter_bw_gbps = 100
+//! ar_bw_gbps = 9.6
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ClusterProfile, ModelCfg};
+
+/// Parsed sections: section name -> (key -> value).
+pub type Sections = HashMap<String, HashMap<String, String>>;
+
+/// Parse the `key = value` / `[section]` format.
+pub fn parse_sections(text: &str) -> Result<Sections> {
+    let mut out: Sections = HashMap::new();
+    let mut cur = "".to_string();
+    out.entry(cur.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: bad section header {raw}", lineno + 1);
+            }
+            cur = line[1..line.len() - 1].trim().to_string();
+            out.entry(cur.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            out.get_mut(&cur)
+                .unwrap()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        } else {
+            bail!("line {}: expected key = value, got {raw}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn get<T: std::str::FromStr>(sec: &HashMap<String, String>, key: &str, default: T) -> Result<T> {
+    match sec.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("bad value for {key}: {v}")),
+    }
+}
+
+/// Build a [`ModelCfg`] from a `[model]` section (missing keys default to
+/// a small transformer). Names are leaked (`&'static str`) — config files
+/// are loaded once per process.
+pub fn model_from_sections(secs: &Sections) -> Result<ModelCfg> {
+    let sec = secs
+        .get("model")
+        .ok_or_else(|| anyhow!("missing [model] section"))?;
+    let name: String = sec.get("name").cloned().unwrap_or_else(|| "custom".into());
+    Ok(ModelCfg {
+        name: Box::leak(name.into_boxed_str()),
+        l: get(sec, "L", 4)?,
+        b: get(sec, "B", 4)?,
+        n: get(sec, "N", 512)?,
+        m: get(sec, "M", 512)?,
+        h: get(sec, "H", 1024)?,
+        e: get(sec, "E", 16)?,
+        k: get(sec, "k", 2)?,
+        f: get(sec, "f", 1.0)?,
+        n_heads: get(sec, "n_heads", 8)?,
+        vocab: get(sec, "vocab", 0)?,
+    })
+}
+
+/// Build a [`ClusterProfile`] from a `[cluster]` section layered on a
+/// base profile.
+pub fn cluster_from_sections(secs: &Sections) -> Result<ClusterProfile> {
+    let sec = secs
+        .get("cluster")
+        .ok_or_else(|| anyhow!("missing [cluster] section"))?;
+    let gpus: usize = get(sec, "gpus", 16)?;
+    let mut cl = match sec.get("base").map(|s| s.as_str()).unwrap_or("cluster1") {
+        "cluster1" => ClusterProfile::cluster1(gpus),
+        "cluster2" => ClusterProfile::cluster2(gpus),
+        other => bail!("unknown base cluster {other}"),
+    };
+    if let Some(v) = sec.get("inter_bw_gbps") {
+        cl.net.inter_bw = v.parse::<f64>().map_err(|_| anyhow!("bad inter_bw_gbps"))? * 1e9 / 8.0;
+    }
+    if let Some(v) = sec.get("ar_bw_gbps") {
+        cl.net.ar_bw = v.parse::<f64>().map_err(|_| anyhow!("bad ar_bw_gbps"))? * 1e9 / 8.0;
+    }
+    if let Some(v) = sec.get("mem_gb") {
+        cl.mem_bytes = v.parse::<f64>().map_err(|_| anyhow!("bad mem_gb"))? * 1e9;
+    }
+    Ok(cl)
+}
+
+/// Load (model, cluster) from a config file path.
+pub fn load_config(path: &str) -> Result<(ModelCfg, ClusterProfile)> {
+    let text = std::fs::read_to_string(path)?;
+    let secs = parse_sections(&text)?;
+    Ok((model_from_sections(&secs)?, cluster_from_sections(&secs)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# a comment
+[model]
+name = my-moe
+L = 8
+M = 1024
+E = 32
+k = 2
+
+[cluster]
+base = cluster1
+gpus = 8
+inter_bw_gbps = 100
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let s = parse_sections(SAMPLE).unwrap();
+        assert_eq!(s["model"]["L"], "8");
+        assert_eq!(s["cluster"]["gpus"], "8");
+    }
+
+    #[test]
+    fn model_defaults_and_overrides() {
+        let s = parse_sections(SAMPLE).unwrap();
+        let m = model_from_sections(&s).unwrap();
+        assert_eq!(m.name, "my-moe");
+        assert_eq!(m.l, 8);
+        assert_eq!(m.m, 1024);
+        assert_eq!(m.b, 4); // default
+    }
+
+    #[test]
+    fn cluster_base_and_bandwidth() {
+        let s = parse_sections(SAMPLE).unwrap();
+        let c = cluster_from_sections(&s).unwrap();
+        assert_eq!(c.p, 8);
+        assert!((c.net.inter_bw - 12.5e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_sections("[model\nL = 2").is_err());
+        assert!(parse_sections("just words").is_err());
+    }
+
+    #[test]
+    fn missing_section_errors() {
+        let s = parse_sections("[model]\nL = 2").unwrap();
+        assert!(cluster_from_sections(&s).is_err());
+    }
+
+    #[test]
+    fn parsed_config_simulates() {
+        let s = parse_sections(SAMPLE).unwrap();
+        let m = model_from_sections(&s).unwrap();
+        let c = cluster_from_sections(&s).unwrap();
+        let (t, _) = crate::sched::iteration_time(&m, &c, &crate::sched::Policy::flow_moe(2, 2.5e6));
+        assert!(t > 0.0);
+    }
+}

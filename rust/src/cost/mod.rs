@@ -1,0 +1,243 @@
+//! Calibrated cost models: per-task durations from model + cluster config.
+//!
+//! Replaces the paper's measured GPU timings (DESIGN.md §1). Compute tasks
+//! follow a FLOPs / effective-throughput model with per-task launch
+//! overhead; A2A uses an α–β pairwise-exchange model over the shared NIC;
+//! all-reduce uses the standard ring formula `2(P-1)/P · S/BW` with
+//! per-chunk startup — the startup-vs-overlap trade-off that makes the
+//! paper's S_p tuning non-trivial (Theorem 2 breaks exactly when α > 0).
+
+use crate::config::{ClusterProfile, ModelCfg};
+
+/// Ratio of backward to forward compute cost (two matmul passes).
+pub const BWD_COMPUTE_FACTOR: f64 = 2.0;
+
+/// All per-task costs of one iteration, in seconds. Same-type subtasks
+/// share one duration (paper Sec. 3.2: "tasks with the same type have the
+/// same execution time").
+#[derive(Clone, Debug)]
+pub struct TaskCosts {
+    /// AT (MHA+gating) forward, full layer (divide by R for subtasks).
+    pub at_fwd: f64,
+    pub at_bwd: f64,
+    /// Expert computing forward, full layer per worker.
+    pub exp_fwd: f64,
+    pub exp_bwd: f64,
+    /// One dispatch (== combine) A2A for the full layer's tokens.
+    pub a2a: f64,
+    /// Per-message A2A startup (added per subtask when pipelined).
+    pub a2a_alpha: f64,
+    /// Ring all-reduce time for `s` bytes, excluding startup.
+    pub ar_beta_per_byte: f64,
+    /// Per-chunk all-reduce startup.
+    pub ar_alpha: f64,
+    /// Bytes of the per-block replicated-gradient all-reduce tensor.
+    pub ar_bytes: f64,
+    /// Bytes of one full-layer A2A.
+    pub a2a_bytes: f64,
+    /// Head/embedding/loss compute at the turnaround.
+    pub head: f64,
+}
+
+impl TaskCosts {
+    /// Build costs for `cfg` on `cluster`. Collective-task timing follows
+    /// the slowest GPU (Appendix K.1).
+    pub fn build(cfg: &ModelCfg, cluster: &ClusterProfile) -> TaskCosts {
+        let gpu = cluster.slowest_gpu();
+        let p = cluster.p as f64;
+
+        let at_fwd = gpu.compute_time(cfg.at_fwd_flops(), cfg.m as f64);
+        // Expert computing launches 2 GEMMs per local expert (the paper's
+        // frameworks issue one kernel per expert) — per-expert launch
+        // overhead matters at small scales.
+        let e_local = (cfg.e as f64 / p).max(1.0);
+        let exp_flops_time = gpu.compute_time(cfg.expert_fwd_flops(), cfg.m.min(cfg.h) as f64);
+        let exp_fwd = exp_flops_time + gpu.comp_alpha * (e_local - 1.0).max(0.0);
+
+        // A2A: each worker exchanges (P-1)/P of the dispatched tensor;
+        // intra-node (PCIe P2P) and inter-node (shared NIC) portions move
+        // on parallel channels, so the op takes the max of the two.
+        let a2a_bytes = cfg.a2a_bytes();
+        let rpn = cluster.net.ranks_per_node.min(cluster.p) as f64;
+        let peers = (p - 1.0).max(1.0);
+        let intra_frac = (rpn - 1.0) / peers;
+        let inter_frac = (p - rpn).max(0.0) / peers;
+        let cross = a2a_bytes * (p - 1.0) / p;
+        let t_intra = cross * intra_frac / cluster.net.intra_bw;
+        let t_inter = cross * inter_frac / (cluster.net.inter_bw / rpn * cluster.net.algo_eff);
+        let a2a = cluster.net.alpha + t_intra.max(t_inter);
+
+        // All-reduce: effective end-to-end ring bandwidth (the 2(P-1)/P
+        // factor and shared-NIC edges are folded into the calibrated
+        // `ar_bw`) + a per-launch startup.
+        let _ = p;
+        let ar_beta_per_byte = 1.0 / cluster.net.ar_bw;
+        let ar_alpha = cluster.net.ar_alpha;
+
+        // Head: embedding + LM head + loss — small vs the blocks; model as
+        // one AT-sized compute task when a vocab exists.
+        let head = if cfg.vocab > 0 { at_fwd * 0.5 } else { 0.0 };
+
+        TaskCosts {
+            at_fwd,
+            at_bwd: at_fwd * BWD_COMPUTE_FACTOR,
+            exp_fwd,
+            exp_bwd: exp_fwd * BWD_COMPUTE_FACTOR,
+            a2a,
+            a2a_alpha: cluster.net.alpha,
+            ar_beta_per_byte,
+            ar_alpha,
+            ar_bytes: cfg.ar_bytes_per_block(),
+            a2a_bytes,
+            head,
+        }
+    }
+
+    /// Duration of one A2A subtask at pipelining degree R: the payload
+    /// splits across subtasks, the startup does not.
+    pub fn a2a_sub(&self, r_degree: usize) -> f64 {
+        let payload = self.a2a - self.a2a_alpha;
+        self.a2a_alpha + payload / r_degree as f64
+    }
+
+    /// Duration of one all-reduce chunk of `bytes`.
+    pub fn ar_chunk(&self, bytes: f64) -> f64 {
+        self.ar_alpha + bytes * self.ar_beta_per_byte
+    }
+
+    /// Total all-reduce time for one block when split into chunks of
+    /// `sp_bytes` (the centralized baseline uses one chunk = the tensor).
+    pub fn ar_total(&self, sp_bytes: f64) -> f64 {
+        let chunks = (self.ar_bytes / sp_bytes).ceil().max(1.0);
+        chunks * self.ar_alpha + self.ar_bytes * self.ar_beta_per_byte
+    }
+
+    /// Number of chunks a block's AR tensor splits into at size `sp_bytes`.
+    pub fn ar_chunks(&self, sp_bytes: f64) -> usize {
+        ((self.ar_bytes / sp_bytes).ceil() as usize).max(1)
+    }
+}
+
+/// Peak-memory estimate per worker (bytes) under a given scheduler's
+/// gradient-caching behaviour — used for OOM filtering (Fig. 6 sweep,
+/// Table A.7) and the Table 6 memory comparison.
+pub fn peak_memory_bytes(
+    cfg: &ModelCfg,
+    p: usize,
+    grad_cache_blocks: f64,
+    expert_replication: f64,
+) -> f64 {
+    let e_local = (cfg.e as f64 / p as f64).max(1.0) * expert_replication;
+    let expert_params = e_local * 2.0 * (cfg.m * cfg.h) as f64;
+    let repl_params = cfg.mha_gating_params() as f64;
+    let params = cfg.l as f64 * (expert_params + repl_params) + (cfg.vocab * cfg.m) as f64;
+    // fp32 params + momentum + gradients-in-flight
+    let states = params * 2.0 * 4.0;
+    let grads = (cfg.l as f64 * (expert_params + repl_params) * grad_cache_blocks / cfg.l as f64
+        + (cfg.vocab * cfg.m) as f64)
+        * 4.0;
+    // activations saved for backward per block: ~6 residual-width tensors
+    // (x, normed, q/k/v, attn out), the N x N attention probabilities
+    // (the dominant term for long sequences without flash attention),
+    // the dispatched (E, C, M) tensor and the local experts' hidden
+    // activations; 2x framework workspace factor.
+    let tokens = cfg.tokens() as f64;
+    let attn_probs = (cfg.b * cfg.n_heads * cfg.n * cfg.n) as f64;
+    let act_block = tokens * cfg.m as f64 * 6.0
+        + attn_probs
+        + (cfg.e * cfg.capacity() * cfg.m) as f64
+        + e_local * (p * cfg.capacity()) as f64 * cfg.h as f64;
+    let acts = cfg.l as f64 * act_block * 4.0 * 2.0;
+    // NCCL-style per-rank communicator workspace grows with cluster size.
+    let comm_ws = p as f64 * 64.0e6;
+    states + grads + acts + comm_ws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn costs16(name: &str) -> TaskCosts {
+        let cfg = preset(name).unwrap();
+        TaskCosts::build(&cfg, &ClusterProfile::cluster1(16))
+    }
+
+    #[test]
+    fn durations_positive() {
+        let c = costs16("BERT-Large-MoE");
+        assert!(c.at_fwd > 0.0 && c.exp_fwd > 0.0 && c.a2a > 0.0);
+        assert!(c.at_bwd > c.at_fwd);
+    }
+
+    #[test]
+    fn a2a_subtask_splits_payload_not_alpha() {
+        let c = costs16("BERT-Large-MoE");
+        let full = c.a2a_sub(1);
+        let half = c.a2a_sub(2);
+        assert!((full - c.a2a).abs() < 1e-12);
+        assert!(half > c.a2a / 2.0);
+        assert!(half < full);
+    }
+
+    #[test]
+    fn ar_total_monotone_decreasing_overhead_with_bigger_chunks() {
+        let c = costs16("BERT-Large-MoE");
+        // more chunks => more startup => larger total wire time
+        assert!(c.ar_total(0.1e6) > c.ar_total(1.0e6));
+        assert!(c.ar_total(1.0e6) >= c.ar_total(8.0e6));
+    }
+
+    #[test]
+    fn ar_chunks_counts() {
+        let c = costs16("BERT-Large-MoE");
+        assert_eq!(c.ar_chunks(c.ar_bytes), 1);
+        assert_eq!(c.ar_chunks(c.ar_bytes / 4.0), 4);
+    }
+
+    #[test]
+    fn table1_ratio_band() {
+        // Paper Table 1: (MHA+gating + all-reduce) / iteration = 30-40 %
+        // under vanilla EP on Cluster 1 with 16 GPUs. Sanity-check the raw
+        // cost components imply a ratio in a plausible 20-50 % band before
+        // scheduling (the exact ratio is asserted on the simulated
+        // timeline in the table1 bench/integration test).
+        for name in ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"] {
+            let cfg = preset(name).unwrap();
+            let c = TaskCosts::build(&cfg, &ClusterProfile::cluster1(16));
+            let l = cfg.l as f64;
+            let mha_ar = l * (c.at_fwd + c.at_bwd) + l * c.ar_total(c.ar_bytes);
+            let iter = l * (c.at_fwd + c.at_bwd + c.exp_fwd + c.exp_bwd + 4.0 * c.a2a)
+                + l * c.ar_total(c.ar_bytes);
+            let ratio = mha_ar / iter;
+            assert!(
+                (0.15..=0.55).contains(&ratio),
+                "{name}: ratio {ratio:.3} out of band"
+            );
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cluster_slower() {
+        let cfg = preset("BERT-Large-MoE").unwrap();
+        let uni = TaskCosts::build(&cfg, &ClusterProfile::cluster1(16));
+        let het = TaskCosts::build(&cfg, &ClusterProfile::cluster1_heterogeneous(16));
+        assert!(het.at_fwd > uni.at_fwd);
+    }
+
+    #[test]
+    fn peak_memory_fastermoe_replication_costs_more() {
+        let cfg = preset("LLaMA2-MoE").unwrap();
+        let base = peak_memory_bytes(&cfg, 16, cfg.l as f64, 1.0);
+        let repl = peak_memory_bytes(&cfg, 16, cfg.l as f64, 2.0);
+        assert!(repl > base * 1.1);
+    }
+
+    #[test]
+    fn peak_memory_early_ar_reduces_grad_cache() {
+        let cfg = preset("LLaMA2-MoE").unwrap();
+        let central = peak_memory_bytes(&cfg, 16, cfg.l as f64, 1.0);
+        let early = peak_memory_bytes(&cfg, 16, 2.0, 1.0);
+        assert!(early < central);
+    }
+}

@@ -1,0 +1,46 @@
+//! # FlowMoE — scalable pipeline scheduling for distributed MoE training
+//!
+//! Rust + JAX + Pallas reproduction of *"FlowMoE: A Scalable Pipeline
+//! Scheduling Framework for Distributed Mixture-of-Experts Training"*.
+//!
+//! The crate is the **L3 coordinator** of the three-layer stack (see
+//! DESIGN.md): it owns the paper's contribution — the unified multi-type
+//! task pipeline (Eqs. 2–5), the all-reduce tensor-chunk priority
+//! scheduling (Algorithm 2, Theorems 1–2) and the Bayesian-optimization
+//! autotuner for the chunk size `S_p` — plus every substrate the paper's
+//! evaluation depends on:
+//!
+//! * [`tasks`] — the multi-type task DAG of one training iteration,
+//! * [`cost`] — calibrated compute/A2A/all-reduce cost models,
+//! * [`sim`] — a discrete-event two-stream cluster simulator (the exact
+//!   resource model the paper's theorems assume),
+//! * [`sched`] — FlowMoE and the five baseline scheduling policies,
+//! * [`commpool`] — the runtime communication pool (Algorithm 2),
+//! * [`bo`] — Gaussian-process Bayesian optimization from scratch,
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts,
+//! * [`cluster`] — an in-process multi-worker distributed runtime with
+//!   real chunked ring all-reduce and real A2A dispatch,
+//! * [`trainer`] — the end-to-end training loop,
+//! * [`data`] — deterministic synthetic corpus,
+//! * [`metrics`] — time/energy/memory/occupancy models,
+//! * [`report`] — paper-table renderers and the bench harness.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! binary is self-contained afterwards.
+
+pub mod bo;
+pub mod cli;
+pub mod cluster;
+pub mod commpool;
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod tasks;
+pub mod testutil;
+pub mod trainer;
+pub mod util;

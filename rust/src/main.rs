@@ -1,0 +1,226 @@
+//! FlowMoE CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate  — simulate one iteration of a model under every scheduler
+//!   sweep     — the customized-MoE-layer sweep (Fig. 6)
+//!   tune      — BO-tune S_p for a model (Fig. 4)
+//!   train     — end-to-end distributed training on real PJRT compute
+//!   info      — print presets and artifact manifest summary
+
+use std::path::PathBuf;
+
+use flowmoe::bo::BoTuner;
+use flowmoe::cli::Args;
+use flowmoe::config::{preset, table2_models, ClusterProfile, ModelCfg};
+use flowmoe::metrics::{energy_joules, peak_memory, sm_utilization};
+use flowmoe::report::Table;
+use flowmoe::sched::{build_dag, iteration_time, Policy};
+use flowmoe::sim::simulate;
+use flowmoe::trainer::{train_dp, train_fused, TrainOpts};
+use flowmoe::util::fmt_ms;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "tune" => cmd_tune(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: flowmoe <simulate|sweep|tune|train|info> [options]\n\
+                 \n\
+                 simulate --model <name> --gpus N --r R --sp MB    per-framework iteration time\n\
+                 sweep    --gpus N --limit K                        customized-layer speedup sweep\n\
+                 tune     --model <name> --gpus N --samples K       BO-tune S_p\n\
+                 train    --config tiny|e2e --workers P --steps N   real distributed training\n\
+                 info                                               presets + artifacts"
+            );
+        }
+    }
+}
+
+fn policies(r: usize, sp: f64) -> Vec<Policy> {
+    vec![
+        Policy::vanilla_ep(),
+        Policy::faster_moe(r),
+        Policy::tutel(r),
+        Policy::sche_moe(r),
+        Policy::fs_moe(r),
+        Policy::flow_moe(r, sp),
+    ]
+}
+
+fn cmd_simulate(args: &Args) {
+    let model = args.get_or("model", "BERT-Large-MoE");
+    let gpus = args.usize_or("gpus", 16);
+    let r = args.usize_or("r", 2);
+    let sp = args.f64_or("sp", 2.5) * 1e6;
+    let cfg = preset(&model).unwrap_or_else(|| {
+        eprintln!("unknown model {model}");
+        std::process::exit(1);
+    });
+    let cluster = if args.get_or("cluster", "1") == "2" {
+        ClusterProfile::cluster2(gpus)
+    } else {
+        ClusterProfile::cluster1(gpus)
+    };
+    let mut t = Table::new(
+        &format!("{model} on {} x{gpus} (R={r}, S_p={:.1}MB)", cluster.name, sp / 1e6),
+        &["framework", "iter (ms)", "speedup", "energy (J)", "mem (GB)", "SM util"],
+    );
+    let mut base = 0.0;
+    for pol in policies(r, sp) {
+        let costs = flowmoe::cost::TaskCosts::build(&cfg, &cluster);
+        let dag = build_dag(&cfg, &costs, &pol);
+        let tl = simulate(&dag);
+        if pol.name == "vanillaEP" {
+            base = tl.makespan;
+        }
+        let mem = peak_memory(&cfg, &cluster, &pol, &dag, &tl);
+        t.row(vec![
+            pol.name.into(),
+            fmt_ms(tl.makespan * 1e3),
+            format!("{:.2}x", base / tl.makespan),
+            format!("{:.1}", energy_joules(&tl, &cluster.power)),
+            format!("{:.2}", mem / 1e9),
+            format!("{:.1}%", sm_utilization(&tl) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_sweep(args: &Args) {
+    let gpus = args.usize_or("gpus", 16);
+    let limit = args.usize_or("limit", usize::MAX);
+    let cluster = ClusterProfile::cluster1(gpus);
+    let mut speedups = Vec::new();
+    let mut count = 0;
+    'outer: for b in [2usize, 4, 8] {
+        for f in [1.0, 1.1, 1.2] {
+            for n in [512usize, 1024, 2048] {
+                for m in [512usize, 1024, 2048, 4096, 8192] {
+                    for h in [512usize, 1024, 2048, 4096, 8192] {
+                        if count >= limit {
+                            break 'outer;
+                        }
+                        let cfg = ModelCfg::custom_layer(b, f, n, m, h, gpus);
+                        let mem = flowmoe::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0);
+                        if mem > cluster.mem_bytes {
+                            continue; // OOM case, excluded like the paper
+                        }
+                        let sche = iteration_time(&cfg, &cluster, &Policy::sche_moe(2)).0;
+                        let flow = iteration_time(&cfg, &cluster, &Policy::flow_moe(2, 2.5e6)).0;
+                        speedups.push(sche / flow);
+                        count += 1;
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "{}",
+        flowmoe::report::histogram(
+            &format!("FlowMoE speedup over ScheMoE, {count} valid layers, {gpus} GPUs"),
+            &speedups,
+            12,
+            40
+        )
+    );
+}
+
+fn cmd_tune(args: &Args) {
+    let model = args.get_or("model", "BERT-Large-MoE");
+    let gpus = args.usize_or("gpus", 16);
+    let samples = args.usize_or("samples", 8);
+    let cfg = preset(&model).expect("unknown model");
+    let cluster = ClusterProfile::cluster1(gpus);
+    let max = cfg.ar_bytes_per_block() * 1.0;
+    let mut bo = BoTuner::new(max, args.usize_or("seed", 42) as u64);
+    let best = bo.tune(samples, |sp| {
+        iteration_time(&cfg, &cluster, &Policy::flow_moe(2, sp)).0
+    });
+    println!("samples:");
+    for (sp, t) in &bo.observations {
+        println!("  S_p = {:7.3} MB -> {} ms", sp / 1e6, fmt_ms(t * 1e3));
+    }
+    let (b_sp, b_t) = bo.best().unwrap();
+    println!(
+        "BO best: S_p = {:.3} MB ({} ms) after {samples} samples",
+        b_sp / 1e6,
+        fmt_ms(b_t * 1e3)
+    );
+    let _ = best;
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = args.get_or("config", "tiny");
+    let p = args.usize_or("workers", 2);
+    let steps = args.usize_or("steps", 20);
+    let dir = artifacts_dir(args);
+    let mut opts = TrainOpts::new(&cfg, steps);
+    opts.lr = args.f64_or("lr", 0.05) as f32;
+    opts.sp_bytes = (args.f64_or("sp", 1.0) * 1e6) as usize;
+    opts.overlap = !args.has_flag("centralized");
+    opts.log_every = args.usize_or("log-every", 10);
+    let report = if args.has_flag("fused") {
+        train_fused(&dir, &opts).expect("train")
+    } else {
+        train_dp(&dir, p, &opts).expect("train")
+    };
+    println!("step,loss,seconds");
+    for (i, (l, s)) in report.losses.iter().zip(&report.step_secs).enumerate() {
+        println!("{i},{l:.4},{s:.3}");
+    }
+    let n = report.losses.len();
+    println!(
+        "# first loss {:.4} -> last loss {:.4} over {n} steps",
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap()
+    );
+}
+
+fn cmd_info(args: &Args) {
+    let mut t = Table::new(
+        "Model presets (paper Table 2)",
+        &["name", "L", "B", "N", "M", "H", "E", "k", "params (M)"],
+    );
+    for cfg in table2_models().iter().chain(
+        [preset("LLaMA2-MoE-L").unwrap(), preset("DeepSeek-V2-M").unwrap(), preset("tiny").unwrap(), preset("e2e").unwrap()].iter(),
+    ) {
+        t.row(vec![
+            cfg.name.into(),
+            cfg.l.to_string(),
+            cfg.b.to_string(),
+            cfg.n.to_string(),
+            cfg.m.to_string(),
+            cfg.h.to_string(),
+            cfg.e.to_string(),
+            cfg.k.to_string(),
+            format!("{:.1}", cfg.total_params() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    let dir = artifacts_dir(args);
+    match flowmoe::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("\nartifacts ({}):", dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {} [{}] {} in / {} out",
+                    a.name,
+                    a.config,
+                    a.inputs.len(),
+                    a.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: {e:#}"),
+    }
+}

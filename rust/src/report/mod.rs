@@ -1,0 +1,159 @@
+//! Reporting: markdown table rendering (paper-table shaped), ASCII
+//! histograms (Fig. 6) and the bench harness (no criterion offline —
+//! median-of-N with warmup, printing paper-vs-measured rows).
+
+use std::time::Instant;
+
+/// A simple column-aligned markdown table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let seps: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&seps, &widths));
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// ASCII histogram of samples (Fig. 6's speedup statistic).
+pub fn histogram(title: &str, samples: &[f64], n_bins: usize, width: usize) -> String {
+    if samples.is_empty() {
+        return format!("{title}: (no samples)\n");
+    }
+    let lo = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut bins = vec![0usize; n_bins];
+    for &s in samples {
+        let i = (((s - lo) / span) * n_bins as f64) as usize;
+        bins[i.min(n_bins - 1)] += 1;
+    }
+    let maxc = *bins.iter().max().unwrap();
+    let mut out = format!("\n{title} (n={}, mean={:.3})\n", samples.len(), crate::util::mean(samples));
+    for (i, &c) in bins.iter().enumerate() {
+        let a = lo + span * i as f64 / n_bins as f64;
+        let b = lo + span * (i + 1) as f64 / n_bins as f64;
+        let bar = "#".repeat((c as f64 / maxc as f64 * width as f64).round() as usize);
+        out.push_str(&format!("  [{a:5.2}, {b:5.2})  {c:4}  {bar}\n"));
+    }
+    out
+}
+
+/// Time a closure: `reps` runs after `warmup`, returns per-run seconds.
+pub fn time_runs<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Median wall-clock seconds of `reps` runs after warmup.
+pub fn bench_median<F: FnMut()>(warmup: usize, reps: usize, f: F) -> f64 {
+    crate::util::median(&time_runs(warmup, reps, f))
+}
+
+/// Paper-vs-measured comparison row helper: value, paper band, verdict.
+pub fn band_check(measured: f64, lo: f64, hi: f64) -> &'static str {
+    if measured >= lo && measured <= hi {
+        "in-band"
+    } else if measured < lo {
+        "below"
+    } else {
+        "above"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("| longer | 22   |"));
+        assert!(r.contains("## T"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_width() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let h = histogram("h", &[1.0, 1.1, 1.2, 2.0, 2.0], 2, 10);
+        assert!(h.contains("n=5"));
+    }
+
+    #[test]
+    fn bench_median_positive() {
+        let m = bench_median(1, 3, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            std::hint::black_box(s);
+        });
+        assert!(m >= 0.0);
+    }
+
+    #[test]
+    fn band_check_verdicts() {
+        assert_eq!(band_check(1.5, 1.0, 2.0), "in-band");
+        assert_eq!(band_check(0.5, 1.0, 2.0), "below");
+        assert_eq!(band_check(2.5, 1.0, 2.0), "above");
+    }
+}

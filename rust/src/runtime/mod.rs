@@ -1,0 +1,397 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) behind a
+//! manifest-driven engine: `python/compile/aot.py` writes
+//! `artifacts/manifest.txt` describing every artifact's positional
+//! input/output buffers (name, shape, dtype); the engine parses it so no
+//! shape knowledge is duplicated in rust.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so each worker thread owns
+//! its own [`Engine`]; host tensors ([`HostTensor`]) are plain `Vec`s and
+//! move freely between threads.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Dtype of a buffer (the stack only uses f32 and i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// A named positional buffer in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct BufSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl BufSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT artifact: file + I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub config: String,
+    pub inputs: Vec<BufSpec>,
+    pub outputs: Vec<BufSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut m = Manifest {
+            artifacts: Vec::new(),
+            dir: dir.to_path_buf(),
+        };
+        for line in text.lines() {
+            let trimmed = line.trim_start();
+            if trimmed.starts_with("artifact ") {
+                let parts: Vec<&str> = trimmed.split_whitespace().collect();
+                let name = parts.get(1).ok_or_else(|| anyhow!("bad artifact line"))?;
+                let mut file = String::new();
+                let mut config = String::new();
+                for p in &parts[2..] {
+                    if let Some(v) = p.strip_prefix("file=") {
+                        file = v.to_string();
+                    } else if let Some(v) = p.strip_prefix("config=") {
+                        config = v.to_string();
+                    }
+                }
+                m.artifacts.push(ArtifactSpec {
+                    name: name.to_string(),
+                    file,
+                    config,
+                    inputs: Vec::new(),
+                    outputs: Vec::new(),
+                });
+            } else if trimmed.starts_with("input ") || trimmed.starts_with("output ") {
+                let parts: Vec<&str> = trimmed.split_whitespace().collect();
+                if parts.len() != 4 {
+                    bail!("bad io line: {line}");
+                }
+                let shape = if parts[2] == "scalar" {
+                    vec![]
+                } else {
+                    parts[2]
+                        .split('x')
+                        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}: {line}")))
+                        .collect::<Result<Vec<_>>>()?
+                };
+                let dtype = match parts[3] {
+                    "f32" => Dtype::F32,
+                    "i32" => Dtype::I32,
+                    other => bail!("unknown dtype {other}"),
+                };
+                let spec = BufSpec {
+                    name: parts[1].to_string(),
+                    shape,
+                    dtype,
+                };
+                let art = m
+                    .artifacts
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("io line before artifact"))?;
+                if trimmed.starts_with("input ") {
+                    art.inputs.push(spec);
+                } else {
+                    art.outputs.push(spec);
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+}
+
+/// A host-side tensor (moves freely across threads).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+    pub fn f32_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+    pub fn i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn scalar_f32(&self) -> f32 {
+        self.f32()[0]
+    }
+}
+
+/// Per-thread PJRT engine: compiles artifacts lazily, caches executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a host tensor to a device buffer for spec `s`. Exposed so
+    /// hot loops can marshal a tensor once and reuse it across many
+    /// executions (§Perf: parameters are read by 4R block calls per step
+    /// — marshalling them per call dominated the step time).
+    ///
+    /// Device buffers (`execute_b`) are used instead of Literals
+    /// (`execute`): the xla crate's `execute` leaks every input buffer it
+    /// creates (`buffer.release()` with no matching delete in
+    /// xla_rs.cc::execute — ~1.5 GB/step for the e2e trainer, §Perf #5);
+    /// `execute_b` borrows caller-owned buffers and leaks nothing.
+    pub fn buffer(&self, t: &HostTensor, s: &BufSpec) -> Result<xla::PjRtBuffer> {
+        if t.len() != s.elems() {
+            bail!(
+                "input {} has {} elems, expected {} ({:?})",
+                s.name,
+                t.len(),
+                s.elems(),
+                s.shape
+            );
+        }
+        match (t, s.dtype) {
+            (HostTensor::F32(v), Dtype::F32) => self
+                .client
+                .buffer_from_host_buffer::<f32>(v, &s.shape, None)
+                .map_err(|e| anyhow!("{e:?}")),
+            (HostTensor::I32(v), Dtype::I32) => self
+                .client
+                .buffer_from_host_buffer::<i32>(v, &s.shape, None)
+                .map_err(|e| anyhow!("{e:?}")),
+            _ => bail!("input {} dtype mismatch", s.name),
+        }
+    }
+
+    /// Upload an f32 slice directly (no HostTensor wrapper, no clone).
+    pub fn buffer_f32(&self, v: &[f32], s: &BufSpec) -> Result<xla::PjRtBuffer> {
+        if v.len() != s.elems() || s.dtype != Dtype::F32 {
+            bail!("input {}: size/dtype mismatch", s.name);
+        }
+        self.client
+            .buffer_from_host_buffer::<f32>(v, &s.shape, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute with caller-owned device buffers (leak-free hot path).
+    pub fn run_buffers(&mut self, name: &str, bufs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let spec = self.manifest.get(name)?.clone();
+        if bufs.len() != spec.inputs.len() {
+            bail!("{name}: {} inputs given, {} expected", bufs.len(), spec.inputs.len());
+        }
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(bufs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        Self::unpack(name, result, &spec)
+    }
+
+    fn unpack(
+        name: &str,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+        spec: &ArtifactSpec,
+    ) -> Result<Vec<HostTensor>> {
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs, {} expected", parts.len(), spec.outputs.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.into_iter().zip(&spec.outputs) {
+            let t = match s.dtype {
+                Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
+                Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
+            };
+            if t.len() != s.elems() {
+                bail!("{name}: output {} wrong size", s.name);
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Build an input Literal for buffer spec `s` from a host tensor.
+    /// Prefer [`Engine::buffer`]; kept for Literal-based flows.
+    pub fn literal(t: &HostTensor, s: &BufSpec) -> Result<xla::Literal> {
+        if t.len() != s.elems() {
+            bail!(
+                "input {} has {} elems, expected {} ({:?})",
+                s.name,
+                t.len(),
+                s.elems(),
+                s.shape
+            );
+        }
+        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (t, s.dtype) {
+            (HostTensor::F32(v), Dtype::F32) => xla::Literal::vec1(v),
+            (HostTensor::I32(v), Dtype::I32) => xla::Literal::vec1(v),
+            _ => bail!("input {} dtype mismatch", s.name),
+        };
+        if s.shape.is_empty() {
+            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+        } else {
+            lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+        }
+    }
+
+    /// Build an f32 input Literal straight from a slice (no HostTensor
+    /// wrapper, no intermediate clone).
+    pub fn literal_f32(v: &[f32], s: &BufSpec) -> Result<xla::Literal> {
+        if v.len() != s.elems() || s.dtype != Dtype::F32 {
+            bail!("input {}: size/dtype mismatch", s.name);
+        }
+        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(v);
+        if s.shape.is_empty() {
+            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+        } else {
+            lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+        }
+    }
+
+    /// Execute an artifact with host tensors; validates shapes against the
+    /// manifest and returns outputs as host tensors.
+    pub fn run(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            bufs.push(self.buffer(t, s).map_err(|e| anyhow!("{name}: {e:#}"))?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(name, &refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_io_lines() {
+        let dir = std::env::temp_dir().join("flowmoe_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "artifact foo file=foo.hlo.txt config=tiny\n  input a 2x3 f32\n  input t scalar f32\n  output y 6 i32\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("foo").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elems(), 6);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn manifest_missing_artifact_errors() {
+        let dir = std::env::temp_dir().join("flowmoe_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "artifact a file=f config=c\n").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.f32()[1], 2.0);
+        let i = HostTensor::I32(vec![7]);
+        assert_eq!(i.i32()[0], 7);
+    }
+}

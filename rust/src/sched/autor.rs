@@ -1,0 +1,107 @@
+//! Automatic pipelining-degree selection (the paper defers to PipeMoE
+//! [21] for choosing R; this implements that selection over our cost
+//! model: balance overlap gains against per-subtask startup overhead).
+//!
+//! PipeMoE's insight: the optimal R roughly equalizes the pipelined
+//! stage times while keeping R·α (aggregate startup) small relative to
+//! the payload. Rather than carry PipeMoE's closed form (tied to their
+//! linear performance models), we evaluate the candidate Rs on the
+//! simulator — which *is* our performance model — and pick the argmin.
+//! This is exactly "profile a few candidates once, then train", the same
+//! budget class as the paper's BO for S_p.
+
+use crate::config::{ClusterProfile, ModelCfg};
+use crate::sched::{iteration_time, Policy};
+
+/// Candidate pipelining degrees (powers of two; R=1 means no pipelining
+/// and is included so degenerate workloads can opt out).
+pub const R_CANDIDATES: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Pick the R minimizing simulated iteration time for `make(r)`.
+/// Returns (best_r, best_seconds, all evaluated (r, seconds) pairs).
+pub fn select_r<F: Fn(usize) -> Policy>(
+    cfg: &ModelCfg,
+    cluster: &ClusterProfile,
+    make: F,
+) -> (usize, f64, Vec<(usize, f64)>) {
+    let mut evals = Vec::new();
+    let mut best = (1usize, f64::INFINITY);
+    for &r in &R_CANDIDATES {
+        // R splits the MoE input on the token dimension (paper Sec. 2.3),
+        // so it is bounded by the per-worker token count, not the sample
+        // count — skip degenerate degrees only.
+        if r > cfg.tokens().max(1) && r > 1 {
+            continue;
+        }
+        let t = iteration_time(cfg, cluster, &make(r)).0;
+        evals.push((r, t));
+        if t < best.1 {
+            best = (r, t);
+        }
+    }
+    (best.0, best.1, evals)
+}
+
+/// Joint (R, S_p) selection: R by simulation sweep, then S_p by BO at
+/// the chosen R — the full auto-tuning pipeline of an adaptive
+/// deployment (paper Secs. 4.1–4.2 + [21]).
+pub fn select_r_and_sp(
+    cfg: &ModelCfg,
+    cluster: &ClusterProfile,
+    bo_samples: usize,
+    seed: u64,
+) -> (usize, f64, f64) {
+    let (r, _, _) = select_r(cfg, cluster, |r| Policy::flow_moe(r, 4e6));
+    let mut bo = crate::bo::BoTuner::new(cfg.ar_bytes_per_block().max(1e6), seed);
+    let sp = bo.tune(bo_samples, |sp| {
+        iteration_time(cfg, cluster, &Policy::flow_moe(r, sp)).0
+    });
+    let t = iteration_time(cfg, cluster, &Policy::flow_moe(r, sp)).0;
+    (r, sp, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn select_r_returns_a_candidate_and_best_time() {
+        let cfg = preset("BERT-Large-MoE").unwrap();
+        let cl = ClusterProfile::cluster1(16);
+        let (r, t, evals) = select_r(&cfg, &cl, |r| Policy::flow_moe(r, 2.5e6));
+        assert!(R_CANDIDATES.contains(&r));
+        assert!(evals.iter().all(|&(_, tt)| tt >= t));
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn auto_r_never_worse_than_fixed_r2() {
+        for name in ["GPT2-Tiny-MoE", "BERT-Large-MoE", "DeepSeek-V2-S"] {
+            let cfg = preset(name).unwrap();
+            let cl = ClusterProfile::cluster1(16);
+            let fixed = iteration_time(&cfg, &cl, &Policy::flow_moe(2, 2.5e6)).0;
+            let (_, t, _) = select_r(&cfg, &cl, |r| Policy::flow_moe(r, 2.5e6));
+            assert!(t <= fixed + 1e-12, "{name}: auto {t} > fixed {fixed}");
+        }
+    }
+
+    #[test]
+    fn infeasible_r_skipped_for_tiny_token_counts() {
+        let mut cfg = preset("GPT2-Tiny-MoE").unwrap();
+        cfg.b = 1;
+        cfg.n = 8;
+        let cl = ClusterProfile::cluster1(16);
+        let (_, _, evals) = select_r(&cfg, &cl, |r| Policy::flow_moe(r, 2.5e6));
+        assert!(evals.iter().all(|&(r, _)| r <= 8));
+    }
+
+    #[test]
+    fn joint_selection_beats_default_deployment() {
+        let cfg = preset("LLaMA2-MoE").unwrap();
+        let cl = ClusterProfile::cluster1(16);
+        let default = iteration_time(&cfg, &cl, &Policy::flow_moe(2, 1e6)).0;
+        let (_r, _sp, t) = select_r_and_sp(&cfg, &cl, 8, 3);
+        assert!(t <= default * 1.001, "joint {t} vs default {default}");
+    }
+}

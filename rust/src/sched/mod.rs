@@ -1,0 +1,626 @@
+//! Scheduling policies: FlowMoE and the five baselines of the paper's
+//! evaluation, expressed as builders of the iteration task DAG.
+//!
+//! The baselines differ **only** in which task types they pipeline
+//! (paper Table A.2) plus small framework-specific A2A efficiency factors
+//! (documented below); all share identical per-task costs, which is the
+//! variable the paper's comparison isolates.
+//!
+//! Stream ordering follows Eqs. 2–5 *strictly*: consecutive same-stream
+//! tasks are chained with explicit dependencies (the paper's FIFO
+//! timeline), while AR chunks are attached only to their gradient
+//! availability (end of the block's `AT` backward, Appendix H) and yield
+//! to any ready A2A task (Algorithm 2) — the simulator's priority rule.
+
+pub mod autor;
+
+use crate::config::ModelCfg;
+use crate::cost::TaskCosts;
+use crate::tasks::{Dag, Phase, Stream, TaskId, TaskKind};
+
+/// A scheduling policy (one per framework in the paper's comparison).
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub name: &'static str,
+    /// Pipeline D/E/C of the MoE layer into R subtasks (Tutel & up).
+    pub pipe_moe: bool,
+    /// Pipeline MHA+gating into R subtasks (FlowMoE's Pipe-AT).
+    pub pipe_at: bool,
+    /// Chunk all-reduce tensors and interleave (FlowMoE's Pipe-AR).
+    pub pipe_ar: bool,
+    /// Pipelining degree R.
+    pub r: usize,
+    /// All-reduce chunk size in bytes (only used when `pipe_ar`).
+    pub sp_bytes: f64,
+    /// Multiplier on the A2A payload time (framework-specific transport
+    /// efficiency; <1.0 = faster than the Tutel baseline path).
+    pub a2a_eff: f64,
+    /// Multiplier on the per-subtask A2A startup (FasterMoE's
+    /// point-to-point sends pay more launches).
+    pub a2a_alpha_factor: f64,
+    /// Expert-parameter replication factor (FasterMoE's shadow experts) —
+    /// memory model only.
+    pub expert_replication: f64,
+    /// Place AR chunks on a concurrent communication channel (separate
+    /// NCCL communicator) instead of the shared comm stream. `false` is
+    /// the paper's *theoretical* single-comm-stream model (Theorems 1–2);
+    /// `true` reproduces the measured behaviour of the paper's testbed,
+    /// whose comm-dominated speedups exceed the strict model's comm-busy
+    /// lower bound (see EXPERIMENTS.md §Findings). The contention with
+    /// A2A traffic is baked into the calibrated `NetProfile::ar_bw`.
+    pub ar_channel: bool,
+}
+
+impl Policy {
+    /// Vanilla expert parallelism (FastMoE-style): no pipelining at all.
+    pub fn vanilla_ep() -> Policy {
+        Policy {
+            name: "vanillaEP",
+            pipe_moe: false,
+            pipe_at: false,
+            pipe_ar: false,
+            r: 1,
+            sp_bytes: f64::INFINITY,
+            a2a_eff: 1.0,
+            a2a_alpha_factor: 1.0,
+            expert_replication: 1.0,
+            ar_channel: false,
+        }
+    }
+
+    /// FasterMoE-like: MoE-layer pipelining via per-worker point-to-point
+    /// chunks (more startup per chunk), expert replication for load
+    /// balance (memory cost).
+    pub fn faster_moe(r: usize) -> Policy {
+        Policy {
+            name: "FasterMoE",
+            pipe_moe: true,
+            pipe_at: false,
+            pipe_ar: false,
+            r,
+            sp_bytes: f64::INFINITY,
+            a2a_eff: 1.02,
+            a2a_alpha_factor: 3.0,
+            expert_replication: 1.6,
+            ar_channel: false,
+        }
+    }
+
+    /// Tutel / PipeMoE-like: adaptive MoE-layer pipelining.
+    pub fn tutel(r: usize) -> Policy {
+        Policy {
+            name: "Tutel",
+            pipe_moe: true,
+            pipe_at: false,
+            pipe_ar: false,
+            r,
+            sp_bytes: f64::INFINITY,
+            a2a_eff: 1.0,
+            a2a_alpha_factor: 1.0,
+            expert_replication: 1.0,
+            ar_channel: false,
+        }
+    }
+
+    /// ScheMoE-like: Tutel + optimized A2A ops (virtual streams / fused
+    /// data layout => ~15 % faster A2A payload path, calibrated to the
+    /// paper's Tutel-vs-ScheMoE gap).
+    pub fn sche_moe(r: usize) -> Policy {
+        Policy {
+            name: "ScheMoE",
+            a2a_eff: 0.85,
+            ..Policy::tutel(r)
+        }
+    }
+
+    /// FSMoE-like: ScheMoE-class scheduling + intra-/inter-node A2A split
+    /// overlap (~22 % faster A2A payload, calibrated to the paper's gap).
+    pub fn fs_moe(r: usize) -> Policy {
+        Policy {
+            name: "FSMoE",
+            a2a_eff: 0.78,
+            ..Policy::tutel(r)
+        }
+    }
+
+    /// FlowMoE: unified AT+MoE pipeline + chunked-AR priority scheduling.
+    pub fn flow_moe(r: usize, sp_bytes: f64) -> Policy {
+        Policy {
+            name: "FlowMoE",
+            pipe_moe: true,
+            pipe_at: true,
+            pipe_ar: true,
+            r,
+            sp_bytes,
+            a2a_eff: 1.0,
+            a2a_alpha_factor: 1.0,
+            expert_replication: 1.0,
+            ar_channel: false,
+        }
+    }
+
+    /// FlowMoE with AR on a concurrent comm channel — models the paper's
+    /// measured testbed behaviour (concurrent NCCL communicators); see
+    /// `ar_channel` docs and EXPERIMENTS.md §Findings.
+    pub fn flow_moe_cc(r: usize, sp_bytes: f64) -> Policy {
+        Policy {
+            name: "FlowMoE-CC",
+            ar_channel: true,
+            ..Policy::flow_moe(r, sp_bytes)
+        }
+    }
+
+    /// FlowMoE with ScheMoE's optimized A2A ops integrated — the paper's
+    /// stated combination opportunity ("this strategy can also be
+    /// integrated into FlowMoE", Sec. 5.2): FlowMoE scheduling over the
+    /// ~15 % faster A2A payload path.
+    pub fn flow_moe_sche(r: usize, sp_bytes: f64) -> Policy {
+        Policy {
+            name: "FlowMoE+Sche",
+            a2a_eff: 0.85,
+            ar_channel: true,
+            ..Policy::flow_moe(r, sp_bytes)
+        }
+    }
+
+    /// Ablation: Pipe-MoE + Pipe-AT only (Table 5 "FlowMoE-AT").
+    pub fn flow_moe_at(r: usize) -> Policy {
+        Policy {
+            name: "FlowMoE-AT",
+            pipe_ar: false,
+            sp_bytes: f64::INFINITY,
+            ..Policy::flow_moe(r, f64::INFINITY)
+        }
+    }
+
+    /// Ablation: Pipe-MoE + Pipe-AR only (Table 5 "FlowMoE-AR").
+    pub fn flow_moe_ar(r: usize, sp_bytes: f64) -> Policy {
+        Policy {
+            name: "FlowMoE-AR",
+            pipe_at: false,
+            ..Policy::flow_moe(r, sp_bytes)
+        }
+    }
+}
+
+/// Build the full fwd+bwd iteration DAG for `cfg` under `policy`.
+pub fn build_dag(cfg: &ModelCfg, costs: &TaskCosts, policy: &Policy) -> Dag {
+    let mut dag = Dag::new();
+    let l_blocks = cfg.l;
+    let r_moe = if policy.pipe_moe { policy.r.max(1) } else { 1 };
+    let r_at = if policy.pipe_at { r_moe } else { 1 };
+
+    // per-subtask durations
+    let at_f = costs.at_fwd / r_at as f64;
+    let at_b = costs.at_bwd / r_at as f64;
+    let ex_f = costs.exp_fwd / r_moe as f64;
+    let ex_b = costs.exp_bwd / r_moe as f64;
+    let a2a_payload = (costs.a2a - costs.a2a_alpha) * policy.a2a_eff;
+    let a2a_sub = costs.a2a_alpha * policy.a2a_alpha_factor + a2a_payload / r_moe as f64;
+    let a2a_bytes_sub = costs.a2a_bytes / r_moe as f64;
+
+    let mut seq: u64 = 0;
+    let mut next_seq = || {
+        seq += 1;
+        seq
+    };
+
+    // stream chain heads (strict FIFO per Eqs. 2-5)
+    let mut prev_comp: Option<TaskId> = None;
+    let mut prev_a2a: Option<TaskId> = None;
+
+    let chain = |prev: &mut Option<TaskId>, extra: &mut Vec<TaskId>| {
+        if let Some(p) = *prev {
+            extra.push(p);
+        }
+    };
+
+    // map MoE subtask r -> AT subtask index feeding it
+    let at_of = |r: usize| -> usize {
+        if r_at == r_moe {
+            r
+        } else {
+            0 // monolithic AT feeds every MoE subtask
+        }
+    };
+
+    // ---------------- forward ----------------
+    // fwd_comb[l][r] = id of combine subtask
+    let mut fwd_comb: Vec<Vec<TaskId>> = vec![vec![0; r_moe]; l_blocks];
+    let mut fwd_at: Vec<Vec<TaskId>> = vec![vec![0; r_at]; l_blocks];
+    for l in 0..l_blocks {
+        for r in 0..r_at {
+            let mut deps = Vec::new();
+            chain(&mut prev_comp, &mut deps);
+            if l > 0 {
+                if r_at == r_moe {
+                    deps.push(fwd_comb[l - 1][r]);
+                } else {
+                    deps.extend(fwd_comb[l - 1].iter().copied());
+                }
+            }
+            let id = dag.add(
+                TaskKind::At { l, r, phase: Phase::Fwd },
+                Stream::Compute,
+                at_f,
+                deps,
+                next_seq(),
+            );
+            fwd_at[l][r] = id;
+            prev_comp = Some(id);
+        }
+        let mut disp = vec![0; r_moe];
+        for r in 0..r_moe {
+            let mut deps = vec![fwd_at[l][at_of(r)]];
+            chain(&mut prev_a2a, &mut deps);
+            let id = dag.add_with_bytes(
+                TaskKind::Disp { l, r, phase: Phase::Fwd },
+                Stream::Comm,
+                a2a_sub,
+                deps,
+                next_seq(),
+                a2a_bytes_sub,
+            );
+            disp[r] = id;
+            prev_a2a = Some(id);
+        }
+        let mut exp = vec![0; r_moe];
+        for r in 0..r_moe {
+            let mut deps = vec![disp[r]];
+            chain(&mut prev_comp, &mut deps);
+            let id = dag.add(
+                TaskKind::Exp { l, r, phase: Phase::Fwd },
+                Stream::Compute,
+                ex_f,
+                deps,
+                next_seq(),
+            );
+            exp[r] = id;
+            prev_comp = Some(id);
+        }
+        for r in 0..r_moe {
+            let mut deps = vec![exp[r]];
+            chain(&mut prev_a2a, &mut deps);
+            let id = dag.add_with_bytes(
+                TaskKind::Comb { l, r, phase: Phase::Fwd },
+                Stream::Comm,
+                a2a_sub,
+                deps,
+                next_seq(),
+                a2a_bytes_sub,
+            );
+            fwd_comb[l][r] = id;
+            prev_a2a = Some(id);
+        }
+    }
+
+    // ---------------- head / loss turnaround ----------------
+    let mut deps: Vec<TaskId> = fwd_comb[l_blocks - 1].clone();
+    chain(&mut prev_comp, &mut deps);
+    let head = dag.add(TaskKind::Head, Stream::Compute, costs.head, deps, next_seq());
+    prev_comp = Some(head);
+
+    // ---------------- backward (Eqs. 4/5, deps 6a-6e) ----------------
+    let mut ar_seq_base: u64 = 1_000_000; // AR chunk FIFO among themselves
+    let mut ar_tasks: Vec<TaskId> = Vec::new();
+    let mut bwd_at: Vec<Vec<TaskId>> = vec![vec![0; r_at]; l_blocks];
+    for l in (0..l_blocks).rev() {
+        // combine-bwd (scatter dy to experts), order C_R..C_1 (Eq. 5)
+        let mut comb_b = vec![0; r_moe];
+        for r in (0..r_moe).rev() {
+            let mut deps = Vec::new();
+            chain(&mut prev_a2a, &mut deps);
+            if l == l_blocks - 1 {
+                deps.push(head);
+            } else if r_at == r_moe {
+                deps.push(bwd_at[l + 1][r]); // 6a
+            } else {
+                deps.extend(bwd_at[l + 1].iter().copied());
+            }
+            let id = dag.add_with_bytes(
+                TaskKind::Comb { l, r, phase: Phase::Bwd },
+                Stream::Comm,
+                a2a_sub,
+                deps,
+                next_seq(),
+                a2a_bytes_sub,
+            );
+            comb_b[r] = id;
+            prev_a2a = Some(id);
+        }
+        // expert-bwd, order E_R..E_1 (Eq. 4)
+        let mut exp_b = vec![0; r_moe];
+        for r in (0..r_moe).rev() {
+            let mut deps = vec![comb_b[r]]; // 6b
+            chain(&mut prev_comp, &mut deps);
+            let id = dag.add(
+                TaskKind::Exp { l, r, phase: Phase::Bwd },
+                Stream::Compute,
+                ex_b,
+                deps,
+                next_seq(),
+            );
+            exp_b[r] = id;
+            prev_comp = Some(id);
+        }
+        // dispatch-bwd, order D_R..D_1 (Eq. 5)
+        let mut disp_b = vec![0; r_moe];
+        for r in (0..r_moe).rev() {
+            let mut deps = vec![exp_b[r]]; // 6c
+            chain(&mut prev_a2a, &mut deps);
+            let id = dag.add_with_bytes(
+                TaskKind::Disp { l, r, phase: Phase::Bwd },
+                Stream::Comm,
+                a2a_sub,
+                deps,
+                next_seq(),
+                a2a_bytes_sub,
+            );
+            disp_b[r] = id;
+            prev_a2a = Some(id);
+        }
+        // AT-bwd, order AT_R..AT_1 (Eq. 4)
+        for r in (0..r_at).rev() {
+            let mut deps: Vec<TaskId> = if r_at == r_moe {
+                vec![disp_b[r]] // 6d
+            } else {
+                disp_b.clone()
+            };
+            chain(&mut prev_comp, &mut deps);
+            let id = dag.add(
+                TaskKind::At { l, r, phase: Phase::Bwd },
+                Stream::Compute,
+                at_b,
+                deps,
+                next_seq(),
+            );
+            bwd_at[l][r] = id;
+            prev_comp = Some(id);
+        }
+
+        if policy.pipe_ar {
+            // AR chunks of block l: ready once the block's gradients are
+            // fully accumulated (all AT-bwd subtasks done, Appendix H);
+            // scheduled by the comm pool at lower priority than any A2A.
+            let n_chunks = costs.ar_chunks(policy.sp_bytes);
+            let chunk_bytes = costs.ar_bytes / n_chunks as f64;
+            let ar_stream = if policy.ar_channel {
+                Stream::ArComm
+            } else {
+                Stream::Comm
+            };
+            for c in 0..n_chunks {
+                ar_seq_base += 1;
+                // On the concurrent channel, chunks of one tensor are
+                // FIFO: chain them so they serialize like one NCCL
+                // communicator's stream does.
+                let mut deps = bwd_at[l].clone();
+                if policy.ar_channel {
+                    if let Some(&prev) = ar_tasks.last() {
+                        deps.push(prev);
+                    }
+                }
+                let id = dag.add_with_bytes(
+                    TaskKind::Ar { l, c },
+                    ar_stream,
+                    costs.ar_chunk(chunk_bytes),
+                    deps,
+                    ar_seq_base,
+                    chunk_bytes,
+                );
+                ar_tasks.push(id);
+            }
+        }
+    }
+
+    if !policy.pipe_ar {
+        // Centralized all-reduce: one AR per block, executed after the
+        // entire backward propagation (the baselines' behaviour).
+        let last_compute = prev_comp.unwrap();
+        let mut prev_ar: Option<TaskId> = None;
+        for l in (0..l_blocks).rev() {
+            let mut deps = vec![last_compute];
+            if let Some(p) = prev_ar {
+                deps.push(p);
+            }
+            ar_seq_base += 1;
+            let id = dag.add_with_bytes(
+                TaskKind::Ar { l, c: 0 },
+                Stream::Comm,
+                costs.ar_chunk(costs.ar_bytes),
+                deps,
+                ar_seq_base,
+                costs.ar_bytes,
+            );
+            prev_ar = Some(id);
+            ar_tasks.push(id);
+        }
+    }
+
+    dag
+}
+
+/// Convenience: simulate one iteration and return (seconds, timeline).
+pub fn iteration_time(
+    cfg: &ModelCfg,
+    cluster: &crate::config::ClusterProfile,
+    policy: &Policy,
+) -> (f64, crate::sim::Timeline) {
+    let costs = TaskCosts::build(cfg, cluster);
+    let dag = build_dag(cfg, &costs, policy);
+    let tl = crate::sim::simulate(&dag);
+    (tl.makespan, tl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, ClusterProfile};
+    use crate::sim::{simulate, verify_timeline};
+
+    fn setup(name: &str) -> (ModelCfg, TaskCosts) {
+        let cfg = preset(name).unwrap();
+        let costs = TaskCosts::build(&cfg, &ClusterProfile::cluster1(16));
+        (cfg, costs)
+    }
+
+    #[test]
+    fn dag_task_counts_vanilla() {
+        let (cfg, costs) = setup("GPT2-Tiny-MoE");
+        let d = build_dag(&cfg, &costs, &Policy::vanilla_ep());
+        // per layer fwd: AT + D + E + C = 4; bwd same = 4; + L AR + head
+        assert_eq!(d.len(), cfg.l * 8 + cfg.l + 1);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn dag_task_counts_flowmoe() {
+        let (cfg, costs) = setup("GPT2-Tiny-MoE");
+        let pol = Policy::flow_moe(2, 1e6);
+        let d = build_dag(&cfg, &costs, &pol);
+        let n_chunks = costs.ar_chunks(1e6);
+        assert_eq!(d.len(), cfg.l * 2 * 8 + cfg.l * n_chunks + 1);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn all_policies_simulate_clean() {
+        let (cfg, costs) = setup("BERT-Large-MoE");
+        for pol in [
+            Policy::vanilla_ep(),
+            Policy::faster_moe(2),
+            Policy::tutel(2),
+            Policy::sche_moe(2),
+            Policy::fs_moe(2),
+            Policy::flow_moe_at(2),
+            Policy::flow_moe_ar(2, 2.5e6),
+            Policy::flow_moe(2, 2.5e6),
+        ] {
+            let d = build_dag(&cfg, &costs, &pol);
+            d.validate().unwrap();
+            let tl = simulate(&d);
+            verify_timeline(&d, &tl).unwrap();
+            assert!(tl.makespan > 0.0, "{}", pol.name);
+        }
+    }
+
+    #[test]
+    fn paper_ordering_holds() {
+        // FlowMoE < ScheMoE/FSMoE < Tutel <= vanilla, per the paper's
+        // Table 3 ordering (FasterMoE sits between Tutel and vanilla).
+        let cfg = preset("BERT-Large-MoE").unwrap();
+        let cl = ClusterProfile::cluster1(16);
+        let t = |p: &Policy| iteration_time(&cfg, &cl, p).0;
+        let flow = t(&Policy::flow_moe(2, 2.5e6));
+        let sche = t(&Policy::sche_moe(2));
+        let fsm = t(&Policy::fs_moe(2));
+        let tut = t(&Policy::tutel(2));
+        let fast = t(&Policy::faster_moe(2));
+        let van = t(&Policy::vanilla_ep());
+        assert!(flow < sche, "flow={flow} sche={sche}");
+        assert!(flow < fsm, "flow={flow} fsm={fsm}");
+        assert!(sche < tut, "sche={sche} tut={tut}");
+        assert!(tut < van, "tut={tut} van={van}");
+        assert!(fast < van, "fast={fast} van={van}");
+    }
+
+    #[test]
+    fn tutel_beats_vanilla_by_pipelining() {
+        let cfg = preset("DeepSeek-V2-S").unwrap();
+        let cl = ClusterProfile::cluster1(16);
+        let tut = iteration_time(&cfg, &cl, &Policy::tutel(2)).0;
+        let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0;
+        assert!(tut < van * 0.95);
+    }
+
+    #[test]
+    fn flow_moe_speedup_band_16gpu() {
+        // Paper Table 3 @16 GPUs: FlowMoE/vanilla speedup 1.43-1.82x.
+        // Strict single-comm-stream mode is bounded by the comm-busy floor
+        // (Appendix I case 1) on comm-dominated models, so we assert a
+        // conservative strict band; the concurrent-channel mode (which is
+        // what the testbed actually measured — EXPERIMENTS.md §Findings)
+        // must land in the paper-compatible band.
+        let cl = ClusterProfile::cluster1(16);
+        // DeepSeek-V2-S is AR-wire-bound in the Table-1-consistent
+        // calibration (1.68 GB replicated grads), which caps its speedup
+        // well below the paper's 1.82x — see EXPERIMENTS.md §Findings.
+        let cc_floor = [
+            ("GPT2-Tiny-MoE", 1.30),
+            ("BERT-Large-MoE", 1.30),
+            ("LLaMA2-MoE", 1.30),
+            ("DeepSeek-V2-S", 1.15),
+        ];
+        for (name, floor) in cc_floor {
+            let cfg = preset(name).unwrap();
+            let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0;
+            let strict = iteration_time(&cfg, &cl, &Policy::flow_moe(2, 2.5e6)).0;
+            let cc = iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, 2.5e6)).0;
+            let s_strict = van / strict;
+            let s_cc = van / cc;
+            assert!((1.02..=2.3).contains(&s_strict), "{name}: strict speedup {s_strict:.2}");
+            assert!((floor..=2.3).contains(&s_cc), "{name}: cc speedup {s_cc:.2}");
+            assert!(s_cc >= s_strict - 1e-9, "{name}: cc {s_cc:.2} < strict {s_strict:.2}");
+        }
+    }
+
+    /// Best simulated time over a small S_p grid — what BO converges to.
+    fn tuned_flow(cfg: &ModelCfg, cl: &ClusterProfile, make: impl Fn(f64) -> Policy) -> f64 {
+        [0.5e6, 1e6, 2.5e6, 8e6, 32e6, 128e6]
+            .iter()
+            .map(|&sp| iteration_time(cfg, cl, &make(sp)).0)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn ablation_ordering_table5() {
+        // Paper Table 5 ordering (time): vanilla > Tutel > FlowMoE-AT >
+        // FlowMoE-AR(BO) > FlowMoE. FlowMoE rows use the BO-tuned S_p
+        // (the fixed-S_p row of the paper is covered by tableA4 bench).
+        // Stacked x4: AR of block l overlaps tasks of block l-1, so a
+        // single isolated layer (L=1) cannot show the Pipe-AR gain under
+        // the strict model — its AR is only ready at the very end of its
+        // own backward (see EXPERIMENTS.md §Findings).
+        let mut cfg = ModelCfg::custom_layer(4, 1.2, 512, 8192, 8192, 16);
+        cfg.l = 4;
+        let cl = ClusterProfile::cluster1(16);
+        let t = |p: &Policy| iteration_time(&cfg, &cl, p).0;
+        let van = t(&Policy::vanilla_ep());
+        let tut = t(&Policy::tutel(2));
+        let at = t(&Policy::flow_moe_at(2));
+        let ar = tuned_flow(&cfg, &cl, |sp| Policy::flow_moe_ar(2, sp));
+        let full = tuned_flow(&cfg, &cl, |sp| Policy::flow_moe(2, sp));
+        assert!(van > tut, "van={van} tut={tut}");
+        assert!(tut > at, "tut={tut} at={at}");
+        assert!(at > full, "at={at} full={full}");
+        assert!(ar >= full - 1e-9, "ar={ar} full={full}");
+        assert!(ar < tut, "ar={ar} tut={tut}");
+    }
+
+    #[test]
+    fn theorem1_inserted_ar_not_worse_than_centralized() {
+        // FlowMoE-AR (chunked, priority) <= FlowMoE-AT w/ centralized AR,
+        // all else equal — the paper's Theorem 1 on the simulated model.
+        let cl = ClusterProfile::cluster1(16);
+        for name in ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE"] {
+            let cfg = preset(name).unwrap();
+            let central = iteration_time(&cfg, &cl, &Policy::flow_moe_at(2)).0;
+            let chunked = iteration_time(&cfg, &cl, &Policy::flow_moe(2, 2.5e6)).0;
+            assert!(
+                chunked <= central + 1e-9,
+                "{name}: chunked {chunked} > centralized {central}"
+            );
+        }
+    }
+
+    #[test]
+    fn ar_chunks_present_only_with_pipe_ar() {
+        let (cfg, costs) = setup("GPT2-Tiny-MoE");
+        let d1 = build_dag(&cfg, &costs, &Policy::tutel(2));
+        let d2 = build_dag(&cfg, &costs, &Policy::flow_moe(2, 0.5e6));
+        let ar1 = d1.count(|k| k.is_ar());
+        let ar2 = d2.count(|k| k.is_ar());
+        assert_eq!(ar1, cfg.l);
+        assert!(ar2 > cfg.l);
+    }
+}

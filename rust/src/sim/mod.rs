@@ -1,0 +1,401 @@
+//! Discrete-event two-stream cluster simulator.
+//!
+//! Executes a task [`Dag`] on exactly the resource model the paper's
+//! theorems assume (Sec. 3.3): one compute stream and one communication
+//! stream, one task at a time per stream, no preemption, compute and comm
+//! may overlap. When a stream frees up, it picks among *ready* tasks of
+//! its stream: the lowest-`seq` A2A-or-compute task; AR chunks run only
+//! when no A2A task is ready (Algorithm 2's priority rule).
+
+use crate::tasks::{Dag, Stream, Task, TaskId};
+
+/// Execution record of one task.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub task: TaskId,
+    pub start: f64,
+    pub end: f64,
+    pub stream: Stream,
+}
+
+/// Full execution timeline.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+    pub makespan: f64,
+}
+
+impl Timeline {
+    /// Busy time of a stream.
+    pub fn busy(&self, s: Stream) -> f64 {
+        self.spans.iter().filter(|x| x.stream == s).map(|x| x.end - x.start).sum()
+    }
+
+    /// Stream occupancy (busy / makespan) — the SM-utilization analogue.
+    pub fn occupancy(&self, s: Stream) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.busy(s) / self.makespan
+    }
+
+    /// Total communication busy time (both comm channels, unioned).
+    pub fn busy_comm(&self) -> f64 {
+        self.union_busy(|s| s != Stream::Compute)
+    }
+
+    /// Time compute and (any) communication are simultaneously busy.
+    pub fn overlap(&self) -> f64 {
+        // sweep over span boundaries
+        let mut events: Vec<(f64, i32, bool)> = Vec::with_capacity(self.spans.len() * 2);
+        for s in &self.spans {
+            let is_comm = s.stream != Stream::Compute;
+            events.push((s.start, 1, is_comm));
+            events.push((s.end, -1, is_comm));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let (mut nc, mut nm) = (0i32, 0i32);
+        let mut last = 0.0;
+        let mut overlap = 0.0;
+        for (t, d, is_comm) in events {
+            if nc > 0 && nm > 0 {
+                overlap += t - last;
+            }
+            last = t;
+            if is_comm {
+                nm += d;
+            } else {
+                nc += d;
+            }
+        }
+        overlap
+    }
+
+    /// Union busy time of streams selected by `pred`.
+    fn union_busy<F: Fn(Stream) -> bool>(&self, pred: F) -> f64 {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for s in &self.spans {
+            if pred(s.stream) {
+                events.push((s.start, 1));
+                events.push((s.end, -1));
+            }
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut n = 0i32;
+        let mut last = 0.0;
+        let mut busy = 0.0;
+        for (t, d) in events {
+            if n > 0 {
+                busy += t - last;
+            }
+            last = t;
+            n += d;
+        }
+        busy
+    }
+
+    /// Span of a given task id.
+    pub fn span_of(&self, id: TaskId) -> Option<&Span> {
+        self.spans.iter().find(|s| s.task == id)
+    }
+
+    /// Export as a Chrome-trace (chrome://tracing / Perfetto) JSON string
+    /// — one row per stream, one complete event per task. Hand-rolled
+    /// JSON (no serde offline); task labels come from the DAG.
+    pub fn to_chrome_trace(&self, dag: &Dag) -> String {
+        let mut out = String::from("[\n");
+        for (i, s) in self.spans.iter().enumerate() {
+            let tid = match s.stream {
+                Stream::Compute => 0,
+                Stream::Comm => 1,
+                Stream::ArComm => 2,
+            };
+            let name = format!("{}", dag.tasks[s.task].kind);
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}",
+                name.replace('"', ""),
+                tid,
+                s.start * 1e6,
+                (s.end - s.start) * 1e6
+            ));
+        }
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+/// Simulate the DAG; panics on invalid DAGs (validated in debug).
+pub fn simulate(dag: &Dag) -> Timeline {
+    debug_assert!(dag.validate().is_ok());
+    let n = dag.tasks.len();
+    let mut indeg: Vec<u32> = vec![0; n];
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for t in &dag.tasks {
+        indeg[t.id] = t.deps.len() as u32;
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+
+    // Ready structures per stream (§Perf: a flat ready-vector scan was
+    // O(ready^2) and pushed the scheduler past the paper's <1 % overhead
+    // bound once thousands of AR chunks were in flight):
+    //  * a min-heap on (seq, id) for non-AR tasks — Eqs. 2-5 FIFO order,
+    //  * a FIFO queue for AR chunks (they are created, become ready and
+    //    must run in seq order), consulted only when the heap is empty —
+    //    exactly Algorithm 2's A2A-before-AR rule.
+    use std::cmp::Reverse;
+    use std::collections::{BinaryHeap, VecDeque};
+    let mut heap: [BinaryHeap<Reverse<(u64, TaskId)>>; 3] = Default::default();
+    let mut ar_fifo: [VecDeque<TaskId>; 3] = Default::default();
+    let idx = |s: Stream| match s {
+        Stream::Compute => 0usize,
+        Stream::Comm => 1usize,
+        Stream::ArComm => 2usize,
+    };
+    let mut push_ready = |heap: &mut [BinaryHeap<Reverse<(u64, TaskId)>>; 3],
+                          ar_fifo: &mut [VecDeque<TaskId>; 3],
+                          t: &Task| {
+        let s = idx(t.stream);
+        if t.kind.is_ar() {
+            ar_fifo[s].push_back(t.id);
+        } else {
+            heap[s].push(Reverse((t.seq, t.id)));
+        }
+    };
+    for t in &dag.tasks {
+        if t.deps.is_empty() {
+            push_ready(&mut heap, &mut ar_fifo, t);
+        }
+    }
+
+    let mut free_at = [0.0f64; 3]; // per-stream next-free time
+    let mut running: [Option<(TaskId, f64)>; 3] = [None, None, None]; // (task, end)
+    let mut spans: Vec<Span> = Vec::with_capacity(n);
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+
+    while done < n {
+        // start tasks on any idle stream with ready work
+        for s in 0..3 {
+            if running[s].is_none() {
+                let id = if let Some(Reverse((_, id))) = heap[s].pop() {
+                    Some(id)
+                } else {
+                    ar_fifo[s].pop_front()
+                };
+                if let Some(id) = id {
+                    let start = now.max(free_at[s]);
+                    let end = start + dag.tasks[id].dur;
+                    running[s] = Some((id, end));
+                    spans.push(Span {
+                        task: id,
+                        start,
+                        end,
+                        stream: dag.tasks[id].stream,
+                    });
+                }
+            }
+        }
+        // advance to the earliest completion
+        let next_end = running
+            .iter()
+            .flatten()
+            .map(|&(_, e)| e)
+            .fold(f64::INFINITY, f64::min);
+        if !next_end.is_finite() {
+            // no task running but not all done => DAG has a cycle or
+            // unreachable tasks (validate() prevents this).
+            panic!("simulator deadlock: {done}/{n} tasks done");
+        }
+        now = next_end;
+        for s in 0..3 {
+            if let Some((id, end)) = running[s] {
+                if end <= now {
+                    running[s] = None;
+                    free_at[s] = end;
+                    done += 1;
+                    for &dep in &dependents[id] {
+                        indeg[dep] -= 1;
+                        if indeg[dep] == 0 {
+                            push_ready(&mut heap, &mut ar_fifo, &dag.tasks[dep]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+    Timeline { spans, makespan }
+}
+
+/// Verify a timeline respects the model: no same-stream overlap, all deps
+/// finished before starts, every task executed exactly once. Used by the
+/// property tests.
+pub fn verify_timeline(dag: &Dag, tl: &Timeline) -> Result<(), String> {
+    if tl.spans.len() != dag.tasks.len() {
+        return Err(format!("{} spans for {} tasks", tl.spans.len(), dag.tasks.len()));
+    }
+    let mut start = vec![f64::NAN; dag.tasks.len()];
+    let mut end = vec![f64::NAN; dag.tasks.len()];
+    for s in &tl.spans {
+        if !start[s.task].is_nan() {
+            return Err(format!("task {} executed twice", s.task));
+        }
+        start[s.task] = s.start;
+        end[s.task] = s.end;
+        let want = dag.tasks[s.task].dur;
+        if ((s.end - s.start) - want).abs() > 1e-9 {
+            return Err(format!("task {} duration {} != {}", s.task, s.end - s.start, want));
+        }
+    }
+    for t in &dag.tasks {
+        for &d in &t.deps {
+            if end[d] > start[t.id] + 1e-9 {
+                return Err(format!("task {} starts before dep {} ends", t.id, d));
+            }
+        }
+    }
+    // same-stream non-overlap
+    for stream in [Stream::Compute, Stream::Comm, Stream::ArComm] {
+        let mut xs: Vec<&Span> = tl.spans.iter().filter(|s| s.stream == stream).collect();
+        xs.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in xs.windows(2) {
+            if w[0].end > w[1].start + 1e-9 {
+                return Err(format!(
+                    "stream {:?}: tasks {} and {} overlap",
+                    stream, w[0].task, w[1].task
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::{Phase, TaskKind};
+
+    fn head() -> TaskKind {
+        TaskKind::Head
+    }
+
+    #[test]
+    fn sequential_chain() {
+        let mut d = Dag::new();
+        let a = d.add(head(), Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(head(), Stream::Compute, 2.0, vec![a], 1);
+        let _ = d.add(head(), Stream::Compute, 3.0, vec![b], 2);
+        let tl = simulate(&d);
+        assert_eq!(tl.makespan, 6.0);
+        verify_timeline(&d, &tl).unwrap();
+    }
+
+    #[test]
+    fn streams_overlap() {
+        let mut d = Dag::new();
+        d.add(head(), Stream::Compute, 5.0, vec![], 0);
+        d.add(head(), Stream::Comm, 4.0, vec![], 1);
+        let tl = simulate(&d);
+        assert_eq!(tl.makespan, 5.0);
+        assert!((tl.overlap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_stream_serializes() {
+        let mut d = Dag::new();
+        d.add(head(), Stream::Comm, 2.0, vec![], 0);
+        d.add(head(), Stream::Comm, 2.0, vec![], 1);
+        let tl = simulate(&d);
+        assert_eq!(tl.makespan, 4.0);
+        verify_timeline(&d, &tl).unwrap();
+    }
+
+    #[test]
+    fn seq_order_respected_among_ready() {
+        let mut d = Dag::new();
+        let a = d.add(head(), Stream::Compute, 1.0, vec![], 5);
+        let b = d.add(head(), Stream::Compute, 1.0, vec![], 1);
+        let tl = simulate(&d);
+        // b (seq 1) should run before a (seq 5)
+        assert!(tl.span_of(b).unwrap().start < tl.span_of(a).unwrap().start);
+    }
+
+    #[test]
+    fn ar_yields_to_a2a() {
+        let mut d = Dag::new();
+        // AR ready first by seq, but an A2A is also ready: A2A must win.
+        let ar = d.add(TaskKind::Ar { l: 0, c: 0 }, Stream::Comm, 2.0, vec![], 0);
+        let a2a = d.add(
+            TaskKind::Disp { l: 0, r: 0, phase: Phase::Bwd },
+            Stream::Comm,
+            1.0,
+            vec![],
+            10,
+        );
+        let tl = simulate(&d);
+        assert!(tl.span_of(a2a).unwrap().start < tl.span_of(ar).unwrap().start);
+    }
+
+    #[test]
+    fn ar_fills_gaps_no_preemption() {
+        // A2A arrives (via dep) while AR is running: AR is NOT preempted.
+        let mut d = Dag::new();
+        let gate = d.add(head(), Stream::Compute, 1.0, vec![], 0);
+        let ar = d.add(TaskKind::Ar { l: 0, c: 0 }, Stream::Comm, 5.0, vec![], 1);
+        let a2a = d.add(
+            TaskKind::Comb { l: 0, r: 0, phase: Phase::Bwd },
+            Stream::Comm,
+            1.0,
+            vec![gate],
+            2,
+        );
+        let tl = simulate(&d);
+        let ar_span = tl.span_of(ar).unwrap();
+        let a2a_span = tl.span_of(a2a).unwrap();
+        assert_eq!(ar_span.start, 0.0);
+        // a2a waits for the running AR chunk to finish (no preemption)
+        assert!(a2a_span.start >= ar_span.end - 1e-12);
+        verify_timeline(&d, &tl).unwrap();
+    }
+
+    #[test]
+    fn diamond_dependencies() {
+        let mut d = Dag::new();
+        let a = d.add(head(), Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(head(), Stream::Comm, 2.0, vec![a], 1);
+        let c = d.add(head(), Stream::Compute, 3.0, vec![a], 2);
+        let e = d.add(head(), Stream::Compute, 1.0, vec![b, c], 3);
+        let tl = simulate(&d);
+        assert_eq!(tl.makespan, 5.0);
+        assert!(tl.span_of(e).unwrap().start >= 4.0 - 1e-12);
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path_and_stream_busy() {
+        let mut d = Dag::new();
+        let a = d.add(head(), Stream::Compute, 2.0, vec![], 0);
+        let b = d.add(head(), Stream::Comm, 3.0, vec![a], 1);
+        d.add(head(), Stream::Compute, 2.5, vec![b], 2);
+        let tl = simulate(&d);
+        assert!(tl.makespan >= d.critical_path() - 1e-12);
+        assert!(tl.makespan >= d.stream_busy(Stream::Compute) - 1e-12);
+    }
+
+    #[test]
+    fn occupancy_bounds() {
+        let mut d = Dag::new();
+        d.add(head(), Stream::Compute, 1.0, vec![], 0);
+        d.add(head(), Stream::Comm, 1.0, vec![], 1);
+        let tl = simulate(&d);
+        for s in [Stream::Compute, Stream::Comm] {
+            let o = tl.occupancy(s);
+            assert!((0.0..=1.0 + 1e-12).contains(&o));
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Multi-type task DAG of one distributed-MoE training iteration.
+//!
+//! Implements the paper's task model (Sec. 3.2): the iteration is broken
+//! into MHA+gating computing (`At`), dispatch/combine A2A communication
+//! (`Disp`/`Comb`), expert computing (`Exp`) and all-reduce chunks (`Ar`),
+//! each with forward and backward instances, related by the dependencies
+//! of Eqs. 2–5 / 6a–6e. Scheduling policies (see [`crate::sched`]) build
+//! concrete DAGs; the simulator ([`crate::sim`]) executes them on the
+//! two-stream resource model the paper's theorems assume.
+
+use std::fmt;
+
+/// The hardware stream a task occupies (paper §3.3: one compute and one
+/// communication task may run concurrently; same-stream tasks serialize).
+///
+/// `ArComm` is an optional third stream modelling concurrent NCCL
+/// communicators (A2A and all-reduce on separate channels): the paper's
+/// *theory* assumes a single communication stream, but its measured
+/// speedups on communication-dominated models exceed that model's
+/// comm-busy lower bound — which is only possible if A2A and AR overlap
+/// physically. Policies choose strict (paper-theory) or concurrent
+/// placement of AR chunks (see sched::Policy::ar_channel and
+/// EXPERIMENTS.md §Findings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stream {
+    Compute,
+    Comm,
+    ArComm,
+}
+
+/// Phase of the iteration a task belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Fwd,
+    Bwd,
+}
+
+/// Task types of the paper's set 𝕋 (Eq. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// MHA + gating computing subtask `AT_r^(l)`.
+    At { l: usize, r: usize, phase: Phase },
+    /// Dispatch A2A `D_r^(l)`.
+    Disp { l: usize, r: usize, phase: Phase },
+    /// Expert computing `E_r^(l)`.
+    Exp { l: usize, r: usize, phase: Phase },
+    /// Combine A2A `C_r^(l)`.
+    Comb { l: usize, r: usize, phase: Phase },
+    /// All-reduce tensor chunk `AR^(l)` (backward only), chunk `c` of the
+    /// block's replicated-gradient tensor.
+    Ar { l: usize, c: usize },
+    /// Embedding/head/loss compute at the fwd->bwd turnaround (not in the
+    /// paper's notation; negligible duration but keeps the DAG honest).
+    Head,
+}
+
+impl TaskKind {
+    pub fn is_a2a(&self) -> bool {
+        matches!(self, TaskKind::Disp { .. } | TaskKind::Comb { .. })
+    }
+    pub fn is_ar(&self) -> bool {
+        matches!(self, TaskKind::Ar { .. })
+    }
+    pub fn layer(&self) -> Option<usize> {
+        match self {
+            TaskKind::At { l, .. }
+            | TaskKind::Disp { l, .. }
+            | TaskKind::Exp { l, .. }
+            | TaskKind::Comb { l, .. }
+            | TaskKind::Ar { l, .. } => Some(*l),
+            TaskKind::Head => None,
+        }
+    }
+}
+
+impl fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ph = |p: &Phase| if *p == Phase::Fwd { "f" } else { "b" };
+        match self {
+            TaskKind::At { l, r, phase } => write!(f, "AT{}[{l},{r}]", ph(phase)),
+            TaskKind::Disp { l, r, phase } => write!(f, "D{}[{l},{r}]", ph(phase)),
+            TaskKind::Exp { l, r, phase } => write!(f, "E{}[{l},{r}]", ph(phase)),
+            TaskKind::Comb { l, r, phase } => write!(f, "C{}[{l},{r}]", ph(phase)),
+            TaskKind::Ar { l, c } => write!(f, "AR[{l}.{c}]"),
+            TaskKind::Head => write!(f, "HEAD"),
+        }
+    }
+}
+
+pub type TaskId = usize;
+
+/// One schedulable task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    pub stream: Stream,
+    /// Duration in seconds.
+    pub dur: f64,
+    /// Ids of tasks that must complete before this one starts.
+    pub deps: Vec<TaskId>,
+    /// Within-stream FIFO rank (Eqs. 2–5 ordering). The simulator picks,
+    /// among ready same-stream tasks, the one with the smallest `seq`;
+    /// AR chunks are *always* outranked by ready A2A tasks (Algorithm 2)
+    /// regardless of `seq`.
+    pub seq: u64,
+    /// Bytes moved (comm tasks; 0 for compute) — metrics only.
+    pub bytes: f64,
+}
+
+/// A complete iteration DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    pub tasks: Vec<Task>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Dag { tasks: Vec::new() }
+    }
+
+    pub fn add(&mut self, kind: TaskKind, stream: Stream, dur: f64, deps: Vec<TaskId>, seq: u64) -> TaskId {
+        self.add_with_bytes(kind, stream, dur, deps, seq, 0.0)
+    }
+
+    pub fn add_with_bytes(
+        &mut self,
+        kind: TaskKind,
+        stream: Stream,
+        dur: f64,
+        deps: Vec<TaskId>,
+        seq: u64,
+        bytes: f64,
+    ) -> TaskId {
+        let id = self.tasks.len();
+        debug_assert!(deps.iter().all(|&d| d < id), "forward-only dep edges");
+        self.tasks.push(Task {
+            id,
+            kind,
+            stream,
+            dur,
+            deps,
+            seq,
+            bytes,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Sum of durations per stream (lower bound on makespan per stream).
+    pub fn stream_busy(&self, s: Stream) -> f64 {
+        self.tasks.iter().filter(|t| t.stream == s).map(|t| t.dur).sum()
+    }
+
+    /// Critical-path lower bound on the makespan (longest dep chain).
+    pub fn critical_path(&self) -> f64 {
+        let mut finish = vec![0.0f64; self.tasks.len()];
+        for t in &self.tasks {
+            let start = t.deps.iter().map(|&d| finish[d]).fold(0.0, f64::max);
+            finish[t.id] = start + t.dur;
+        }
+        finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Structural validation: ids consecutive, deps acyclic (guaranteed by
+    /// construction), durations non-negative and finite.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id != i {
+                return Err(format!("task {i} has id {}", t.id));
+            }
+            if !(t.dur.is_finite() && t.dur >= 0.0) {
+                return Err(format!("task {} ({}) bad duration {}", t.id, t.kind, t.dur));
+            }
+            for &d in &t.deps {
+                if d >= i {
+                    return Err(format!("task {} depends on later task {}", i, d));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Count tasks of a coarse category (for tests/reports).
+    pub fn count<F: Fn(&TaskKind) -> bool>(&self, pred: F) -> usize {
+        self.tasks.iter().filter(|t| pred(&t.kind)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(kind: TaskKind) -> TaskKind {
+        kind
+    }
+
+    #[test]
+    fn add_assigns_sequential_ids() {
+        let mut d = Dag::new();
+        let a = d.add(t(TaskKind::Head), Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(t(TaskKind::Head), Stream::Compute, 1.0, vec![a], 1);
+        assert_eq!((a, b), (0, 1));
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn critical_path_longest_chain() {
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 2.0, vec![], 0);
+        let b = d.add(TaskKind::Head, Stream::Comm, 3.0, vec![a], 1);
+        let _c = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![a], 2);
+        let _e = d.add(TaskKind::Head, Stream::Compute, 4.0, vec![b], 3);
+        assert_eq!(d.critical_path(), 9.0);
+    }
+
+    #[test]
+    fn stream_busy_partitions() {
+        let mut d = Dag::new();
+        d.add(TaskKind::Head, Stream::Compute, 2.0, vec![], 0);
+        d.add(TaskKind::Head, Stream::Comm, 3.0, vec![], 1);
+        assert_eq!(d.stream_busy(Stream::Compute), 2.0);
+        assert_eq!(d.stream_busy(Stream::Comm), 3.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_duration() {
+        let mut d = Dag::new();
+        d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        d.tasks[0].dur = f64::NAN;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(TaskKind::Disp { l: 0, r: 0, phase: Phase::Fwd }.is_a2a());
+        assert!(TaskKind::Ar { l: 0, c: 0 }.is_ar());
+        assert!(!TaskKind::At { l: 0, r: 0, phase: Phase::Bwd }.is_a2a());
+        assert_eq!(TaskKind::Ar { l: 3, c: 1 }.layer(), Some(3));
+        assert_eq!(TaskKind::Head.layer(), None);
+    }
+
+    #[test]
+    fn display_compact() {
+        let k = TaskKind::At { l: 2, r: 1, phase: Phase::Bwd };
+        assert_eq!(format!("{k}"), "ATb[2,1]");
+    }
+}

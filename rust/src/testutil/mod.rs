@@ -1,0 +1,7 @@
+//! Minimal property-testing harness (no proptest offline): runs a check
+//! over many seeded random cases and reports the failing seed for
+//! reproduction.
+
+pub mod prop;
+
+pub use prop::check;

@@ -1,0 +1,81 @@
+//! Seed-reporting randomized property checks.
+//!
+//! `check(n, |rng| ...)` runs the property over `n` deterministic seeds;
+//! on failure it panics with the seed so the case replays exactly:
+//! `check_seed(SEED, prop)`. No shrinking (offline constraint, DESIGN.md
+//! §1) — properties should generate smallish cases instead.
+
+use crate::util::Rng;
+
+/// Run `prop` over `n` seeded cases; panic with the first failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(n: usize, mut prop: F) {
+    for seed in 0..n as u64 {
+        let mut rng = Rng::new(0xF10E ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}\nreplay: check_seed({seed}, prop)");
+        }
+    }
+}
+
+/// Replay one seed.
+pub fn check_seed<F: FnMut(&mut Rng) -> Result<(), String>>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(0xF10E ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_reports_seed() {
+        check(10, |rng| {
+            let x = rng.below(10);
+            if x < 9 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first = Vec::new();
+        check(5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

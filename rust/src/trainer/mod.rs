@@ -1,0 +1,466 @@
+//! End-to-end distributed trainer (real PJRT compute, real collectives).
+//!
+//! Two execution paths over the same AOT artifacts:
+//!
+//! * [`train_fused`] — single-process fused `train_step` HLO (oracle /
+//!   baseline path).
+//! * [`train_dp`] — P in-process workers, each owning a full replica and
+//!   a private PJRT engine; every step runs microbatched per-block
+//!   forward/backward pieces and all-reduces gradients through the
+//!   [`crate::commpool`] machinery. With `overlap = true` the AR chunks of
+//!   block *l* are enqueued the moment its gradients are accumulated —
+//!   while the compute thread proceeds to block *l−1* — which is the
+//!   paper's Pipe-AR behaviour; with `overlap = false` all AR happens
+//!   after the full backward pass (the baselines' centralized behaviour).
+//!
+//! Gradient scaling follows Appendix H: each microbatch loss is scaled by
+//! 1/R so pipelined gradients equal full-batch gradients exactly (the
+//! tiny config is drop-free; see python/compile/configs.py).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::commpool::{partition_ranges, Collective, CommPool};
+use crate::data::Corpus;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::Rng;
+
+/// Per-run report.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// Mean loss per step (averaged across workers).
+    pub losses: Vec<f32>,
+    /// Wall seconds per step.
+    pub step_secs: Vec<f64>,
+    /// Final parameters of worker 0 (for parity tests).
+    pub final_params: Vec<Vec<f32>>,
+}
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub cfg_name: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// Pipe-AR overlap (FlowMoE) vs centralized AR (baselines).
+    pub overlap: bool,
+    /// All-reduce chunk size in bytes (elements = bytes/4).
+    pub sp_bytes: usize,
+    pub log_every: usize,
+}
+
+impl TrainOpts {
+    pub fn new(cfg_name: &str, steps: usize) -> TrainOpts {
+        TrainOpts {
+            cfg_name: cfg_name.to_string(),
+            steps,
+            lr: 0.05,
+            momentum: 0.9,
+            seed: 1234,
+            overlap: true,
+            sp_bytes: 1 << 20,
+            log_every: 0,
+        }
+    }
+}
+
+/// Canonical parameter initialization (shared by both paths so they can
+/// be compared bit-for-bit): norm gains = 1, everything else
+/// normal * fan_in^-1/2, deterministic in `seed`.
+pub fn init_params(engine: &Engine, cfg_name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+    let spec = engine.manifest().get(&format!("train_step_{cfg_name}"))?;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for b in &spec.inputs {
+        let Some(name) = b.name.strip_prefix("param.") else {
+            break; // params come first in the manifest order
+        };
+        let n = b.elems();
+        let v = if name.ends_with(".n1") || name.ends_with(".n2") || name == "normf" {
+            vec![1.0f32; n]
+        } else {
+            let fan_in = if b.shape.len() >= 2 {
+                b.shape[b.shape.len() - 2]
+            } else {
+                *b.shape.last().unwrap_or(&1)
+            } as f64;
+            let s = fan_in.powf(-0.5);
+            (0..n).map(|_| (rng.normal() * s) as f32).collect()
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Geometry of a config read back from the manifest (no duplicated shape
+/// knowledge in rust).
+struct Geometry {
+    n_params: usize,
+    l_blocks: usize,
+    bm: usize,
+    n_tokens: usize,
+    r: usize,
+}
+
+fn geometry(engine: &Engine, cfg: &str, full_b: usize) -> Result<Geometry> {
+    let ts = engine.manifest().get(&format!("train_step_{cfg}"))?;
+    let n_params = ts.inputs.iter().filter(|b| b.name.starts_with("param.")).count();
+    let l_blocks = (n_params - 2) / 9;
+    let ef = engine.manifest().get(&format!("embed_fwd_{cfg}"))?;
+    let tok = &ef.inputs[1];
+    let (bm, n_tokens) = (tok.shape[0], tok.shape[1]);
+    Ok(Geometry {
+        n_params,
+        l_blocks,
+        bm,
+        n_tokens,
+        r: full_b / bm,
+    })
+}
+
+fn full_batch(engine: &Engine, cfg: &str) -> Result<usize> {
+    let ts = engine.manifest().get(&format!("train_step_{cfg}"))?;
+    let tok = ts
+        .inputs
+        .iter()
+        .find(|b| b.name == "tokens")
+        .ok_or_else(|| anyhow!("no tokens input"))?;
+    Ok(tok.shape[0])
+}
+
+/// SGD + momentum update (matches the HLO train_step formula exactly).
+fn sgd_update(params: &mut [Vec<f32>], moms: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32, mu: f32) {
+    for ((p, m), g) in params.iter_mut().zip(moms.iter_mut()).zip(grads.iter()) {
+        for i in 0..p.len() {
+            m[i] = mu * m[i] + g[i];
+            p[i] -= lr * m[i];
+        }
+    }
+}
+
+/// Single-process fused-train_step path.
+pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
+    let mut engine = Engine::new(artifacts)?;
+    let cfg = &opts.cfg_name;
+    let name = format!("train_step_{cfg}");
+    let spec = engine.manifest().get(&name)?.clone();
+    let n_params = spec.inputs.iter().filter(|b| b.name.starts_with("param.")).count();
+    let b_full = full_batch(&engine, cfg)?;
+    let n_tok = spec
+        .inputs
+        .iter()
+        .find(|b| b.name == "tokens")
+        .unwrap()
+        .shape[1];
+
+    let mut params = init_params(&engine, cfg, opts.seed)?;
+    let mut moms: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut corpus = Corpus::new(
+        spec.inputs[0].shape[0], // vocab from embed shape
+        opts.seed ^ 0x0,
+    );
+
+    let mut report = TrainReport::default();
+    for step in 0..opts.steps {
+        let t0 = std::time::Instant::now();
+        let tokens = HostTensor::I32(corpus.batch(b_full, n_tok));
+        let lr = HostTensor::F32(vec![opts.lr]);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(2 * n_params + 2);
+        for p in &params {
+            inputs.push(HostTensor::F32(p.clone()));
+        }
+        for m in &moms {
+            inputs.push(HostTensor::F32(m.clone()));
+        }
+        inputs.push(tokens);
+        inputs.push(lr);
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let outs = engine.run(&name, &refs)?;
+        for i in 0..n_params {
+            params[i] = outs[i].f32().to_vec();
+            moms[i] = outs[n_params + i].f32().to_vec();
+        }
+        let loss = outs[2 * n_params].scalar_f32();
+        report.losses.push(loss);
+        report.step_secs.push(t0.elapsed().as_secs_f64());
+        if opts.log_every > 0 && step % opts.log_every == 0 {
+            eprintln!("[fused {cfg}] step {step}: loss {loss:.4}");
+        }
+    }
+    report.final_params = params;
+    Ok(report)
+}
+
+/// Distributed data-parallel path: P workers, per-block pipelined
+/// backward, chunked-AR overlap through the comm pool.
+pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainReport> {
+    assert!(p >= 1);
+    let coll = Collective::new(p);
+    let dir: PathBuf = artifacts.to_path_buf();
+    let mut handles = Vec::new();
+    for w in 0..p {
+        let coll = Arc::clone(&coll);
+        let opts = opts.clone();
+        let dir = dir.clone();
+        handles.push(std::thread::spawn(move || worker_dp(w, p, coll, &dir, &opts)));
+    }
+    let mut reports: Vec<TrainReport> = Vec::new();
+    for h in handles {
+        reports.push(h.join().map_err(|_| anyhow!("worker panicked"))??);
+    }
+    Ok(reports.remove(0))
+}
+
+fn worker_dp(
+    w: usize,
+    p: usize,
+    coll: Arc<Collective>,
+    artifacts: &Path,
+    opts: &TrainOpts,
+) -> Result<TrainReport> {
+    let cfg = opts.cfg_name.clone();
+    let mut engine = Engine::new(artifacts)?;
+    let b_full = full_batch(&engine, &cfg)?;
+    let geo = geometry(&engine, &cfg, b_full)?;
+    let (l_blocks, r_deg, bm, n_tok) = (geo.l_blocks, geo.r, geo.bm, geo.n_tokens);
+    let embed_fwd = format!("embed_fwd_{cfg}");
+    let block_fwd = format!("block_fwd_{cfg}");
+    let block_bwd = format!("block_bwd_{cfg}");
+    let head_loss = format!("head_loss_{cfg}");
+    let embed_bwd = format!("embed_bwd_{cfg}");
+    for n in [&embed_fwd, &block_fwd, &block_bwd, &head_loss, &embed_bwd] {
+        engine.prepare(n)?;
+    }
+
+    let mut params = init_params(&engine, &cfg, opts.seed)?;
+    let n_params = geo.n_params;
+    let mut moms: Vec<Vec<f32>> = params.iter().map(|q| vec![0.0; q.len()]).collect();
+    // distinct data shard per worker
+    let vocab = engine.manifest().get(&format!("train_step_{cfg}"))?.inputs[0].shape[0];
+    let mut corpus = Corpus::new(vocab, opts.seed ^ (w as u64));
+
+    let pool = CommPool::new();
+    let chunk_elems = (opts.sp_bytes / 4).max(1);
+    let inv_r = 1.0f32 / r_deg as f32;
+
+    // buffer specs for the hot-path marshalling (§Perf: parameters are
+    // read by 4R block calls per step; marshal each param once per step)
+    let bf_spec = engine.manifest().get(&block_fwd)?.clone();
+    let hl_spec = engine.manifest().get(&head_loss)?.clone();
+    let x_spec = bf_spec.inputs[9].clone();
+
+    let mut report = TrainReport::default();
+    for step in 0..opts.steps {
+        coll.barrier();
+        let t0 = std::time::Instant::now();
+        // marshal current params once (device buffers — leak-free
+        // execute_b path, see runtime::Engine::buffer docs)
+        let mut block_lits: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(l_blocks);
+        for l in 0..l_blocks {
+            let mut v = Vec::with_capacity(9);
+            for t in 0..9 {
+                v.push(engine.buffer_f32(&params[1 + l * 9 + t], &bf_spec.inputs[t])?);
+            }
+            block_lits.push(v);
+        }
+        let embed_lit = engine.buffer_f32(&params[0], &hl_spec.inputs[0])?;
+        let normf_lit = engine.buffer_f32(&params[n_params - 1], &hl_spec.inputs[1])?;
+
+        // ---------------- forward (all microbatches) ----------------
+        let mut toks: Vec<HostTensor> = Vec::with_capacity(r_deg);
+        let mut acts: Vec<Vec<HostTensor>> = Vec::with_capacity(r_deg); // acts[r][l]
+        for _ in 0..r_deg {
+            let t = HostTensor::I32(corpus.batch(bm, n_tok));
+            let mut xs = Vec::with_capacity(l_blocks + 1);
+            let x0 = engine.run(&embed_fwd, &[&HostTensor::F32(params[0].clone()), &t])?;
+            xs.push(x0.into_iter().next().unwrap());
+            for l in 0..l_blocks {
+                let x_lit = engine.buffer_f32(xs[l].f32(), &x_spec)?;
+                let mut inp: Vec<&xla::PjRtBuffer> = block_lits[l].iter().collect();
+                inp.push(&x_lit);
+                let y = engine.run_buffers(&block_fwd, &inp)?;
+                xs.push(y.into_iter().next().unwrap());
+            }
+            toks.push(t);
+            acts.push(xs);
+        }
+
+        // ---------------- head / loss ----------------
+        let mut loss = 0.0f32;
+        let mut dxs: Vec<HostTensor> = Vec::with_capacity(r_deg);
+        // gradient store shared with the comm pool: [n_params] tensors
+        let gstore: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(
+            params.iter().map(|q| vec![0.0f32; q.len()]).collect(),
+        ));
+        for r in 0..r_deg {
+            let xf_lit = engine.buffer_f32(acts[r][l_blocks].f32(), &hl_spec.inputs[2])?;
+            let tok_lit = engine.buffer(&toks[r], &hl_spec.inputs[3])?;
+            let outs =
+                engine.run_buffers(&head_loss, &[&embed_lit, &normf_lit, &xf_lit, &tok_lit])?;
+            loss += outs[0].scalar_f32() * inv_r;
+            let mut dxf = outs[1].f32().to_vec();
+            scale(&mut dxf, inv_r);
+            dxs.push(HostTensor::F32(dxf));
+            let mut g = gstore.lock().unwrap();
+            axpy(&mut g[0], outs[2].f32(), inv_r);
+            axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
+        }
+
+        // ---------------- backward per block, AR overlap ----------------
+        let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
+            (((step * (l_blocks + 2) + layer) as u64) << 24)
+                | ((tensor as u64) << 16)
+                | chunk as u64
+        };
+        for l in (0..l_blocks).rev() {
+            for r in 0..r_deg {
+                let x_lit = engine.buffer_f32(acts[r][l].f32(), &x_spec)?;
+                let dy_lit = engine.buffer_f32(dxs[r].f32(), &x_spec)?;
+                let mut inp: Vec<&xla::PjRtBuffer> = block_lits[l].iter().collect();
+                inp.push(&x_lit);
+                inp.push(&dy_lit);
+                let outs = engine.run_buffers(&block_bwd, &inp)?;
+                {
+                    let mut g = gstore.lock().unwrap();
+                    for t in 0..9 {
+                        axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
+                    }
+                }
+                dxs[r] = outs.into_iter().nth(9).unwrap();
+            }
+            if opts.overlap {
+                enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+            }
+        }
+        // embedding gradient via the input-lookup path
+        for r in 0..r_deg {
+            let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
+            let mut g = gstore.lock().unwrap();
+            axpy(&mut g[0], outs[0].f32(), 1.0);
+        }
+        // embed + normf AR (layer ids l_blocks, l_blocks+1)
+        if opts.overlap {
+            enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
+            enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+        } else {
+            // centralized: everything after backward completes
+            for l in (0..l_blocks).rev() {
+                enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+            }
+            enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
+            enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+        }
+        pool.drain();
+
+        // ---------------- update ----------------
+        {
+            let mut g = gstore.lock().unwrap();
+            let scale_w = 1.0 / p as f32;
+            for gv in g.iter_mut() {
+                scale(gv, scale_w);
+            }
+            sgd_update(&mut params, &mut moms, &g, opts.lr, opts.momentum);
+        }
+        let mut lbuf = [loss];
+        coll.all_reduce_sum(u64::MAX - step as u64, &mut lbuf);
+        let mean_loss = lbuf[0] / p as f32;
+        report.losses.push(mean_loss);
+        report.step_secs.push(t0.elapsed().as_secs_f64());
+        if w == 0 && opts.log_every > 0 && step % opts.log_every == 0 {
+            eprintln!(
+                "[dp{p} {cfg} overlap={}] step {step}: loss {mean_loss:.4} ({:.2}s)",
+                opts.overlap,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    report.final_params = params;
+    Ok(report)
+}
+
+fn scale(v: &mut [f32], s: f32) {
+    for x in v.iter_mut() {
+        *x *= s;
+    }
+}
+
+fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (d, s) in acc.iter_mut().zip(x.iter()) {
+        *d += a * *s;
+    }
+}
+
+/// Enqueue chunked all-reduce jobs for one tensor of the grad store.
+fn enqueue_tensor_ar(
+    pool: &CommPool,
+    coll: &Arc<Collective>,
+    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    tensor_idx: usize,
+    layer_id: usize,
+    chunk_elems: usize,
+    tag: &mut impl FnMut(usize, usize, usize) -> u64,
+) {
+    let len = gstore.lock().unwrap()[tensor_idx].len();
+    for (c, (start, l)) in partition_ranges(len, chunk_elems).into_iter().enumerate() {
+        let coll = Arc::clone(coll);
+        let gstore = Arc::clone(gstore);
+        let t = tag(layer_id, tensor_idx, c);
+        pool.submit_ar(Box::new(move || {
+            let mut chunk = {
+                let g = gstore.lock().unwrap();
+                g[tensor_idx][start..start + l].to_vec()
+            };
+            coll.all_reduce_sum(t, &mut chunk);
+            let mut g = gstore.lock().unwrap();
+            g[tensor_idx][start..start + l].copy_from_slice(&chunk);
+        }));
+    }
+}
+
+/// Enqueue chunked AR for all tensors of one block.
+#[allow(clippy::too_many_arguments)]
+fn enqueue_block_ar(
+    pool: &CommPool,
+    coll: &Arc<Collective>,
+    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    layer_id: usize,
+    first_tensor: usize,
+    n_tensors: usize,
+    chunk_elems: usize,
+    tag: &mut impl FnMut(usize, usize, usize) -> u64,
+) {
+    for t in 0..n_tensors {
+        enqueue_tensor_ar(pool, coll, gstore, first_tensor + t, layer_id, chunk_elems, tag);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_matches_formula() {
+        let mut p = vec![vec![1.0f32, 2.0]];
+        let mut m = vec![vec![0.5f32, 0.0]];
+        let g = vec![vec![0.1f32, -0.2]];
+        sgd_update(&mut p, &mut m, &g, 0.1, 0.9);
+        // m = 0.9*0.5 + 0.1 = 0.55 ; p = 1 - 0.1*0.55 = 0.945
+        assert!((m[0][0] - 0.55).abs() < 1e-6);
+        assert!((p[0][0] - 0.945).abs() < 1e-6);
+        assert!((m[0][1] + 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = vec![1.0f32, 2.0];
+        axpy(&mut a, &[10.0, 20.0], 0.5);
+        assert_eq!(a, vec![6.0, 12.0]);
+        scale(&mut a, 2.0);
+        assert_eq!(a, vec![12.0, 24.0]);
+    }
+}

@@ -1,0 +1,54 @@
+//! Small utilities: deterministic PRNG, statistics, formatting.
+//!
+//! The offline crate set has no `rand`, so we carry our own
+//! xoshiro256**-based PRNG (seeded via SplitMix64) — deterministic across
+//! platforms, which the simulator, the synthetic corpus and the property
+//! tests all rely on.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, median, percentile, stddev};
+
+/// Format a duration in milliseconds with sensible precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.1}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.4}")
+    }
+}
+
+/// Format a byte count as a human-readable string.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512.00B");
+        assert_eq!(fmt_bytes(2048.0), "2.00KB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.50MB");
+    }
+
+    #[test]
+    fn fmt_ms_precision() {
+        assert_eq!(fmt_ms(123.456), "123.5");
+        assert_eq!(fmt_ms(12.345), "12.35");
+        assert_eq!(fmt_ms(0.1234), "0.1234");
+    }
+}

@@ -1,0 +1,127 @@
+//! BO autotuner integration against the simulated objective (Fig. 4 /
+//! Tables A.3–A.5 shapes).
+
+use flowmoe::bo::{grid_search, random_tuner, Acquisition, BoTuner, Kernel};
+use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::sched::{iteration_time, Policy};
+
+fn objective(model: &str) -> impl Fn(f64) -> f64 + '_ {
+    let cfg = preset(model).unwrap();
+    let cl = ClusterProfile::cluster1(16);
+    move |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0
+}
+
+#[test]
+fn fig4_bo_finds_low_iteration_time_on_bert() {
+    let cfg = preset("BERT-Large-MoE").unwrap();
+    let obj = objective("BERT-Large-MoE");
+    let max = cfg.ar_bytes_per_block();
+    let mut bo = BoTuner::new(max, 42);
+    let best = bo.tune(8, &obj);
+    // BO-with-8-samples must be within 3% of a dense grid optimum.
+    let mut dense_best = f64::INFINITY;
+    for i in 1..=100 {
+        dense_best = dense_best.min(obj(max * i as f64 / 100.0));
+    }
+    let got = obj(best);
+    assert!(
+        got <= dense_best * 1.03,
+        "BO {got:.5} vs dense grid {dense_best:.5} (best sp {:.2}MB)",
+        best / 1e6
+    );
+}
+
+#[test]
+fn tableA3_bo_beats_grid_and_random_on_average() {
+    // Across the four models, BO's tuned time must be <= grid-search's
+    // and strictly better than random sampling's average.
+    let mut bo_total = 0.0;
+    let mut grid_total = 0.0;
+    let mut rand_total = 0.0;
+    for model in ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"] {
+        let cfg = preset(model).unwrap();
+        let obj = objective(model);
+        let max = cfg.ar_bytes_per_block();
+        let mut bo = BoTuner::new(max, 7);
+        let b = bo.tune(8, &obj);
+        bo_total += obj(b);
+        let g = grid_search(max, 8, &obj);
+        grid_total += obj(g);
+        let (_, avg) = random_tuner(max, 8, 7, &obj);
+        rand_total += avg;
+    }
+    assert!(
+        bo_total <= grid_total * 1.02,
+        "BO {bo_total:.4} vs grid {grid_total:.4}"
+    );
+    assert!(bo_total < rand_total, "BO {bo_total:.4} vs random {rand_total:.4}");
+}
+
+#[test]
+fn tableA4_bo_beats_every_fixed_sp() {
+    for model in ["BERT-Large-MoE", "LLaMA2-MoE"] {
+        let cfg = preset(model).unwrap();
+        let obj = objective(model);
+        let mut bo = BoTuner::new(cfg.ar_bytes_per_block(), 11);
+        let tuned = obj(bo.tune(8, &obj));
+        for sp_mb in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            let fixed = obj(sp_mb * 1e6);
+            assert!(
+                tuned <= fixed * 1.02,
+                "{model}: tuned {tuned:.4} vs fixed {sp_mb}MB {fixed:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tableA5_hyperparameters_all_converge_similarly() {
+    // Appendix D: BO is insensitive to acquisition/kernel choices on this
+    // single-peaked objective — all configs within 5 % of the best.
+    let cfg = preset("BERT-Large-MoE").unwrap();
+    let obj = objective("BERT-Large-MoE");
+    let max = cfg.ar_bytes_per_block();
+    let mut results = Vec::new();
+    let configs: Vec<(Acquisition, Kernel)> = vec![
+        (Acquisition::Ei { xi: 0.1 }, Kernel::Matern52 { len: 0.25 }),
+        (Acquisition::Ei { xi: 0.05 }, Kernel::Matern52 { len: 0.25 }),
+        (Acquisition::Ei { xi: 0.2 }, Kernel::Matern52 { len: 0.25 }),
+        (Acquisition::Pi { xi: 0.1 }, Kernel::Matern52 { len: 0.25 }),
+        (Acquisition::Lcb { kappa: 2.0 }, Kernel::Matern52 { len: 0.25 }),
+        (Acquisition::Ei { xi: 0.1 }, Kernel::Rbf { len: 0.25 }),
+        (
+            Acquisition::Ei { xi: 0.1 },
+            Kernel::RationalQuadratic { len: 0.25, alpha: 1.0 },
+        ),
+    ];
+    for (acq, kern) in configs {
+        let mut bo = BoTuner::new(max, 5).with_acquisition(acq).with_kernel(kern);
+        let best = bo.tune(10, &obj);
+        results.push(obj(best));
+    }
+    let best = results.iter().copied().fold(f64::INFINITY, f64::min);
+    for (i, r) in results.iter().enumerate() {
+        assert!(r / best < 1.05, "config {i}: {r:.4} vs best {best:.4}");
+    }
+}
+
+#[test]
+fn retune_trigger_appendix_k2() {
+    // Simulated hardware change (halved AR bandwidth) must trip Eq. A.11.
+    let cfg = preset("BERT-Large-MoE").unwrap();
+    let cl = ClusterProfile::cluster1(16);
+    let mut bo = BoTuner::new(cfg.ar_bytes_per_block(), 3);
+    let best_sp = bo.tune(8, |sp| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0);
+    let tuned_t = bo.best().unwrap().1;
+
+    let mut degraded = cl.clone();
+    degraded.net.ar_bw *= 0.3;
+    degraded.net.inter_bw *= 0.3;
+    let new_t = iteration_time(&cfg, &degraded, &Policy::flow_moe(2, best_sp)).0;
+    assert!(flowmoe::bo::should_retune(new_t, tuned_t, 0.1));
+    // and after re-tuning on the new hardware, time improves vs stale S_p
+    let mut bo2 = BoTuner::new(cfg.ar_bytes_per_block(), 9);
+    let new_sp = bo2.tune(8, |sp| iteration_time(&cfg, &degraded, &Policy::flow_moe(2, sp)).0);
+    let retuned_t = iteration_time(&cfg, &degraded, &Policy::flow_moe(2, new_sp)).0;
+    assert!(retuned_t <= new_t * 1.001, "retuned {retuned_t} vs stale {new_t}");
+}

@@ -1,0 +1,273 @@
+//! PJRT runtime integration: load the real AOT artifacts, execute them,
+//! and check numerics against structural invariants. Requires
+//! `make artifacts` (skipped otherwise).
+
+use std::path::PathBuf;
+
+use flowmoe::runtime::{Engine, HostTensor};
+use flowmoe::util::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn rand_f32(rng: &mut Rng, n: usize, scale: f32) -> HostTensor {
+    HostTensor::F32((0..n).map(|_| rng.normal() as f32 * scale).collect())
+}
+
+#[test]
+fn manifest_lists_tiny_and_e2e() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    for name in [
+        "train_step_tiny",
+        "grad_step_tiny",
+        "block_fwd_tiny",
+        "block_bwd_tiny",
+        "embed_fwd_tiny",
+        "head_loss_tiny",
+        "embed_bwd_tiny",
+        "at_fwd_tiny",
+        "at_bwd_tiny",
+        "exp_fwd_tiny",
+        "exp_bwd_tiny",
+        "train_step_e2e",
+    ] {
+        assert!(engine.manifest().get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn exp_fwd_matches_host_reference() {
+    // exp_fwd computes relu(x@w1)@w2 per expert — recompute on the host.
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir).unwrap();
+    let spec = engine.manifest().get("exp_fwd_tiny").unwrap().clone();
+    let (el, m, h) = (
+        spec.inputs[0].shape[0],
+        spec.inputs[0].shape[1],
+        spec.inputs[0].shape[2],
+    );
+    let cw = spec.inputs[2].shape[1];
+    let mut rng = Rng::new(42);
+    let w1 = rand_f32(&mut rng, el * m * h, 0.2);
+    let w2 = rand_f32(&mut rng, el * h * m, 0.2);
+    let xd = rand_f32(&mut rng, el * cw * m, 1.0);
+    let out = engine.run("exp_fwd_tiny", &[&w1, &w2, &xd]).unwrap();
+    let yd = out[0].f32();
+
+    // host reference
+    let (w1v, w2v, xv) = (w1.f32(), w2.f32(), xd.f32());
+    let mut max_err = 0.0f32;
+    for e in 0..el {
+        for c in 0..cw {
+            for j in 0..m {
+                let mut acc = 0.0f32;
+                for k in 0..h {
+                    let mut hidden = 0.0f32;
+                    for i in 0..m {
+                        hidden += xv[(e * cw + c) * m + i] * w1v[(e * m + i) * h + k];
+                    }
+                    acc += hidden.max(0.0) * w2v[(e * h + k) * m + j];
+                }
+                max_err = max_err.max((acc - yd[(e * cw + c) * m + j]).abs());
+            }
+        }
+    }
+    assert!(max_err < 1e-3, "max_err={max_err}");
+}
+
+#[test]
+fn train_step_runs_and_loss_is_sane() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir).unwrap();
+    let spec = engine.manifest().get("train_step_tiny").unwrap().clone();
+    let n_params = spec
+        .inputs
+        .iter()
+        .filter(|b| b.name.starts_with("param."))
+        .count();
+    let params = flowmoe::trainer::init_params(&engine, "tiny", 7).unwrap();
+    assert_eq!(params.len(), n_params);
+    let vocab = spec.inputs[0].shape[0];
+    let tok_spec = spec.inputs.iter().find(|b| b.name == "tokens").unwrap();
+    let n_tok = tok_spec.elems();
+    let mut rng = Rng::new(3);
+    let tokens = HostTensor::I32((0..n_tok).map(|_| rng.below(vocab) as i32).collect());
+    let lr = HostTensor::F32(vec![0.05]);
+    let mut inputs: Vec<HostTensor> = params.iter().map(|p| HostTensor::F32(p.clone())).collect();
+    inputs.extend(params.iter().map(|p| HostTensor::F32(vec![0.0; p.len()])));
+    inputs.push(tokens);
+    inputs.push(lr);
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let outs = engine.run("train_step_tiny", &refs).unwrap();
+    let loss = outs[2 * n_params].scalar_f32();
+    // random init on vocab=128 => loss near ln(128) = 4.85
+    assert!(loss.is_finite() && loss > 2.0 && loss < 8.0, "loss={loss}");
+    // params must have changed
+    let new0 = outs[0].f32();
+    assert!(new0.iter().zip(&params[0]).any(|(a, b)| (a - b).abs() > 0.0));
+}
+
+#[test]
+fn grad_step_grads_match_fused_direction() {
+    // One grad_step + host SGD must equal one train_step output.
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir).unwrap();
+    let params = flowmoe::trainer::init_params(&engine, "tiny", 11).unwrap();
+    let n_params = params.len();
+    let spec = engine.manifest().get("grad_step_tiny").unwrap().clone();
+    let tok_spec = spec.inputs.iter().find(|b| b.name == "tokens").unwrap();
+    let mut rng = Rng::new(5);
+    let tokens = HostTensor::I32(
+        (0..tok_spec.elems())
+            .map(|_| rng.below(128) as i32)
+            .collect(),
+    );
+
+    // grad_step
+    let mut inputs: Vec<HostTensor> = params.iter().map(|p| HostTensor::F32(p.clone())).collect();
+    inputs.push(tokens.clone());
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let outs = engine.run("grad_step_tiny", &refs).unwrap();
+    let loss_g = outs[0].scalar_f32();
+    let grads: Vec<&[f32]> = outs[1..].iter().map(|t| t.f32()).collect();
+
+    // train_step with lr, zero momentum: new_p = p - lr * g
+    let lr = 0.05f32;
+    let mut inputs2: Vec<HostTensor> = params.iter().map(|p| HostTensor::F32(p.clone())).collect();
+    inputs2.extend(params.iter().map(|p| HostTensor::F32(vec![0.0; p.len()])));
+    inputs2.push(tokens);
+    inputs2.push(HostTensor::F32(vec![lr]));
+    let refs2: Vec<&HostTensor> = inputs2.iter().collect();
+    let outs2 = engine.run("train_step_tiny", &refs2).unwrap();
+    let loss_t = outs2[2 * n_params].scalar_f32();
+    assert!((loss_g - loss_t).abs() < 1e-5, "{loss_g} vs {loss_t}");
+    for i in 0..n_params {
+        let want: Vec<f32> = params[i]
+            .iter()
+            .zip(grads[i])
+            .map(|(p, g)| p - lr * g)
+            .collect();
+        let got = outs2[i].f32();
+        let max: f32 = want
+            .iter()
+            .zip(got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max < 1e-4, "param {i}: max diff {max}");
+    }
+}
+
+#[test]
+fn block_fwd_bwd_pieces_compose_to_grad_step() {
+    // The exact orchestration the trainer performs, with the microbatch
+    // repeated to fill the batch so the fused grad_step computes the same
+    // mean loss. Tiny config is drop-free, so equality is exact to fp
+    // tolerance.
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir).unwrap();
+    let params = flowmoe::trainer::init_params(&engine, "tiny", 13).unwrap();
+    let n_params = params.len();
+    let l_blocks = (n_params - 2) / 9;
+
+    let ef = engine.manifest().get("embed_fwd_tiny").unwrap().clone();
+    let (bm, n_tok) = (ef.inputs[1].shape[0], ef.inputs[1].shape[1]);
+    let mut rng = Rng::new(17);
+    let tokens = HostTensor::I32((0..bm * n_tok).map(|_| rng.below(128) as i32).collect());
+
+    let embed = HostTensor::F32(params[0].clone());
+    let normf = HostTensor::F32(params[n_params - 1].clone());
+
+    // forward
+    let mut xs = vec![engine
+        .run("embed_fwd_tiny", &[&embed, &tokens])
+        .unwrap()
+        .remove(0)];
+    for l in 0..l_blocks {
+        let owned: Vec<HostTensor> = params[1 + l * 9..1 + (l + 1) * 9]
+            .iter()
+            .map(|v| HostTensor::F32(v.clone()))
+            .collect();
+        let mut inp: Vec<&HostTensor> = owned.iter().collect();
+        inp.push(&xs[l]);
+        xs.push(engine.run("block_fwd_tiny", &inp).unwrap().remove(0));
+    }
+    let outs = engine
+        .run("head_loss_tiny", &[&embed, &normf, &xs[l_blocks], &tokens])
+        .unwrap();
+    let loss = outs[0].scalar_f32();
+    let mut dx = outs[1].clone();
+    let de_head = outs[2].f32().to_vec();
+    let dnormf = outs[3].f32().to_vec();
+
+    // backward
+    let mut block_grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); l_blocks];
+    for l in (0..l_blocks).rev() {
+        let owned: Vec<HostTensor> = params[1 + l * 9..1 + (l + 1) * 9]
+            .iter()
+            .map(|v| HostTensor::F32(v.clone()))
+            .collect();
+        let mut inp: Vec<&HostTensor> = owned.iter().collect();
+        inp.push(&xs[l]);
+        inp.push(&dx);
+        let outs = engine.run("block_bwd_tiny", &inp).unwrap();
+        block_grads[l] = outs[..9].iter().map(|t| t.f32().to_vec()).collect();
+        dx = outs.into_iter().nth(9).unwrap();
+    }
+    let de_in = engine
+        .run("embed_bwd_tiny", &[&tokens, &dx])
+        .unwrap()
+        .remove(0);
+    let de: Vec<f32> = de_in.f32().iter().zip(&de_head).map(|(a, b)| a + b).collect();
+
+    // fused oracle: repeat the microbatch to fill B (mean over identical
+    // halves == microbatch mean).
+    let reps = {
+        let ts = engine.manifest().get("train_step_tiny").unwrap();
+        let full_b = ts.inputs.iter().find(|b| b.name == "tokens").unwrap().shape[0];
+        full_b / bm
+    };
+    let mut toks_full = Vec::new();
+    for _ in 0..reps {
+        toks_full.extend_from_slice(tokens.i32());
+    }
+    let mut inputs: Vec<HostTensor> = params.iter().map(|p| HostTensor::F32(p.clone())).collect();
+    inputs.push(HostTensor::I32(toks_full));
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let outs = engine.run("grad_step_tiny", &refs).unwrap();
+    let loss_f = outs[0].scalar_f32();
+    assert!((loss - loss_f).abs() < 1e-4, "{loss} vs {loss_f}");
+    let check = |got: &[f32], want: &[f32], what: &str| {
+        let max: f32 = got
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max < 5e-3, "{what}: max diff {max}");
+    };
+    check(&de, outs[1].f32(), "embed");
+    check(&dnormf, outs[1 + n_params - 1].f32(), "normf");
+    for l in 0..l_blocks {
+        for t in 0..9 {
+            check(
+                &block_grads[l][t],
+                outs[1 + 1 + l * 9 + t].f32(),
+                &format!("block{l}.{t}"),
+            );
+        }
+    }
+}
