@@ -1,0 +1,29 @@
+# FlowMoE reproduction — top-level targets.
+#
+# `make artifacts` exports the AOT HLO artifacts the PJRT runtime and the
+# end-to-end trainer consume. It needs the python toolchain (JAX) and is
+# the only step that touches python; the rust binary is self-contained
+# afterwards. Everything tier-1 runs (build, tests, benches, sweeps)
+# works without artifacts — artifact-dependent tests skip themselves.
+
+ARTIFACTS_DIR := rust/artifacts
+
+.PHONY: artifacts build test bench clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench: build
+	cd rust && for b in table1 table3 table4 table5_ablation table6_energy_mem \
+		fig4_bo fig6_custom_layers perf_hotpath tableA3_tuners tableA4_fixed_sp \
+		tableA5_bo_hparams tableA7_stress tableA8_util tableA11_imbalance \
+		tableA12_hetero; do cargo bench --bench $$b; done
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

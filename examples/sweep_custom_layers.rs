@@ -1,62 +1,49 @@
 //! The paper's customized-MoE-layer sweep (Fig. 6): B x f x N x M x H
 //! grid with OOM filtering, FlowMoE-vs-ScheMoE speedup histogram on both
-//! clusters.
+//! clusters — evaluated on the multi-core `flowmoe::sweep` engine with a
+//! live progress/ETA readout.
 //!
-//! Run: `cargo run --release --example sweep_custom_layers -- [--limit N]`
+//! Run: `cargo run --release --example sweep_custom_layers -- [--limit N]
+//!       [--threads T]`
 
 use flowmoe::cli::Args;
-use flowmoe::config::{ClusterProfile, ModelCfg};
+use flowmoe::config::ClusterProfile;
 use flowmoe::report::histogram;
-use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::{fig6_sweep, Sweeper};
 
 fn main() {
     let args = Args::from_env();
     let limit = args.usize_or("limit", usize::MAX);
-    for (cl, gpus) in [(ClusterProfile::cluster1(16), 16usize), (ClusterProfile::cluster2(8), 8)] {
-        let mut speedups = Vec::new();
-        let mut oom = 0usize;
-        let mut wins = 0usize;
-        'outer: for b in [2usize, 4, 8] {
-            for f in [1.0, 1.1, 1.2] {
-                for n in [512usize, 1024, 2048] {
-                    for m in [512usize, 1024, 2048, 4096, 8192] {
-                        for h in [512usize, 1024, 2048, 4096, 8192] {
-                            if speedups.len() >= limit {
-                                break 'outer;
-                            }
-                            let cfg = ModelCfg::custom_layer(b, f, n, m, h, gpus);
-                            if flowmoe::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0) > cl.mem_bytes {
-                                oom += 1;
-                                continue;
-                            }
-                            let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(2)).0;
-                            let flow = [1e6, 4e6, 16e6, 64e6]
-                                .iter()
-                                .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, sp)).0)
-                                .fold(f64::INFINITY, f64::min);
-                            if flow < sche {
-                                wins += 1;
-                            }
-                            speedups.push(sche / flow);
-                        }
-                    }
-                }
-            }
+    let mut sweeper = Sweeper::new().on_progress(|p| {
+        if p.done % 64 == 0 || p.done == p.total {
+            eprintln!(
+                "  [{}/{}] {:.1}s elapsed, ~{:.1}s left",
+                p.done, p.total, p.elapsed_s, p.eta_s
+            );
         }
+    });
+    if let Some(t) = args.get("threads").and_then(|t| t.parse().ok()) {
+        sweeper = sweeper.with_threads(t);
+    }
+    eprintln!("sweep engine: {} worker threads", sweeper.threads());
+
+    for (cl, gpus) in [(ClusterProfile::cluster1(16), 16usize), (ClusterProfile::cluster2(8), 8)] {
+        let stats = fig6_sweep(&sweeper, &cl, gpus, limit);
         println!(
             "{}",
             histogram(
                 &format!(
-                    "{} x{gpus}: FlowMoE/ScheMoE speedup over {} valid layers ({oom} OOM, win rate {:.0}%)",
+                    "{} x{gpus}: FlowMoE/ScheMoE speedup over {} valid layers ({} OOM, win rate {:.0}%)",
                     cl.name,
-                    speedups.len(),
-                    100.0 * wins as f64 / speedups.len().max(1) as f64
+                    stats.speedups.len(),
+                    stats.oom,
+                    100.0 * stats.wins as f64 / stats.speedups.len().max(1) as f64
                 ),
-                &speedups,
+                &stats.speedups,
                 12,
                 40
             )
         );
-        println!("mean speedup: {:.3} (paper: 1.26)", flowmoe::util::mean(&speedups));
+        println!("mean speedup: {:.3} (paper: 1.26)", flowmoe::util::mean(&stats.speedups));
     }
 }

@@ -23,6 +23,14 @@ fn main() {
     let steps = args.usize_or("steps", 200);
     let workers = args.usize_or("workers", 2);
 
+    if !dir.join("manifest.txt").exists() {
+        eprintln!(
+            "artifacts not found at {} — run `make artifacts` first (requires the JAX toolchain)",
+            dir.display()
+        );
+        return;
+    }
+
     let mut opts = TrainOpts::new(&cfg, steps);
     opts.lr = args.f64_or("lr", 0.1) as f32;
     opts.sp_bytes = (args.f64_or("sp", 1.0) * 1e6) as usize;

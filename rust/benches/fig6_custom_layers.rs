@@ -1,55 +1,32 @@
 //! Paper Fig. 6: speedup statistic of FlowMoE over ScheMoE across the
 //! customized-MoE-layer grid (B x f x N x M x H), OOM cases excluded.
 //! Cluster 1 / 16 GPUs (490 valid in the paper) and Cluster 2 / 8 GPUs
-//! (393 valid). Pass --limit N to subsample for speed.
+//! (393 valid). Pass --limit N to subsample for speed, --threads T to
+//! cap the sweep engine's worker count.
+//!
+//! The grid runs on `flowmoe::sweep` — every (layer x policy x S_p) case
+//! is an independent simulation, evaluated across all cores with
+//! deterministic, grid-ordered results.
 
 use flowmoe::cli::Args;
-use flowmoe::config::{ClusterProfile, ModelCfg};
+use flowmoe::config::ClusterProfile;
 use flowmoe::report::histogram;
-use flowmoe::sched::{iteration_time, Policy};
-
-fn sweep(cl: &ClusterProfile, gpus: usize, limit: usize) -> (Vec<f64>, usize, usize) {
-    let mut speedups = Vec::new();
-    let (mut oom, mut wins) = (0usize, 0usize);
-    'outer: for b in [2usize, 4, 8] {
-        for f in [1.0, 1.1, 1.2] {
-            for n in [512usize, 1024, 2048] {
-                for m in [512usize, 1024, 2048, 4096, 8192] {
-                    for h in [512usize, 1024, 2048, 4096, 8192] {
-                        if speedups.len() >= limit {
-                            break 'outer;
-                        }
-                        let cfg = ModelCfg::custom_layer(b, f, n, m, h, gpus);
-                        if flowmoe::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0) > cl.mem_bytes {
-                            oom += 1;
-                            continue;
-                        }
-                        let sche = iteration_time(&cfg, cl, &Policy::sche_moe(2)).0;
-                        let flow = [1e6, 4e6, 16e6, 64e6]
-                            .iter()
-                            .map(|&sp| iteration_time(&cfg, cl, &Policy::flow_moe_cc(2, sp)).0)
-                            .fold(f64::INFINITY, f64::min);
-                        if flow < sche {
-                            wins += 1;
-                        }
-                        speedups.push(sche / flow);
-                    }
-                }
-            }
-        }
-    }
-    (speedups, oom, wins)
-}
+use flowmoe::sweep::{fig6_sweep, Sweeper};
 
 fn main() {
     let args = Args::from_env();
     let limit = args.usize_or("limit", usize::MAX);
+    let mut sweeper = Sweeper::new();
+    if let Some(t) = args.get("threads").and_then(|t| t.parse().ok()) {
+        sweeper = sweeper.with_threads(t);
+    }
+    eprintln!("sweep engine: {} worker threads", sweeper.threads());
 
     for (cl, gpus, paper_valid) in [
         (ClusterProfile::cluster1(16), 16usize, 490usize),
         (ClusterProfile::cluster2(8), 8, 393),
     ] {
-        let (speedups, oom, wins) = sweep(&cl, gpus, limit);
+        let stats = fig6_sweep(&sweeper, &cl, gpus, limit);
         println!(
             "{}",
             histogram(
@@ -57,19 +34,19 @@ fn main() {
                     "Fig. 6 — FlowMoE speedup over ScheMoE, {} x{} GPUs: {} valid ({} OOM; paper: {} valid), win rate {:.0}%",
                     cl.name,
                     gpus,
-                    speedups.len(),
-                    oom,
+                    stats.speedups.len(),
+                    stats.oom,
                     paper_valid,
-                    100.0 * wins as f64 / speedups.len().max(1) as f64
+                    100.0 * stats.wins as f64 / stats.speedups.len().max(1) as f64
                 ),
-                &speedups,
+                &stats.speedups,
                 12,
                 40
             )
         );
         println!(
             "mean speedup {:.3} (paper: 1.26 on average; paper claims all-win — see EXPERIMENTS.md §Findings)",
-            flowmoe::util::mean(&speedups)
+            flowmoe::util::mean(&stats.speedups)
         );
     }
 }

@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (§Perf): DAG build + simulation throughput
-//! (the coordinator's scheduling cost) and the comm-pool / collective
-//! primitives. Paper bound: scheduling overhead < 1 % of iteration time.
+//! (the coordinator's scheduling cost), the multi-core sweep engine vs
+//! the old serial loop, and the comm-pool / collective primitives.
+//! Paper bound: scheduling overhead < 1 % of iteration time.
 
 use std::sync::Arc;
 
@@ -10,6 +11,7 @@ use flowmoe::cost::TaskCosts;
 use flowmoe::report::{bench_median, Table};
 use flowmoe::sched::{build_dag, Policy};
 use flowmoe::sim::simulate;
+use flowmoe::sweep::{flow_vs_sche, valid_custom_layers, Sweeper};
 
 fn main() {
     let cl = ClusterProfile::cluster1(16);
@@ -42,20 +44,46 @@ fn main() {
         "paper bound: <1%".into(),
     ]);
 
-    // 2) 675-layer sweep throughput (drives fig6)
-    let sweep_cfg = flowmoe::config::ModelCfg::custom_layer(4, 1.1, 1024, 2048, 2048, 16);
-    let sweep_costs = TaskCosts::build(&sweep_cfg, &cl);
-    let s2 = bench_median(3, 20, || {
-        for polx in [Policy::sche_moe(2), Policy::flow_moe_cc(2, 4e6)] {
-            let d = build_dag(&sweep_cfg, &sweep_costs, &polx);
-            std::hint::black_box(simulate(&d).makespan);
-        }
+    // 2) 675-layer sweep (drives fig6): serial loop vs the multi-core
+    // sweep engine, on a fixed slice of the valid grid. Results must be
+    // byte-identical; throughput target: >= 3x on >= 4 cores.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (cases, _) = valid_custom_layers(&cl, 16, 128);
+    let serial_sweeper = Sweeper::new().with_threads(1);
+    let par_sweeper = Sweeper::new();
+    let run_sweep = |sw: &Sweeper| sw.run(&cases, |_, c| flow_vs_sche(c, &cl));
+    let serial_out = run_sweep(&serial_sweeper);
+    let par_out = run_sweep(&par_sweeper);
+    let identical = serial_out.len() == par_out.len()
+        && serial_out.iter().zip(&par_out).all(|(a, b)| {
+            a.0.to_bits() == b.0.to_bits() && a.1.to_bits() == b.1.to_bits()
+        });
+    assert!(identical, "parallel sweep results diverge from serial");
+    let s_serial = bench_median(1, 3, || {
+        std::hint::black_box(run_sweep(&serial_sweeper).len());
     });
+    let s_par = bench_median(1, 3, || {
+        std::hint::black_box(run_sweep(&par_sweeper).len());
+    });
+    let speedup = s_serial / s_par;
     t.row(vec![
-        "one sweep case (2 policies)".into(),
-        format!("{:.1} us", s2 * 1e6),
-        format!("675 cases x 4 S_p in ~{:.2}s", s2 * 675.0 * 4.0 / 2.0),
+        format!("sweep {} layer cases x 5 sims, serial", cases.len()),
+        format!("{:.1} ms", s_serial * 1e3),
+        format!("{:.1} cases/s", cases.len() as f64 / s_serial),
     ]);
+    t.row(vec![
+        format!("sweep {} layer cases x 5 sims, {} threads", cases.len(), par_sweeper.threads()),
+        format!("{:.1} ms", s_par * 1e3),
+        format!(
+            "{speedup:.2}x vs serial on {cores} cores (target >= 3x on >= 4), byte-identical: {identical}"
+        ),
+    ]);
+    if cores >= 4 {
+        assert!(
+            speedup >= 3.0,
+            "sweep engine speedup {speedup:.2}x < 3x on {cores} cores"
+        );
+    }
 
     // 3) partitioner
     let s3 = bench_median(3, 50, || {

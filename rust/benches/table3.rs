@@ -3,11 +3,41 @@
 //! Prints both the strict single-comm-stream FlowMoE (the paper's theory
 //! model) and the concurrent-channel FlowMoE-CC (the measured-behaviour
 //! model) — see EXPERIMENTS.md §Findings.
+//!
+//! Rows are computed on the `flowmoe::sweep` engine: each (model, GPUs)
+//! cell is an independent batch of simulations, fanned out across cores
+//! with input-ordered results so the printed table is deterministic.
 
-use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::config::{preset, ClusterProfile, ModelCfg};
 use flowmoe::report::{band_check, Table};
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::{tuned_min, Sweeper};
 use flowmoe::util::fmt_ms;
+
+/// Per-(model, cluster) timings of one Table 3 row, in ms.
+struct Row {
+    van: f64,
+    fast: f64,
+    tut: f64,
+    fsm: f64,
+    sche: f64,
+    flow: f64,
+    cc: f64,
+}
+
+fn row(cfg: &ModelCfg, cl: &ClusterProfile) -> Row {
+    let sp = 2.5e6;
+    let ms = |p: &Policy| iteration_time(cfg, cl, p).0 * 1e3;
+    Row {
+        van: ms(&Policy::vanilla_ep()),
+        fast: ms(&Policy::faster_moe(2)),
+        tut: ms(&Policy::tutel(2)),
+        fsm: ms(&Policy::fs_moe(2)),
+        sche: ms(&Policy::sche_moe(2)),
+        flow: ms(&Policy::flow_moe(2, sp)),
+        cc: tuned_cc(cfg, cl),
+    }
+}
 
 fn main() {
     // paper speedup bands S5..S1 @16 GPUs per model: (vanilla, ScheMoE)
@@ -17,54 +47,53 @@ fn main() {
         ("LLaMA2-MoE", 1.76, 1.22),
         ("DeepSeek-V2-S", 1.82, 1.28),
     ];
-    for gpus in [4usize, 8, 16] {
-        let cl = ClusterProfile::cluster1(gpus);
+    let sweeper = Sweeper::new();
+    // all 12 (gpus x model) cells as one parallel batch, row-major
+    let cells: Vec<(usize, &str)> = [4usize, 8, 16]
+        .iter()
+        .flat_map(|&g| paper_s.iter().map(move |&(name, _, _)| (g, name)))
+        .collect();
+    let rows = sweeper.run(&cells, |_, &(gpus, name)| {
+        let base = preset(name).unwrap();
+        let cfg = base.with_experts_for_workers((base.e / 16).max(1), gpus);
+        row(&cfg, &ClusterProfile::cluster1(gpus))
+    });
+
+    for (gi, gpus) in [4usize, 8, 16].iter().enumerate() {
         let mut t = Table::new(
             &format!("Table 3 — per-iteration time (ms), Cluster 1, {gpus} GPUs, R=2"),
             &["model", "vanillaEP", "FasterMoE", "Tutel", "FSMoE", "ScheMoE", "FlowMoE", "FlowMoE-CC", "S5(vanilla)", "S1(ScheMoE)"],
         );
-        for (name, _, _) in paper_s {
-            let base = preset(name).unwrap();
-            let cfg = base.with_experts_for_workers((base.e / 16).max(1), gpus);
-            let sp = 2.5e6;
-            let ms = |p: &Policy| iteration_time(&cfg, &cl, p).0 * 1e3;
-            let van = ms(&Policy::vanilla_ep());
-            let fast = ms(&Policy::faster_moe(2));
-            let tut = ms(&Policy::tutel(2));
-            let fsm = ms(&Policy::fs_moe(2));
-            let sche = ms(&Policy::sche_moe(2));
-            let flow = ms(&Policy::flow_moe(2, sp));
-            let cc = tuned_cc(&cfg, &cl);
+        for (mi, (name, _, _)) in paper_s.iter().enumerate() {
+            let r = &rows[gi * paper_s.len() + mi];
             t.row(vec![
-                name.into(),
-                fmt_ms(van),
-                fmt_ms(fast),
-                fmt_ms(tut),
-                fmt_ms(fsm),
-                fmt_ms(sche),
-                fmt_ms(flow),
-                fmt_ms(cc),
-                format!("{:.2}x", van / cc),
-                format!("{:.2}x", sche / cc),
+                (*name).into(),
+                fmt_ms(r.van),
+                fmt_ms(r.fast),
+                fmt_ms(r.tut),
+                fmt_ms(r.fsm),
+                fmt_ms(r.sche),
+                fmt_ms(r.flow),
+                fmt_ms(r.cc),
+                format!("{:.2}x", r.van / r.cc),
+                format!("{:.2}x", r.sche / r.cc),
             ]);
         }
         t.print();
     }
-    // paper-vs-measured verdicts at the headline 16-GPU setting
-    let cl = ClusterProfile::cluster1(16);
+
+    // paper-vs-measured verdicts at the headline 16-GPU setting (reuse
+    // the 16-GPU batch rows: last group of the cells vector)
     let mut v = Table::new(
         "Table 3 verdicts @16 GPUs (FlowMoE-CC, BO-tuned S_p)",
         &["model", "S5 measured", "S5 paper", "S1 measured", "S1 paper", "verdict(S5 in 1.2-2.0)"],
     );
-    for (name, p_s5, p_s1) in paper_s {
-        let cfg = preset(name).unwrap();
-        let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0 * 1e3;
-        let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(2)).0 * 1e3;
-        let cc = tuned_cc(&cfg, &cl);
-        let s5 = van / cc;
-        let s1 = sche / cc;
+    for (mi, (name, p_s5, p_s1)) in paper_s.iter().enumerate() {
+        let r = &rows[2 * paper_s.len() + mi];
+        let s5 = r.van / r.cc;
+        let s1 = r.sche / r.cc;
         v.row(vec![
-            name.into(),
+            (*name).into(),
             format!("{s5:.2}x"),
             format!("{p_s5:.2}x"),
             format!("{s1:.2}x"),
@@ -76,9 +105,8 @@ fn main() {
 }
 
 /// FlowMoE-CC at the best S_p over a BO-like coarse grid, in ms.
-fn tuned_cc(cfg: &flowmoe::config::ModelCfg, cl: &ClusterProfile) -> f64 {
-    [1e6, 2.5e6, 8e6, 32e6, 128e6]
-        .iter()
-        .map(|&sp| iteration_time(cfg, cl, &Policy::flow_moe_cc(2, sp)).0 * 1e3)
-        .fold(f64::INFINITY, f64::min)
+fn tuned_cc(cfg: &ModelCfg, cl: &ClusterProfile) -> f64 {
+    tuned_min(cfg, cl, &[1e6, 2.5e6, 8e6, 32e6, 128e6], |sp| {
+        Policy::flow_moe_cc(2, sp)
+    }) * 1e3
 }

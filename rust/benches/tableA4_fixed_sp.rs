@@ -1,27 +1,38 @@
 //! Paper Table A.4: BO auto-tuning vs fixed partition sizes
 //! S_p in {0.5, 1, 2, 4, 8} MB, 4 models on Cluster 1 / 16 GPUs.
+//!
+//! Each model's (BO run + 5 fixed-S_p evaluations) is one independent
+//! case on the `flowmoe::sweep` engine — model rows evaluate in
+//! parallel, printed in input order.
 
 use flowmoe::bo::BoTuner;
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::Sweeper;
 use flowmoe::util::fmt_ms;
+
+const MODELS: [&str; 4] = ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"];
+const FIXED_MB: [f64; 5] = [0.5, 1.0, 2.0, 4.0, 8.0];
 
 fn main() {
     let cl = ClusterProfile::cluster1(16);
-    let mut t = Table::new(
-        "Table A.4 — BO vs fixed S_p, per-iteration ms (Cluster 1, 16 GPUs)",
-        &["model", "BO", "0.5MB", "1MB", "2MB", "4MB", "8MB"],
-    );
-    for name in ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"] {
+    let rows: Vec<(f64, Vec<f64>)> = Sweeper::new().run(&MODELS, |_, name| {
         let cfg = preset(name).unwrap();
         let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
         let mut bo = BoTuner::new(cfg.ar_bytes_per_block(), 11);
         let tuned = obj(bo.tune(8, obj)) * 1e3;
-        let mut row = vec![name.to_string(), fmt_ms(tuned)];
-        for sp_mb in [0.5, 1.0, 2.0, 4.0, 8.0] {
-            row.push(fmt_ms(obj(sp_mb * 1e6) * 1e3));
-        }
+        let fixed: Vec<f64> = FIXED_MB.iter().map(|&mb| obj(mb * 1e6) * 1e3).collect();
+        (tuned, fixed)
+    });
+
+    let mut t = Table::new(
+        "Table A.4 — BO vs fixed S_p, per-iteration ms (Cluster 1, 16 GPUs)",
+        &["model", "BO", "0.5MB", "1MB", "2MB", "4MB", "8MB"],
+    );
+    for (name, (tuned, fixed)) in MODELS.iter().zip(&rows) {
+        let mut row = vec![name.to_string(), fmt_ms(*tuned)];
+        row.extend(fixed.iter().map(|&ms| fmt_ms(ms)));
         t.row(row);
     }
     t.print();

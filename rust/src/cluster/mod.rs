@@ -34,8 +34,24 @@ pub struct Routing {
 
 /// Build the dispatch tensor from gating outputs (GShard semantics with
 /// capacity dropping) — rust mirror of `ref.dispatch_ref`.
+///
+/// An empty token input (`t == 0`, e.g. a worker whose shard drained) is
+/// a valid edge case: it returns an empty [`Routing`] — zeroed (E, C, M)
+/// dispatch tensor, no per-token assignments, `k == 0` — instead of
+/// dividing by zero. [`combine`]/[`combine_bwd`]/[`dispatch_bwd`] treat
+/// such a routing as a no-op.
 pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: usize) -> Routing {
-    let t = u.len() / m;
+    let t = if m == 0 { 0 } else { u.len() / m };
+    if t == 0 {
+        return Routing {
+            disp: vec![0.0; e * c * m],
+            comb: Vec::new(),
+            e,
+            c,
+            m,
+            k: 0,
+        };
+    }
     let k = gate_len / t;
     let mut counters = vec![0u32; e];
     let mut disp = vec![0.0f32; e * c * m];
@@ -72,6 +88,9 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
 pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
     debug_assert_eq!(out.len(), e * c * m);
+    if k == 0 {
+        return Vec::new(); // empty routing: no tokens to gather into
+    }
     let t = routing.comb.len() / k;
     let mut y = vec![0.0f32; t * m];
     for ti in 0..t {
@@ -92,6 +111,9 @@ pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
 /// Backward of [`combine`]: returns (d_out (E,C,M), d_gate (T,k)).
 pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
+    if k == 0 {
+        return (vec![0.0; e * c * m], Vec::new()); // empty routing
+    }
     let t = routing.comb.len() / k;
     let mut dout = vec![0.0f32; e * c * m];
     let mut dgate = vec![0.0f32; t * k];
@@ -116,6 +138,9 @@ pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> 
 /// Backward of [`dispatch`]: scatter d_disp back onto token gradients.
 pub fn dispatch_bwd(d_disp: &[f32], routing: &Routing) -> Vec<f32> {
     let (c, m, k) = (routing.c, routing.m, routing.k);
+    if k == 0 {
+        return Vec::new(); // empty routing: no token gradients
+    }
     let t = routing.comb.len() / k;
     let mut du = vec![0.0f32; t * m];
     for ti in 0..t {
@@ -376,6 +401,23 @@ mod tests {
         let idx = vec![0, 1, 0, 0]; // token 3 overflows expert 0 (c=2)
         let gate = vec![1.0, 1.0, 0.5, 1.0];
         (u, idx, gate, 2, 2, 2)
+    }
+
+    #[test]
+    fn dispatch_empty_tokens_returns_empty_routing() {
+        // regression: `dispatch` used to divide by t (== 0) and panic
+        let (e, c, m) = (2usize, 2usize, 2usize);
+        let r = dispatch(&[], &[], 0, e, c, m);
+        assert_eq!(r.k, 0);
+        assert!(r.comb.is_empty());
+        assert_eq!(r.disp, vec![0.0f32; e * c * m]);
+        // downstream ops treat the empty routing as a no-op
+        let out = vec![1.0f32; e * c * m];
+        assert!(combine(&out, &r, &[]).is_empty());
+        let (dout, dgate) = combine_bwd(&[], &out, &r, &[]);
+        assert_eq!(dout, vec![0.0f32; e * c * m]);
+        assert!(dgate.is_empty());
+        assert!(dispatch_bwd(&out, &r).is_empty());
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //!   resource model the paper's theorems assume),
 //! * [`sched`] — FlowMoE and the five baseline scheduling policies,
 //! * [`commpool`] — the runtime communication pool (Algorithm 2),
+//! * [`sweep`] — the multi-core work-stealing sweep engine driving the
+//!   675-layer evaluation grid (Fig. 6) and the other table benches,
 //! * [`bo`] — Gaussian-process Bayesian optimization from scratch,
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts,
 //! * [`cluster`] — an in-process multi-worker distributed runtime with
@@ -40,6 +42,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod tasks;
 pub mod testutil;
 pub mod trainer;

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 
 use flowmoe::bo::BoTuner;
 use flowmoe::cli::Args;
-use flowmoe::config::{preset, table2_models, ClusterProfile, ModelCfg};
+use flowmoe::config::{preset, table2_models, ClusterProfile};
 use flowmoe::metrics::{energy_joules, peak_memory, sm_utilization};
 use flowmoe::report::Table;
 use flowmoe::sched::{build_dag, iteration_time, Policy};
@@ -37,7 +37,7 @@ fn main() {
                 "usage: flowmoe <simulate|sweep|tune|train|info> [options]\n\
                  \n\
                  simulate --model <name> --gpus N --r R --sp MB    per-framework iteration time\n\
-                 sweep    --gpus N --limit K                        customized-layer speedup sweep\n\
+                 sweep    --gpus N --limit K --threads T            customized-layer speedup sweep (parallel)\n\
                  tune     --model <name> --gpus N --samples K       BO-tune S_p\n\
                  train    --config tiny|e2e --workers P --steps N   real distributed training\n\
                  info                                               presets + artifacts"
@@ -100,35 +100,27 @@ fn cmd_sweep(args: &Args) {
     let gpus = args.usize_or("gpus", 16);
     let limit = args.usize_or("limit", usize::MAX);
     let cluster = ClusterProfile::cluster1(gpus);
-    let mut speedups = Vec::new();
-    let mut count = 0;
-    'outer: for b in [2usize, 4, 8] {
-        for f in [1.0, 1.1, 1.2] {
-            for n in [512usize, 1024, 2048] {
-                for m in [512usize, 1024, 2048, 4096, 8192] {
-                    for h in [512usize, 1024, 2048, 4096, 8192] {
-                        if count >= limit {
-                            break 'outer;
-                        }
-                        let cfg = ModelCfg::custom_layer(b, f, n, m, h, gpus);
-                        let mem = flowmoe::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0);
-                        if mem > cluster.mem_bytes {
-                            continue; // OOM case, excluded like the paper
-                        }
-                        let sche = iteration_time(&cfg, &cluster, &Policy::sche_moe(2)).0;
-                        let flow = iteration_time(&cfg, &cluster, &Policy::flow_moe(2, 2.5e6)).0;
-                        speedups.push(sche / flow);
-                        count += 1;
-                    }
-                }
-            }
+    // The customized-layer grid runs on the multi-core sweep engine
+    // (sweep::Sweeper): deterministic grid-ordered results, all cores.
+    let mut sweeper = flowmoe::sweep::Sweeper::new().on_progress(|p| {
+        if p.done % 128 == 0 {
+            eprintln!("  [{}/{}] ~{:.1}s left", p.done, p.total, p.eta_s);
         }
+    });
+    if let Some(t) = args.get("threads").and_then(|t| t.parse().ok()) {
+        sweeper = sweeper.with_threads(t);
     }
+    let stats = flowmoe::sweep::fig6_sweep(&sweeper, &cluster, gpus, limit);
     println!(
         "{}",
         flowmoe::report::histogram(
-            &format!("FlowMoE speedup over ScheMoE, {count} valid layers, {gpus} GPUs"),
-            &speedups,
+            &format!(
+                "FlowMoE-CC (tuned S_p) speedup over ScheMoE, {} valid layers ({} OOM), {gpus} GPUs, win rate {:.0}%",
+                stats.speedups.len(),
+                stats.oom,
+                100.0 * stats.wins as f64 / stats.speedups.len().max(1) as f64
+            ),
+            &stats.speedups,
             12,
             40
         )

@@ -1,17 +1,26 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! PJRT runtime: load AOT HLO-text artifacts and (when a backend is
+//! linked) execute them.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`) behind a
-//! manifest-driven engine: `python/compile/aot.py` writes
+//! The engine is manifest-driven: `python/compile/aot.py` writes
 //! `artifacts/manifest.txt` describing every artifact's positional
 //! input/output buffers (name, shape, dtype); the engine parses it so no
 //! shape knowledge is duplicated in rust.
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so each worker thread owns
-//! its own [`Engine`]; host tensors ([`HostTensor`]) are plain `Vec`s and
-//! move freely between threads.
+//! **Offline stub:** the crate's no-external-deps policy (see
+//! `rust/README.md`) means no XLA/PJRT client crate is linked. Manifest
+//! parsing, shape/dtype validation and buffer marshalling are fully
+//! functional; [`Engine::prepare`]/[`Engine::run`] return a clear
+//! "PJRT backend unavailable" error instead of executing HLO. Callers
+//! that need artifacts skip gracefully when `manifest.txt` is absent
+//! (the load error says to run `make artifacts`), so the simulation,
+//! scheduling and sweep stack — everything tier-1 exercises — never
+//! touches execution.
+//!
+//! Each worker thread owns its own [`Engine`] (real PJRT clients are
+//! `Rc`-backed and not `Send`); host tensors ([`HostTensor`]) are plain
+//! `Vec`s and move freely between threads.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -169,21 +178,46 @@ impl HostTensor {
     }
 }
 
-/// Per-thread PJRT engine: compiles artifacts lazily, caches executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+/// Opaque device-buffer handle. In the offline stub it pins validated
+/// host data; a real PJRT backend would hold the device allocation. The
+/// marshalling contract (validate once, reuse across many executions) is
+/// identical either way.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    data: HostTensor,
 }
+
+impl PjRtBuffer {
+    /// The pinned host data.
+    pub fn host(&self) -> &HostTensor {
+        &self.data
+    }
+}
+
+/// Per-thread PJRT engine: parses the artifact manifest, validates and
+/// marshals buffers, and (with a linked backend) compiles + executes the
+/// HLO artifacts. See the module docs for the offline-stub behaviour.
+#[derive(Debug)]
+pub struct Engine {
+    manifest: Manifest,
+    /// Artifacts whose HLO files have been located (stub for the real
+    /// compile cache).
+    prepared: HashSet<String>,
+}
+
+/// Error text shared by every execution entry point of the stub.
+const BACKEND_UNAVAILABLE: &str =
+    "PJRT backend unavailable: this is the offline no-external-deps build \
+     (no XLA/PJRT client crate linked). Manifest parsing and buffer \
+     validation work; HLO execution requires a PJRT-enabled build \
+     (see rust/README.md)";
 
 impl Engine {
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Engine {
-            client,
             manifest,
-            exes: HashMap::new(),
+            prepared: HashSet::new(),
         })
     }
 
@@ -191,23 +225,21 @@ impl Engine {
         &self.manifest
     }
 
-    /// Compile (or fetch cached) an artifact's executable.
+    /// Locate an artifact's HLO file (the stub analogue of compiling it
+    /// and caching the executable).
     pub fn prepare(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
+        if self.prepared.contains(name) {
             return Ok(());
         }
         let spec = self.manifest.get(name)?.clone();
         let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", spec.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
+        if !path.exists() {
+            bail!(
+                "artifact {name}: HLO file {} missing (run `make artifacts`)",
+                path.display()
+            );
+        }
+        self.prepared.insert(name.to_string());
         Ok(())
     }
 
@@ -215,13 +247,7 @@ impl Engine {
     /// hot loops can marshal a tensor once and reuse it across many
     /// executions (§Perf: parameters are read by 4R block calls per step
     /// — marshalling them per call dominated the step time).
-    ///
-    /// Device buffers (`execute_b`) are used instead of Literals
-    /// (`execute`): the xla crate's `execute` leaks every input buffer it
-    /// creates (`buffer.release()` with no matching delete in
-    /// xla_rs.cc::execute — ~1.5 GB/step for the e2e trainer, §Perf #5);
-    /// `execute_b` borrows caller-owned buffers and leaks nothing.
-    pub fn buffer(&self, t: &HostTensor, s: &BufSpec) -> Result<xla::PjRtBuffer> {
+    pub fn buffer(&self, t: &HostTensor, s: &BufSpec) -> Result<PjRtBuffer> {
         if t.len() != s.elems() {
             bail!(
                 "input {} has {} elems, expected {} ({:?})",
@@ -232,110 +258,36 @@ impl Engine {
             );
         }
         match (t, s.dtype) {
-            (HostTensor::F32(v), Dtype::F32) => self
-                .client
-                .buffer_from_host_buffer::<f32>(v, &s.shape, None)
-                .map_err(|e| anyhow!("{e:?}")),
-            (HostTensor::I32(v), Dtype::I32) => self
-                .client
-                .buffer_from_host_buffer::<i32>(v, &s.shape, None)
-                .map_err(|e| anyhow!("{e:?}")),
+            (HostTensor::F32(_), Dtype::F32) | (HostTensor::I32(_), Dtype::I32) => {
+                Ok(PjRtBuffer { data: t.clone() })
+            }
             _ => bail!("input {} dtype mismatch", s.name),
         }
     }
 
-    /// Upload an f32 slice directly (no HostTensor wrapper, no clone).
-    pub fn buffer_f32(&self, v: &[f32], s: &BufSpec) -> Result<xla::PjRtBuffer> {
+    /// Upload an f32 slice directly (no HostTensor wrapper).
+    pub fn buffer_f32(&self, v: &[f32], s: &BufSpec) -> Result<PjRtBuffer> {
         if v.len() != s.elems() || s.dtype != Dtype::F32 {
             bail!("input {}: size/dtype mismatch", s.name);
         }
-        self.client
-            .buffer_from_host_buffer::<f32>(v, &s.shape, None)
-            .map_err(|e| anyhow!("{e:?}"))
+        Ok(PjRtBuffer {
+            data: HostTensor::F32(v.to_vec()),
+        })
     }
 
-    /// Execute with caller-owned device buffers (leak-free hot path).
-    pub fn run_buffers(&mut self, name: &str, bufs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+    /// Execute with caller-owned device buffers (the leak-free hot path
+    /// of a real backend). Errors in the offline stub.
+    pub fn run_buffers(&mut self, name: &str, bufs: &[&PjRtBuffer]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
-        let spec = self.manifest.get(name)?.clone();
+        let spec = self.manifest.get(name)?;
         if bufs.len() != spec.inputs.len() {
             bail!("{name}: {} inputs given, {} expected", bufs.len(), spec.inputs.len());
         }
-        let exe = self.exes.get(name).unwrap();
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(bufs)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        Self::unpack(name, result, &spec)
-    }
-
-    fn unpack(
-        name: &str,
-        result: Vec<Vec<xla::PjRtBuffer>>,
-        spec: &ArtifactSpec,
-    ) -> Result<Vec<HostTensor>> {
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!("{name}: {} outputs, {} expected", parts.len(), spec.outputs.len());
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, s) in parts.into_iter().zip(&spec.outputs) {
-            let t = match s.dtype {
-                Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
-                Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
-            };
-            if t.len() != s.elems() {
-                bail!("{name}: output {} wrong size", s.name);
-            }
-            out.push(t);
-        }
-        Ok(out)
-    }
-
-    /// Build an input Literal for buffer spec `s` from a host tensor.
-    /// Prefer [`Engine::buffer`]; kept for Literal-based flows.
-    pub fn literal(t: &HostTensor, s: &BufSpec) -> Result<xla::Literal> {
-        if t.len() != s.elems() {
-            bail!(
-                "input {} has {} elems, expected {} ({:?})",
-                s.name,
-                t.len(),
-                s.elems(),
-                s.shape
-            );
-        }
-        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
-        let lit = match (t, s.dtype) {
-            (HostTensor::F32(v), Dtype::F32) => xla::Literal::vec1(v),
-            (HostTensor::I32(v), Dtype::I32) => xla::Literal::vec1(v),
-            _ => bail!("input {} dtype mismatch", s.name),
-        };
-        if s.shape.is_empty() {
-            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
-        } else {
-            lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
-        }
-    }
-
-    /// Build an f32 input Literal straight from a slice (no HostTensor
-    /// wrapper, no intermediate clone).
-    pub fn literal_f32(v: &[f32], s: &BufSpec) -> Result<xla::Literal> {
-        if v.len() != s.elems() || s.dtype != Dtype::F32 {
-            bail!("input {}: size/dtype mismatch", s.name);
-        }
-        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(v);
-        if s.shape.is_empty() {
-            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
-        } else {
-            lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
-        }
+        Err(anyhow!("execute {name}: {BACKEND_UNAVAILABLE}"))
     }
 
     /// Execute an artifact with host tensors; validates shapes against the
-    /// manifest and returns outputs as host tensors.
+    /// manifest. Errors in the offline stub.
     pub fn run(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
         let spec = self.manifest.get(name)?.clone();
@@ -350,7 +302,7 @@ impl Engine {
         for (t, s) in inputs.iter().zip(&spec.inputs) {
             bufs.push(self.buffer(t, s).map_err(|e| anyhow!("{name}: {e:#}"))?);
         }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
         self.run_buffers(name, &refs)
     }
 }
@@ -393,5 +345,42 @@ mod tests {
         assert_eq!(t.f32()[1], 2.0);
         let i = HostTensor::I32(vec![7]);
         assert_eq!(i.i32()[0], 7);
+    }
+
+    #[test]
+    fn missing_manifest_error_says_make_artifacts() {
+        let dir =
+            std::env::temp_dir().join(format!("flowmoe_manifest_absent_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.txt"));
+        let err = format!("{:#}", Engine::new(&dir).unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn engine_validates_buffers_and_reports_stubbed_backend() {
+        let dir =
+            std::env::temp_dir().join(format!("flowmoe_engine_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "artifact foo file=foo.hlo.txt config=tiny\n  input a 2x3 f32\n  output y 6 f32\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo\n").unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        let spec = engine.manifest().get("foo").unwrap().clone();
+
+        // marshalling validates shapes/dtypes
+        assert!(engine.buffer_f32(&[0.0; 6], &spec.inputs[0]).is_ok());
+        assert!(engine.buffer_f32(&[0.0; 5], &spec.inputs[0]).is_err());
+        assert!(engine
+            .buffer(&HostTensor::I32(vec![0; 6]), &spec.inputs[0])
+            .is_err());
+
+        // execution reports the stubbed backend, not a confusing panic
+        let t = HostTensor::F32(vec![0.0; 6]);
+        let err = format!("{:#}", engine.run("foo", &[&t]).unwrap_err());
+        assert!(err.contains("PJRT backend unavailable"), "{err}");
     }
 }

@@ -101,7 +101,8 @@ impl Timeline {
 
     /// Export as a Chrome-trace (chrome://tracing / Perfetto) JSON string
     /// — one row per stream, one complete event per task. Hand-rolled
-    /// JSON (no serde offline); task labels come from the DAG.
+    /// JSON (no serde offline); task labels come from the DAG and are
+    /// escaped with [`json_escape`].
     pub fn to_chrome_trace(&self, dag: &Dag) -> String {
         let mut out = String::from("[\n");
         for (i, s) in self.spans.iter().enumerate() {
@@ -116,7 +117,7 @@ impl Timeline {
             }
             out.push_str(&format!(
                 "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}",
-                name.replace('"', ""),
+                json_escape(&name),
                 tid,
                 s.start * 1e6,
                 (s.end - s.start) * 1e6
@@ -125,6 +126,26 @@ impl Timeline {
         out.push_str("\n]\n");
         out
     }
+}
+
+/// Escape a string for embedding in a JSON string literal: backslash and
+/// double quote get a backslash prefix, control characters become \u
+/// escapes. (The old exporter *deleted* `"` from task names, corrupting
+/// any quoted label.)
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Simulate the DAG; panics on invalid DAGs (validated in debug).
@@ -156,9 +177,9 @@ pub fn simulate(dag: &Dag) -> Timeline {
         Stream::Comm => 1usize,
         Stream::ArComm => 2usize,
     };
-    let mut push_ready = |heap: &mut [BinaryHeap<Reverse<(u64, TaskId)>>; 3],
-                          ar_fifo: &mut [VecDeque<TaskId>; 3],
-                          t: &Task| {
+    let push_ready = |heap: &mut [BinaryHeap<Reverse<(u64, TaskId)>>; 3],
+                      ar_fifo: &mut [VecDeque<TaskId>; 3],
+                      t: &Task| {
         let s = idx(t.stream);
         if t.kind.is_ar() {
             ar_fifo[s].push_back(t.id);
@@ -385,6 +406,36 @@ mod tests {
         let tl = simulate(&d);
         assert!(tl.makespan >= d.critical_path() - 1e-12);
         assert!(tl.makespan >= d.stream_busy(Stream::Compute) - 1e-12);
+    }
+
+    #[test]
+    fn json_escape_quoted_label() {
+        // a task label with quotes and backslashes must survive, escaped
+        let label = r#"AT "fused\gate" [0,1]"#;
+        let esc = json_escape(label);
+        assert_eq!(esc, r#"AT \"fused\\gate\" [0,1]"#);
+        // embedding it in a JSON string literal keeps the quote count
+        // balanced (the old exporter silently deleted quotes instead)
+        let json = format!("{{\"name\": \"{esc}\"}}");
+        assert_eq!(json.matches('"').count() - json.matches("\\\"").count(), 4);
+        assert!(json.contains(r#"\"fused\\gate\""#));
+    }
+
+    #[test]
+    fn json_escape_controls_and_passthrough() {
+        assert_eq!(json_escape("plain AR[0.1]"), "plain AR[0.1]");
+        assert_eq!(json_escape("a\tb\nc"), "a\\tb\\nc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn chrome_trace_escapes_names() {
+        let mut d = Dag::new();
+        d.add(head(), Stream::Compute, 1.0, vec![], 0);
+        let tl = simulate(&d);
+        let json = tl.to_chrome_trace(&d);
+        assert!(json.contains("\"name\": \"HEAD\""));
+        assert!(json.trim_end().ends_with(']'));
     }
 
     #[test]

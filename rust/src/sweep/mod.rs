@@ -1,0 +1,508 @@
+//! Parallel sweep engine for the paper's evaluation grids.
+//!
+//! FlowMoE's headline experiment (Fig. 6) evaluates 675 customized MoE
+//! layers (B x f x N x M x H), each under several scheduling policies and
+//! all-reduce chunk sizes S_p. Every case is an independent pure
+//! computation (`build_dag` + `simulate`), so the grid is embarrassingly
+//! parallel — yet the seed benches walked it in serial loops on one core.
+//!
+//! [`Sweeper`] runs any such grid across all cores with
+//! `std::thread::scope` workers that *steal* chunks of the remaining case
+//! range from a shared atomic cursor (dynamic self-scheduling: an idle
+//! worker always claims the next unclaimed chunk, so uneven case costs
+//! cannot idle a core). Results are written back by input index, making
+//! the output **deterministic and input-ordered**: for pure case
+//! functions, the parallel result vector is byte-identical to the serial
+//! one. A progress/ETA callback hook reports completion as cases finish.
+//!
+//! A panic inside one case is isolated (`catch_unwind`): the remaining
+//! cases still run, and [`Sweeper::try_run`] reports the failing case's
+//! index and panic message instead of tearing down the whole sweep.
+//!
+//! The module also carries the domain grids the benches share: the
+//! 675-layer customized grid, OOM filtering, and the ScheMoE-vs-FlowMoE
+//! per-case evaluation (used by `fig6_custom_layers`, `perf_hotpath`,
+//! `examples/sweep_custom_layers` and the `flowmoe sweep` subcommand).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::config::{ClusterProfile, ModelCfg};
+use crate::sched::{iteration_time, Policy};
+
+/// Snapshot passed to the progress callback after each completed case.
+#[derive(Clone, Copy, Debug)]
+pub struct Progress {
+    /// Cases completed so far (including this one).
+    pub done: usize,
+    /// Total cases in the sweep.
+    pub total: usize,
+    /// Wall seconds since the sweep started.
+    pub elapsed_s: f64,
+    /// Estimated seconds remaining (elapsed/done extrapolation).
+    pub eta_s: f64,
+}
+
+/// A case that panicked during the sweep.
+#[derive(Clone, Debug)]
+pub struct CasePanic {
+    /// Input index of the failing case.
+    pub index: usize,
+    /// Stringified panic payload.
+    pub message: String,
+}
+
+impl std::fmt::Display for CasePanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "case {} panicked: {}", self.index, self.message)
+    }
+}
+
+type ProgressFn = Box<dyn Fn(&Progress) + Send + Sync>;
+
+/// Multi-core sweep runner. See the module docs for the scheduling model.
+pub struct Sweeper {
+    threads: usize,
+    chunk: usize,
+    progress: Option<ProgressFn>,
+}
+
+impl Default for Sweeper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sweeper {
+    /// A sweeper using every available core, claiming one case at a time
+    /// (finest-grained balancing; each simulator case is ~ms, far above
+    /// the cost of one atomic claim).
+    pub fn new() -> Sweeper {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Sweeper {
+            threads,
+            chunk: 1,
+            progress: None,
+        }
+    }
+
+    /// Override the worker-thread count (1 = serial, for baselines).
+    pub fn with_threads(mut self, n: usize) -> Sweeper {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Override how many cases a worker claims per steal.
+    pub fn with_chunk(mut self, c: usize) -> Sweeper {
+        self.chunk = c.max(1);
+        self
+    }
+
+    /// Install a progress/ETA callback, invoked (from worker threads)
+    /// after every completed case.
+    pub fn on_progress(mut self, f: impl Fn(&Progress) + Send + Sync + 'static) -> Sweeper {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    /// Configured worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f` over every item; results are input-ordered. Panics
+    /// after the sweep completes if any case panicked (all other cases
+    /// still finish first) — use [`Sweeper::try_run`] to handle failures.
+    pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let results = self.try_run(items, f);
+        let total = results.len();
+        let mut out = Vec::with_capacity(total);
+        let mut failures: Vec<CasePanic> = Vec::new();
+        for r in results {
+            match r {
+                Ok(v) => out.push(v),
+                Err(e) => failures.push(e),
+            }
+        }
+        if let Some(first) = failures.first() {
+            panic!("sweep: {}/{} cases panicked; first: {}", failures.len(), total, first);
+        }
+        out
+    }
+
+    /// Evaluate `f` over every item, capturing per-case panics instead of
+    /// propagating them. The result vector is input-ordered.
+    pub fn try_run<T, R, F>(&self, items: &[T], f: F) -> Vec<Result<R, CasePanic>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let t0 = Instant::now();
+        let done = AtomicUsize::new(0);
+        let threads = self.threads.min(n);
+        let mut out: Vec<Option<Result<R, CasePanic>>> = (0..n).map(|_| None).collect();
+
+        if threads <= 1 {
+            for (i, item) in items.iter().enumerate() {
+                out[i] = Some(run_case(&f, i, item));
+                self.report(&done, n, t0);
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let chunk = self.chunk;
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(threads);
+                for _ in 0..threads {
+                    let f = &f;
+                    let cursor = &cursor;
+                    let done = &done;
+                    handles.push(s.spawn(move || {
+                        let mut local: Vec<(usize, Result<R, CasePanic>)> = Vec::new();
+                        loop {
+                            // steal the next unclaimed chunk of the range
+                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let end = (start + chunk).min(n);
+                            for i in start..end {
+                                local.push((i, run_case(f, i, &items[i])));
+                                self.report(done, n, t0);
+                            }
+                        }
+                        local
+                    }));
+                }
+                for h in handles {
+                    for (i, r) in h.join().expect("sweep worker thread died") {
+                        out[i] = Some(r);
+                    }
+                }
+            });
+        }
+        out.into_iter()
+            .map(|o| o.expect("sweep case never executed"))
+            .collect()
+    }
+
+    fn report(&self, done: &AtomicUsize, total: usize, t0: Instant) {
+        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(cb) = &self.progress {
+            let elapsed_s = t0.elapsed().as_secs_f64();
+            let eta_s = elapsed_s / d as f64 * (total - d) as f64;
+            cb(&Progress {
+                done: d,
+                total,
+                elapsed_s,
+                eta_s,
+            });
+        }
+    }
+}
+
+fn run_case<T, R, F>(f: &F, i: usize, item: &T) -> Result<R, CasePanic>
+where
+    F: Fn(usize, &T) -> R,
+{
+    catch_unwind(AssertUnwindSafe(|| f(i, item))).map_err(|p| CasePanic {
+        index: i,
+        message: panic_message(p.as_ref()),
+    })
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Parallel map with default settings (all cores, input-ordered output).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    Sweeper::new().run(items, f)
+}
+
+// ---------------------------------------------------------------------------
+// Domain grids: the paper's customized-layer sweep (Fig. 6)
+// ---------------------------------------------------------------------------
+
+/// Mini-batch sizes of the customized-layer grid (paper Sec. 5.1).
+pub const GRID_B: [usize; 3] = [2, 4, 8];
+/// Capacity factors of the grid.
+pub const GRID_F: [f64; 3] = [1.0, 1.1, 1.2];
+/// Sequence lengths of the grid.
+pub const GRID_N: [usize; 3] = [512, 1024, 2048];
+/// Embedding sizes of the grid.
+pub const GRID_M: [usize; 5] = [512, 1024, 2048, 4096, 8192];
+/// Expert hidden sizes of the grid.
+pub const GRID_H: [usize; 5] = [512, 1024, 2048, 4096, 8192];
+
+/// Coarse BO stand-in S_p grid used by the Fig. 6 FlowMoE rows.
+pub const SP_GRID_FIG6: [f64; 4] = [1e6, 4e6, 16e6, 64e6];
+
+/// The full 675-config customized-MoE-layer grid (3 x 3 x 3 x 5 x 5) in
+/// row-major (B, f, N, M, H) order — the order the seed's serial loops
+/// walked, so parallel results line up case-for-case.
+pub fn custom_layer_grid(gpus: usize) -> Vec<ModelCfg> {
+    let cap = GRID_B.len() * GRID_F.len() * GRID_N.len() * GRID_M.len() * GRID_H.len();
+    let mut out = Vec::with_capacity(cap);
+    for b in GRID_B {
+        for f in GRID_F {
+            for n in GRID_N {
+                for m in GRID_M {
+                    for h in GRID_H {
+                        out.push(ModelCfg::custom_layer(b, f, n, m, h, gpus));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scan the grid in order, dropping OOM configs (like the paper), until
+/// `limit` valid cases are collected. Returns (valid configs, OOM count
+/// among the scanned prefix).
+pub fn valid_custom_layers(cl: &ClusterProfile, gpus: usize, limit: usize) -> (Vec<ModelCfg>, usize) {
+    let mut valid = Vec::new();
+    let mut oom = 0usize;
+    for cfg in custom_layer_grid(gpus) {
+        if valid.len() >= limit {
+            break;
+        }
+        if crate::cost::peak_memory_bytes(&cfg, gpus, 1.0, 1.0) > cl.mem_bytes {
+            oom += 1;
+            continue;
+        }
+        valid.push(cfg);
+    }
+    (valid, oom)
+}
+
+/// Best simulated iteration time over an S_p grid (coarse BO stand-in).
+pub fn tuned_min<F: Fn(f64) -> Policy>(
+    cfg: &ModelCfg,
+    cl: &ClusterProfile,
+    sp_grid: &[f64],
+    make: F,
+) -> f64 {
+    sp_grid
+        .iter()
+        .map(|&sp| iteration_time(cfg, cl, &make(sp)).0)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// One Fig. 6 case: (ScheMoE seconds, tuned FlowMoE-CC seconds).
+pub fn flow_vs_sche(cfg: &ModelCfg, cl: &ClusterProfile) -> (f64, f64) {
+    let sche = iteration_time(cfg, cl, &Policy::sche_moe(2)).0;
+    let flow = tuned_min(cfg, cl, &SP_GRID_FIG6, |sp| Policy::flow_moe_cc(2, sp));
+    (sche, flow)
+}
+
+/// Aggregated Fig. 6 sweep outcome.
+pub struct Fig6Stats {
+    /// ScheMoE/FlowMoE speedup per valid case, grid order.
+    pub speedups: Vec<f64>,
+    /// OOM-excluded config count.
+    pub oom: usize,
+    /// Cases where FlowMoE strictly beat ScheMoE.
+    pub wins: usize,
+}
+
+/// Run the customized-layer sweep (Fig. 6) on `sweeper`'s thread pool.
+pub fn fig6_sweep(sweeper: &Sweeper, cl: &ClusterProfile, gpus: usize, limit: usize) -> Fig6Stats {
+    let (cases, oom) = valid_custom_layers(cl, gpus, limit);
+    let pairs = sweeper.run(&cases, |_, cfg| flow_vs_sche(cfg, cl));
+    let wins = pairs.iter().filter(|(sche, flow)| flow < sche).count();
+    let speedups = pairs.iter().map(|(sche, flow)| sche / flow).collect();
+    Fig6Stats { speedups, oom, wins }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let items: Vec<u64> = Vec::new();
+        let out: Vec<u64> = Sweeper::new().run(&items, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_results_match_serial_bit_for_bit() {
+        // The acceptance property: same grid, same bytes, any thread count.
+        let cl = ClusterProfile::cluster1(16);
+        let (cases, _) = valid_custom_layers(&cl, 16, 24);
+        assert!(!cases.is_empty());
+        let serial: Vec<(f64, f64)> = Sweeper::new()
+            .with_threads(1)
+            .run(&cases, |_, cfg| flow_vs_sche(cfg, &cl));
+        for threads in [2usize, 4, 8] {
+            let par: Vec<(f64, f64)> = Sweeper::new()
+                .with_threads(threads)
+                .run(&cases, |_, cfg| flow_vs_sche(cfg, &cl));
+            assert_eq!(serial.len(), par.len());
+            for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "case {i} ({threads} threads)");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "case {i} ({threads} threads)");
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_input_ordered() {
+        let items: Vec<usize> = (0..997).collect();
+        let out = Sweeper::new().with_threads(8).run(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 3 + 1
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn one_panicking_case_is_isolated() {
+        let items: Vec<usize> = (0..64).collect();
+        let results = Sweeper::new()
+            .with_threads(4)
+            .try_run(&items, |_, &x| {
+                if x == 13 {
+                    panic!("unlucky case {x}");
+                }
+                x * 2
+            });
+        assert_eq!(results.len(), 64);
+        for (i, r) in results.iter().enumerate() {
+            if i == 13 {
+                let e = r.as_ref().unwrap_err();
+                assert_eq!(e.index, 13);
+                assert!(e.message.contains("unlucky case 13"), "{}", e.message);
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cases panicked")]
+    fn run_surfaces_case_panics_after_completion() {
+        let items = vec![1usize, 2, 3];
+        let _ = Sweeper::new().with_threads(2).run(&items, |_, &x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn progress_callback_reports_every_case_and_eta() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let max_done = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&calls);
+        let m2 = Arc::clone(&max_done);
+        let items: Vec<usize> = (0..40).collect();
+        let out = Sweeper::new()
+            .with_threads(4)
+            .on_progress(move |p| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                m2.fetch_max(p.done, Ordering::SeqCst);
+                assert_eq!(p.total, 40);
+                assert!(p.done >= 1 && p.done <= 40);
+                assert!(p.elapsed_s >= 0.0 && p.eta_s >= 0.0);
+            })
+            .run(&items, |_, &x| x + 1);
+        assert_eq!(out.len(), 40);
+        assert_eq!(calls.load(Ordering::SeqCst), 40);
+        assert_eq!(max_done.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn every_case_runs_exactly_once_even_with_big_chunks() {
+        let seen = Arc::new(Mutex::new(vec![0usize; 101]));
+        let s2 = Arc::clone(&seen);
+        let items: Vec<usize> = (0..101).collect();
+        Sweeper::new()
+            .with_threads(3)
+            .with_chunk(16)
+            .run(&items, move |i, _| {
+                s2.lock().unwrap()[i] += 1;
+            });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn custom_layer_grid_is_675_cases() {
+        let grid = custom_layer_grid(16);
+        assert_eq!(grid.len(), 675);
+        assert!(grid.iter().all(|c| c.e == 16 && c.k == 2 && c.l == 1));
+        // row-major order: H varies fastest
+        assert_eq!(grid[0].h, 512);
+        assert_eq!(grid[1].h, 1024);
+    }
+
+    #[test]
+    fn valid_layers_respect_limit_and_filter_oom() {
+        let cl = ClusterProfile::cluster1(16);
+        let (all, oom_all) = valid_custom_layers(&cl, 16, usize::MAX);
+        assert_eq!(all.len() + oom_all, 675);
+        assert!(oom_all > 0, "expected some OOM configs on a 24GB card");
+        let (few, _) = valid_custom_layers(&cl, 16, 10);
+        assert_eq!(few.len(), 10);
+        assert_eq!(&all[..10], &few[..]);
+    }
+
+    #[test]
+    fn fig6_sweep_sample_flowmoe_wins_majority() {
+        let cl = ClusterProfile::cluster1(16);
+        let sweeper = Sweeper::new();
+        let stats = fig6_sweep(&sweeper, &cl, 16, 32);
+        assert_eq!(stats.speedups.len(), 32);
+        assert!(stats.wins * 2 > stats.speedups.len(), "wins {}/{}", stats.wins, stats.speedups.len());
+        assert!(crate::util::mean(&stats.speedups) > 1.0);
+    }
+
+    #[test]
+    fn prop_par_map_equals_serial_map() {
+        // Property: for random integer workloads, the parallel sweep is
+        // exactly the serial map (order, values, length).
+        check(25, |rng| {
+            let n = rng.below(200);
+            let items: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1_000_000).collect();
+            let threads = rng.range(1, 8);
+            let f = |i: usize, x: &u64| x.wrapping_mul(31).wrapping_add(i as u64);
+            let serial: Vec<u64> = items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+            let par = Sweeper::new().with_threads(threads).run(&items, f);
+            if serial != par {
+                return Err(format!("mismatch at n={n}, threads={threads}"));
+            }
+            Ok(())
+        });
+    }
+}

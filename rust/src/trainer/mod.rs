@@ -24,7 +24,7 @@ use anyhow::{anyhow, Result};
 
 use crate::commpool::{partition_ranges, Collective, CommPool};
 use crate::data::Corpus;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Engine, HostTensor, PjRtBuffer};
 use crate::util::Rng;
 
 /// Per-run report.
@@ -259,7 +259,7 @@ fn worker_dp(
         let t0 = std::time::Instant::now();
         // marshal current params once (device buffers — leak-free
         // execute_b path, see runtime::Engine::buffer docs)
-        let mut block_lits: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(l_blocks);
+        let mut block_lits: Vec<Vec<PjRtBuffer>> = Vec::with_capacity(l_blocks);
         for l in 0..l_blocks {
             let mut v = Vec::with_capacity(9);
             for t in 0..9 {
@@ -280,7 +280,7 @@ fn worker_dp(
             xs.push(x0.into_iter().next().unwrap());
             for l in 0..l_blocks {
                 let x_lit = engine.buffer_f32(xs[l].f32(), &x_spec)?;
-                let mut inp: Vec<&xla::PjRtBuffer> = block_lits[l].iter().collect();
+                let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
                 inp.push(&x_lit);
                 let y = engine.run_buffers(&block_fwd, &inp)?;
                 xs.push(y.into_iter().next().unwrap());
@@ -320,7 +320,7 @@ fn worker_dp(
             for r in 0..r_deg {
                 let x_lit = engine.buffer_f32(acts[r][l].f32(), &x_spec)?;
                 let dy_lit = engine.buffer_f32(dxs[r].f32(), &x_spec)?;
-                let mut inp: Vec<&xla::PjRtBuffer> = block_lits[l].iter().collect();
+                let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
                 inp.push(&x_lit);
                 inp.push(&dy_lit);
                 let outs = engine.run_buffers(&block_bwd, &inp)?;
