@@ -1,31 +1,36 @@
 //! Paper Table 4: pipelining degree R in {2,4,8} on DeepSeek-V2-S,
-//! Cluster 1 / 16 GPUs — Tutel vs ScheMoE vs FlowMoE.
+//! Cluster 1 / 16 GPUs — Tutel vs ScheMoE vs FlowMoE. The three R rows
+//! run in parallel on the sweep engine (each row is ~6 simulations).
 
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
 
 fn main() {
     let paper = [(2usize, 4481.4, 4093.7, 3205.3), (4, 4628.2, 4164.0, 3113.8), (8, 4588.9, 4308.7, 3295.9)];
     let cfg = preset("DeepSeek-V2-S").unwrap();
     let cl = ClusterProfile::cluster1(16);
-    let mut t = Table::new(
-        "Table 4 — R-degree on DeepSeek-V2-S (Cluster 1, 16 GPUs) [measured | paper]",
-        &["R", "Tutel (ms)", "ScheMoE (ms)", "FlowMoE-CC (ms)", "S1 (Tutel)", "S2 (ScheMoE)"],
-    );
-    for (r, p_tut, p_sche, p_flow) in paper {
+    let rows = par_map(&paper, |_, &(r, _, _, _)| {
         let tut = iteration_time(&cfg, &cl, &Policy::tutel(r)).0 * 1e3;
         let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(r)).0 * 1e3;
         let flow = [2.5e6, 8e6, 32e6, 128e6]
             .iter()
             .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(r, sp)).0 * 1e3)
             .fold(f64::INFINITY, f64::min);
+        (tut, sche, flow)
+    });
+    let mut t = Table::new(
+        "Table 4 — R-degree on DeepSeek-V2-S (Cluster 1, 16 GPUs) [measured | paper]",
+        &["R", "Tutel (ms)", "ScheMoE (ms)", "FlowMoE-CC (ms)", "S1 (Tutel)", "S2 (ScheMoE)"],
+    );
+    for ((r, p_tut, p_sche, p_flow), (tut, sche, flow)) in paper.iter().zip(&rows) {
         t.row(vec![
             r.to_string(),
-            format!("{} | {}", fmt_ms(tut), fmt_ms(p_tut)),
-            format!("{} | {}", fmt_ms(sche), fmt_ms(p_sche)),
-            format!("{} | {}", fmt_ms(flow), fmt_ms(p_flow)),
+            format!("{} | {}", fmt_ms(*tut), fmt_ms(*p_tut)),
+            format!("{} | {}", fmt_ms(*sche), fmt_ms(*p_sche)),
+            format!("{} | {}", fmt_ms(*flow), fmt_ms(*p_flow)),
             format!("{:.2}x", tut / flow),
             format!("{:.2}x", sche / flow),
         ]);

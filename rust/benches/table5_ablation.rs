@@ -4,48 +4,53 @@
 //! model leaves AR chunks nothing to overlap with (EXPERIMENTS.md
 //! §Findings); the paper's single-layer 24.6 % Pipe-AR gain requires the
 //! concurrent-comm behaviour, which FlowMoE-AR(CC) rows show.
+//!
+//! All 22 policy evaluations (fixed rows + the three BO-style S_p grids)
+//! fan out over the sweep engine; rows then fold the grid minima.
 
 use flowmoe::config::{ClusterProfile, ModelCfg};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
+
+const SP_GRID: [f64; 6] = [0.5e6, 1e6, 2.5e6, 8e6, 32e6, 128e6];
 
 fn main() {
     let mut cfg = ModelCfg::custom_layer(4, 1.2, 512, 8192, 8192, 16);
     cfg.l = 4;
     let cl = ClusterProfile::cluster1(16);
-    let ms = |p: &Policy| iteration_time(&cfg, &cl, p).0 * 1e3;
-    let tuned = |mk: &dyn Fn(f64) -> Policy| {
-        [0.5e6, 1e6, 2.5e6, 8e6, 32e6, 128e6]
-            .iter()
-            .map(|&sp| ms(&mk(sp)))
-            .fold(f64::INFINITY, f64::min)
-    };
 
-    let van = ms(&Policy::vanilla_ep());
-    // AR rows use the concurrent-channel mode (what the paper's NCCL
-    // testbed actually measured — EXPERIMENTS.md §Findings); the strict
-    // single-comm-stream variants are printed for comparison.
-    let cc_1mb = {
-        let mut p = Policy::flow_moe_cc(2, 1e6);
-        p.pipe_at = false;
-        p.name = "FlowMoE-AR-CC";
-        ms(&p)
-    };
-    let cc_ar_bo = tuned(&|sp| {
+    let ar_cc = |sp: f64| {
         let mut p = Policy::flow_moe_cc(2, sp);
         p.pipe_at = false;
+        p.name = "FlowMoE-AR-CC";
         p
-    });
+    };
+    // cases 0..4: fixed rows; 4..10 AR-CC grid; 10..16 strict grid; 16..22 CC grid
+    let mut cases: Vec<Policy> = vec![
+        Policy::vanilla_ep(),
+        Policy::tutel(2),
+        Policy::flow_moe_at(2),
+        ar_cc(1e6),
+    ];
+    cases.extend(SP_GRID.iter().map(|&sp| ar_cc(sp)));
+    cases.extend(SP_GRID.iter().map(|&sp| Policy::flow_moe(2, sp)));
+    cases.extend(SP_GRID.iter().map(|&sp| Policy::flow_moe_cc(2, sp)));
+
+    let times = par_map(&cases, |_, p| iteration_time(&cfg, &cl, p).0 * 1e3);
+    let min_of = |r: std::ops::Range<usize>| times[r].iter().cloned().fold(f64::INFINITY, f64::min);
+
+    let van = times[0];
     let rows: Vec<(&str, &str, &str, &str, f64, f64)> = vec![
         // name, pipe-moe, pipe-at, pipe-ar, time, paper speedup
         ("vanillaEP", "x", "x", "x", van, 1.0),
-        ("Tutel", "y", "x", "x", ms(&Policy::tutel(2)), 1.46),
-        ("FlowMoE-AT", "y", "y", "x", ms(&Policy::flow_moe_at(2)), 1.61),
-        ("FlowMoE-AR (Sp=1MB)", "y", "x", "y", cc_1mb, 1.68),
-        ("FlowMoE-AR (BO)", "y", "x", "y", cc_ar_bo, 1.82),
-        ("FlowMoE (strict, BO)", "y", "y", "y", tuned(&|sp| Policy::flow_moe(2, sp)), 2.05),
-        ("FlowMoE (BO)", "y", "y", "y", tuned(&|sp| Policy::flow_moe_cc(2, sp)), 2.05),
+        ("Tutel", "y", "x", "x", times[1], 1.46),
+        ("FlowMoE-AT", "y", "y", "x", times[2], 1.61),
+        ("FlowMoE-AR (Sp=1MB)", "y", "x", "y", times[3], 1.68),
+        ("FlowMoE-AR (BO)", "y", "x", "y", min_of(4..10), 1.82),
+        ("FlowMoE (strict, BO)", "y", "y", "y", min_of(10..16), 2.05),
+        ("FlowMoE (BO)", "y", "y", "y", min_of(16..22), 2.05),
     ];
 
     let mut t = Table::new(

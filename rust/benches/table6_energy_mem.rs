@@ -5,13 +5,21 @@
 //! integrals are testbed-specific); the comparison target is the
 //! *relative savings* of FlowMoE vs each baseline (paper: 10-16 % vs
 //! ScheMoE, 33-41 % vs vanilla).
+//!
+//! All (model, policy) cells — 4 baselines + a 5-point FlowMoE S_p grid
+//! per model — run concurrently on the sweep engine.
 
-use flowmoe::config::{preset, ClusterProfile};
+use flowmoe::config::{preset, ClusterProfile, ModelCfg};
 use flowmoe::cost::TaskCosts;
 use flowmoe::metrics::{energy_joules, peak_memory};
 use flowmoe::report::Table;
 use flowmoe::sched::{build_dag, Policy};
 use flowmoe::sim::simulate;
+use flowmoe::sweep::par_map;
+
+const SP_GRID: [f64; 5] = [1e6, 2.5e6, 8e6, 32e6, 128e6];
+/// Cells per model row: vanilla, FasterMoE, Tutel, ScheMoE, then the grid.
+const CELLS: usize = 4 + SP_GRID.len();
 
 fn main() {
     let cl = ClusterProfile::cluster1(16);
@@ -21,35 +29,51 @@ fn main() {
         ("LLaMA2-MoE", 12.43, 11.01),
         ("DeepSeek-V2-S", 19.42, 17.57),
     ];
+    let mut cases: Vec<(ModelCfg, Policy)> = Vec::new();
+    for (name, _, _) in paper_mem {
+        let cfg = preset(name).unwrap();
+        for pol in [
+            Policy::vanilla_ep(),
+            Policy::faster_moe(2),
+            Policy::tutel(2),
+            Policy::sche_moe(2),
+        ] {
+            cases.push((cfg.clone(), pol));
+        }
+        // FlowMoE at the BO-tuned S_p (fixed 2.5 MB is far off-optimum for
+        // the huge-AR DeepSeek configs)
+        for &sp in &SP_GRID {
+            cases.push((cfg.clone(), Policy::flow_moe(2, sp)));
+        }
+    }
+    let results = par_map(&cases, |_, (cfg, pol)| {
+        let costs = TaskCosts::build(cfg, &cl);
+        let dag = build_dag(cfg, &costs, pol);
+        let tl = simulate(&dag);
+        (
+            energy_joules(&tl, &cl.power),
+            peak_memory(cfg, &cl, pol, &dag, &tl) / 1e9,
+        )
+    });
+
     let mut t = Table::new(
         "Table 6 — per-worker energy (J) / memory (GB) per iteration (Cluster 1, 16 GPUs)",
         &["model", "vanillaEP", "FasterMoE", "Tutel", "ScheMoE", "FlowMoE", "E saved vs vanilla", "M saved vs vanilla", "paper E/M saved"],
     );
-    for (name, p_mem_van, p_mem_flow) in paper_mem {
-        let cfg = preset(name).unwrap();
-        let costs = TaskCosts::build(&cfg, &cl);
-        let run = |pol: &Policy| {
-            let dag = build_dag(&cfg, &costs, pol);
-            let tl = simulate(&dag);
-            (
-                energy_joules(&tl, &cl.power),
-                peak_memory(&cfg, &cl, pol, &dag, &tl) / 1e9,
-            )
-        };
-        let (ev, mv) = run(&Policy::vanilla_ep());
-        let (efm, mfm) = run(&Policy::faster_moe(2));
-        let (et, mt) = run(&Policy::tutel(2));
-        let (es, msc) = run(&Policy::sche_moe(2));
-        // FlowMoE at the BO-tuned S_p (fixed 2.5 MB is far off-optimum for
-        // the huge-AR DeepSeek configs)
-        let (ef, mf) = [1e6, 2.5e6, 8e6, 32e6, 128e6]
+    for (mi, (name, p_mem_van, p_mem_flow)) in paper_mem.iter().enumerate() {
+        let row = &results[mi * CELLS..(mi + 1) * CELLS];
+        let (ev, mv) = row[0];
+        let (efm, mfm) = row[1];
+        let (et, mt) = row[2];
+        let (es, msc) = row[3];
+        let (ef, mf) = row[4..]
             .iter()
-            .map(|&sp| run(&Policy::flow_moe(2, sp)))
+            .cloned()
             .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
             .unwrap();
         let fmt = |e: f64, m: f64| format!("{e:.1}J/{m:.2}GB");
         t.row(vec![
-            name.into(),
+            (*name).into(),
             fmt(ev, mv),
             fmt(efm, mfm),
             fmt(et, mt),

@@ -1,10 +1,12 @@
 //! Paper Table A.12: heterogeneous 16-GPU cluster (half the workers at
 //! half compute speed) — FlowMoE still wins; the slowest GPU dictates
-//! collective timing (Appendix K.1).
+//! collective timing (Appendix K.1). Model rows run in parallel on the
+//! sweep engine.
 
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
 
 fn main() {
@@ -16,11 +18,7 @@ fn main() {
     ];
     let cl = ClusterProfile::cluster1_heterogeneous(16);
     let uni = ClusterProfile::cluster1(16);
-    let mut t = Table::new(
-        "Table A.12 — heterogeneous cluster (8 of 16 GPUs at half speed) [measured | paper]",
-        &["model", "vanillaEP", "ScheMoE", "FlowMoE", "S1 (vanilla)", "hetero/homog slowdown"],
-    );
-    for (name, p_van, p_sche, p_flow) in paper {
+    let rows = par_map(&paper, |_, &(name, _, _, _)| {
         let cfg = preset(name).unwrap();
         let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0 * 1e3;
         let sche = iteration_time(&cfg, &cl, &Policy::sche_moe(2)).0 * 1e3;
@@ -29,11 +27,18 @@ fn main() {
             .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, sp)).0 * 1e3)
             .fold(f64::INFINITY, f64::min);
         let flow_uni = iteration_time(&cfg, &uni, &Policy::flow_moe_cc(2, 2.5e6)).0 * 1e3;
+        (van, sche, flow, flow_uni)
+    });
+    let mut t = Table::new(
+        "Table A.12 — heterogeneous cluster (8 of 16 GPUs at half speed) [measured | paper]",
+        &["model", "vanillaEP", "ScheMoE", "FlowMoE", "S1 (vanilla)", "hetero/homog slowdown"],
+    );
+    for ((name, p_van, p_sche, p_flow), (van, sche, flow, flow_uni)) in paper.iter().zip(&rows) {
         t.row(vec![
-            name.into(),
-            format!("{} | {}", fmt_ms(van), fmt_ms(p_van)),
-            format!("{} | {}", fmt_ms(sche), fmt_ms(p_sche)),
-            format!("{} | {}", fmt_ms(flow), fmt_ms(p_flow)),
+            (*name).into(),
+            format!("{} | {}", fmt_ms(*van), fmt_ms(*p_van)),
+            format!("{} | {}", fmt_ms(*sche), fmt_ms(*p_sche)),
+            format!("{} | {}", fmt_ms(*flow), fmt_ms(*p_flow)),
             format!("{:.2}x", van / flow),
             format!("{:.2}x", flow / flow_uni),
         ]);

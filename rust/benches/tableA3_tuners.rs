@@ -1,11 +1,16 @@
 //! Paper Table A.3: S_p tuning — BO vs grid search vs random number
 //! generation, 4 models on Cluster 1 / 16 GPUs. Also prints the BO
 //! overhead estimate of Table A.6.
+//!
+//! The four model rows are independent tuning runs, so they fan out
+//! across cores on the sweep engine (input-ordered results keep the
+//! printed table identical to the serial walk).
 
 use flowmoe::bo::{grid_search, random_tuner, BoTuner};
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
 
 fn main() {
@@ -16,11 +21,7 @@ fn main() {
         ("DeepSeek-V2-S", 3205.3, 3498.8, 3902.75, 0.16),
     ];
     let cl = ClusterProfile::cluster1(16);
-    let mut t = Table::new(
-        "Table A.3 — tuner comparison, per-iteration ms [measured | paper]",
-        &["model", "BO", "grid search", "random", "BO overhead % (A.6 paper)"],
-    );
-    for (name, p_bo, p_grid, p_rand, p_ovh) in paper {
+    let rows = par_map(&paper, |_, &(name, _, _, _, _)| {
         let cfg = preset(name).unwrap();
         let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
         let max = cfg.ar_bytes_per_block();
@@ -36,12 +37,21 @@ fn main() {
         let profiled: f64 = bo.observations.iter().map(|(_, y)| y * 10.0).sum();
         let tuned_1000 = (bo_best / 1e3) * 1000.0;
         let overhead = (profiled - 80.0 * bo_best / 1e3).max(0.0) / tuned_1000 * 100.0;
+        (bo_best, grid_best, rand_avg, overhead)
+    });
 
+    let mut t = Table::new(
+        "Table A.3 — tuner comparison, per-iteration ms [measured | paper]",
+        &["model", "BO", "grid search", "random", "BO overhead % (A.6 paper)"],
+    );
+    for ((name, p_bo, p_grid, p_rand, p_ovh), (bo_best, grid_best, rand_avg, overhead)) in
+        paper.iter().zip(&rows)
+    {
         t.row(vec![
-            name.into(),
-            format!("{} | {}", fmt_ms(bo_best), fmt_ms(p_bo)),
-            format!("{} | {}", fmt_ms(grid_best), fmt_ms(p_grid)),
-            format!("{} | {}", fmt_ms(rand_avg), fmt_ms(p_rand)),
+            (*name).into(),
+            format!("{} | {}", fmt_ms(*bo_best), fmt_ms(*p_bo)),
+            format!("{} | {}", fmt_ms(*grid_best), fmt_ms(*p_grid)),
+            format!("{} | {}", fmt_ms(*rand_avg), fmt_ms(*p_rand)),
             format!("{overhead:.2}% | {p_ovh:.2}%"),
         ]);
     }

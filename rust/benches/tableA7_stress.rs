@@ -1,10 +1,12 @@
 //! Paper Table A.7: stress tests on scaled-up models (LLaMA2-MoE-L,
 //! DeepSeek-V2-M) at 4/8/16 GPUs, including the OOM detection at 16.
+//! The six (GPUs, model) rows run in parallel on the sweep engine.
 
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::cost::peak_memory_bytes;
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
 
 fn main() {
@@ -20,23 +22,22 @@ fn main() {
         (16, "LLaMA2-MoE-L", None), // paper: OOM
         (16, "DeepSeek-V2-M", Some((1254.6, 956.9, 893.4, 708.8))),
     ];
-    for (gpus, name, paper_row) in paper {
+    let rows: Vec<Vec<String>> = par_map(paper, |_, &(gpus, name, paper_row)| {
         let base = preset(name).unwrap();
-        let cfg = base.with_experts_for_workers((base.e / 16).max(1), *gpus);
-        let cl = ClusterProfile::cluster1(*gpus);
-        let mem = peak_memory_bytes(&cfg, *gpus, cfg.l as f64, 1.0);
+        let cfg = base.with_experts_for_workers((base.e / 16).max(1), gpus);
+        let cl = ClusterProfile::cluster1(gpus);
+        let mem = peak_memory_bytes(&cfg, gpus, cfg.l as f64, 1.0);
         if mem > cl.mem_bytes {
-            t.row(vec![
+            return vec![
                 gpus.to_string(),
-                (*name).into(),
+                name.into(),
                 format!("OOM ({:.1}GB > {:.1}GB) | {}", mem / 1e9, cl.mem_bytes / 1e9,
                         if paper_row.is_none() { "OOM" } else { "ran" }),
                 "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
-            ]);
-            continue;
+            ];
         }
         let van = iteration_time(&cfg, &cl, &Policy::vanilla_ep()).0 * 1e3;
         let tut = iteration_time(&cfg, &cl, &Policy::tutel(2)).0 * 1e3;
@@ -46,15 +47,18 @@ fn main() {
             .map(|&sp| iteration_time(&cfg, &cl, &Policy::flow_moe_cc(2, sp)).0 * 1e3)
             .fold(f64::INFINITY, f64::min);
         let p = paper_row.unwrap_or((0.0, 0.0, 0.0, 0.0));
-        t.row(vec![
+        vec![
             gpus.to_string(),
-            (*name).into(),
+            name.into(),
             format!("{} | {}", fmt_ms(van), fmt_ms(p.0)),
             format!("{} | {}", fmt_ms(tut), fmt_ms(p.1)),
             format!("{} | {}", fmt_ms(sche), fmt_ms(p.2)),
             format!("{} | {}", fmt_ms(flow), fmt_ms(p.3)),
             format!("{:.2}x", van / flow),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t.print();
     println!("\npaper shape: FlowMoE best on every non-OOM row; LLaMA2-MoE-L OOMs at 16 GPUs.");

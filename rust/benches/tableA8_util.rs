@@ -1,5 +1,6 @@
 //! Paper Tables A.8/A.9: GPU SM utilization (compute-stream occupancy
-//! analogue) vs pipelining degree R and vs batch size.
+//! analogue) vs pipelining degree R and vs batch size. The per-model
+//! rows of both tables run in parallel on the sweep engine.
 
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::cost::TaskCosts;
@@ -7,6 +8,7 @@ use flowmoe::metrics::sm_utilization;
 use flowmoe::report::Table;
 use flowmoe::sched::{build_dag, Policy};
 use flowmoe::sim::simulate;
+use flowmoe::sweep::par_map;
 
 fn main() {
     let cl = ClusterProfile::cluster1(16);
@@ -16,19 +18,22 @@ fn main() {
         ("LLaMA2-MoE", 89.16, 88.19, 89.49),
         ("DeepSeek-V2-S", 89.27, 88.85, 90.77),
     ];
+    let rows = par_map(&paper_a8, |_, &(name, _, _, _)| {
+        let cfg = preset(name).unwrap();
+        let costs = TaskCosts::build(&cfg, &cl);
+        let u = |pol: &Policy| sm_utilization(&simulate(&build_dag(&cfg, &costs, pol))) * 100.0;
+        (u(&Policy::flow_moe(2, 2.5e6)), u(&Policy::flow_moe(4, 2.5e6)), u(&Policy::vanilla_ep()))
+    });
     let mut t = Table::new(
         "Table A.8 — compute-stream occupancy vs R [measured | paper SM util]",
         &["model", "FlowMoE R=2", "FlowMoE R=4", "vanillaEP"],
     );
-    for (name, p2, p4, pv) in paper_a8 {
-        let cfg = preset(name).unwrap();
-        let costs = TaskCosts::build(&cfg, &cl);
-        let u = |pol: &Policy| sm_utilization(&simulate(&build_dag(&cfg, &costs, pol))) * 100.0;
+    for ((name, p2, p4, pv), (u2, u4, uv)) in paper_a8.iter().zip(&rows) {
         t.row(vec![
-            name.into(),
-            format!("{:.1}% | {p2:.1}%", u(&Policy::flow_moe(2, 2.5e6))),
-            format!("{:.1}% | {p4:.1}%", u(&Policy::flow_moe(4, 2.5e6))),
-            format!("{:.1}% | {pv:.1}%", u(&Policy::vanilla_ep())),
+            (*name).into(),
+            format!("{u2:.1}% | {p2:.1}%"),
+            format!("{u4:.1}% | {p4:.1}%"),
+            format!("{uv:.1}% | {pv:.1}%"),
         ]);
     }
     t.print();
@@ -40,11 +45,7 @@ fn main() {
         ("LLaMA2-MoE", 89.16, 88.45),
         ("DeepSeek-V2-S", 89.27, 89.06),
     ];
-    let mut t9 = Table::new(
-        "Table A.9 — occupancy vs batch size (FlowMoE R=2) [measured | paper]",
-        &["model", "B=4", "B=2"],
-    );
-    for (name, p4, p2) in paper_a9 {
+    let rows9 = par_map(&paper_a9, |_, &(name, _, _)| {
         let cfg4 = preset(name).unwrap();
         let mut cfg2 = cfg4.clone();
         cfg2.b = 2;
@@ -52,10 +53,17 @@ fn main() {
             let costs = TaskCosts::build(cfg, &cl);
             sm_utilization(&simulate(&build_dag(cfg, &costs, &Policy::flow_moe(2, 2.5e6)))) * 100.0
         };
+        (u(&cfg4), u(&cfg2))
+    });
+    let mut t9 = Table::new(
+        "Table A.9 — occupancy vs batch size (FlowMoE R=2) [measured | paper]",
+        &["model", "B=4", "B=2"],
+    );
+    for ((name, p4, p2), (u4, u2)) in paper_a9.iter().zip(&rows9) {
         t9.row(vec![
-            name.into(),
-            format!("{:.1}% | {p4:.1}%", u(&cfg4)),
-            format!("{:.1}% | {p2:.1}%", u(&cfg2)),
+            (*name).into(),
+            format!("{u4:.1}% | {p4:.1}%"),
+            format!("{u2:.1}% | {p2:.1}%"),
         ]);
     }
     t9.print();

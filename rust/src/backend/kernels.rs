@@ -1,0 +1,512 @@
+//! Dense f32 CPU kernels for the native execution backend.
+//!
+//! Every op here is an exact host-side mirror of a `python/compile`
+//! primitive (`kernels/ref.py` semantics): same masking constants, same
+//! epsilons, same tie-breaking, so a native run is numerically
+//! interchangeable with an artifact run up to summation order. Each
+//! forward has a hand-derived backward; `tests/gradcheck_native.rs`
+//! checks every pair against central finite differences.
+//!
+//! Shapes are row-major flat `&[f32]` slices; dimensions are passed
+//! explicitly (the backend derives them from the artifact manifest).
+
+/// `a (m,k) @ b (k,n) -> (m,n)`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)` (rows of b are the columns).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            out[i * n + j] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+    out
+}
+
+/// `a^T @ b` with `a (k,m)`, `b (k,n)` -> `(m,n)`.
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise softmax over `(t, n)`, numerically stable (max subtraction).
+pub fn softmax_rows(x: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len() % n, 0);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - mx).exp();
+            sum += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Backward of row-wise softmax: `dx_i = p_i * (dp_i - sum_j dp_j p_j)`.
+pub fn softmax_bwd_rows(p: &[f32], dp: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(p.len(), dp.len());
+    let mut out = vec![0.0f32; p.len()];
+    for ((prow, dprow), orow) in p
+        .chunks_exact(n)
+        .zip(dp.chunks_exact(n))
+        .zip(out.chunks_exact_mut(n))
+    {
+        let dot: f32 = prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
+        for ((o, &pv), &dpv) in orow.iter_mut().zip(prow).zip(dprow) {
+            *o = pv * (dpv - dot);
+        }
+    }
+    out
+}
+
+/// RMSNorm epsilon (matches `ref.rmsnorm_ref`).
+pub const RMS_EPS: f32 = 1e-6;
+
+/// RMSNorm over the last axis of `(t, m)` with learnable gain `g (m,)`.
+pub fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let m = g.len();
+    debug_assert_eq!(x.len() % m, 0);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(m).zip(out.chunks_exact_mut(m)) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / m as f32;
+        let r = 1.0 / (ms + RMS_EPS).sqrt();
+        for ((o, &xv), &gv) in orow.iter_mut().zip(row).zip(g) {
+            *o = xv * r * gv;
+        }
+    }
+    out
+}
+
+/// Backward of [`rmsnorm`]: returns `(dx, dg)`.
+///
+/// With `r = (mean(x^2) + eps)^{-1/2}`:
+/// `dx_j = r g_j dy_j - r^3 x_j / m * sum_i dy_i g_i x_i`,
+/// `dg_j = sum_rows dy_j x_j r`.
+pub fn rmsnorm_bwd(x: &[f32], g: &[f32], dy: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let m = g.len();
+    debug_assert_eq!(x.len(), dy.len());
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dg = vec![0.0f32; m];
+    for ((row, dyrow), dxrow) in x
+        .chunks_exact(m)
+        .zip(dy.chunks_exact(m))
+        .zip(dx.chunks_exact_mut(m))
+    {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / m as f32;
+        let r = 1.0 / (ms + RMS_EPS).sqrt();
+        let s: f32 = dyrow
+            .iter()
+            .zip(row)
+            .zip(g)
+            .map(|((&d, &xv), &gv)| d * gv * xv)
+            .sum();
+        let r3s = r * r * r * s / m as f32;
+        for (j, (dxv, &xv)) in dxrow.iter_mut().zip(row).enumerate() {
+            *dxv = r * g[j] * dyrow[j] - r3s * xv;
+            dg[j] += dyrow[j] * xv * r;
+        }
+    }
+    (dx, dg)
+}
+
+/// Embedding lookup with the model's `sqrt(M)` scale: `x_t = embed[tok_t] * sqrt(m)`.
+pub fn embed_lookup(embed: &[f32], tokens: &[i32], m: usize) -> Vec<f32> {
+    let scale = (m as f64).sqrt() as f32;
+    let mut out = vec![0.0f32; tokens.len() * m];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let src = tok as usize * m;
+        for (o, &e) in out[t * m..(t + 1) * m].iter_mut().zip(&embed[src..src + m]) {
+            *o = e * scale;
+        }
+    }
+    out
+}
+
+/// Backward of [`embed_lookup`]: scatter-add `dx * sqrt(m)` into `(vocab, m)`.
+pub fn embed_scatter(tokens: &[i32], dx: &[f32], vocab: usize, m: usize) -> Vec<f32> {
+    let scale = (m as f64).sqrt() as f32;
+    let mut de = vec![0.0f32; vocab * m];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let dst = tok as usize * m;
+        for (o, &d) in de[dst..dst + m].iter_mut().zip(&dx[t * m..(t + 1) * m]) {
+            *o += d * scale;
+        }
+    }
+    de
+}
+
+/// Causal mask fill value (matches `ref.attention_causal_ref`).
+const MASK_NEG: f32 = -1e30;
+
+/// Causal scaled-dot-product attention for one (batch, head): `q,k,v (n,d)`.
+/// Returns `(weights (n,n), out (n,d))`; the weights are kept for backward.
+pub fn attention_causal(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f64).sqrt() as f32;
+    let mut s = matmul_nt(q, k, n, d, n);
+    for i in 0..n {
+        for (j, x) in s[i * n..(i + 1) * n].iter_mut().enumerate() {
+            if j > i {
+                *x = MASK_NEG;
+            } else {
+                *x *= scale;
+            }
+        }
+    }
+    let w = softmax_rows(&s, n);
+    let o = matmul(&w, v, n, n, d);
+    (w, o)
+}
+
+/// Backward of [`attention_causal`] given the saved weights `w` and the
+/// output cotangent `do_`: returns `(dq, dk, dv)`. Masked positions carry
+/// zero weight, so the softmax backward zeroes their score gradient
+/// automatically.
+pub fn attention_causal_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    w: &[f32],
+    do_: &[f32],
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f64).sqrt() as f32;
+    let dv = matmul_tn(w, do_, n, n, d);
+    let dw = matmul_nt(do_, v, n, d, n);
+    let mut ds = softmax_bwd_rows(w, &dw, n);
+    for x in ds.iter_mut() {
+        *x *= scale;
+    }
+    let dq = matmul(&ds, k, n, n, d);
+    let dk = matmul_tn(&ds, q, n, n, d);
+    (dq, dk, dv)
+}
+
+/// Renormalization floor of the top-k gate weights (matches `ref.gating_ref`).
+pub const GATE_EPS: f32 = 1e-9;
+
+/// Output of [`gating_topk`].
+pub struct Gating {
+    /// `(t, e)` full softmax probabilities.
+    pub probs: Vec<f32>,
+    /// `(t, k)` selected expert ids, by descending probability (ties to
+    /// the smaller index, matching `ref.topk_ref`).
+    pub idx: Vec<i32>,
+    /// `(t, k)` gate weights renormalized over the selected experts.
+    pub gate: Vec<f32>,
+}
+
+/// Top-k softmax gating over logits `(t, e)` — mirror of `ref.gating_ref`
+/// composed with the logits it is fed (`u @ wg` happens in the caller).
+pub fn gating_topk(logits: &[f32], e: usize, k: usize) -> Gating {
+    let t = logits.len() / e;
+    let probs = softmax_rows(logits, e);
+    let mut idx = vec![0i32; t * k];
+    let mut gate = vec![0.0f32; t * k];
+    for ti in 0..t {
+        let row = &probs[ti * e..(ti + 1) * e];
+        let mut work: Vec<f32> = row.to_vec();
+        let mut raw_sum = 0.0f32;
+        for ki in 0..k {
+            let best = work.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let first = work.iter().position(|&v| v == best).unwrap();
+            idx[ti * k + ki] = first as i32;
+            gate[ti * k + ki] = row[first];
+            raw_sum += row[first];
+            work[first] = f32::NEG_INFINITY;
+        }
+        let denom = raw_sum.max(GATE_EPS);
+        for g in gate[ti * k..(ti + 1) * k].iter_mut() {
+            *g /= denom;
+        }
+    }
+    Gating { probs, idx, gate }
+}
+
+/// Backward of [`gating_topk`] w.r.t. the logits, given the cotangent of
+/// the renormalized gate weights. The top-k selection is a fixed gather
+/// (non-differentiable choice, like `lax.top_k`): gradients scatter to
+/// the selected probability entries only, then flow through the softmax.
+pub fn gating_topk_bwd(g: &Gating, e: usize, k: usize, dgate: &[f32]) -> Vec<f32> {
+    let t = g.idx.len() / k;
+    let mut dprobs = vec![0.0f32; t * e];
+    for ti in 0..t {
+        let raw: Vec<f32> = (0..k).map(|ki| g.probs[ti * e + g.idx[ti * k + ki] as usize]).collect();
+        let raw_sum: f32 = raw.iter().sum();
+        let drow = &dgate[ti * k..(ti + 1) * k];
+        if raw_sum > GATE_EPS {
+            // gate_i = raw_i / D, D = sum(raw): d raw_j = dg_j/D - s/D^2
+            let s: f32 = drow.iter().zip(&raw).map(|(d, r)| d * r).sum();
+            for ki in 0..k {
+                let draw = drow[ki] / raw_sum - s / (raw_sum * raw_sum);
+                dprobs[ti * e + g.idx[ti * k + ki] as usize] += draw;
+            }
+        } else {
+            // denominator clamped to the constant GATE_EPS
+            for ki in 0..k {
+                dprobs[ti * e + g.idx[ti * k + ki] as usize] += drow[ki] / GATE_EPS;
+            }
+        }
+    }
+    softmax_bwd_rows(&g.probs, &dprobs, e)
+}
+
+/// Batched expert FFN — mirror of `ref.expert_ffn_ref`:
+/// per expert `e`: `relu(x_e @ w1_e) @ w2_e` with `x (e,c,m)`,
+/// `w1 (e,m,h)`, `w2 (e,h,m)`.
+pub fn expert_ffn(x: &[f32], w1: &[f32], w2: &[f32], e: usize, c: usize, m: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; e * c * m];
+    for ei in 0..e {
+        let xe = &x[ei * c * m..(ei + 1) * c * m];
+        let w1e = &w1[ei * m * h..(ei + 1) * m * h];
+        let w2e = &w2[ei * h * m..(ei + 1) * h * m];
+        let mut hid = matmul(xe, w1e, c, m, h);
+        for v in hid.iter_mut() {
+            *v = v.max(0.0);
+        }
+        out[ei * c * m..(ei + 1) * c * m].copy_from_slice(&matmul(&hid, w2e, c, h, m));
+    }
+    out
+}
+
+/// Backward of [`expert_ffn`] (recompute): returns `(dx, dw1, dw2)`.
+/// ReLU gradient at exactly 0 is 0 (the JAX convention).
+#[allow(clippy::too_many_arguments)]
+pub fn expert_ffn_bwd(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    dy: &[f32],
+    e: usize,
+    c: usize,
+    m: usize,
+    h: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; e * c * m];
+    let mut dw1 = vec![0.0f32; e * m * h];
+    let mut dw2 = vec![0.0f32; e * h * m];
+    for ei in 0..e {
+        let xe = &x[ei * c * m..(ei + 1) * c * m];
+        let w1e = &w1[ei * m * h..(ei + 1) * m * h];
+        let w2e = &w2[ei * h * m..(ei + 1) * h * m];
+        let dye = &dy[ei * c * m..(ei + 1) * c * m];
+        let hid = matmul(xe, w1e, c, m, h);
+        let hr: Vec<f32> = hid.iter().map(|&v| v.max(0.0)).collect();
+        let mut dhid = matmul_nt(dye, w2e, c, m, h);
+        for (dv, &pre) in dhid.iter_mut().zip(&hid) {
+            if pre <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        dw2[ei * h * m..(ei + 1) * h * m].copy_from_slice(&matmul_tn(&hr, dye, c, h, m));
+        dw1[ei * m * h..(ei + 1) * m * h].copy_from_slice(&matmul_tn(xe, &dhid, c, m, h));
+        dx[ei * c * m..(ei + 1) * c * m].copy_from_slice(&matmul_nt(&dhid, w1e, c, h, m));
+    }
+    (dx, dw1, dw2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // (2,2)
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (3, 4, 5);
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let want = matmul(&a, &b, m, k, n);
+        // b^T stored as (n,k)
+        let mut bt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        assert_eq!(matmul_nt(&a, &bt, m, k, n), want);
+        // a^T stored as (k,m)
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let got = matmul_tn(&at, &b, k, m, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let p = softmax_rows(&x, 3);
+        for row in p.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.windows(2).all(|w| w[0] < w[1])); // monotone logits
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_unit_rms() {
+        let x = vec![3.0f32, -4.0]; // rms^2 = 12.5
+        let g = vec![1.0f32, 1.0];
+        let y = rmsnorm(&x, &g);
+        let ms: f32 = y.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-4, "ms={ms}");
+    }
+
+    #[test]
+    fn embed_roundtrip_adjoint() {
+        // <lookup(E), dX> == <E, scatter(dX)>
+        let mut rng = Rng::new(2);
+        let (v, m) = (6, 4);
+        let embed = randv(&mut rng, v * m, 1.0);
+        let tokens = vec![0i32, 3, 3, 5];
+        let dx = randv(&mut rng, tokens.len() * m, 1.0);
+        let x = embed_lookup(&embed, &tokens, m);
+        let de = embed_scatter(&tokens, &dx, v, m);
+        let lhs: f32 = x.iter().zip(&dx).map(|(a, b)| a * b).sum();
+        let rhs: f32 = embed.iter().zip(&de).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn attention_causal_first_token_attends_self_only() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (4, 2);
+        let q = randv(&mut rng, n * d, 1.0);
+        let k = randv(&mut rng, n * d, 1.0);
+        let v = randv(&mut rng, n * d, 1.0);
+        let (w, o) = attention_causal(&q, &k, &v, n, d);
+        // row 0 can only see position 0
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        for j in 1..n {
+            assert!(w[j].abs() < 1e-6);
+        }
+        assert!((o[0] - v[0]).abs() < 1e-5);
+        // every row is a distribution
+        for row in w.chunks_exact(n) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gating_selects_top_probs_and_renormalizes() {
+        // 1 token, 4 experts, clear margins
+        let logits = vec![2.0f32, -1.0, 0.5, -2.0];
+        let g = gating_topk(&logits, 4, 2);
+        assert_eq!(g.idx, vec![0, 2]);
+        assert!((g.gate.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(g.gate[0] > g.gate[1]);
+        let psum: f32 = g.probs.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gating_ties_go_to_smaller_index() {
+        let logits = vec![1.0f32, 1.0, 0.0, 0.0];
+        let g = gating_topk(&logits, 4, 2);
+        assert_eq!(g.idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn expert_ffn_matches_scalar_reference() {
+        // 1 expert, 1 token, m=2, h=2, hand-computed
+        let x = vec![1.0f32, 2.0];
+        let w1 = vec![1.0f32, -1.0, 0.5, 1.0]; // (m=2, h=2) row-major
+        let w2 = vec![1.0f32, 0.0, 2.0, 1.0]; // (h=2, m=2)
+        // hid = [1*1+2*0.5, 1*-1+2*1] = [2, 1]; relu same
+        // out = [2*1+1*2, 2*0+1*1] = [4, 1]
+        let out = expert_ffn(&x, &w1, &w2, 1, 1, 2, 2);
+        assert_eq!(out, vec![4.0, 1.0]);
+    }
+
+    #[test]
+    fn expert_ffn_relu_mask_blocks_gradient() {
+        // hid = [2, -3]: the negative unit must contribute no gradient
+        let x = vec![1.0f32, 2.0];
+        let w1 = vec![1.0f32, -1.0, 0.5, -1.0]; // hid = [2, -3]
+        let w2 = vec![1.0f32, 0.0, 2.0, 1.0];
+        let dy = vec![1.0f32, 1.0];
+        let (dx, dw1, dw2) = expert_ffn_bwd(&x, &w1, &w2, &dy, 1, 1, 2, 2);
+        // dhid = dy @ w2^T = [1, 3] before mask -> [1, 0]
+        // dx = dhid @ w1^T = [1*1 + 0*-1, 1*0.5 + 0*-1] = [1, 0.5]
+        assert_eq!(dx, vec![1.0, 0.5]);
+        // dw1 = x^T @ dhid = [[1,0],[2,0]]
+        assert_eq!(dw1, vec![1.0, 0.0, 2.0, 0.0]);
+        // dw2 = relu(hid)^T @ dy = [[2,2],[0,0]]
+        assert_eq!(dw2, vec![2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn expert_ffn_bwd_adjoint_on_x() {
+        // <ffn(x+tv) - ffn(x-tv), w>/(2t) ~= <dx, v> for smooth region
+        let mut rng = Rng::new(7);
+        let (e, c, m, h) = (2usize, 3usize, 4usize, 5usize);
+        // keep hidden units well away from the ReLU kink
+        let x: Vec<f32> = (0..e * c * m).map(|_| 0.5 + rng.f32()).collect();
+        let w1: Vec<f32> = (0..e * m * h).map(|_| 0.2 + rng.f32()).collect();
+        let w2 = randv(&mut rng, e * h * m, 0.5);
+        let wt = randv(&mut rng, e * c * m, 1.0);
+        let (dx, _, _) = expert_ffn_bwd(&x, &w1, &w2, &wt, e, c, m, h);
+        let v = randv(&mut rng, x.len(), 1.0);
+        let eps = 1e-3f32;
+        let xp: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+        let xm: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+        let fp: f32 = expert_ffn(&xp, &w1, &w2, e, c, m, h).iter().zip(&wt).map(|(a, b)| a * b).sum();
+        let fm: f32 = expert_ffn(&xm, &w1, &w2, e, c, m, h).iter().zip(&wt).map(|(a, b)| a * b).sum();
+        let fd = (fp - fm) / (2.0 * eps);
+        let an: f32 = dx.iter().zip(&v).map(|(a, b)| a * b).sum();
+        assert!((fd - an).abs() < 0.05 * (an.abs() + 1.0), "fd={fd} an={an}");
+    }
+}

@@ -1,0 +1,508 @@
+//! Native execution backend: pure-Rust dense f32 kernels behind the
+//! [`crate::runtime::Backend`] trait.
+//!
+//! The offline crate links no XLA/PJRT client, so the AOT HLO artifacts
+//! cannot execute as compiled programs. This module lights the execution
+//! path up anyway: every artifact the AOT pipeline exports
+//! (`python/compile/aot.py`) has a native kernel here with identical
+//! positional I/O, resolved by artifact name + config. The trainer, the
+//! EP cluster and the integration tests run end-to-end with **no JAX, no
+//! artifacts, no external crates**.
+//!
+//! Two entry points:
+//! * [`NativeBackend`] — executes a manifest [`ArtifactSpec`] whose config
+//!   is a known preset and whose name matches an exported entry point
+//!   (`train_step_*`, `block_fwd_*`, `at_bwd_*`, ...).
+//! * [`native_manifest`] — synthesizes the manifest the AOT exporter
+//!   would have written for the `tiny` and `e2e` configs (same artifact
+//!   names, same buffer names/shapes/dtypes), so `runtime::Engine` works
+//!   from a clean checkout where `artifacts/manifest.txt` does not exist.
+
+pub mod kernels;
+pub mod model;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{preset, ModelCfg};
+use crate::runtime::{ArtifactSpec, Backend, BufSpec, Dtype, HostTensor, Manifest};
+use model::{AtParams, BlockParams, Geo};
+
+/// Artifact families the native backend executes (one per AOT entry point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    TrainStep,
+    GradStep,
+    BlockFwd,
+    BlockBwd,
+    EmbedFwd,
+    HeadLoss,
+    EmbedBwd,
+    AtFwd,
+    AtBwd,
+    ExpFwd,
+    ExpBwd,
+}
+
+/// Resolve an artifact to (kernel family, model config): the name must be
+/// `<entry>_<config>` with a known preset config, mirroring the AOT
+/// exporter's naming scheme.
+fn kind_of(spec: &ArtifactSpec) -> Option<(Kind, ModelCfg)> {
+    let suffix = format!("_{}", spec.config);
+    let base = spec.name.strip_suffix(suffix.as_str())?;
+    let cfg = preset(&spec.config)?;
+    let kind = match base {
+        "train_step" => Kind::TrainStep,
+        "grad_step" => Kind::GradStep,
+        "block_fwd" => Kind::BlockFwd,
+        "block_bwd" => Kind::BlockBwd,
+        "embed_fwd" => Kind::EmbedFwd,
+        "head_loss" => Kind::HeadLoss,
+        "embed_bwd" => Kind::EmbedBwd,
+        "at_fwd" => Kind::AtFwd,
+        "at_bwd" => Kind::AtBwd,
+        "exp_fwd" => Kind::ExpFwd,
+        "exp_bwd" => Kind::ExpBwd,
+        _ => return None,
+    };
+    Some((kind, cfg))
+}
+
+/// The in-tree reference execution backend (dense f32 CPU kernels).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, spec: &ArtifactSpec) -> bool {
+        kind_of(spec).is_some()
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let (kind, cfg) =
+            kind_of(spec).ok_or_else(|| anyhow!("{}: no native kernel for this artifact", spec.name))?;
+        let g = Geo::from_cfg(&cfg);
+        let f32s = |i: usize| inputs[i].f32();
+        let out = match kind {
+            Kind::EmbedFwd => {
+                let tokens = inputs[1].i32();
+                check_tokens(&spec.name, tokens, g.vocab)?;
+                vec![HostTensor::F32(kernels::embed_lookup(f32s(0), tokens, g.m))]
+            }
+            Kind::EmbedBwd => {
+                let tokens = inputs[0].i32();
+                check_tokens(&spec.name, tokens, g.vocab)?;
+                vec![HostTensor::F32(kernels::embed_scatter(tokens, f32s(1), g.vocab, g.m))]
+            }
+            Kind::BlockFwd => {
+                let slices: Vec<&[f32]> = (0..9).map(f32s).collect();
+                let bp = BlockParams::new(&slices);
+                let x = f32s(9);
+                let c = g.capacity(x.len() / g.m / g.n_seq);
+                let (y, _) = model::block_forward(&g, &bp, x, c);
+                vec![HostTensor::F32(y)]
+            }
+            Kind::BlockBwd => {
+                let slices: Vec<&[f32]> = (0..9).map(f32s).collect();
+                let bp = BlockParams::new(&slices);
+                let x = f32s(9);
+                let dy = f32s(10);
+                let c = g.capacity(x.len() / g.m / g.n_seq);
+                let (grads, dx) = model::block_backward(&g, &bp, x, c, dy);
+                let mut out: Vec<HostTensor> = grads.into_iter().map(HostTensor::F32).collect();
+                out.push(HostTensor::F32(dx));
+                out
+            }
+            Kind::HeadLoss => {
+                let tokens = inputs[3].i32();
+                check_tokens(&spec.name, tokens, g.vocab)?;
+                let b = tokens.len() / g.n_seq;
+                let (loss, dxf, de, dn) = model::head_loss(&g, f32s(0), f32s(1), f32s(2), tokens, b);
+                vec![
+                    HostTensor::F32(vec![loss]),
+                    HostTensor::F32(dxf),
+                    HostTensor::F32(de),
+                    HostTensor::F32(dn),
+                ]
+            }
+            Kind::GradStep => {
+                let n_params = inputs.len() - 1;
+                let params: Vec<&[f32]> = (0..n_params).map(f32s).collect();
+                let tokens = inputs[n_params].i32();
+                check_tokens(&spec.name, tokens, g.vocab)?;
+                let b_full = tokens.len() / g.n_seq;
+                let (loss, grads) = model::grad_step(&g, &params, tokens, b_full);
+                let mut out = vec![HostTensor::F32(vec![loss])];
+                out.extend(grads.into_iter().map(HostTensor::F32));
+                out
+            }
+            Kind::TrainStep => {
+                let n_params = (inputs.len() - 2) / 2;
+                let params: Vec<&[f32]> = (0..n_params).map(f32s).collect();
+                let moms: Vec<&[f32]> = (n_params..2 * n_params).map(f32s).collect();
+                let tokens = inputs[2 * n_params].i32();
+                check_tokens(&spec.name, tokens, g.vocab)?;
+                let lr = f32s(2 * n_params + 1)[0];
+                let b_full = tokens.len() / g.n_seq;
+                let (new_p, new_m, loss) = model::train_step(&g, &params, &moms, tokens, lr, b_full);
+                let mut out: Vec<HostTensor> = new_p.into_iter().map(HostTensor::F32).collect();
+                out.extend(new_m.into_iter().map(HostTensor::F32));
+                out.push(HostTensor::F32(vec![loss]));
+                out
+            }
+            Kind::AtFwd => {
+                let slices: Vec<&[f32]> = (0..7).map(f32s).collect();
+                let atp = AtParams::new(&slices);
+                let model::AtState { mha, u, gating } = model::at_forward(&g, &atp, f32s(7));
+                vec![
+                    HostTensor::F32(mha.h),
+                    HostTensor::F32(u),
+                    HostTensor::F32(gating.probs),
+                    HostTensor::I32(gating.idx),
+                    HostTensor::F32(gating.gate),
+                ]
+            }
+            Kind::AtBwd => {
+                let slices: Vec<&[f32]> = (0..7).map(f32s).collect();
+                let atp = AtParams::new(&slices);
+                let x = f32s(7);
+                let st = model::at_forward(&g, &atp, x);
+                let (grads, dx) = model::at_backward(&g, &atp, x, &st, f32s(8), f32s(9), f32s(10));
+                let mut out: Vec<HostTensor> = grads.into_iter().map(HostTensor::F32).collect();
+                out.push(HostTensor::F32(dx));
+                out
+            }
+            Kind::ExpFwd => {
+                let (el, m, h) = expert_dims(spec);
+                let cw = spec.inputs[2].shape[1];
+                vec![HostTensor::F32(kernels::expert_ffn(
+                    f32s(2),
+                    f32s(0),
+                    f32s(1),
+                    el,
+                    cw,
+                    m,
+                    h,
+                ))]
+            }
+            Kind::ExpBwd => {
+                let (el, m, h) = expert_dims(spec);
+                let cw = spec.inputs[2].shape[1];
+                let (dxd, dw1, dw2) = kernels::expert_ffn_bwd(f32s(2), f32s(0), f32s(1), f32s(3), el, cw, m, h);
+                vec![HostTensor::F32(dw1), HostTensor::F32(dw2), HostTensor::F32(dxd)]
+            }
+        };
+        Ok(out)
+    }
+}
+
+/// Expert-shard dims of the EP pieces from the manifest: w1 is `(el, m, h)`.
+fn expert_dims(spec: &ArtifactSpec) -> (usize, usize, usize) {
+    let s = &spec.inputs[0].shape;
+    (s[0], s[1], s[2])
+}
+
+/// Token ids index the embedding table directly; the engine validates
+/// shapes/dtypes but not values, so reject out-of-range ids here with an
+/// error instead of a slice-OOB panic deep inside a kernel.
+fn check_tokens(name: &str, tokens: &[i32], vocab: usize) -> Result<()> {
+    for &t in tokens {
+        if t < 0 || t as usize >= vocab {
+            bail!("{name}: token id {t} out of range [0, {vocab})");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Native manifest synthesis (mirror of python/compile/aot.py)
+// ---------------------------------------------------------------------------
+
+/// Configs the native manifest covers — the AOT exporter's defaults.
+pub const NATIVE_CONFIGS: [&str; 2] = ["tiny", "e2e"];
+
+/// Microbatch pipelining degree of the exported block pieces (aot.py
+/// `micro_r` default).
+pub const NATIVE_MICRO_R: usize = 2;
+
+/// EP worker count of the tiny config's expert-parallel pieces.
+pub const NATIVE_EP_WORKERS: usize = 2;
+
+fn f32_spec(name: &str, shape: &[usize]) -> BufSpec {
+    BufSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: Dtype::F32,
+    }
+}
+
+fn i32_spec(name: &str, shape: &[usize]) -> BufSpec {
+    BufSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: Dtype::I32,
+    }
+}
+
+/// Canonical flat parameter order (mirror of model.py `param_spec`).
+fn param_shapes(cfg: &ModelCfg) -> Vec<(String, Vec<usize>)> {
+    let (m, e, h) = (cfg.m, cfg.e, cfg.h);
+    let mut out = vec![("embed".to_string(), vec![cfg.vocab, m])];
+    for l in 0..cfg.l {
+        out.push((format!("block{l}.n1"), vec![m]));
+        out.push((format!("block{l}.wq"), vec![m, m]));
+        out.push((format!("block{l}.wk"), vec![m, m]));
+        out.push((format!("block{l}.wv"), vec![m, m]));
+        out.push((format!("block{l}.wo"), vec![m, m]));
+        out.push((format!("block{l}.n2"), vec![m]));
+        out.push((format!("block{l}.wg"), vec![m, e]));
+        out.push((format!("block{l}.w1"), vec![e, m, h]));
+        out.push((format!("block{l}.w2"), vec![e, h, m]));
+    }
+    out.push(("normf".to_string(), vec![m]));
+    out
+}
+
+/// Synthesize the manifest `python -m compile.aot` would write for the
+/// native configs — same artifact names and positional buffer signatures
+/// — so the engine runs with no `artifacts/` directory at all. `dir` is
+/// recorded as the (possibly nonexistent) artifacts directory.
+pub fn native_manifest(dir: &Path) -> Manifest {
+    let mut man = Manifest {
+        artifacts: Vec::new(),
+        dir: dir.to_path_buf(),
+    };
+    for name in NATIVE_CONFIGS {
+        let cfg = preset(name).expect("native config preset");
+        let ep = if name == "tiny" { NATIVE_EP_WORKERS } else { 0 };
+        push_config(&mut man, &cfg, NATIVE_MICRO_R, ep);
+    }
+    man
+}
+
+fn push_config(man: &mut Manifest, cfg: &ModelCfg, micro_r: usize, ep_workers: usize) {
+    let c = cfg.name;
+    let ps = param_shapes(cfg);
+    let with_prefix =
+        |pre: &str| -> Vec<BufSpec> { ps.iter().map(|(n, s)| f32_spec(&format!("{pre}.{n}"), s)).collect() };
+    let mut art = |name: String, inputs: Vec<BufSpec>, outputs: Vec<BufSpec>| {
+        man.artifacts.push(ArtifactSpec {
+            file: format!("{name}.hlo.txt"),
+            config: c.to_string(),
+            name,
+            inputs,
+            outputs,
+        });
+    };
+
+    // --- fused train_step / grad_step over the full batch ---
+    let tok = i32_spec("tokens", &[cfg.b, cfg.n]);
+    let mut ins = with_prefix("param");
+    ins.extend(with_prefix("mom"));
+    ins.push(tok.clone());
+    ins.push(f32_spec("lr", &[]));
+    let mut outs = with_prefix("new_param");
+    outs.extend(with_prefix("new_mom"));
+    outs.push(f32_spec("loss", &[]));
+    art(format!("train_step_{c}"), ins, outs);
+
+    let mut ins = with_prefix("param");
+    ins.push(tok);
+    let mut outs = vec![f32_spec("loss", &[])];
+    outs.extend(with_prefix("grad"));
+    art(format!("grad_step_{c}"), ins, outs);
+
+    // --- per-block pieces at microbatch granularity ---
+    let bm = cfg.b / micro_r;
+    let tm = bm * cfg.n;
+    let x_sp = f32_spec("x", &[tm, cfg.m]);
+    let tok_m = i32_spec("tokens", &[bm, cfg.n]);
+    let block_name = |(n, _): &(String, Vec<usize>)| n.split_once('.').expect("block tensor name").1.to_string();
+    let block9: Vec<BufSpec> = ps[1..10]
+        .iter()
+        .map(|t| f32_spec(&format!("bp.{}", block_name(t)), &t.1))
+        .collect();
+    let grad9: Vec<BufSpec> = ps[1..10]
+        .iter()
+        .map(|t| f32_spec(&format!("grad.{}", block_name(t)), &t.1))
+        .collect();
+
+    let mut ins = block9.clone();
+    ins.push(x_sp.clone());
+    art(format!("block_fwd_{c}"), ins, vec![f32_spec("y", &[tm, cfg.m])]);
+
+    let mut ins = block9.clone();
+    ins.push(x_sp.clone());
+    ins.push(f32_spec("dy", &[tm, cfg.m]));
+    let mut outs = grad9.clone();
+    outs.push(f32_spec("dx", &[tm, cfg.m]));
+    art(format!("block_bwd_{c}"), ins, outs);
+
+    let emb = f32_spec("param.embed", &[cfg.vocab, cfg.m]);
+    let nf = f32_spec("param.normf", &[cfg.m]);
+    art(
+        format!("embed_fwd_{c}"),
+        vec![emb.clone(), tok_m.clone()],
+        vec![f32_spec("x", &[tm, cfg.m])],
+    );
+    art(
+        format!("head_loss_{c}"),
+        vec![emb.clone(), nf, f32_spec("xf", &[tm, cfg.m]), tok_m.clone()],
+        vec![
+            f32_spec("loss", &[]),
+            f32_spec("dxf", &[tm, cfg.m]),
+            f32_spec("grad.embed_head", &[cfg.vocab, cfg.m]),
+            f32_spec("grad.normf", &[cfg.m]),
+        ],
+    );
+    art(
+        format!("embed_bwd_{c}"),
+        vec![tok_m, f32_spec("dx", &[tm, cfg.m])],
+        vec![f32_spec("grad.embed", &[cfg.vocab, cfg.m])],
+    );
+
+    // --- expert-parallel layer pieces (fixed worker count) ---
+    if ep_workers > 0 {
+        let p = ep_workers;
+        let el = cfg.e / p;
+        let cap = Geo::from_cfg(cfg).capacity(cfg.b); // per-source-worker per-expert capacity
+        let cw = cap * p;
+        let atp: Vec<BufSpec> = ps[1..8]
+            .iter()
+            .map(|t| f32_spec(&format!("atp.{}", block_name(t)), &t.1))
+            .collect();
+
+        let mut ins = atp.clone();
+        ins.push(x_sp.clone());
+        art(
+            format!("at_fwd_{c}"),
+            ins,
+            vec![
+                f32_spec("h", &[tm, cfg.m]),
+                f32_spec("u", &[tm, cfg.m]),
+                f32_spec("probs", &[tm, cfg.e]),
+                i32_spec("idx", &[tm, cfg.k]),
+                f32_spec("gate", &[tm, cfg.k]),
+            ],
+        );
+
+        let mut ins = atp;
+        ins.push(x_sp.clone());
+        ins.push(f32_spec("dh", &[tm, cfg.m]));
+        ins.push(f32_spec("du", &[tm, cfg.m]));
+        ins.push(f32_spec("dgate", &[tm, cfg.k]));
+        let mut outs: Vec<BufSpec> = grad9[..7].to_vec();
+        outs.push(f32_spec("dx", &[tm, cfg.m]));
+        art(format!("at_bwd_{c}"), ins, outs);
+
+        let w1 = f32_spec("w1", &[el, cfg.m, cfg.h]);
+        let w2 = f32_spec("w2", &[el, cfg.h, cfg.m]);
+        let xd = f32_spec("xd", &[el, cw, cfg.m]);
+        art(
+            format!("exp_fwd_{c}"),
+            vec![w1.clone(), w2.clone(), xd.clone()],
+            vec![f32_spec("yd", &[el, cw, cfg.m])],
+        );
+        art(
+            format!("exp_bwd_{c}"),
+            vec![w1, w2, xd, f32_spec("dyd", &[el, cw, cfg.m])],
+            vec![
+                f32_spec("dw1", &[el, cfg.m, cfg.h]),
+                f32_spec("dw2", &[el, cfg.h, cfg.m]),
+                f32_spec("dxd", &[el, cw, cfg.m]),
+            ],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_manifest_mirrors_aot_exporter() {
+        let man = native_manifest(Path::new("/nonexistent"));
+        for name in [
+            "train_step_tiny",
+            "grad_step_tiny",
+            "block_fwd_tiny",
+            "block_bwd_tiny",
+            "embed_fwd_tiny",
+            "head_loss_tiny",
+            "embed_bwd_tiny",
+            "at_fwd_tiny",
+            "at_bwd_tiny",
+            "exp_fwd_tiny",
+            "exp_bwd_tiny",
+            "train_step_e2e",
+            "grad_step_e2e",
+            "block_fwd_e2e",
+        ] {
+            assert!(man.get(name).is_ok(), "missing {name}");
+        }
+        // e2e has no EP pieces (mirrors aot.py)
+        assert!(man.get("at_fwd_e2e").is_err());
+
+        // tiny train_step: 2 * (2 + 2*9) params+moms + tokens + lr
+        let ts = man.get("train_step_tiny").unwrap();
+        assert_eq!(ts.inputs.len(), 2 * 20 + 2);
+        assert_eq!(ts.outputs.len(), 2 * 20 + 1);
+        assert_eq!(ts.inputs[0].name, "param.embed");
+        assert_eq!(ts.inputs[0].shape, vec![128, 32]);
+        let tokspec = ts.inputs.iter().find(|b| b.name == "tokens").unwrap();
+        assert_eq!(tokspec.shape, vec![2, 16]);
+        assert_eq!(tokspec.dtype, Dtype::I32);
+
+        // microbatch pieces: bm = B / micro_r = 1, Tm = 16
+        let bf = man.get("block_fwd_tiny").unwrap();
+        assert_eq!(bf.inputs.len(), 10);
+        assert_eq!(bf.inputs[9].shape, vec![16, 32]);
+        assert_eq!(bf.inputs[0].name, "bp.n1");
+
+        // EP pieces: el = 2, cw = C*P = 64*2 = 128
+        let ef = man.get("exp_fwd_tiny").unwrap();
+        assert_eq!(ef.inputs[2].shape, vec![2, 128, 32]);
+    }
+
+    #[test]
+    fn out_of_range_tokens_error_instead_of_panicking() {
+        let man = native_manifest(Path::new("/nonexistent"));
+        let be = NativeBackend;
+        let spec = man.get("embed_fwd_tiny").unwrap();
+        let embed = HostTensor::F32(vec![0.0; spec.inputs[0].elems()]);
+        for bad in [128i32, -1] {
+            let tokens = HostTensor::I32(vec![bad; spec.inputs[1].elems()]);
+            let err = format!("{:#}", be.execute(spec, &[&embed, &tokens]).unwrap_err());
+            assert!(err.contains("out of range"), "{err}");
+        }
+    }
+
+    #[test]
+    fn kind_resolution_requires_known_entry_and_config() {
+        let man = native_manifest(Path::new("/nonexistent"));
+        let be = NativeBackend;
+        for a in &man.artifacts {
+            assert!(be.supports(a), "native manifest artifact {} unsupported", a.name);
+        }
+        let bogus = ArtifactSpec {
+            name: "foo_tiny".into(),
+            file: String::new(),
+            config: "tiny".into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        assert!(!be.supports(&bogus));
+        let unknown_cfg = ArtifactSpec {
+            name: "block_fwd_nosuch".into(),
+            file: String::new(),
+            config: "nosuch".into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        assert!(!be.supports(&unknown_cfg));
+    }
+}

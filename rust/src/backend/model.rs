@@ -1,0 +1,532 @@
+//! Native model pieces — host-side mirror of `python/compile/model.py`.
+//!
+//! Same architecture, same parameter order, same numerics: a pre-norm
+//! decoder-only transformer whose feed-forward layers are MoE layers
+//! (RMSNorm -> MHA -> residual -> RMSNorm -> top-k gate -> dispatch ->
+//! expert FFN -> combine -> residual) with a tied-embedding LM head.
+//! Routing reuses [`crate::cluster::dispatch`]/[`crate::cluster::combine`]
+//! (the GShard mirror the EP path already ships) so the monolithic block
+//! and the expert-parallel A2A path share one routing implementation.
+//!
+//! Backward passes rematerialize the forward (as the AOT `block_bwd`
+//! artifact does) so no residual state crosses the caller boundary.
+
+use crate::cluster::{combine, combine_bwd, dispatch, dispatch_bwd, Routing};
+
+use super::kernels as kn;
+
+/// Geometry of one model configuration (paper Table 2 notation).
+#[derive(Clone, Copy, Debug)]
+pub struct Geo {
+    /// Embedding size M.
+    pub m: usize,
+    /// Experts per MoE layer E.
+    pub e: usize,
+    /// Expert hidden size H.
+    pub h: usize,
+    /// Top-k experts per token.
+    pub top_k: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Tokens per sample N.
+    pub n_seq: usize,
+    /// Capacity factor f.
+    pub f: f64,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+impl Geo {
+    pub fn from_cfg(cfg: &crate::config::ModelCfg) -> Geo {
+        Geo {
+            m: cfg.m,
+            e: cfg.e,
+            h: cfg.h,
+            top_k: cfg.k,
+            n_heads: cfg.n_heads,
+            n_seq: cfg.n,
+            f: cfg.f,
+            vocab: cfg.vocab,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.m / self.n_heads
+    }
+
+    /// GShard capacity for a batch of `b` samples: `int(f*k*b*N/E)`, at
+    /// least 1 (python `int()` truncation, mirroring `MoEConfig.capacity`).
+    pub fn capacity(&self, b: usize) -> usize {
+        ((self.f * (self.top_k * b * self.n_seq) as f64 / self.e as f64) as usize).max(1)
+    }
+}
+
+/// The 7 replicated (data-parallel) tensors of one block, canonical order.
+#[derive(Clone, Copy)]
+pub struct AtParams<'a> {
+    pub n1: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub n2: &'a [f32],
+    pub wg: &'a [f32],
+}
+
+impl<'a> AtParams<'a> {
+    pub fn new(p: &[&'a [f32]]) -> AtParams<'a> {
+        AtParams {
+            n1: p[0],
+            wq: p[1],
+            wk: p[2],
+            wv: p[3],
+            wo: p[4],
+            n2: p[5],
+            wg: p[6],
+        }
+    }
+}
+
+/// All 9 tensors of one block: the AT part plus the expert weights.
+#[derive(Clone, Copy)]
+pub struct BlockParams<'a> {
+    pub at: AtParams<'a>,
+    pub w1: &'a [f32],
+    pub w2: &'a [f32],
+}
+
+impl<'a> BlockParams<'a> {
+    pub fn new(p: &[&'a [f32]]) -> BlockParams<'a> {
+        BlockParams {
+            at: AtParams::new(p),
+            w1: p[7],
+            w2: p[8],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head attention
+// ---------------------------------------------------------------------------
+
+/// Copy head `hh` of sample `bi` out of a flat `(T, M)` tensor into `(N, hd)`.
+fn gather_head(xf: &[f32], bi: usize, hh: usize, n_seq: usize, m: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_seq * hd];
+    for i in 0..n_seq {
+        let src = (bi * n_seq + i) * m + hh * hd;
+        out[i * hd..(i + 1) * hd].copy_from_slice(&xf[src..src + hd]);
+    }
+    out
+}
+
+/// Inverse of [`gather_head`]: write `(N, hd)` back into the flat tensor.
+fn scatter_head(xf: &mut [f32], o: &[f32], bi: usize, hh: usize, n_seq: usize, m: usize, hd: usize) {
+    for i in 0..n_seq {
+        let dst = (bi * n_seq + i) * m + hh * hd;
+        xf[dst..dst + hd].copy_from_slice(&o[i * hd..(i + 1) * hd]);
+    }
+}
+
+/// Saved forward state of [`mha_forward`] (consumed by the backward).
+pub struct MhaState {
+    xn: Vec<f32>,
+    qf: Vec<f32>,
+    kf: Vec<f32>,
+    vf: Vec<f32>,
+    /// Per-(sample, head) attention weight matrices `(N, N)`.
+    att_w: Vec<Vec<f32>>,
+    of: Vec<f32>,
+    /// Residual-stream output `h = x + attn(x) @ wo`.
+    pub h: Vec<f32>,
+}
+
+/// Multi-head causal attention over flat `(T, M)` tokens (model.py `mha`).
+pub fn mha_forward(g: &Geo, p: &AtParams, x: &[f32]) -> MhaState {
+    let t = x.len() / g.m;
+    let b = t / g.n_seq;
+    let hd = g.head_dim();
+    let xn = kn::rmsnorm(x, p.n1);
+    let qf = kn::matmul(&xn, p.wq, t, g.m, g.m);
+    let kf = kn::matmul(&xn, p.wk, t, g.m, g.m);
+    let vf = kn::matmul(&xn, p.wv, t, g.m, g.m);
+    let mut of = vec![0.0f32; t * g.m];
+    let mut att_w = Vec::with_capacity(b * g.n_heads);
+    for bi in 0..b {
+        for hh in 0..g.n_heads {
+            let q = gather_head(&qf, bi, hh, g.n_seq, g.m, hd);
+            let k = gather_head(&kf, bi, hh, g.n_seq, g.m, hd);
+            let v = gather_head(&vf, bi, hh, g.n_seq, g.m, hd);
+            let (w, o) = kn::attention_causal(&q, &k, &v, g.n_seq, hd);
+            scatter_head(&mut of, &o, bi, hh, g.n_seq, g.m, hd);
+            att_w.push(w);
+        }
+    }
+    let proj = kn::matmul(&of, p.wo, t, g.m, g.m);
+    let h: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+    MhaState {
+        xn,
+        qf,
+        kf,
+        vf,
+        att_w,
+        of,
+        h,
+    }
+}
+
+/// Backward of [`mha_forward`]: returns `([dn1, dwq, dwk, dwv, dwo], dx)`
+/// for the residual-stream cotangent `dh`.
+pub fn mha_backward(g: &Geo, p: &AtParams, x: &[f32], st: &MhaState, dh: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let t = x.len() / g.m;
+    let b = t / g.n_seq;
+    let hd = g.head_dim();
+    // h = x + of @ wo
+    let dof = kn::matmul_nt(dh, p.wo, t, g.m, g.m);
+    let dwo = kn::matmul_tn(&st.of, dh, t, g.m, g.m);
+    let mut dqf = vec![0.0f32; t * g.m];
+    let mut dkf = vec![0.0f32; t * g.m];
+    let mut dvf = vec![0.0f32; t * g.m];
+    for bi in 0..b {
+        for hh in 0..g.n_heads {
+            let q = gather_head(&st.qf, bi, hh, g.n_seq, g.m, hd);
+            let k = gather_head(&st.kf, bi, hh, g.n_seq, g.m, hd);
+            let v = gather_head(&st.vf, bi, hh, g.n_seq, g.m, hd);
+            let doh = gather_head(&dof, bi, hh, g.n_seq, g.m, hd);
+            let w = &st.att_w[bi * g.n_heads + hh];
+            let (dq, dk, dv) = kn::attention_causal_bwd(&q, &k, &v, w, &doh, g.n_seq, hd);
+            scatter_head(&mut dqf, &dq, bi, hh, g.n_seq, g.m, hd);
+            scatter_head(&mut dkf, &dk, bi, hh, g.n_seq, g.m, hd);
+            scatter_head(&mut dvf, &dv, bi, hh, g.n_seq, g.m, hd);
+        }
+    }
+    let dwq = kn::matmul_tn(&st.xn, &dqf, t, g.m, g.m);
+    let dwk = kn::matmul_tn(&st.xn, &dkf, t, g.m, g.m);
+    let dwv = kn::matmul_tn(&st.xn, &dvf, t, g.m, g.m);
+    let mut dxn = kn::matmul_nt(&dqf, p.wq, t, g.m, g.m);
+    let dxn_k = kn::matmul_nt(&dkf, p.wk, t, g.m, g.m);
+    let dxn_v = kn::matmul_nt(&dvf, p.wv, t, g.m, g.m);
+    for ((a, b_), c) in dxn.iter_mut().zip(&dxn_k).zip(&dxn_v) {
+        *a += b_ + c;
+    }
+    let (dx_norm, dn1) = kn::rmsnorm_bwd(x, p.n1, &dxn);
+    let dx: Vec<f32> = dh.iter().zip(&dx_norm).map(|(a, b)| a + b).collect();
+    (vec![dn1, dwq, dwk, dwv, dwo], dx)
+}
+
+// ---------------------------------------------------------------------------
+// AT piece (MHA + gating) and the full transformer block
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of [`at_forward`].
+pub struct AtState {
+    pub mha: MhaState,
+    /// Normed MoE input `u = rmsnorm(h, n2)`.
+    pub u: Vec<f32>,
+    pub gating: kn::Gating,
+}
+
+/// The paper's AT task (model.py `at_task`): MHA + gating for one
+/// (micro)batch of flat `(T, M)` tokens.
+pub fn at_forward(g: &Geo, p: &AtParams, x: &[f32]) -> AtState {
+    let t = x.len() / g.m;
+    let mha = mha_forward(g, p, x);
+    let u = kn::rmsnorm(&mha.h, p.n2);
+    let logits = kn::matmul(&u, p.wg, t, g.m, g.e);
+    let gating = kn::gating_topk(&logits, g.e, g.top_k);
+    AtState { mha, u, gating }
+}
+
+/// Backward of [`at_forward`] with cotangents for its `(h, u, gate)`
+/// outputs (model.py `at_bwd`; the probs output is a non-differentiated
+/// auxiliary). Returns `([dn1, dwq, dwk, dwv, dwo, dn2, dwg], dx)`.
+pub fn at_backward(
+    g: &Geo,
+    p: &AtParams,
+    x: &[f32],
+    st: &AtState,
+    dh: &[f32],
+    du: &[f32],
+    dgate: &[f32],
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let t = x.len() / g.m;
+    let dlogits = kn::gating_topk_bwd(&st.gating, g.e, g.top_k, dgate);
+    let dwg = kn::matmul_tn(&st.u, &dlogits, t, g.m, g.e);
+    let mut du_int = kn::matmul_nt(&dlogits, p.wg, t, g.e, g.m);
+    for (a, b) in du_int.iter_mut().zip(du) {
+        *a += b;
+    }
+    let (dh_norm, dn2) = kn::rmsnorm_bwd(&st.mha.h, p.n2, &du_int);
+    let dh_tot: Vec<f32> = dh.iter().zip(&dh_norm).map(|(a, b)| a + b).collect();
+    let (mut grads, dx) = mha_backward(g, p, x, &st.mha, &dh_tot);
+    grads.push(dn2);
+    grads.push(dwg);
+    (grads, dx)
+}
+
+/// Saved forward state of [`block_forward`].
+pub struct BlockState {
+    pub at: AtState,
+    pub routing: Routing,
+    pub expert_out: Vec<f32>,
+}
+
+/// One transformer block forward over flat `(T, M)` activations with
+/// per-expert capacity `c` (model.py `block_fwd`). Returns `(y, state)`.
+pub fn block_forward(g: &Geo, p: &BlockParams, x: &[f32], c: usize) -> (Vec<f32>, BlockState) {
+    let at = at_forward(g, &p.at, x);
+    let routing = dispatch(&at.u, &at.gating.idx, at.gating.gate.len(), g.e, c, g.m);
+    let expert_out = kn::expert_ffn(&routing.disp, p.w1, p.w2, g.e, c, g.m, g.h);
+    let yc = combine(&expert_out, &routing, &at.gating.gate);
+    let y: Vec<f32> = at.mha.h.iter().zip(&yc).map(|(a, b)| a + b).collect();
+    (
+        y,
+        BlockState {
+            at,
+            routing,
+            expert_out,
+        },
+    )
+}
+
+/// Recompute-based VJP of one block (model.py `block_bwd`): returns the
+/// 9 parameter grads in canonical order plus `dx`.
+pub fn block_backward(g: &Geo, p: &BlockParams, x: &[f32], c: usize, dy: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let (_, st) = block_forward(g, p, x, c);
+    let (dout, dgate) = combine_bwd(dy, &st.expert_out, &st.routing, &st.at.gating.gate);
+    let (ddisp, dw1, dw2) = kn::expert_ffn_bwd(&st.routing.disp, p.w1, p.w2, &dout, g.e, c, g.m, g.h);
+    let du = dispatch_bwd(&ddisp, &st.routing);
+    let (mut grads, dx) = at_backward(g, &p.at, x, &st.at, dy, &du, &dgate);
+    grads.push(dw1);
+    grads.push(dw2);
+    (grads, dx)
+}
+
+// ---------------------------------------------------------------------------
+// Embedding / LM head / loss
+// ---------------------------------------------------------------------------
+
+/// Final norm + tied LM head + next-token cross-entropy, fused fwd+bwd
+/// (model.py `head_loss_fwd_bwd`). Returns `(loss, dxf, dembed, dnormf)`.
+pub fn head_loss(
+    g: &Geo,
+    embed: &[f32],
+    normf: &[f32],
+    xf: &[f32],
+    tokens: &[i32],
+    b: usize,
+) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (n, m, v) = (g.n_seq, g.m, g.vocab);
+    let t = b * n;
+    let xn = kn::rmsnorm(xf, normf);
+    let logits = kn::matmul_nt(&xn, embed, t, m, v);
+    let count = (b * (n - 1)) as f32;
+    let mut loss = 0.0f64;
+    let mut dlogits = vec![0.0f32; t * v];
+    for bi in 0..b {
+        for pos in 0..n - 1 {
+            let ti = bi * n + pos;
+            let row = &logits[ti * v..(ti + 1) * v];
+            let target = tokens[bi * n + pos + 1] as usize;
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sumexp: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
+            let logz = mx + sumexp.ln();
+            loss += (logz - row[target]) as f64;
+            let drow = &mut dlogits[ti * v..(ti + 1) * v];
+            for (j, (dv, &l)) in drow.iter_mut().zip(row).enumerate() {
+                let p = (l - logz).exp();
+                *dv = (p - if j == target { 1.0 } else { 0.0 }) / count;
+            }
+        }
+    }
+    let loss = (loss / count as f64) as f32;
+    let dxn = kn::matmul(&dlogits, embed, t, v, m);
+    let dembed = kn::matmul_tn(&dlogits, &xn, t, v, m);
+    let (dxf, dnormf) = kn::rmsnorm_bwd(xf, normf, &dxn);
+    (loss, dxf, dembed, dnormf)
+}
+
+// ---------------------------------------------------------------------------
+// Fused train/grad step over the whole parameter list
+// ---------------------------------------------------------------------------
+
+/// Per-worker full-model gradient (model.py `grad_step`): forward through
+/// all blocks, head loss, full backward. `params` is the canonical flat
+/// list (embed, L x 9 block tensors, normf). Returns `(loss, grads)` with
+/// the tied embedding gradient already summed (input lookup + LM head).
+pub fn grad_step(g: &Geo, params: &[&[f32]], tokens: &[i32], b_full: usize) -> (f32, Vec<Vec<f32>>) {
+    let n_params = params.len();
+    let l_blocks = (n_params - 2) / 9;
+    let c = g.capacity(b_full);
+    let blocks: Vec<BlockParams> = (0..l_blocks)
+        .map(|l| BlockParams::new(&params[1 + l * 9..1 + (l + 1) * 9]))
+        .collect();
+
+    let mut xs = Vec::with_capacity(l_blocks + 1);
+    xs.push(kn::embed_lookup(params[0], tokens, g.m));
+    for bp in &blocks {
+        let (y, _) = block_forward(g, bp, xs.last().unwrap(), c);
+        xs.push(y);
+    }
+    let (loss, dxf, de_head, dnormf) = head_loss(g, params[0], params[n_params - 1], &xs[l_blocks], tokens, b_full);
+
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n_params];
+    let mut dx = dxf;
+    for l in (0..l_blocks).rev() {
+        let (bg, dx_next) = block_backward(g, &blocks[l], &xs[l], c, &dx);
+        for (ti, gt) in bg.into_iter().enumerate() {
+            grads[1 + l * 9 + ti] = gt;
+        }
+        dx = dx_next;
+    }
+    let mut de = kn::embed_scatter(tokens, &dx, g.vocab, g.m);
+    for (a, b) in de.iter_mut().zip(&de_head) {
+        *a += b;
+    }
+    grads[0] = de;
+    grads[n_params - 1] = dnormf;
+    (loss, grads)
+}
+
+/// Momentum coefficient baked into the fused `train_step` artifact
+/// (aot.py lowers `model.train_step` at its default `momentum=0.9`).
+pub const TRAIN_STEP_MOMENTUM: f32 = 0.9;
+
+/// Fused single-process SGD+momentum step (model.py `train_step`):
+/// returns `(new_params, new_moms, loss)`.
+pub fn train_step(
+    g: &Geo,
+    params: &[&[f32]],
+    moms: &[&[f32]],
+    tokens: &[i32],
+    lr: f32,
+    b_full: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
+    let (loss, grads) = grad_step(g, params, tokens, b_full);
+    let mut new_params = Vec::with_capacity(params.len());
+    let mut new_moms = Vec::with_capacity(params.len());
+    for ((p, m), gr) in params.iter().zip(moms).zip(&grads) {
+        let nm: Vec<f32> = m.iter().zip(gr).map(|(mv, gv)| TRAIN_STEP_MOMENTUM * mv + gv).collect();
+        let np: Vec<f32> = p.iter().zip(&nm).map(|(pv, mv)| pv - lr * mv).collect();
+        new_params.push(np);
+        new_moms.push(nm);
+    }
+    (new_params, new_moms, loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::util::Rng;
+
+    fn tiny_geo() -> Geo {
+        Geo::from_cfg(&preset("tiny").unwrap())
+    }
+
+    fn rand_params(g: &Geo, l_blocks: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut shapes: Vec<usize> = vec![g.vocab * g.m];
+        for _ in 0..l_blocks {
+            shapes.extend([
+                g.m,
+                g.m * g.m,
+                g.m * g.m,
+                g.m * g.m,
+                g.m * g.m,
+                g.m,
+                g.m * g.e,
+                g.e * g.m * g.h,
+                g.e * g.h * g.m,
+            ]);
+        }
+        shapes.push(g.m);
+        shapes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal() as f32 * 0.15).collect())
+            .collect()
+    }
+
+    #[test]
+    fn capacity_matches_python_int_truncation() {
+        let g = tiny_geo();
+        // tiny: f=4, k=2, N=16, E=4 -> C(b) = 32 b
+        assert_eq!(g.capacity(1), 32);
+        assert_eq!(g.capacity(2), 64);
+    }
+
+    #[test]
+    fn block_forward_is_deterministic_and_shaped() {
+        let g = tiny_geo();
+        let params = rand_params(&g, 1, 3);
+        let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let bp = BlockParams::new(&refs[1..10]);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..16 * g.m).map(|_| rng.normal() as f32 * 0.5).collect();
+        let (y1, _) = block_forward(&g, &bp, &x, g.capacity(1));
+        let (y2, _) = block_forward(&g, &bp, &x, g.capacity(1));
+        assert_eq!(y1, y2);
+        assert_eq!(y1.len(), x.len());
+        assert!(y1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn grad_step_loss_near_uniform_at_random_init() {
+        // random small params on vocab=128 => loss near ln(128) = 4.85
+        let g = tiny_geo();
+        let params = rand_params(&g, 2, 11);
+        let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(4);
+        let tokens: Vec<i32> = (0..2 * g.n_seq).map(|_| rng.below(g.vocab) as i32).collect();
+        let (loss, grads) = grad_step(&g, &refs, &tokens, 2);
+        assert!(loss > 2.0 && loss < 8.0, "loss={loss}");
+        assert_eq!(grads.len(), refs.len());
+        for (gr, p) in grads.iter().zip(&params) {
+            assert_eq!(gr.len(), p.len());
+            assert!(gr.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn train_step_applies_sgd_with_momentum() {
+        let g = tiny_geo();
+        let params = rand_params(&g, 2, 13);
+        let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let moms: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mrefs: Vec<&[f32]> = moms.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(5);
+        let tokens: Vec<i32> = (0..2 * g.n_seq).map(|_| rng.below(g.vocab) as i32).collect();
+        let lr = 0.05f32;
+        let (new_p, new_m, loss) = train_step(&g, &refs, &mrefs, &tokens, lr, 2);
+        let (loss_g, grads) = grad_step(&g, &refs, &tokens, 2);
+        assert_eq!(loss, loss_g);
+        // zero momentum: new_m == g and new_p == p - lr*g exactly
+        for i in 0..refs.len() {
+            assert_eq!(new_m[i], grads[i], "mom {i}");
+            for ((np, p), gv) in new_p[i].iter().zip(&params[i]).zip(&grads[i]) {
+                assert_eq!(*np, p - lr * gv);
+            }
+        }
+    }
+
+    #[test]
+    fn microbatched_blocks_match_full_batch_drop_free() {
+        // The Appendix-H identity the trainer relies on: with the tiny
+        // config's generous capacity, running each microbatch through the
+        // block equals running the concatenated batch (same per-token math).
+        let g = tiny_geo();
+        let params = rand_params(&g, 1, 7);
+        let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let bp = BlockParams::new(&refs[1..10]);
+        let mut rng = Rng::new(21);
+        let t_m = g.n_seq * g.m;
+        let xa: Vec<f32> = (0..t_m).map(|_| rng.normal() as f32 * 0.5).collect();
+        let xb: Vec<f32> = (0..t_m).map(|_| rng.normal() as f32 * 0.5).collect();
+        let (ya, _) = block_forward(&g, &bp, &xa, g.capacity(1));
+        let (yb, _) = block_forward(&g, &bp, &xb, g.capacity(1));
+        let xfull: Vec<f32> = xa.iter().chain(&xb).cloned().collect();
+        let (yfull, _) = block_forward(&g, &bp, &xfull, g.capacity(2));
+        for (i, (want, got)) in ya.iter().chain(&yb).zip(&yfull).enumerate() {
+            assert!((want - got).abs() < 1e-5, "elem {i}: {want} vs {got}");
+        }
+    }
+}

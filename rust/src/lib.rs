@@ -19,7 +19,12 @@
 //! * [`sweep`] — the multi-core work-stealing sweep engine driving the
 //!   675-layer evaluation grid (Fig. 6) and the other table benches,
 //! * [`bo`] — Gaussian-process Bayesian optimization from scratch,
-//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts,
+//! * [`runtime`] — manifest-driven execution engine with pluggable
+//!   backends (PJRT artifact loader + the native dispatch),
+//! * [`backend`] — the native execution backend: dense f32 CPU kernels
+//!   (matmul, attention, gating, expert FFN, ... and their backward
+//!   passes) that run every AOT entry point in-tree, so end-to-end
+//!   training works with no JAX and no artifacts,
 //! * [`cluster`] — an in-process multi-worker distributed runtime with
 //!   real chunked ring all-reduce and real A2A dispatch,
 //! * [`trainer`] — the end-to-end training loop,
@@ -30,6 +35,7 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! binary is self-contained afterwards.
 
+pub mod backend;
 pub mod bo;
 pub mod cli;
 pub mod cluster;

@@ -38,8 +38,9 @@ fn main() {
                  \n\
                  simulate --model <name> --gpus N --r R --sp MB    per-framework iteration time\n\
                  sweep    --gpus N --limit K --threads T            customized-layer speedup sweep (parallel)\n\
-                 tune     --model <name> --gpus N --samples K       BO-tune S_p\n\
-                 train    --config tiny|e2e --workers P --steps N   real distributed training\n\
+                 tune     --model <name> --gpus N --samples K       BO-tune S_p (--batch B: parallel rounds)\n\
+                 train    --config tiny|e2e --workers P --steps N   real distributed training (native backend\n\
+                                                                    by default; AOT artifacts when built)\n\
                  info                                               presets + artifacts"
             );
         }
@@ -131,13 +132,19 @@ fn cmd_tune(args: &Args) {
     let model = args.get_or("model", "BERT-Large-MoE");
     let gpus = args.usize_or("gpus", 16);
     let samples = args.usize_or("samples", 8);
+    let batch = args.usize_or("batch", 1);
     let cfg = preset(&model).expect("unknown model");
     let cluster = ClusterProfile::cluster1(gpus);
     let max = cfg.ar_bytes_per_block() * 1.0;
     let mut bo = BoTuner::new(max, args.usize_or("seed", 42) as u64);
-    let best = bo.tune(samples, |sp| {
-        iteration_time(&cfg, &cluster, &Policy::flow_moe(2, sp)).0
-    });
+    let obj = |sp: f64| iteration_time(&cfg, &cluster, &Policy::flow_moe(2, sp)).0;
+    let best = if batch > 1 {
+        // batched acquisition: rounds of up to `batch` candidates
+        // evaluated in parallel on the sweep engine, `samples` total
+        bo.tune_batch(samples, batch, obj)
+    } else {
+        bo.tune(samples, obj)
+    };
     println!("samples:");
     for (sp, t) in &bo.observations {
         println!("  S_p = {:7.3} MB -> {} ms", sp / 1e6, fmt_ms(t * 1e3));
@@ -200,19 +207,24 @@ fn cmd_info(args: &Args) {
     }
     t.print();
     let dir = artifacts_dir(args);
-    match flowmoe::runtime::Manifest::load(&dir) {
-        Ok(m) => {
-            println!("\nartifacts ({}):", dir.display());
-            for a in &m.artifacts {
-                println!(
-                    "  {} [{}] {} in / {} out",
-                    a.name,
-                    a.config,
-                    a.inputs.len(),
-                    a.outputs.len()
-                );
-            }
+    let (m, source) = match flowmoe::runtime::Manifest::load(&dir) {
+        Ok(m) => (m, format!("AOT artifacts at {}", dir.display())),
+        Err(e) => {
+            println!("\nartifacts: {e:#}");
+            (
+                flowmoe::backend::native_manifest(&dir),
+                "native in-tree backend (no artifacts needed)".to_string(),
+            )
         }
-        Err(e) => println!("\nartifacts: {e:#}"),
+    };
+    println!("\nexecutable entry points ({source}):");
+    for a in &m.artifacts {
+        println!(
+            "  {} [{}] {} in / {} out",
+            a.name,
+            a.config,
+            a.inputs.len(),
+            a.outputs.len()
+        );
     }
 }

@@ -1,20 +1,24 @@
-//! PJRT runtime: load AOT HLO-text artifacts and (when a backend is
-//! linked) execute them.
+//! Execution runtime: manifest-driven engine with pluggable backends.
 //!
 //! The engine is manifest-driven: `python/compile/aot.py` writes
 //! `artifacts/manifest.txt` describing every artifact's positional
 //! input/output buffers (name, shape, dtype); the engine parses it so no
-//! shape knowledge is duplicated in rust.
+//! shape knowledge is duplicated in rust. When no `manifest.txt` exists
+//! (a clean checkout), [`Engine::new`] synthesizes the equivalent
+//! manifest natively ([`crate::backend::native_manifest`]) — same
+//! artifact names and signatures — so nothing downstream needs artifacts.
 //!
-//! **Offline stub:** the crate's no-external-deps policy (see
-//! `rust/README.md`) means no XLA/PJRT client crate is linked. Manifest
-//! parsing, shape/dtype validation and buffer marshalling are fully
-//! functional; [`Engine::prepare`]/[`Engine::run`] return a clear
-//! "PJRT backend unavailable" error instead of executing HLO. Callers
-//! that need artifacts skip gracefully when `manifest.txt` is absent
-//! (the load error says to run `make artifacts`), so the simulation,
-//! scheduling and sweep stack — everything tier-1 exercises — never
-//! touches execution.
+//! Execution goes through the [`Backend`] trait:
+//!
+//! * [`crate::backend::NativeBackend`] (the default) runs every exported
+//!   entry point on in-tree dense f32 CPU kernels — the end-to-end
+//!   trainer, the EP cluster and the integration tests execute with no
+//!   JAX, no artifacts and no external crates.
+//! * [`PjRtStub`] models the not-yet-linked XLA/PJRT client: it supports
+//!   nothing and returns the "PJRT backend unavailable" error. A future
+//!   PJRT-enabled build would add a third implementation that compiles
+//!   and executes the HLO files; the marshalling contract (validate
+//!   once, reuse device buffers across executions) is already in place.
 //!
 //! Each worker thread owns its own [`Engine`] (real PJRT clients are
 //! `Rc`-backed and not `Send`); host tensors ([`HostTensor`]) are plain
@@ -194,29 +198,85 @@ impl PjRtBuffer {
     }
 }
 
-/// Per-thread PJRT engine: parses the artifact manifest, validates and
-/// marshals buffers, and (with a linked backend) compiles + executes the
-/// HLO artifacts. See the module docs for the offline-stub behaviour.
-#[derive(Debug)]
+/// An execution backend: maps a manifest artifact to an implementation
+/// and runs it on validated host tensors. Implementations: the in-tree
+/// [`crate::backend::NativeBackend`] (dense f32 CPU kernels) and the
+/// [`PjRtStub`] placeholder for a linked XLA/PJRT client.
+pub trait Backend: Send {
+    /// Short backend id (shown by `flowmoe info`).
+    fn name(&self) -> &'static str;
+    /// Whether this backend can execute `spec` (without external files).
+    fn supports(&self, spec: &ArtifactSpec) -> bool;
+    /// Execute one artifact. Inputs are already validated against the
+    /// manifest signature; outputs must match it positionally.
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Placeholder for the not-yet-linked XLA/PJRT client: supports no
+/// artifact and reports the canonical "backend unavailable" error.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PjRtStub;
+
+impl Backend for PjRtStub {
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    fn supports(&self, _spec: &ArtifactSpec) -> bool {
+        false
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        Err(anyhow!("execute {}: {BACKEND_UNAVAILABLE}", spec.name))
+    }
+}
+
+/// Per-thread engine: parses (or synthesizes) the artifact manifest,
+/// validates and marshals buffers, and dispatches execution to its
+/// [`Backend`]. See the module docs for backend selection.
 pub struct Engine {
     manifest: Manifest,
-    /// Artifacts whose HLO files have been located (stub for the real
-    /// compile cache).
+    backend: Box<dyn Backend>,
+    /// Artifacts resolved to an executable (native kernel or located HLO
+    /// file — the analogue of a real client's compile cache).
     prepared: HashSet<String>,
 }
 
-/// Error text shared by every execution entry point of the stub.
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend.name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+/// Error text for artifacts no configured backend can execute.
 const BACKEND_UNAVAILABLE: &str =
     "PJRT backend unavailable: this is the offline no-external-deps build \
-     (no XLA/PJRT client crate linked). Manifest parsing and buffer \
-     validation work; HLO execution requires a PJRT-enabled build \
-     (see rust/README.md)";
+     (no XLA/PJRT client crate linked) and the artifact has no native \
+     kernel. Manifest parsing and buffer validation work; executing \
+     arbitrary HLO requires a PJRT-enabled build (see rust/README.md)";
 
 impl Engine {
+    /// Engine on the default backend (the in-tree native kernels). Loads
+    /// `manifest.txt` from `artifacts_dir` when present; otherwise
+    /// synthesizes the native manifest, so a clean checkout executes the
+    /// `tiny`/`e2e` configs with no artifacts at all.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        Engine::with_backend(artifacts_dir, Box::new(crate::backend::NativeBackend))
+    }
+
+    /// Engine on an explicit backend (pluggable dispatch).
+    pub fn with_backend(artifacts_dir: &Path, backend: Box<dyn Backend>) -> Result<Engine> {
+        let manifest = if artifacts_dir.join("manifest.txt").exists() {
+            Manifest::load(artifacts_dir)?
+        } else {
+            crate::backend::native_manifest(artifacts_dir)
+        };
         Ok(Engine {
             manifest,
+            backend,
             prepared: HashSet::new(),
         })
     }
@@ -225,19 +285,27 @@ impl Engine {
         &self.manifest
     }
 
-    /// Locate an artifact's HLO file (the stub analogue of compiling it
-    /// and caching the executable).
+    /// Short id of the executing backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Resolve an artifact to something executable: a native kernel, or
+    /// (for artifacts the backend cannot run) its HLO file on disk — the
+    /// analogue of compiling it and caching the executable.
     pub fn prepare(&mut self, name: &str) -> Result<()> {
         if self.prepared.contains(name) {
             return Ok(());
         }
         let spec = self.manifest.get(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
-        if !path.exists() {
-            bail!(
-                "artifact {name}: HLO file {} missing (run `make artifacts`)",
-                path.display()
-            );
+        if !self.backend.supports(&spec) {
+            let path = self.manifest.dir.join(&spec.file);
+            if !path.exists() {
+                bail!(
+                    "artifact {name}: HLO file {} missing (run `make artifacts`)",
+                    path.display()
+                );
+            }
         }
         self.prepared.insert(name.to_string());
         Ok(())
@@ -248,21 +316,8 @@ impl Engine {
     /// executions (§Perf: parameters are read by 4R block calls per step
     /// — marshalling them per call dominated the step time).
     pub fn buffer(&self, t: &HostTensor, s: &BufSpec) -> Result<PjRtBuffer> {
-        if t.len() != s.elems() {
-            bail!(
-                "input {} has {} elems, expected {} ({:?})",
-                s.name,
-                t.len(),
-                s.elems(),
-                s.shape
-            );
-        }
-        match (t, s.dtype) {
-            (HostTensor::F32(_), Dtype::F32) | (HostTensor::I32(_), Dtype::I32) => {
-                Ok(PjRtBuffer { data: t.clone() })
-            }
-            _ => bail!("input {} dtype mismatch", s.name),
-        }
+        validate_input(t, s)?;
+        Ok(PjRtBuffer { data: t.clone() })
     }
 
     /// Upload an f32 slice directly (no HostTensor wrapper).
@@ -275,19 +330,22 @@ impl Engine {
         })
     }
 
-    /// Execute with caller-owned device buffers (the leak-free hot path
-    /// of a real backend). Errors in the offline stub.
+    /// Execute with caller-owned device buffers (the leak-free hot path:
+    /// buffers were validated once at marshalling time and are reused
+    /// across many executions).
     pub fn run_buffers(&mut self, name: &str, bufs: &[&PjRtBuffer]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
-        let spec = self.manifest.get(name)?;
+        let spec = self.manifest.get(name)?.clone();
         if bufs.len() != spec.inputs.len() {
             bail!("{name}: {} inputs given, {} expected", bufs.len(), spec.inputs.len());
         }
-        Err(anyhow!("execute {name}: {BACKEND_UNAVAILABLE}"))
+        let inputs: Vec<&HostTensor> = bufs.iter().map(|b| b.host()).collect();
+        self.dispatch(&spec, &inputs)
     }
 
-    /// Execute an artifact with host tensors; validates shapes against the
-    /// manifest. Errors in the offline stub.
+    /// Execute an artifact with host tensors; validates shapes/dtypes
+    /// against the manifest in place (no buffer copies) before
+    /// dispatching to the backend.
     pub fn run(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
         let spec = self.manifest.get(name)?.clone();
@@ -298,12 +356,51 @@ impl Engine {
                 spec.inputs.len()
             );
         }
-        let mut bufs = Vec::with_capacity(inputs.len());
         for (t, s) in inputs.iter().zip(&spec.inputs) {
-            bufs.push(self.buffer(t, s).map_err(|e| anyhow!("{name}: {e:#}"))?);
+            validate_input(t, s).map_err(|e| anyhow!("{name}: {e:#}"))?;
         }
-        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
-        self.run_buffers(name, &refs)
+        self.dispatch(&spec, inputs)
+    }
+
+    /// Shared execution tail: backend dispatch + output validation.
+    fn dispatch(&mut self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let name = &spec.name;
+        if !self.backend.supports(spec) {
+            return Err(anyhow!("execute {name}: {BACKEND_UNAVAILABLE}"));
+        }
+        let outs = self.backend.execute(spec, inputs)?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: backend {} returned {} outputs, manifest says {}",
+                self.backend.name(),
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        for (t, s) in outs.iter().zip(&spec.outputs) {
+            if t.len() != s.elems() {
+                bail!("{name}: output {} has {} elems, expected {}", s.name, t.len(), s.elems());
+            }
+        }
+        Ok(outs)
+    }
+}
+
+/// Shape/dtype validation of one input against its manifest spec
+/// (shared by the copying `buffer` path and the zero-copy `run` path).
+fn validate_input(t: &HostTensor, s: &BufSpec) -> Result<()> {
+    if t.len() != s.elems() {
+        bail!(
+            "input {} has {} elems, expected {} ({:?})",
+            s.name,
+            t.len(),
+            s.elems(),
+            s.shape
+        );
+    }
+    match (t, s.dtype) {
+        (HostTensor::F32(_), Dtype::F32) | (HostTensor::I32(_), Dtype::I32) => Ok(()),
+        _ => bail!("input {} dtype mismatch", s.name),
     }
 }
 
@@ -348,12 +445,49 @@ mod tests {
     }
 
     #[test]
-    fn missing_manifest_error_says_make_artifacts() {
+    fn missing_manifest_load_error_says_make_artifacts() {
         let dir =
             std::env::temp_dir().join(format!("flowmoe_manifest_absent_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let _ = std::fs::remove_file(dir.join("manifest.txt"));
-        let err = format!("{:#}", Engine::new(&dir).unwrap_err());
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn engine_without_artifacts_uses_native_backend() {
+        let dir = std::env::temp_dir().join(format!("flowmoe_native_engine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.txt"));
+        let mut engine = Engine::new(&dir).unwrap();
+        assert_eq!(engine.backend_name(), "native");
+        // the synthesized manifest carries the AOT exporter's artifacts...
+        assert!(engine.manifest().get("train_step_tiny").is_ok());
+        assert!(engine.manifest().get("block_fwd_e2e").is_ok());
+        // ...and they actually execute: a tiny embed_fwd end to end
+        let spec = engine.manifest().get("embed_fwd_tiny").unwrap().clone();
+        let embed = HostTensor::F32(vec![0.5; spec.inputs[0].elems()]);
+        let tokens = HostTensor::I32(vec![3; spec.inputs[1].elems()]);
+        let outs = engine.run("embed_fwd_tiny", &[&embed, &tokens]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].len(), spec.outputs[0].elems());
+        let want = 0.5 * (32f64).sqrt() as f32;
+        assert!(outs[0].f32().iter().all(|&v| (v - want).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pjrt_stub_backend_reports_unavailable() {
+        let dir = std::env::temp_dir().join(format!("flowmoe_stub_engine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.txt"));
+        let mut engine = Engine::with_backend(&dir, Box::new(PjRtStub)).unwrap();
+        assert_eq!(engine.backend_name(), "pjrt-stub");
+        let spec = engine.manifest().get("embed_fwd_tiny").unwrap().clone();
+        let embed = HostTensor::F32(vec![0.0; spec.inputs[0].elems()]);
+        let tokens = HostTensor::I32(vec![0; spec.inputs[1].elems()]);
+        // no native kernels and no HLO files on disk: prepare points at
+        // `make artifacts`
+        let err = format!("{:#}", engine.run("embed_fwd_tiny", &[&embed, &tokens]).unwrap_err());
         assert!(err.contains("make artifacts"), "{err}");
     }
 

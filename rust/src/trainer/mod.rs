@@ -1,6 +1,8 @@
-//! End-to-end distributed trainer (real PJRT compute, real collectives).
+//! End-to-end distributed trainer (real compute, real collectives). The
+//! compute runs through [`crate::runtime::Engine`], i.e. on the native
+//! in-tree backend from a clean checkout or on AOT artifacts when built.
 //!
-//! Two execution paths over the same AOT artifacts:
+//! Two execution paths over the same entry points:
 //!
 //! * [`train_fused`] — single-process fused `train_step` HLO (oracle /
 //!   baseline path).

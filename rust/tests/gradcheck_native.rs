@@ -1,0 +1,359 @@
+//! Finite-difference gradient checks for every native-backend kernel.
+//!
+//! Each backward pass is compared against a central-difference
+//! directional derivative of its forward: for scalar objective
+//! `L(x) = <f(x), W>` and random direction `v`,
+//! `(L(x + eps v) - L(x - eps v)) / (2 eps) ~= <grad, v>`.
+//!
+//! The MoE path contains two non-smooth choices — the top-k expert
+//! selection and the ReLU kink. Selection-dependent checks re-read the
+//! routing at both perturbed points and redraw the direction if the
+//! discrete choice flipped (the gradient is defined piecewise, exactly
+//! like `lax.top_k`'s), so the checks are deterministic under the fixed
+//! seeds.
+
+use flowmoe::backend::kernels as kn;
+use flowmoe::backend::model as nm;
+use flowmoe::util::Rng;
+
+fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * s).collect()
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Central finite difference of `f` along `v` at `x`.
+fn fd_dir<F: Fn(&[f32]) -> f32>(f: F, x: &[f32], v: &[f32], eps: f32) -> f32 {
+    let xp: Vec<f32> = x.iter().zip(v).map(|(a, b)| a + eps * b).collect();
+    let xm: Vec<f32> = x.iter().zip(v).map(|(a, b)| a - eps * b).collect();
+    (f(&xp) - f(&xm)) / (2.0 * eps)
+}
+
+#[track_caller]
+fn assert_close(fd: f32, an: f32, rel: f32, what: &str) {
+    let tol = rel * (fd.abs() + an.abs()) + 3e-3;
+    assert!((fd - an).abs() <= tol, "{what}: fd={fd} analytic={an}");
+}
+
+const EPS: f32 = 1e-3;
+
+#[test]
+fn gradcheck_rmsnorm() {
+    let mut rng = Rng::new(101);
+    let (t, m) = (4usize, 8usize);
+    let x = randv(&mut rng, t * m, 1.0);
+    let g = randv(&mut rng, m, 0.8);
+    let w = randv(&mut rng, t * m, 1.0);
+    let (dx, dg) = kn::rmsnorm_bwd(&x, &g, &w);
+
+    let vx = randv(&mut rng, t * m, 1.0);
+    let fd = fd_dir(|xx| dot(&kn::rmsnorm(xx, &g), &w), &x, &vx, EPS);
+    assert_close(fd, dot(&dx, &vx), 0.02, "rmsnorm dx");
+
+    let vg = randv(&mut rng, m, 1.0);
+    let fd = fd_dir(|gg| dot(&kn::rmsnorm(&x, gg), &w), &g, &vg, EPS);
+    assert_close(fd, dot(&dg, &vg), 0.02, "rmsnorm dg");
+}
+
+#[test]
+fn gradcheck_matmul_adjoints() {
+    // d<A@B, W>/dA = W @ B^T, d<A@B, W>/dB = A^T @ W
+    let mut rng = Rng::new(102);
+    let (m, k, n) = (3usize, 4usize, 5usize);
+    let a = randv(&mut rng, m * k, 1.0);
+    let b = randv(&mut rng, k * n, 1.0);
+    let w = randv(&mut rng, m * n, 1.0);
+    let da = kn::matmul_nt(&w, &b, m, n, k);
+    let db = kn::matmul_tn(&a, &w, m, k, n);
+
+    let va = randv(&mut rng, m * k, 1.0);
+    let fd = fd_dir(|aa| dot(&kn::matmul(aa, &b, m, k, n), &w), &a, &va, EPS);
+    assert_close(fd, dot(&da, &va), 0.02, "matmul dA");
+
+    let vb = randv(&mut rng, k * n, 1.0);
+    let fd = fd_dir(|bb| dot(&kn::matmul(&a, bb, m, k, n), &w), &b, &vb, EPS);
+    assert_close(fd, dot(&db, &vb), 0.02, "matmul dB");
+}
+
+#[test]
+fn gradcheck_attention_causal() {
+    let mut rng = Rng::new(103);
+    let (n, d) = (5usize, 4usize);
+    let q = randv(&mut rng, n * d, 0.7);
+    let k = randv(&mut rng, n * d, 0.7);
+    let v = randv(&mut rng, n * d, 0.7);
+    let w = randv(&mut rng, n * d, 1.0);
+    let (att, _) = kn::attention_causal(&q, &k, &v, n, d);
+    let (dq, dk, dv) = kn::attention_causal_bwd(&q, &k, &v, &att, &w, n, d);
+
+    let obj_q = |qq: &[f32]| dot(&kn::attention_causal(qq, &k, &v, n, d).1, &w);
+    let vq = randv(&mut rng, n * d, 1.0);
+    assert_close(fd_dir(obj_q, &q, &vq, EPS), dot(&dq, &vq), 0.02, "attention dq");
+
+    let obj_k = |kk: &[f32]| dot(&kn::attention_causal(&q, kk, &v, n, d).1, &w);
+    let vk = randv(&mut rng, n * d, 1.0);
+    assert_close(fd_dir(obj_k, &k, &vk, EPS), dot(&dk, &vk), 0.02, "attention dk");
+
+    let obj_v = |vv: &[f32]| dot(&kn::attention_causal(&q, &k, vv, n, d).1, &w);
+    let vv = randv(&mut rng, n * d, 1.0);
+    assert_close(fd_dir(obj_v, &v, &vv, EPS), dot(&dv, &vv), 0.02, "attention dv");
+}
+
+#[test]
+fn gradcheck_gating_topk() {
+    // fixed logits with healthy margins: the top-k selection cannot flip
+    // under the eps-sized perturbation, so the piecewise gradient is exact
+    let (e, k) = (4usize, 2usize);
+    let logits = vec![
+        1.2, -0.8, 0.4, -1.5, //
+        -0.3, 2.0, 0.9, -1.1, //
+        0.1, -2.0, 1.4, 0.7,
+    ];
+    let mut rng = Rng::new(104);
+    let w = randv(&mut rng, 3 * k, 1.0);
+    let g = kn::gating_topk(&logits, e, k);
+    let dlogits = kn::gating_topk_bwd(&g, e, k, &w);
+
+    let v = randv(&mut rng, logits.len(), 1.0);
+    let fd = fd_dir(
+        |ll| dot(&kn::gating_topk(ll, e, k).gate, &w),
+        &logits,
+        &v,
+        EPS,
+    );
+    assert_close(fd, dot(&dlogits, &v), 0.02, "gating dlogits");
+}
+
+#[test]
+fn gradcheck_expert_ffn() {
+    // inputs chosen positive so the fd interval stays off the ReLU kink
+    // (the kink subgradient itself is pinned by a hand-computed unit test
+    // in backend::kernels)
+    let mut rng = Rng::new(105);
+    let (e, c, m, h) = (2usize, 3usize, 4usize, 5usize);
+    let x: Vec<f32> = (0..e * c * m).map(|_| 0.5 + rng.f32()).collect();
+    let w1: Vec<f32> = (0..e * m * h).map(|_| 0.2 + rng.f32()).collect();
+    let w2 = randv(&mut rng, e * h * m, 0.5);
+    let w = randv(&mut rng, e * c * m, 1.0);
+    let (dx, dw1, dw2) = kn::expert_ffn_bwd(&x, &w1, &w2, &w, e, c, m, h);
+
+    let obj_x = |xx: &[f32]| dot(&kn::expert_ffn(xx, &w1, &w2, e, c, m, h), &w);
+    let vx = randv(&mut rng, x.len(), 1.0);
+    assert_close(fd_dir(obj_x, &x, &vx, EPS), dot(&dx, &vx), 0.03, "expert_ffn dx");
+
+    let obj_w1 = |ww: &[f32]| dot(&kn::expert_ffn(&x, ww, &w2, e, c, m, h), &w);
+    let v1 = randv(&mut rng, w1.len(), 1.0);
+    assert_close(fd_dir(obj_w1, &w1, &v1, EPS), dot(&dw1, &v1), 0.03, "expert_ffn dw1");
+
+    let obj_w2 = |ww: &[f32]| dot(&kn::expert_ffn(&x, &w1, ww, e, c, m, h), &w);
+    let v2 = randv(&mut rng, w2.len(), 1.0);
+    assert_close(fd_dir(obj_w2, &w2, &v2, EPS), dot(&dw2, &v2), 0.03, "expert_ffn dw2");
+}
+
+fn small_geo() -> nm::Geo {
+    nm::Geo {
+        m: 8,
+        e: 4,
+        h: 6,
+        top_k: 2,
+        n_heads: 2,
+        n_seq: 4,
+        f: 4.0,
+        vocab: 10,
+    }
+}
+
+#[test]
+fn gradcheck_head_loss() {
+    let g = small_geo();
+    let b = 2usize;
+    let t = b * g.n_seq;
+    let mut rng = Rng::new(106);
+    let xf = randv(&mut rng, t * g.m, 1.0);
+    let normf: Vec<f32> = (0..g.m).map(|_| 1.0 + rng.normal() as f32 * 0.1).collect();
+    let embed = randv(&mut rng, g.vocab * g.m, 0.5);
+    let tokens: Vec<i32> = (0..t).map(|_| rng.below(g.vocab) as i32).collect();
+    let (_, dxf, dembed, dnormf) = nm::head_loss(&g, &embed, &normf, &xf, &tokens, b);
+
+    let vx = randv(&mut rng, xf.len(), 1.0);
+    let fd = fd_dir(|xx| nm::head_loss(&g, &embed, &normf, xx, &tokens, b).0, &xf, &vx, EPS);
+    assert_close(fd, dot(&dxf, &vx), 0.02, "head_loss dxf");
+
+    let vn = randv(&mut rng, normf.len(), 1.0);
+    let fd = fd_dir(|nn| nm::head_loss(&g, &embed, nn, &xf, &tokens, b).0, &normf, &vn, EPS);
+    assert_close(fd, dot(&dnormf, &vn), 0.02, "head_loss dnormf");
+
+    let ve = randv(&mut rng, embed.len(), 1.0);
+    let fd = fd_dir(|ee| nm::head_loss(&g, ee, &normf, &xf, &tokens, b).0, &embed, &ve, EPS);
+    assert_close(fd, dot(&dembed, &ve), 0.02, "head_loss dembed");
+}
+
+/// Block parameter tensors for the small geometry, scaled so activations
+/// stay O(1) and routing margins are healthy.
+fn small_block_params(g: &nm::Geo, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let m = g.m;
+    let gain = |rng: &mut Rng| (0..m).map(|_| 1.0 + rng.normal() as f32 * 0.1).collect::<Vec<f32>>();
+    let mut out = vec![gain(rng)]; // n1
+    for _ in 0..4 {
+        out.push(randv(rng, m * m, 0.35)); // wq wk wv wo
+    }
+    out.push(gain(rng)); // n2
+    out.push(randv(rng, m * g.e, 1.0)); // wg (spread logits for stable top-k)
+    out.push(randv(rng, g.e * m * g.h, 0.35)); // w1
+    out.push(randv(rng, g.e * g.h * m, 0.35)); // w2
+    out
+}
+
+const BLOCK_TENSOR_NAMES: [&str; 9] = ["n1", "wq", "wk", "wv", "wo", "n2", "wg", "w1", "w2"];
+
+#[test]
+fn gradcheck_block_backward_all_tensors() {
+    let g = small_geo();
+    let c = g.capacity(1); // drop-free: 8 slots >= 4 tokens
+    let mut rng = Rng::new(107);
+    let params = small_block_params(&g, &mut rng);
+    let x = randv(&mut rng, g.n_seq * g.m, 0.7);
+    let w = randv(&mut rng, g.n_seq * g.m, 1.0);
+
+    let eval = |ps: &[Vec<f32>], xx: &[f32]| -> (f32, Vec<i32>) {
+        let refs: Vec<&[f32]> = ps.iter().map(|v| v.as_slice()).collect();
+        let bp = nm::BlockParams::new(&refs);
+        let (y, st) = nm::block_forward(&g, &bp, xx, c);
+        (dot(&y, &w), st.at.gating.idx)
+    };
+    let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let bp = nm::BlockParams::new(&refs);
+    let (grads, dx) = nm::block_backward(&g, &bp, &x, c, &w);
+    let (_, base_idx) = eval(&params, &x);
+
+    for (ti, name) in BLOCK_TENSOR_NAMES.iter().enumerate() {
+        // redraw the direction if the top-k routing flips inside the fd
+        // interval (piecewise-defined gradient, cf. module docs)
+        let mut checked = false;
+        for _attempt in 0..10 {
+            let v = randv(&mut rng, params[ti].len(), 1.0);
+            let mut pp = params.clone();
+            for (a, b) in pp[ti].iter_mut().zip(&v) {
+                *a += EPS * b;
+            }
+            let (fp, ip) = eval(&pp, &x);
+            for (a, b) in pp[ti].iter_mut().zip(&v) {
+                *a -= 2.0 * EPS * b;
+            }
+            let (fm, im) = eval(&pp, &x);
+            if ip != base_idx || im != base_idx {
+                continue;
+            }
+            let fd = (fp - fm) / (2.0 * EPS);
+            assert_close(fd, dot(&grads[ti], &v), 0.05, &format!("block d{name}"));
+            checked = true;
+            break;
+        }
+        assert!(checked, "no routing-stable fd direction found for {name}");
+    }
+
+    // dx
+    let mut checked = false;
+    for _attempt in 0..10 {
+        let v = randv(&mut rng, x.len(), 1.0);
+        let xp: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a + EPS * b).collect();
+        let xm: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a - EPS * b).collect();
+        let (fp, ip) = eval(&params, &xp);
+        let (fm, im) = eval(&params, &xm);
+        if ip != base_idx || im != base_idx {
+            continue;
+        }
+        let fd = (fp - fm) / (2.0 * EPS);
+        assert_close(fd, dot(&dx, &v), 0.05, "block dx");
+        checked = true;
+        break;
+    }
+    assert!(checked, "no routing-stable fd direction found for dx");
+}
+
+#[test]
+fn gradcheck_at_backward_all_tensors() {
+    let g = small_geo();
+    let mut rng = Rng::new(108);
+    let params = small_block_params(&g, &mut rng);
+    let x = randv(&mut rng, g.n_seq * g.m, 0.7);
+    let t = g.n_seq;
+    let ch = randv(&mut rng, t * g.m, 1.0);
+    let cu = randv(&mut rng, t * g.m, 1.0);
+    let cg = randv(&mut rng, t * g.top_k, 1.0);
+
+    let eval = |ps: &[Vec<f32>], xx: &[f32]| -> (f32, Vec<i32>) {
+        let refs: Vec<&[f32]> = ps[..7].iter().map(|v| v.as_slice()).collect();
+        let atp = nm::AtParams::new(&refs);
+        let st = nm::at_forward(&g, &atp, xx);
+        let obj = dot(&st.mha.h, &ch) + dot(&st.u, &cu) + dot(&st.gating.gate, &cg);
+        (obj, st.gating.idx)
+    };
+    let refs: Vec<&[f32]> = params[..7].iter().map(|v| v.as_slice()).collect();
+    let atp = nm::AtParams::new(&refs);
+    let st = nm::at_forward(&g, &atp, &x);
+    let (grads, dx) = nm::at_backward(&g, &atp, &x, &st, &ch, &cu, &cg);
+    let base_idx = st.gating.idx.clone();
+
+    for (ti, name) in BLOCK_TENSOR_NAMES[..7].iter().enumerate() {
+        let mut checked = false;
+        for _attempt in 0..10 {
+            let v = randv(&mut rng, params[ti].len(), 1.0);
+            let mut pp = params.clone();
+            for (a, b) in pp[ti].iter_mut().zip(&v) {
+                *a += EPS * b;
+            }
+            let (fp, ip) = eval(&pp, &x);
+            for (a, b) in pp[ti].iter_mut().zip(&v) {
+                *a -= 2.0 * EPS * b;
+            }
+            let (fm, im) = eval(&pp, &x);
+            if ip != base_idx || im != base_idx {
+                continue;
+            }
+            let fd = (fp - fm) / (2.0 * EPS);
+            assert_close(fd, dot(&grads[ti], &v), 0.05, &format!("at d{name}"));
+            checked = true;
+            break;
+        }
+        assert!(checked, "no routing-stable fd direction found for at {name}");
+    }
+
+    let mut checked = false;
+    for _attempt in 0..10 {
+        let v = randv(&mut rng, x.len(), 1.0);
+        let xp: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a + EPS * b).collect();
+        let xm: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a - EPS * b).collect();
+        let (fp, ip) = eval(&params, &xp);
+        let (fm, im) = eval(&params, &xm);
+        if ip != base_idx || im != base_idx {
+            continue;
+        }
+        let fd = (fp - fm) / (2.0 * EPS);
+        assert_close(fd, dot(&dx, &v), 0.05, "at dx");
+        checked = true;
+        break;
+    }
+    assert!(checked, "no routing-stable fd direction found for at dx");
+}
+
+#[test]
+fn gradcheck_embed_lookup_scatter_adjoint() {
+    // <lookup(E), dX> == <E, scatter(dX)> on a larger random instance
+    let mut rng = Rng::new(109);
+    let (v, m, t) = (12usize, 6usize, 9usize);
+    let embed = randv(&mut rng, v * m, 1.0);
+    let tokens: Vec<i32> = (0..t).map(|_| rng.below(v) as i32).collect();
+    let dx = randv(&mut rng, t * m, 1.0);
+    let lhs = dot(&kn::embed_lookup(&embed, &tokens, m), &dx);
+    let rhs = dot(&embed, &kn::embed_scatter(&tokens, &dx, v, m));
+    assert_close(lhs, rhs, 0.001, "embed adjoint");
+
+    // fd: embedding enters linearly, so the fd matches to fp noise
+    let ve = randv(&mut rng, embed.len(), 1.0);
+    let fd = fd_dir(|ee| dot(&kn::embed_lookup(ee, &tokens, m), &dx), &embed, &ve, EPS);
+    let an = dot(&kn::embed_scatter(&tokens, &dx, v, m), &ve);
+    assert_close(fd, an, 0.02, "embed fd");
+}
