@@ -1,17 +1,89 @@
 //! Hot-path microbenchmarks (§Perf): DAG build + simulation throughput
 //! (the coordinator's scheduling cost), the multi-core sweep engine vs
-//! the old serial loop, and the comm-pool / collective primitives.
+//! the old serial loop, the native backend's blocked/parallel kernels
+//! (serial vs M-banded parallel; results must be byte-identical), and
+//! the comm-pool / collective primitives.
 //! Paper bound: scheduling overhead < 1 % of iteration time.
+//!
+//! Kernel rows are also written to `BENCH_native_kernels.json`
+//! (op, shape, naive_ms, serial_ms, parallel_ms, speedup) so future PRs
+//! have a machine-readable perf trajectory to compare against.
 
 use std::sync::Arc;
 
+use flowmoe::backend::kernels as kn;
 use flowmoe::commpool::{partition_ranges, Collective, CommPool};
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::cost::TaskCosts;
 use flowmoe::report::{bench_median, Table};
 use flowmoe::sched::{build_dag, Policy};
 use flowmoe::sim::simulate;
-use flowmoe::sweep::{flow_vs_sche, valid_custom_layers, Sweeper};
+use flowmoe::sweep::{flow_vs_sche, scope, valid_custom_layers, Sweeper};
+use flowmoe::util::Rng;
+
+/// Byte-equality of two f32 buffers.
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Time one native kernel serial (budget 1) vs parallel (default
+/// budget), asserting byte-identical repeated parallel runs and
+/// parallel == serial. Appends two table rows and one JSON results row;
+/// returns the parallel speedup.
+fn bench_kernel(
+    op: &str,
+    shape: &str,
+    f: &dyn Fn() -> Vec<f32>,
+    naive: Option<&dyn Fn() -> Vec<f32>>,
+    t: &mut Table,
+    json_rows: &mut Vec<String>,
+) -> f64 {
+    let serial_out = scope::with_budget(1, f);
+    let par1 = f();
+    let par2 = f();
+    assert!(bits_eq(&par1, &par2), "{op} {shape}: repeated parallel runs differ");
+    assert!(bits_eq(&serial_out, &par1), "{op} {shape}: parallel differs from serial");
+    let s_serial = scope::with_budget(1, || {
+        bench_median(1, 3, || {
+            std::hint::black_box(f().len());
+        })
+    });
+    let s_par = bench_median(1, 3, || {
+        std::hint::black_box(f().len());
+    });
+    let speedup = s_serial / s_par;
+    let mut json = format!("{{\"op\":\"{op}\",\"shape\":\"{shape}\"");
+    if let Some(nf) = naive {
+        let s_naive = bench_median(1, 3, || {
+            std::hint::black_box(nf().len());
+        });
+        t.row(vec![
+            format!("kernel {op} {shape}, blocked serial"),
+            format!("{:.1} ms", s_serial * 1e3),
+            format!("{:.2}x vs naive ({:.1} ms)", s_naive / s_serial, s_naive * 1e3),
+        ]);
+        json.push_str(&format!(",\"naive_ms\":{:.3}", s_naive * 1e3));
+    } else {
+        t.row(vec![
+            format!("kernel {op} {shape}, blocked serial"),
+            format!("{:.1} ms", s_serial * 1e3),
+            "-".into(),
+        ]);
+    }
+    t.row(vec![
+        format!("kernel {op} {shape}, parallel ({} threads)", scope::current_budget()),
+        format!("{:.1} ms", s_par * 1e3),
+        format!("{speedup:.2}x vs serial, byte-identical"),
+    ]);
+    json.push_str(&format!(
+        ",\"serial_ms\":{:.3},\"parallel_ms\":{:.3},\"speedup\":{:.3}}}",
+        s_serial * 1e3,
+        s_par * 1e3,
+        speedup
+    ));
+    json_rows.push(json);
+    speedup
+}
 
 fn main() {
     let cl = ClusterProfile::cluster1(16);
@@ -85,7 +157,73 @@ fn main() {
         );
     }
 
-    // 3) partitioner
+    // 3) native backend kernels: blocked serial vs M-banded parallel,
+    // plus the expert-parallel FFN. e2e-flavoured shapes, scaled so the
+    // whole section stays in bench time; emits BENCH_native_kernels.json.
+    let mut rng = Rng::new(77);
+    let mut randv = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() as f32 * 0.5).collect() };
+    let mut json_rows: Vec<String> = Vec::new();
+    let (m, k, n) = (256usize, 256usize, 384usize);
+    let a = randv(m * k);
+    let b = randv(k * n);
+    let bt = randv(n * k);
+    let at = randv(k * m);
+    let mm_speedup = bench_kernel(
+        "matmul",
+        &format!("{m}x{k}x{n}"),
+        &|| kn::matmul(&a, &b, m, k, n),
+        Some(&|| kn::matmul_ref(&a, &b, m, k, n)),
+        &mut t,
+        &mut json_rows,
+    );
+    bench_kernel(
+        "matmul_nt",
+        &format!("{m}x{k}x{n}"),
+        &|| kn::matmul_nt(&a, &bt, m, k, n),
+        Some(&|| kn::matmul_nt_ref(&a, &bt, m, k, n)),
+        &mut t,
+        &mut json_rows,
+    );
+    bench_kernel(
+        "matmul_tn",
+        &format!("{k}x{m}x{n}"),
+        &|| kn::matmul_tn(&at, &b, k, m, n),
+        Some(&|| kn::matmul_tn_ref(&at, &b, k, m, n)),
+        &mut t,
+        &mut json_rows,
+    );
+    let (fe, fc, fm, fh) = (4usize, 64usize, 256usize, 512usize);
+    let fx = randv(fe * fc * fm);
+    let fw1 = randv(fe * fm * fh);
+    let fw2 = randv(fe * fh * fm);
+    bench_kernel(
+        "expert_ffn",
+        &format!("e{fe}xc{fc}xm{fm}xh{fh}"),
+        &|| kn::expert_ffn(&fx, &fw1, &fw2, fe, fc, fm, fh),
+        None,
+        &mut t,
+        &mut json_rows,
+    );
+    if cores >= 4 {
+        assert!(
+            mm_speedup >= 3.0,
+            "parallel blocked matmul speedup {mm_speedup:.2}x < 3x on {cores} cores"
+        );
+    }
+    let json = format!(
+        "{{\"bench\":\"native_kernels\",\"host_cores\":{cores},\"thread_budget\":{},\"results\":[{}]}}\n",
+        scope::current_budget(),
+        json_rows.join(",")
+    );
+    let json_path = "BENCH_native_kernels.json";
+    std::fs::write(json_path, &json).expect("write BENCH_native_kernels.json");
+    t.row(vec![
+        "kernel rows written to".into(),
+        json_path.into(),
+        "machine-readable perf trajectory".into(),
+    ]);
+
+    // 4) partitioner
     let s3 = bench_median(3, 50, || {
         std::hint::black_box(partition_ranges(100_000_000 / 4, 1 << 18).len());
     });
@@ -95,7 +233,7 @@ fn main() {
         "-".into(),
     ]);
 
-    // 4) comm pool submit+drain
+    // 5) comm pool submit+drain
     let pool = CommPool::new();
     let s4 = bench_median(2, 10, || {
         for _ in 0..1000 {
@@ -109,7 +247,7 @@ fn main() {
         "-".into(),
     ]);
 
-    // 5) flat all-reduce of 4MB across 4 threads
+    // 6) flat all-reduce of 4MB across 4 threads
     let s5 = bench_median(2, 8, || {
         let coll = Collective::new(4);
         let mut hs = Vec::new();

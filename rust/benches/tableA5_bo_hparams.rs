@@ -1,16 +1,20 @@
 //! Paper Table A.5: BO hyperparameter sensitivity (acquisition function x
 //! GP kernel) on BERT-Large-MoE, Cluster 1 / 16 GPUs.
+//!
+//! Each (acquisition, kernel) cell is an independent BO tuning run, so
+//! the grid fans out through `sweep::par_map` (input-ordered: the printed
+//! table is identical to the old serial loop's).
 
 use flowmoe::bo::{Acquisition, BoTuner, Kernel};
 use flowmoe::config::{preset, ClusterProfile};
 use flowmoe::report::Table;
 use flowmoe::sched::{iteration_time, Policy};
+use flowmoe::sweep::par_map;
 use flowmoe::util::fmt_ms;
 
 fn main() {
     let cfg = preset("BERT-Large-MoE").unwrap();
     let cl = ClusterProfile::cluster1(16);
-    let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
     let max = cfg.ar_bytes_per_block();
 
     let rows: Vec<(&str, &str, Acquisition, Kernel, f64)> = vec![
@@ -22,17 +26,21 @@ fn main() {
         ("EI (xi=0.1)", "GPR + RBF", Acquisition::Ei { xi: 0.1 }, Kernel::Rbf { len: 0.25 }, 357.2),
         ("EI (xi=0.1)", "GPR + RationalQuadratic", Acquisition::Ei { xi: 0.1 }, Kernel::RationalQuadratic { len: 0.25, alpha: 1.0 }, 360.2),
     ];
+    let best_ms: Vec<f64> = par_map(&rows, |_, &(_, _, acq, kern, _)| {
+        let obj = |sp: f64| iteration_time(&cfg, &cl, &Policy::flow_moe(2, sp)).0;
+        let mut bo = BoTuner::new(max, 5).with_acquisition(acq).with_kernel(kern);
+        obj(bo.tune(10, obj)) * 1e3
+    });
+
     let mut t = Table::new(
         "Table A.5 — BO hyperparameter sensitivity on BERT-Large-MoE [measured | paper]",
         &["acquisition", "surrogate", "time (ms)"],
     );
-    for (acq_name, kern_name, acq, kern, paper_ms) in rows {
-        let mut bo = BoTuner::new(max, 5).with_acquisition(acq).with_kernel(kern);
-        let best = obj(bo.tune(10, obj)) * 1e3;
+    for ((acq_name, kern_name, _, _, paper_ms), best) in rows.iter().zip(&best_ms) {
         t.row(vec![
-            acq_name.into(),
-            kern_name.into(),
-            format!("{} | {}", fmt_ms(best), fmt_ms(paper_ms)),
+            (*acq_name).into(),
+            (*kern_name).into(),
+            format!("{} | {}", fmt_ms(*best), fmt_ms(*paper_ms)),
         ]);
     }
     t.print();

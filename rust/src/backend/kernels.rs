@@ -9,9 +9,48 @@
 //!
 //! Shapes are row-major flat `&[f32]` slices; dimensions are passed
 //! explicitly (the backend derives them from the artifact manifest).
+//!
+//! # Performance (§Perf)
+//!
+//! The three matmul variants are **cache-blocked**: a 4-row (`MR`)
+//! micro-kernel accumulates into register/L1-resident output rows while
+//! one `NC`-wide stripe of `b` streams through, giving 4x reuse of every
+//! `b` load and four independent FMA chains per column for ILP. The
+//! `matmul_nt` dot-product variant uses a 4x4 register tile (16
+//! independent accumulator chains) instead. `par_*` variants additionally
+//! split the M dimension into contiguous row bands across
+//! [`crate::sweep::scope`]'s thread budget; `expert_ffn`/`expert_ffn_bwd`
+//! fan the expert axis out the same way.
+//!
+//! Numerics contract: parity with the naive `*_ref` kernels is
+//! **tolerance-based** (blocking may reorder summation; tests use 1e-4
+//! rel-tol). The current tiling happens to keep each output element's
+//! accumulation order ascending in the contraction index — so today the
+//! blocked, parallel and reference kernels agree bit-for-bit — but only
+//! the tolerance contract is guaranteed (future SIMD/k-split kernels may
+//! reassociate). What **is** guaranteed: every kernel is deterministic,
+//! each row's result is independent of the row banding, and therefore
+//! parallel results are byte-identical to serial results for any thread
+//! budget (asserted by `perf_hotpath` and `tests/kernel_parity.rs`).
 
-/// `a (m,k) @ b (k,n) -> (m,n)`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+use crate::sweep::scope;
+
+/// Output rows per micro-kernel tile (register blocking).
+const MR: usize = 4;
+/// Column-stripe width: `MR` output-row stripes of `NC` f32 stay L1-hot
+/// while `b` streams through.
+const NC: usize = 512;
+/// Work threshold (in `m*k*n` multiply-adds) below which the `par_*`
+/// wrappers stay serial: spawning scoped threads costs tens of
+/// microseconds, so only matmuls of ~ms scale fan out.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+// ---------------------------------------------------------------------------
+// Reference (naive) matmuls — the parity oracle for the blocked kernels
+// ---------------------------------------------------------------------------
+
+/// Naive `a (m,k) @ b (k,n) -> (m,n)` triple loop (reference oracle).
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -27,8 +66,8 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)` (rows of b are the columns).
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Naive `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)` (reference oracle).
+pub fn matmul_nt_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
@@ -42,8 +81,8 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
-/// `a^T @ b` with `a (k,m)`, `b (k,n)` -> `(m,n)`.
-pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+/// Naive `a^T @ b` with `a (k,m)`, `b (k,n)` -> `(m,n)` (reference oracle).
+pub fn matmul_tn_ref(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -59,6 +98,296 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
     }
     out
 }
+
+// ---------------------------------------------------------------------------
+// Blocked band kernels (the f32 micro-kernels)
+// ---------------------------------------------------------------------------
+
+/// Blocked `a_band (rows,k) @ b (k,n)` into `out (rows,n)`; `a` holds
+/// exactly the band's rows. Row results do not depend on the banding.
+fn mm_band(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(b.len(), k * n);
+    out.fill(0.0);
+    let mut i = 0;
+    while i + MR <= rows {
+        let band = &mut out[i * n..(i + MR) * n];
+        let (r0, band) = band.split_at_mut(n);
+        let (r1, band) = band.split_at_mut(n);
+        let (r2, r3) = band.split_at_mut(n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NC).min(n);
+            for p in 0..k {
+                let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+                let brow = &b[p * n + j0..p * n + jn];
+                let cols = r0[j0..jn]
+                    .iter_mut()
+                    .zip(r1[j0..jn].iter_mut())
+                    .zip(r2[j0..jn].iter_mut())
+                    .zip(r3[j0..jn].iter_mut())
+                    .zip(brow);
+                for ((((o0, o1), o2), o3), &bv) in cols {
+                    *o0 += v0 * bv;
+                    *o1 += v1 * bv;
+                    *o2 += v2 * bv;
+                    *o3 += v3 * bv;
+                }
+            }
+            j0 = jn;
+        }
+        i += MR;
+    }
+    while i < rows {
+        let r = &mut out[i * n..(i + 1) * n];
+        let arow = &a[i * k..(i + 1) * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NC).min(n);
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n + j0..p * n + jn];
+                for (o, &bv) in r[j0..jn].iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            j0 = jn;
+        }
+        i += 1;
+    }
+}
+
+/// Blocked `a_band (rows,k) @ b^T` with `b (n,k)` into `out (rows,n)`:
+/// 4x4 register tiles, 16 independent accumulator chains.
+fn nt_band(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        let mut j = 0;
+        while j < n {
+            let nr = MR.min(n - j);
+            if mr == MR && nr == MR {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                let mut acc = [[0.0f32; MR]; MR];
+                for p in 0..k {
+                    let av = [a0[p], a1[p], a2[p], a3[p]];
+                    let bv = [b0[p], b1[p], b2[p], b3[p]];
+                    for (accr, &avv) in acc.iter_mut().zip(&av) {
+                        for (s, &bvv) in accr.iter_mut().zip(&bv) {
+                            *s += avv * bvv;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    out[(i + r) * n + j..(i + r) * n + j + MR].copy_from_slice(accr);
+                }
+            } else {
+                for r in 0..mr {
+                    let arow = &a[(i + r) * k..(i + r + 1) * k];
+                    for c in 0..nr {
+                        let brow = &b[(j + c) * k..(j + c + 1) * k];
+                        out[(i + r) * n + j + c] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// Blocked `a^T @ b` band: `out` holds rows `col0..col0+rows` of the
+/// `(m,n)` product with `a (k,m)`, `b (k,n)`. Columns `col0+i..col0+i+4`
+/// of `a` are contiguous per `p`-row, so the same 4-row micro-kernel as
+/// [`mm_band`] applies.
+fn tn_band(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    out.fill(0.0);
+    let mut i = 0;
+    while i + MR <= rows {
+        let band = &mut out[i * n..(i + MR) * n];
+        let (r0, band) = band.split_at_mut(n);
+        let (r1, band) = band.split_at_mut(n);
+        let (r2, r3) = band.split_at_mut(n);
+        let c = col0 + i;
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NC).min(n);
+            for p in 0..k {
+                let av = &a[p * m + c..p * m + c + MR];
+                let (v0, v1, v2, v3) = (av[0], av[1], av[2], av[3]);
+                let brow = &b[p * n + j0..p * n + jn];
+                let cols = r0[j0..jn]
+                    .iter_mut()
+                    .zip(r1[j0..jn].iter_mut())
+                    .zip(r2[j0..jn].iter_mut())
+                    .zip(r3[j0..jn].iter_mut())
+                    .zip(brow);
+                for ((((o0, o1), o2), o3), &bv) in cols {
+                    *o0 += v0 * bv;
+                    *o1 += v1 * bv;
+                    *o2 += v2 * bv;
+                    *o3 += v3 * bv;
+                }
+            }
+            j0 = jn;
+        }
+        i += MR;
+    }
+    while i < rows {
+        let r = &mut out[i * n..(i + 1) * n];
+        let c = col0 + i;
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NC).min(n);
+            for p in 0..k {
+                let av = a[p * m + c];
+                let brow = &b[p * n + j0..p * n + jn];
+                for (o, &bv) in r[j0..jn].iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            j0 = jn;
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public matmuls: blocked `_into`, parallel `par_*`, allocating wrappers
+// ---------------------------------------------------------------------------
+
+/// Serial blocked `a (m,k) @ b (k,n)` into `out (m,n)` (overwrites).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    mm_band(a, b, out, k, n);
+}
+
+/// Serial blocked `a (m,k) @ b^T`, `b (n,k)`, into `out (m,n)`.
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    nt_band(a, b, out, k, n);
+}
+
+/// Serial blocked `a^T @ b`, `a (k,m)`, `b (k,n)`, into `out (m,n)`.
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    tn_band(a, b, out, 0, k, m, n);
+}
+
+/// Whether a `(m,k,n)` matmul is worth fanning out on the current budget.
+fn par_worthwhile(m: usize, k: usize, n: usize) -> bool {
+    m >= 2 && scope::current_budget() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
+}
+
+/// Parallel blocked matmul into `out`: splits the M rows into contiguous
+/// bands across the thread budget; stays serial below [`PAR_MIN_MACS`].
+/// Byte-identical to [`matmul_into`] for any budget.
+pub fn par_matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    if !par_worthwhile(m, k, n) {
+        mm_band(a, b, out, k, n);
+        return;
+    }
+    scope::par_rows(out, n, |row0, band| {
+        let rows = band.len() / n;
+        mm_band(&a[row0 * k..(row0 + rows) * k], b, band, k, n);
+    });
+}
+
+/// Parallel blocked `matmul_nt` into `out` (M-banded, budget-gated).
+pub fn par_matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    if !par_worthwhile(m, k, n) {
+        nt_band(a, b, out, k, n);
+        return;
+    }
+    scope::par_rows(out, n, |row0, band| {
+        let rows = band.len() / n;
+        nt_band(&a[row0 * k..(row0 + rows) * k], b, band, k, n);
+    });
+}
+
+/// Parallel blocked `matmul_tn` into `out` (output-row-banded over the
+/// M columns of `a`, budget-gated).
+pub fn par_matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    if !par_worthwhile(m, k, n) {
+        tn_band(a, b, out, 0, k, m, n);
+        return;
+    }
+    scope::par_rows(out, n, |row0, band| {
+        tn_band(a, b, band, row0, k, m, n);
+    });
+}
+
+/// Allocating parallel blocked matmul (see [`par_matmul_into`]).
+pub fn par_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    par_matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// Allocating parallel blocked `matmul_nt` (see [`par_matmul_nt_into`]).
+pub fn par_matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    par_matmul_nt_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// Allocating parallel blocked `matmul_tn` (see [`par_matmul_tn_into`]).
+pub fn par_matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    par_matmul_tn_into(a, b, &mut out, k, m, n);
+    out
+}
+
+/// `a (m,k) @ b (k,n) -> (m,n)` — blocked, budget-gated parallel.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    par_matmul(a, b, m, k, n)
+}
+
+/// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)` (rows of b are the columns).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    par_matmul_nt(a, b, m, k, n)
+}
+
+/// `a^T @ b` with `a (k,m)`, `b (k,n)` -> `(m,n)`.
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    par_matmul_tn(a, b, k, m, n)
+}
+
+// ---------------------------------------------------------------------------
+// Softmax / RMSNorm
+// ---------------------------------------------------------------------------
 
 /// Row-wise softmax over `(t, n)`, numerically stable (max subtraction).
 pub fn softmax_rows(x: &[f32], n: usize) -> Vec<f32> {
@@ -98,11 +427,11 @@ pub fn softmax_bwd_rows(p: &[f32], dp: &[f32], n: usize) -> Vec<f32> {
 /// RMSNorm epsilon (matches `ref.rmsnorm_ref`).
 pub const RMS_EPS: f32 = 1e-6;
 
-/// RMSNorm over the last axis of `(t, m)` with learnable gain `g (m,)`.
-pub fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+/// RMSNorm over the last axis of `(t, m)` with gain `g (m,)` into `out`.
+pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     let m = g.len();
     debug_assert_eq!(x.len() % m, 0);
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), x.len());
     for (row, orow) in x.chunks_exact(m).zip(out.chunks_exact_mut(m)) {
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / m as f32;
         let r = 1.0 / (ms + RMS_EPS).sqrt();
@@ -110,19 +439,27 @@ pub fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
             *o = xv * r * gv;
         }
     }
+}
+
+/// RMSNorm over the last axis of `(t, m)` with learnable gain `g (m,)`.
+pub fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rmsnorm_into(x, g, &mut out);
     out
 }
 
-/// Backward of [`rmsnorm`]: returns `(dx, dg)`.
+/// Backward of [`rmsnorm`] into caller buffers `dx (t,m)` / `dg (m,)`
+/// (both overwritten).
 ///
 /// With `r = (mean(x^2) + eps)^{-1/2}`:
 /// `dx_j = r g_j dy_j - r^3 x_j / m * sum_i dy_i g_i x_i`,
 /// `dg_j = sum_rows dy_j x_j r`.
-pub fn rmsnorm_bwd(x: &[f32], g: &[f32], dy: &[f32]) -> (Vec<f32>, Vec<f32>) {
+pub fn rmsnorm_bwd_into(x: &[f32], g: &[f32], dy: &[f32], dx: &mut [f32], dg: &mut [f32]) {
     let m = g.len();
     debug_assert_eq!(x.len(), dy.len());
-    let mut dx = vec![0.0f32; x.len()];
-    let mut dg = vec![0.0f32; m];
+    debug_assert_eq!(dx.len(), x.len());
+    debug_assert_eq!(dg.len(), m);
+    dg.fill(0.0);
     for ((row, dyrow), dxrow) in x
         .chunks_exact(m)
         .zip(dy.chunks_exact(m))
@@ -142,34 +479,62 @@ pub fn rmsnorm_bwd(x: &[f32], g: &[f32], dy: &[f32]) -> (Vec<f32>, Vec<f32>) {
             dg[j] += dyrow[j] * xv * r;
         }
     }
+}
+
+/// Backward of [`rmsnorm`]: returns `(dx, dg)`.
+pub fn rmsnorm_bwd(x: &[f32], g: &[f32], dy: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dg = vec![0.0f32; g.len()];
+    rmsnorm_bwd_into(x, g, dy, &mut dx, &mut dg);
     (dx, dg)
 }
 
-/// Embedding lookup with the model's `sqrt(M)` scale: `x_t = embed[tok_t] * sqrt(m)`.
-pub fn embed_lookup(embed: &[f32], tokens: &[i32], m: usize) -> Vec<f32> {
+// ---------------------------------------------------------------------------
+// Embedding
+// ---------------------------------------------------------------------------
+
+/// Embedding lookup with the model's `sqrt(M)` scale into `out (t,m)`.
+pub fn embed_lookup_into(embed: &[f32], tokens: &[i32], m: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), tokens.len() * m);
     let scale = (m as f64).sqrt() as f32;
-    let mut out = vec![0.0f32; tokens.len() * m];
     for (t, &tok) in tokens.iter().enumerate() {
         let src = tok as usize * m;
         for (o, &e) in out[t * m..(t + 1) * m].iter_mut().zip(&embed[src..src + m]) {
             *o = e * scale;
         }
     }
+}
+
+/// Embedding lookup with the model's `sqrt(M)` scale: `x_t = embed[tok_t] * sqrt(m)`.
+pub fn embed_lookup(embed: &[f32], tokens: &[i32], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; tokens.len() * m];
+    embed_lookup_into(embed, tokens, m, &mut out);
     out
 }
 
-/// Backward of [`embed_lookup`]: scatter-add `dx * sqrt(m)` into `(vocab, m)`.
-pub fn embed_scatter(tokens: &[i32], dx: &[f32], vocab: usize, m: usize) -> Vec<f32> {
+/// Backward of [`embed_lookup`]: scatter-add `dx * sqrt(m)` into the
+/// zeroed `de (vocab, m)` buffer.
+pub fn embed_scatter_into(tokens: &[i32], dx: &[f32], m: usize, de: &mut [f32]) {
     let scale = (m as f64).sqrt() as f32;
-    let mut de = vec![0.0f32; vocab * m];
+    de.fill(0.0);
     for (t, &tok) in tokens.iter().enumerate() {
         let dst = tok as usize * m;
         for (o, &d) in de[dst..dst + m].iter_mut().zip(&dx[t * m..(t + 1) * m]) {
             *o += d * scale;
         }
     }
+}
+
+/// Backward of [`embed_lookup`]: scatter-add `dx * sqrt(m)` into `(vocab, m)`.
+pub fn embed_scatter(tokens: &[i32], dx: &[f32], vocab: usize, m: usize) -> Vec<f32> {
+    let mut de = vec![0.0f32; vocab * m];
+    embed_scatter_into(tokens, dx, m, &mut de);
     de
 }
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
 
 /// Causal mask fill value (matches `ref.attention_causal_ref`).
 const MASK_NEG: f32 = -1e30;
@@ -217,6 +582,10 @@ pub fn attention_causal_bwd(
     let dk = matmul_tn(&ds, q, n, n, d);
     (dq, dk, dv)
 }
+
+// ---------------------------------------------------------------------------
+// Gating
+// ---------------------------------------------------------------------------
 
 /// Renormalization floor of the top-k gate weights (matches `ref.gating_ref`).
 pub const GATE_EPS: f32 = 1e-9;
@@ -287,26 +656,140 @@ pub fn gating_topk_bwd(g: &Gating, e: usize, k: usize, dgate: &[f32]) -> Vec<f32
     softmax_bwd_rows(&g.probs, &dprobs, e)
 }
 
-/// Batched expert FFN — mirror of `ref.expert_ffn_ref`:
+// ---------------------------------------------------------------------------
+// Expert FFN (expert-parallel)
+// ---------------------------------------------------------------------------
+
+/// One expert's `relu(x_e @ w1_e) @ w2_e` into its output slab, using
+/// the caller's `hid (c,h)` scratch.
+#[allow(clippy::too_many_arguments)]
+fn expert_ffn_unit(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    ei: usize,
+    out: &mut [f32],
+    hid: &mut [f32],
+    c: usize,
+    m: usize,
+    h: usize,
+) {
+    let xe = &x[ei * c * m..(ei + 1) * c * m];
+    let w1e = &w1[ei * m * h..(ei + 1) * m * h];
+    let w2e = &w2[ei * h * m..(ei + 1) * h * m];
+    par_matmul_into(xe, w1e, hid, c, m, h);
+    for v in hid.iter_mut() {
+        *v = v.max(0.0);
+    }
+    par_matmul_into(hid, w2e, out, c, h, m);
+}
+
+/// Whether the expert axis is worth fanning out on the current budget.
+fn expert_par_worthwhile(e: usize, c: usize, m: usize, h: usize) -> bool {
+    e >= 2 && scope::current_budget() > 1 && c.saturating_mul(m).saturating_mul(h) >= PAR_MIN_MACS
+}
+
+/// Batched expert FFN into `out (e,c,m)` — mirror of `ref.expert_ffn_ref`:
 /// per expert `e`: `relu(x_e @ w1_e) @ w2_e` with `x (e,c,m)`,
-/// `w1 (e,m,h)`, `w2 (e,h,m)`.
+/// `w1 (e,m,h)`, `w2 (e,h,m)`. Experts fan out across the thread budget
+/// when the per-expert work is large enough (results are identical
+/// either way: each expert's slab is computed independently).
+#[allow(clippy::too_many_arguments)]
+pub fn expert_ffn_into(x: &[f32], w1: &[f32], w2: &[f32], out: &mut [f32], e: usize, c: usize, m: usize, h: usize) {
+    debug_assert_eq!(out.len(), e * c * m);
+    if expert_par_worthwhile(e, c, m, h) {
+        let slabs: Vec<&mut [f32]> = out.chunks_mut(c * m).collect();
+        scope::par_items(slabs, |ei, oslab| {
+            let mut hid = vec![0.0f32; c * h];
+            expert_ffn_unit(x, w1, w2, ei, oslab, &mut hid, c, m, h);
+        });
+    } else {
+        let mut hid = vec![0.0f32; c * h];
+        for (ei, oslab) in out.chunks_mut(c * m).enumerate() {
+            expert_ffn_unit(x, w1, w2, ei, oslab, &mut hid, c, m, h);
+        }
+    }
+}
+
+/// Batched expert FFN (allocating wrapper over [`expert_ffn_into`]).
 pub fn expert_ffn(x: &[f32], w1: &[f32], w2: &[f32], e: usize, c: usize, m: usize, h: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; e * c * m];
-    for ei in 0..e {
-        let xe = &x[ei * c * m..(ei + 1) * c * m];
-        let w1e = &w1[ei * m * h..(ei + 1) * m * h];
-        let w2e = &w2[ei * h * m..(ei + 1) * h * m];
-        let mut hid = matmul(xe, w1e, c, m, h);
-        for v in hid.iter_mut() {
-            *v = v.max(0.0);
-        }
-        out[ei * c * m..(ei + 1) * c * m].copy_from_slice(&matmul(&hid, w2e, c, h, m));
-    }
+    expert_ffn_into(x, w1, w2, &mut out, e, c, m, h);
     out
 }
 
+/// One expert's backward into its `(dx, dw1, dw2)` slabs.
+#[allow(clippy::too_many_arguments)]
+fn expert_ffn_bwd_unit(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    dy: &[f32],
+    ei: usize,
+    dxe: &mut [f32],
+    dw1e: &mut [f32],
+    dw2e: &mut [f32],
+    c: usize,
+    m: usize,
+    h: usize,
+) {
+    let xe = &x[ei * c * m..(ei + 1) * c * m];
+    let w1e = &w1[ei * m * h..(ei + 1) * m * h];
+    let w2e = &w2[ei * h * m..(ei + 1) * h * m];
+    let dye = &dy[ei * c * m..(ei + 1) * c * m];
+    let mut hid = vec![0.0f32; c * h];
+    par_matmul_into(xe, w1e, &mut hid, c, m, h);
+    let hr: Vec<f32> = hid.iter().map(|&v| v.max(0.0)).collect();
+    let mut dhid = vec![0.0f32; c * h];
+    par_matmul_nt_into(dye, w2e, &mut dhid, c, m, h);
+    for (dv, &pre) in dhid.iter_mut().zip(&hid) {
+        if pre <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    par_matmul_tn_into(&hr, dye, dw2e, c, h, m);
+    par_matmul_tn_into(xe, &dhid, dw1e, c, m, h);
+    par_matmul_nt_into(&dhid, w1e, dxe, c, h, m);
+}
+
+/// Backward of [`expert_ffn`] (recompute) into `dx (e,c,m)`,
+/// `dw1 (e,m,h)`, `dw2 (e,h,m)`. ReLU gradient at exactly 0 is 0 (the
+/// JAX convention). Experts fan out like the forward.
+#[allow(clippy::too_many_arguments)]
+pub fn expert_ffn_bwd_into(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dw1: &mut [f32],
+    dw2: &mut [f32],
+    e: usize,
+    c: usize,
+    m: usize,
+    h: usize,
+) {
+    debug_assert_eq!(dx.len(), e * c * m);
+    debug_assert_eq!(dw1.len(), e * m * h);
+    debug_assert_eq!(dw2.len(), e * h * m);
+    let units: Vec<(&mut [f32], &mut [f32], &mut [f32])> = dx
+        .chunks_mut(c * m)
+        .zip(dw1.chunks_mut(m * h))
+        .zip(dw2.chunks_mut(h * m))
+        .map(|((a, b), c_)| (a, b, c_))
+        .collect();
+    if expert_par_worthwhile(e, c, m, h) {
+        scope::par_items(units, |ei, (dxe, dw1e, dw2e)| {
+            expert_ffn_bwd_unit(x, w1, w2, dy, ei, dxe, dw1e, dw2e, c, m, h);
+        });
+    } else {
+        for (ei, (dxe, dw1e, dw2e)) in units.into_iter().enumerate() {
+            expert_ffn_bwd_unit(x, w1, w2, dy, ei, dxe, dw1e, dw2e, c, m, h);
+        }
+    }
+}
+
 /// Backward of [`expert_ffn`] (recompute): returns `(dx, dw1, dw2)`.
-/// ReLU gradient at exactly 0 is 0 (the JAX convention).
 #[allow(clippy::too_many_arguments)]
 pub fn expert_ffn_bwd(
     x: &[f32],
@@ -321,23 +804,7 @@ pub fn expert_ffn_bwd(
     let mut dx = vec![0.0f32; e * c * m];
     let mut dw1 = vec![0.0f32; e * m * h];
     let mut dw2 = vec![0.0f32; e * h * m];
-    for ei in 0..e {
-        let xe = &x[ei * c * m..(ei + 1) * c * m];
-        let w1e = &w1[ei * m * h..(ei + 1) * m * h];
-        let w2e = &w2[ei * h * m..(ei + 1) * h * m];
-        let dye = &dy[ei * c * m..(ei + 1) * c * m];
-        let hid = matmul(xe, w1e, c, m, h);
-        let hr: Vec<f32> = hid.iter().map(|&v| v.max(0.0)).collect();
-        let mut dhid = matmul_nt(dye, w2e, c, m, h);
-        for (dv, &pre) in dhid.iter_mut().zip(&hid) {
-            if pre <= 0.0 {
-                *dv = 0.0;
-            }
-        }
-        dw2[ei * h * m..(ei + 1) * h * m].copy_from_slice(&matmul_tn(&hr, dye, c, h, m));
-        dw1[ei * m * h..(ei + 1) * m * h].copy_from_slice(&matmul_tn(xe, &dhid, c, m, h));
-        dx[ei * c * m..(ei + 1) * c * m].copy_from_slice(&matmul_nt(&dhid, w1e, c, h, m));
-    }
+    expert_ffn_bwd_into(x, w1, w2, dy, &mut dx, &mut dw1, &mut dw2, e, c, m, h);
     (dx, dw1, dw2)
 }
 
@@ -382,6 +849,64 @@ mod tests {
         let got = matmul_tn(&at, &b, k, m, n);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    /// Relative-tolerance comparison used by the blocked-vs-naive checks.
+    fn assert_rel_close(got: &[f32], want: &[f32], rel: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: len");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = rel * (g.abs() + w.abs()) + 1e-6;
+            assert!((g - w).abs() <= tol, "{what}[{i}]: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn blocked_matmuls_match_naive_reference() {
+        // a few irregular shapes here; the full odd/prime-shape sweep
+        // lives in tests/kernel_parity.rs
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 9), (13, 3, 21), (8, 16, 8)] {
+            let a = randv(&mut rng, m * k, 1.0);
+            let b = randv(&mut rng, k * n, 1.0);
+            assert_rel_close(&matmul(&a, &b, m, k, n), &matmul_ref(&a, &b, m, k, n), 1e-4, "mm");
+            let bt = randv(&mut rng, n * k, 1.0);
+            assert_rel_close(
+                &matmul_nt(&a, &bt, m, k, n),
+                &matmul_nt_ref(&a, &bt, m, k, n),
+                1e-4,
+                "nt",
+            );
+            let at = randv(&mut rng, k * m, 1.0);
+            assert_rel_close(
+                &matmul_tn(&at, &b, k, m, n),
+                &matmul_tn_ref(&at, &b, k, m, n),
+                1e-4,
+                "tn",
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_byte_identical_to_serial() {
+        let mut rng = Rng::new(43);
+        let (m, k, n) = (37, 19, 23);
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let serial = crate::sweep::scope::with_budget(1, || matmul(&a, &b, m, k, n));
+        for budget in [2usize, 3, 8] {
+            let mut par = vec![0.0f32; m * n];
+            crate::sweep::scope::with_budget(budget, || {
+                // bypass the size gate: band the rows explicitly
+                crate::sweep::scope::par_rows(&mut par, n, |row0, band| {
+                    let rows = band.len() / n;
+                    matmul_into(&a[row0 * k..(row0 + rows) * k], b.as_slice(), band, rows, k, n);
+                });
+            });
+            assert!(
+                serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "budget {budget}"
+            );
         }
     }
 

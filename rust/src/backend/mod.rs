@@ -20,14 +20,17 @@
 
 pub mod kernels;
 pub mod model;
+pub mod workspace;
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{preset, ModelCfg};
 use crate::runtime::{ArtifactSpec, Backend, BufSpec, Dtype, HostTensor, Manifest};
 use model::{AtParams, BlockParams, Geo};
+pub use workspace::Workspace;
 
 /// Artifact families the native backend executes (one per AOT entry point).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,8 +73,17 @@ fn kind_of(spec: &ArtifactSpec) -> Option<(Kind, ModelCfg)> {
 }
 
 /// The in-tree reference execution backend (dense f32 CPU kernels).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeBackend;
+///
+/// Owns a persistent [`Workspace`] so the hot-path temporaries of
+/// `train_step`/`grad_step`/`block_*`/`at_*`/`head_loss` recycle across
+/// `execute` calls (i.e. across layers *and* steps). Each worker thread
+/// owns its own `Engine` — and therefore its own backend + workspace —
+/// so the mutex is uncontended; it exists because [`Backend::execute`]
+/// takes `&self`.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    ws: Mutex<Workspace>,
+}
 
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
@@ -86,6 +98,11 @@ impl Backend for NativeBackend {
         let (kind, cfg) =
             kind_of(spec).ok_or_else(|| anyhow!("{}: no native kernel for this artifact", spec.name))?;
         let g = Geo::from_cfg(&cfg);
+        // a poisoned lock is harmless here: the workspace has no
+        // invariants (take() always returns zeroed buffers), so recover
+        // it instead of disabling the backend after one caught panic
+        let mut ws_guard = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let ws = &mut *ws_guard;
         let f32s = |i: usize| inputs[i].f32();
         let out = match kind {
             Kind::EmbedFwd => {
@@ -103,7 +120,8 @@ impl Backend for NativeBackend {
                 let bp = BlockParams::new(&slices);
                 let x = f32s(9);
                 let c = g.capacity(x.len() / g.m / g.n_seq);
-                let (y, _) = model::block_forward(&g, &bp, x, c);
+                let (y, st) = model::block_forward_ws(&g, &bp, x, c, ws);
+                st.recycle(ws);
                 vec![HostTensor::F32(y)]
             }
             Kind::BlockBwd => {
@@ -112,7 +130,7 @@ impl Backend for NativeBackend {
                 let x = f32s(9);
                 let dy = f32s(10);
                 let c = g.capacity(x.len() / g.m / g.n_seq);
-                let (grads, dx) = model::block_backward(&g, &bp, x, c, dy);
+                let (grads, dx) = model::block_backward_ws(&g, &bp, x, c, dy, ws);
                 let mut out: Vec<HostTensor> = grads.into_iter().map(HostTensor::F32).collect();
                 out.push(HostTensor::F32(dx));
                 out
@@ -121,7 +139,7 @@ impl Backend for NativeBackend {
                 let tokens = inputs[3].i32();
                 check_tokens(&spec.name, tokens, g.vocab)?;
                 let b = tokens.len() / g.n_seq;
-                let (loss, dxf, de, dn) = model::head_loss(&g, f32s(0), f32s(1), f32s(2), tokens, b);
+                let (loss, dxf, de, dn) = model::head_loss_ws(&g, f32s(0), f32s(1), f32s(2), tokens, b, ws);
                 vec![
                     HostTensor::F32(vec![loss]),
                     HostTensor::F32(dxf),
@@ -135,7 +153,7 @@ impl Backend for NativeBackend {
                 let tokens = inputs[n_params].i32();
                 check_tokens(&spec.name, tokens, g.vocab)?;
                 let b_full = tokens.len() / g.n_seq;
-                let (loss, grads) = model::grad_step(&g, &params, tokens, b_full);
+                let (loss, grads) = model::grad_step_ws(&g, &params, tokens, b_full, ws);
                 let mut out = vec![HostTensor::F32(vec![loss])];
                 out.extend(grads.into_iter().map(HostTensor::F32));
                 out
@@ -148,7 +166,7 @@ impl Backend for NativeBackend {
                 check_tokens(&spec.name, tokens, g.vocab)?;
                 let lr = f32s(2 * n_params + 1)[0];
                 let b_full = tokens.len() / g.n_seq;
-                let (new_p, new_m, loss) = model::train_step(&g, &params, &moms, tokens, lr, b_full);
+                let (new_p, new_m, loss) = model::train_step_ws(&g, &params, &moms, tokens, lr, b_full, ws);
                 let mut out: Vec<HostTensor> = new_p.into_iter().map(HostTensor::F32).collect();
                 out.extend(new_m.into_iter().map(HostTensor::F32));
                 out.push(HostTensor::F32(vec![loss]));
@@ -157,9 +175,10 @@ impl Backend for NativeBackend {
             Kind::AtFwd => {
                 let slices: Vec<&[f32]> = (0..7).map(f32s).collect();
                 let atp = AtParams::new(&slices);
-                let model::AtState { mha, u, gating } = model::at_forward(&g, &atp, f32s(7));
+                let model::AtState { mha, u, gating } = model::at_forward_ws(&g, &atp, f32s(7), ws);
+                let h = mha.into_h(ws);
                 vec![
-                    HostTensor::F32(mha.h),
+                    HostTensor::F32(h),
                     HostTensor::F32(u),
                     HostTensor::F32(gating.probs),
                     HostTensor::I32(gating.idx),
@@ -170,8 +189,9 @@ impl Backend for NativeBackend {
                 let slices: Vec<&[f32]> = (0..7).map(f32s).collect();
                 let atp = AtParams::new(&slices);
                 let x = f32s(7);
-                let st = model::at_forward(&g, &atp, x);
-                let (grads, dx) = model::at_backward(&g, &atp, x, &st, f32s(8), f32s(9), f32s(10));
+                let st = model::at_forward_ws(&g, &atp, x, ws);
+                let (grads, dx) = model::at_backward_ws(&g, &atp, x, &st, f32s(8), f32s(9), f32s(10), ws);
+                st.recycle(ws);
                 let mut out: Vec<HostTensor> = grads.into_iter().map(HostTensor::F32).collect();
                 out.push(HostTensor::F32(dx));
                 out
@@ -471,7 +491,7 @@ mod tests {
     #[test]
     fn out_of_range_tokens_error_instead_of_panicking() {
         let man = native_manifest(Path::new("/nonexistent"));
-        let be = NativeBackend;
+        let be = NativeBackend::default();
         let spec = man.get("embed_fwd_tiny").unwrap();
         let embed = HostTensor::F32(vec![0.0; spec.inputs[0].elems()]);
         for bad in [128i32, -1] {
@@ -484,7 +504,7 @@ mod tests {
     #[test]
     fn kind_resolution_requires_known_entry_and_config() {
         let man = native_manifest(Path::new("/nonexistent"));
-        let be = NativeBackend;
+        let be = NativeBackend::default();
         for a in &man.artifacts {
             assert!(be.supports(a), "native manifest artifact {} unsupported", a.name);
         }

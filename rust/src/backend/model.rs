@@ -10,10 +10,28 @@
 //!
 //! Backward passes rematerialize the forward (as the AOT `block_bwd`
 //! artifact does) so no residual state crosses the caller boundary.
+//!
+//! # Hot path (§Perf)
+//!
+//! Every piece has a `*_ws` variant threading a [`Workspace`] scratch
+//! arena: temporaries (projections, head scratch, gradient buffers) are
+//! taken from and retired to the pool instead of allocated per call, so
+//! buffers recycle across layers within a step and — via the persistent
+//! workspace in [`super::NativeBackend`] — across steps. The allocating
+//! free functions remain as thin wrappers over a throwaway workspace
+//! (same numerics, used by tests and one-shot callers). Inside one step
+//! the embarrassingly parallel axes fan out across the
+//! [`crate::sweep::scope`] thread budget: matmul row bands (in
+//! `kernels`), experts (in `kernels::expert_ffn*`), and the per-(sample,
+//! head) attention loops here. All of it is deterministic: results are
+//! byte-identical for any thread budget and for fresh vs recycled
+//! buffers.
 
 use crate::cluster::{combine, combine_bwd, dispatch, dispatch_bwd, Routing};
+use crate::sweep::scope;
 
 use super::kernels as kn;
+use super::workspace::Workspace;
 
 /// Geometry of one model configuration (paper Table 2 notation).
 #[derive(Clone, Copy, Debug)]
@@ -109,6 +127,17 @@ impl<'a> BlockParams<'a> {
 // Multi-head attention
 // ---------------------------------------------------------------------------
 
+/// Work threshold (`units * N^2 * head_dim`) below which the per-(sample,
+/// head) attention loops stay serial — mirrors the kernel-level gating.
+const HEAD_PAR_MIN: usize = 1 << 16;
+
+/// Whether the (sample, head) axis is worth fanning out right now.
+fn par_heads(units: usize, n_seq: usize, hd: usize) -> bool {
+    units >= 2
+        && scope::current_budget() > 1
+        && units.saturating_mul(n_seq * n_seq).saturating_mul(hd) >= HEAD_PAR_MIN
+}
+
 /// Copy head `hh` of sample `bi` out of a flat `(T, M)` tensor into `(N, hd)`.
 fn gather_head(xf: &[f32], bi: usize, hh: usize, n_seq: usize, m: usize, hd: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n_seq * hd];
@@ -140,29 +169,72 @@ pub struct MhaState {
     pub h: Vec<f32>,
 }
 
-/// Multi-head causal attention over flat `(T, M)` tokens (model.py `mha`).
-pub fn mha_forward(g: &Geo, p: &AtParams, x: &[f32]) -> MhaState {
+impl MhaState {
+    /// Retire every saved buffer into the workspace pool.
+    pub fn recycle(self, ws: &mut Workspace) {
+        let h = self.into_h(ws);
+        ws.put(h);
+    }
+
+    /// Take the residual-stream output `h`, retiring every other saved
+    /// buffer into the workspace pool.
+    pub fn into_h(self, ws: &mut Workspace) -> Vec<f32> {
+        let MhaState {
+            xn,
+            qf,
+            kf,
+            vf,
+            att_w,
+            of,
+            h,
+        } = self;
+        ws.put_all([xn, qf, kf, vf, of]);
+        ws.put_all(att_w);
+        h
+    }
+}
+
+/// Multi-head causal attention over flat `(T, M)` tokens (model.py `mha`),
+/// workspace-pooled. Heads fan out across the thread budget.
+pub fn mha_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> MhaState {
     let t = x.len() / g.m;
     let b = t / g.n_seq;
     let hd = g.head_dim();
-    let xn = kn::rmsnorm(x, p.n1);
-    let qf = kn::matmul(&xn, p.wq, t, g.m, g.m);
-    let kf = kn::matmul(&xn, p.wk, t, g.m, g.m);
-    let vf = kn::matmul(&xn, p.wv, t, g.m, g.m);
-    let mut of = vec![0.0f32; t * g.m];
-    let mut att_w = Vec::with_capacity(b * g.n_heads);
-    for bi in 0..b {
-        for hh in 0..g.n_heads {
-            let q = gather_head(&qf, bi, hh, g.n_seq, g.m, hd);
-            let k = gather_head(&kf, bi, hh, g.n_seq, g.m, hd);
-            let v = gather_head(&vf, bi, hh, g.n_seq, g.m, hd);
-            let (w, o) = kn::attention_causal(&q, &k, &v, g.n_seq, hd);
-            scatter_head(&mut of, &o, bi, hh, g.n_seq, g.m, hd);
-            att_w.push(w);
-        }
+    let mut xn = ws.take(t * g.m);
+    kn::rmsnorm_into(x, p.n1, &mut xn);
+    let mut qf = ws.take(t * g.m);
+    kn::par_matmul_into(&xn, p.wq, &mut qf, t, g.m, g.m);
+    let mut kf = ws.take(t * g.m);
+    kn::par_matmul_into(&xn, p.wk, &mut kf, t, g.m, g.m);
+    let mut vf = ws.take(t * g.m);
+    kn::par_matmul_into(&xn, p.wv, &mut vf, t, g.m, g.m);
+    let units = b * g.n_heads;
+    let head = |u: usize| {
+        let (bi, hh) = (u / g.n_heads, u % g.n_heads);
+        let q = gather_head(&qf, bi, hh, g.n_seq, g.m, hd);
+        let k = gather_head(&kf, bi, hh, g.n_seq, g.m, hd);
+        let v = gather_head(&vf, bi, hh, g.n_seq, g.m, hd);
+        kn::attention_causal(&q, &k, &v, g.n_seq, hd)
+    };
+    let heads: Vec<(Vec<f32>, Vec<f32>)> = if par_heads(units, g.n_seq, hd) {
+        scope::par_map_vec(units, head)
+    } else {
+        (0..units).map(head).collect()
+    };
+    let mut of = ws.take(t * g.m);
+    let mut att_w = Vec::with_capacity(units);
+    for (u, (w, o)) in heads.into_iter().enumerate() {
+        scatter_head(&mut of, &o, u / g.n_heads, u % g.n_heads, g.n_seq, g.m, hd);
+        ws.put(o);
+        att_w.push(w);
     }
-    let proj = kn::matmul(&of, p.wo, t, g.m, g.m);
-    let h: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+    let mut proj = ws.take(t * g.m);
+    kn::par_matmul_into(&of, p.wo, &mut proj, t, g.m, g.m);
+    let mut h = ws.take(t * g.m);
+    for ((hv, &xv), &pv) in h.iter_mut().zip(x).zip(&proj) {
+        *hv = xv + pv;
+    }
+    ws.put(proj);
     MhaState {
         xn,
         qf,
@@ -174,43 +246,85 @@ pub fn mha_forward(g: &Geo, p: &AtParams, x: &[f32]) -> MhaState {
     }
 }
 
-/// Backward of [`mha_forward`]: returns `([dn1, dwq, dwk, dwv, dwo], dx)`
-/// for the residual-stream cotangent `dh`.
-pub fn mha_backward(g: &Geo, p: &AtParams, x: &[f32], st: &MhaState, dh: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+/// Multi-head causal attention (allocating wrapper over [`mha_forward_ws`]).
+pub fn mha_forward(g: &Geo, p: &AtParams, x: &[f32]) -> MhaState {
+    mha_forward_ws(g, p, x, &mut Workspace::new())
+}
+
+/// Backward of [`mha_forward`], workspace-pooled: returns
+/// `([dn1, dwq, dwk, dwv, dwo], dx)` for the residual-stream cotangent `dh`.
+pub fn mha_backward_ws(
+    g: &Geo,
+    p: &AtParams,
+    x: &[f32],
+    st: &MhaState,
+    dh: &[f32],
+    ws: &mut Workspace,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
     let t = x.len() / g.m;
     let b = t / g.n_seq;
     let hd = g.head_dim();
     // h = x + of @ wo
-    let dof = kn::matmul_nt(dh, p.wo, t, g.m, g.m);
-    let dwo = kn::matmul_tn(&st.of, dh, t, g.m, g.m);
-    let mut dqf = vec![0.0f32; t * g.m];
-    let mut dkf = vec![0.0f32; t * g.m];
-    let mut dvf = vec![0.0f32; t * g.m];
-    for bi in 0..b {
-        for hh in 0..g.n_heads {
-            let q = gather_head(&st.qf, bi, hh, g.n_seq, g.m, hd);
-            let k = gather_head(&st.kf, bi, hh, g.n_seq, g.m, hd);
-            let v = gather_head(&st.vf, bi, hh, g.n_seq, g.m, hd);
-            let doh = gather_head(&dof, bi, hh, g.n_seq, g.m, hd);
-            let w = &st.att_w[bi * g.n_heads + hh];
-            let (dq, dk, dv) = kn::attention_causal_bwd(&q, &k, &v, w, &doh, g.n_seq, hd);
-            scatter_head(&mut dqf, &dq, bi, hh, g.n_seq, g.m, hd);
-            scatter_head(&mut dkf, &dk, bi, hh, g.n_seq, g.m, hd);
-            scatter_head(&mut dvf, &dv, bi, hh, g.n_seq, g.m, hd);
-        }
+    let mut dof = ws.take(t * g.m);
+    kn::par_matmul_nt_into(dh, p.wo, &mut dof, t, g.m, g.m);
+    let mut dwo = ws.take(g.m * g.m);
+    kn::par_matmul_tn_into(&st.of, dh, &mut dwo, t, g.m, g.m);
+    let units = b * g.n_heads;
+    let head = |u: usize| {
+        let (bi, hh) = (u / g.n_heads, u % g.n_heads);
+        let q = gather_head(&st.qf, bi, hh, g.n_seq, g.m, hd);
+        let k = gather_head(&st.kf, bi, hh, g.n_seq, g.m, hd);
+        let v = gather_head(&st.vf, bi, hh, g.n_seq, g.m, hd);
+        let doh = gather_head(&dof, bi, hh, g.n_seq, g.m, hd);
+        kn::attention_causal_bwd(&q, &k, &v, &st.att_w[u], &doh, g.n_seq, hd)
+    };
+    let heads: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = if par_heads(units, g.n_seq, hd) {
+        scope::par_map_vec(units, head)
+    } else {
+        (0..units).map(head).collect()
+    };
+    let mut dqf = ws.take(t * g.m);
+    let mut dkf = ws.take(t * g.m);
+    let mut dvf = ws.take(t * g.m);
+    for (u, (dq, dk, dv)) in heads.into_iter().enumerate() {
+        let (bi, hh) = (u / g.n_heads, u % g.n_heads);
+        scatter_head(&mut dqf, &dq, bi, hh, g.n_seq, g.m, hd);
+        scatter_head(&mut dkf, &dk, bi, hh, g.n_seq, g.m, hd);
+        scatter_head(&mut dvf, &dv, bi, hh, g.n_seq, g.m, hd);
+        ws.put_all([dq, dk, dv]);
     }
-    let dwq = kn::matmul_tn(&st.xn, &dqf, t, g.m, g.m);
-    let dwk = kn::matmul_tn(&st.xn, &dkf, t, g.m, g.m);
-    let dwv = kn::matmul_tn(&st.xn, &dvf, t, g.m, g.m);
-    let mut dxn = kn::matmul_nt(&dqf, p.wq, t, g.m, g.m);
-    let dxn_k = kn::matmul_nt(&dkf, p.wk, t, g.m, g.m);
-    let dxn_v = kn::matmul_nt(&dvf, p.wv, t, g.m, g.m);
+    ws.put(dof);
+    let mut dwq = ws.take(g.m * g.m);
+    kn::par_matmul_tn_into(&st.xn, &dqf, &mut dwq, t, g.m, g.m);
+    let mut dwk = ws.take(g.m * g.m);
+    kn::par_matmul_tn_into(&st.xn, &dkf, &mut dwk, t, g.m, g.m);
+    let mut dwv = ws.take(g.m * g.m);
+    kn::par_matmul_tn_into(&st.xn, &dvf, &mut dwv, t, g.m, g.m);
+    let mut dxn = ws.take(t * g.m);
+    kn::par_matmul_nt_into(&dqf, p.wq, &mut dxn, t, g.m, g.m);
+    let mut dxn_k = ws.take(t * g.m);
+    kn::par_matmul_nt_into(&dkf, p.wk, &mut dxn_k, t, g.m, g.m);
+    let mut dxn_v = ws.take(t * g.m);
+    kn::par_matmul_nt_into(&dvf, p.wv, &mut dxn_v, t, g.m, g.m);
     for ((a, b_), c) in dxn.iter_mut().zip(&dxn_k).zip(&dxn_v) {
         *a += b_ + c;
     }
-    let (dx_norm, dn1) = kn::rmsnorm_bwd(x, p.n1, &dxn);
-    let dx: Vec<f32> = dh.iter().zip(&dx_norm).map(|(a, b)| a + b).collect();
+    ws.put_all([dxn_k, dxn_v, dqf, dkf, dvf]);
+    let mut dx_norm = ws.take(t * g.m);
+    let mut dn1 = ws.take(g.m);
+    kn::rmsnorm_bwd_into(x, p.n1, &dxn, &mut dx_norm, &mut dn1);
+    ws.put(dxn);
+    let mut dx = ws.take(t * g.m);
+    for ((o, &a), &b_) in dx.iter_mut().zip(dh).zip(&dx_norm) {
+        *o = a + b_;
+    }
+    ws.put(dx_norm);
     (vec![dn1, dwq, dwk, dwv, dwo], dx)
+}
+
+/// Backward of [`mha_forward`] (allocating wrapper).
+pub fn mha_backward(g: &Geo, p: &AtParams, x: &[f32], st: &MhaState, dh: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    mha_backward_ws(g, p, x, st, dh, &mut Workspace::new())
 }
 
 // ---------------------------------------------------------------------------
@@ -225,20 +339,79 @@ pub struct AtState {
     pub gating: kn::Gating,
 }
 
+impl AtState {
+    /// Retire every saved buffer into the workspace pool.
+    pub fn recycle(self, ws: &mut Workspace) {
+        let AtState { mha, u, gating } = self;
+        mha.recycle(ws);
+        ws.put(u);
+        ws.put(gating.probs);
+        ws.put(gating.gate);
+        // gating.idx is i32 — the pool is f32-only, let it drop
+    }
+}
+
 /// The paper's AT task (model.py `at_task`): MHA + gating for one
-/// (micro)batch of flat `(T, M)` tokens.
-pub fn at_forward(g: &Geo, p: &AtParams, x: &[f32]) -> AtState {
+/// (micro)batch of flat `(T, M)` tokens, workspace-pooled.
+pub fn at_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> AtState {
     let t = x.len() / g.m;
-    let mha = mha_forward(g, p, x);
-    let u = kn::rmsnorm(&mha.h, p.n2);
-    let logits = kn::matmul(&u, p.wg, t, g.m, g.e);
+    let mha = mha_forward_ws(g, p, x, ws);
+    let mut u = ws.take(t * g.m);
+    kn::rmsnorm_into(&mha.h, p.n2, &mut u);
+    let mut logits = ws.take(t * g.e);
+    kn::par_matmul_into(&u, p.wg, &mut logits, t, g.m, g.e);
     let gating = kn::gating_topk(&logits, g.e, g.top_k);
+    ws.put(logits);
     AtState { mha, u, gating }
+}
+
+/// The paper's AT task (allocating wrapper over [`at_forward_ws`]).
+pub fn at_forward(g: &Geo, p: &AtParams, x: &[f32]) -> AtState {
+    at_forward_ws(g, p, x, &mut Workspace::new())
 }
 
 /// Backward of [`at_forward`] with cotangents for its `(h, u, gate)`
 /// outputs (model.py `at_bwd`; the probs output is a non-differentiated
-/// auxiliary). Returns `([dn1, dwq, dwk, dwv, dwo, dn2, dwg], dx)`.
+/// auxiliary), workspace-pooled.
+/// Returns `([dn1, dwq, dwk, dwv, dwo, dn2, dwg], dx)`.
+#[allow(clippy::too_many_arguments)]
+pub fn at_backward_ws(
+    g: &Geo,
+    p: &AtParams,
+    x: &[f32],
+    st: &AtState,
+    dh: &[f32],
+    du: &[f32],
+    dgate: &[f32],
+    ws: &mut Workspace,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let t = x.len() / g.m;
+    let dlogits = kn::gating_topk_bwd(&st.gating, g.e, g.top_k, dgate);
+    let mut dwg = ws.take(g.m * g.e);
+    kn::par_matmul_tn_into(&st.u, &dlogits, &mut dwg, t, g.m, g.e);
+    let mut du_int = ws.take(t * g.m);
+    kn::par_matmul_nt_into(&dlogits, p.wg, &mut du_int, t, g.e, g.m);
+    for (a, b) in du_int.iter_mut().zip(du) {
+        *a += b;
+    }
+    ws.put(dlogits);
+    let mut dh_norm = ws.take(t * g.m);
+    let mut dn2 = ws.take(g.m);
+    kn::rmsnorm_bwd_into(&st.mha.h, p.n2, &du_int, &mut dh_norm, &mut dn2);
+    ws.put(du_int);
+    let mut dh_tot = ws.take(t * g.m);
+    for ((o, &a), &b) in dh_tot.iter_mut().zip(dh).zip(&dh_norm) {
+        *o = a + b;
+    }
+    ws.put(dh_norm);
+    let (mut grads, dx) = mha_backward_ws(g, p, x, &st.mha, &dh_tot, ws);
+    ws.put(dh_tot);
+    grads.push(dn2);
+    grads.push(dwg);
+    (grads, dx)
+}
+
+/// Backward of [`at_forward`] (allocating wrapper).
 pub fn at_backward(
     g: &Geo,
     p: &AtParams,
@@ -248,19 +421,7 @@ pub fn at_backward(
     du: &[f32],
     dgate: &[f32],
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
-    let t = x.len() / g.m;
-    let dlogits = kn::gating_topk_bwd(&st.gating, g.e, g.top_k, dgate);
-    let dwg = kn::matmul_tn(&st.u, &dlogits, t, g.m, g.e);
-    let mut du_int = kn::matmul_nt(&dlogits, p.wg, t, g.e, g.m);
-    for (a, b) in du_int.iter_mut().zip(du) {
-        *a += b;
-    }
-    let (dh_norm, dn2) = kn::rmsnorm_bwd(&st.mha.h, p.n2, &du_int);
-    let dh_tot: Vec<f32> = dh.iter().zip(&dh_norm).map(|(a, b)| a + b).collect();
-    let (mut grads, dx) = mha_backward(g, p, x, &st.mha, &dh_tot);
-    grads.push(dn2);
-    grads.push(dwg);
-    (grads, dx)
+    at_backward_ws(g, p, x, st, dh, du, dgate, &mut Workspace::new())
 }
 
 /// Saved forward state of [`block_forward`].
@@ -270,14 +431,35 @@ pub struct BlockState {
     pub expert_out: Vec<f32>,
 }
 
+impl BlockState {
+    /// Retire every saved buffer into the workspace pool.
+    pub fn recycle(self, ws: &mut Workspace) {
+        let BlockState {
+            at,
+            routing,
+            expert_out,
+        } = self;
+        at.recycle(ws);
+        ws.put(expert_out);
+        ws.put(routing.disp);
+        // routing.comb/kept are index lists — let them drop
+    }
+}
+
 /// One transformer block forward over flat `(T, M)` activations with
-/// per-expert capacity `c` (model.py `block_fwd`). Returns `(y, state)`.
-pub fn block_forward(g: &Geo, p: &BlockParams, x: &[f32], c: usize) -> (Vec<f32>, BlockState) {
-    let at = at_forward(g, &p.at, x);
+/// per-expert capacity `c` (model.py `block_fwd`), workspace-pooled.
+/// Returns `(y, state)`.
+pub fn block_forward_ws(g: &Geo, p: &BlockParams, x: &[f32], c: usize, ws: &mut Workspace) -> (Vec<f32>, BlockState) {
+    let at = at_forward_ws(g, &p.at, x, ws);
     let routing = dispatch(&at.u, &at.gating.idx, at.gating.gate.len(), g.e, c, g.m);
-    let expert_out = kn::expert_ffn(&routing.disp, p.w1, p.w2, g.e, c, g.m, g.h);
+    let mut expert_out = ws.take(g.e * c * g.m);
+    kn::expert_ffn_into(&routing.disp, p.w1, p.w2, &mut expert_out, g.e, c, g.m, g.h);
     let yc = combine(&expert_out, &routing, &at.gating.gate);
-    let y: Vec<f32> = at.mha.h.iter().zip(&yc).map(|(a, b)| a + b).collect();
+    let mut y = ws.take(x.len());
+    for ((yv, &hv), &cv) in y.iter_mut().zip(&at.mha.h).zip(&yc) {
+        *yv = hv + cv;
+    }
+    ws.put(yc);
     (
         y,
         BlockState {
@@ -288,17 +470,56 @@ pub fn block_forward(g: &Geo, p: &BlockParams, x: &[f32], c: usize) -> (Vec<f32>
     )
 }
 
-/// Recompute-based VJP of one block (model.py `block_bwd`): returns the
-/// 9 parameter grads in canonical order plus `dx`.
-pub fn block_backward(g: &Geo, p: &BlockParams, x: &[f32], c: usize, dy: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
-    let (_, st) = block_forward(g, p, x, c);
+/// One transformer block forward (allocating wrapper over
+/// [`block_forward_ws`]).
+pub fn block_forward(g: &Geo, p: &BlockParams, x: &[f32], c: usize) -> (Vec<f32>, BlockState) {
+    block_forward_ws(g, p, x, c, &mut Workspace::new())
+}
+
+/// Recompute-based VJP of one block (model.py `block_bwd`),
+/// workspace-pooled: returns the 9 parameter grads in canonical order
+/// plus `dx`.
+pub fn block_backward_ws(
+    g: &Geo,
+    p: &BlockParams,
+    x: &[f32],
+    c: usize,
+    dy: &[f32],
+    ws: &mut Workspace,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let (y, st) = block_forward_ws(g, p, x, c, ws);
+    ws.put(y);
     let (dout, dgate) = combine_bwd(dy, &st.expert_out, &st.routing, &st.at.gating.gate);
-    let (ddisp, dw1, dw2) = kn::expert_ffn_bwd(&st.routing.disp, p.w1, p.w2, &dout, g.e, c, g.m, g.h);
+    let mut ddisp = ws.take(g.e * c * g.m);
+    let mut dw1 = ws.take(g.e * g.m * g.h);
+    let mut dw2 = ws.take(g.e * g.h * g.m);
+    kn::expert_ffn_bwd_into(
+        &st.routing.disp,
+        p.w1,
+        p.w2,
+        &dout,
+        &mut ddisp,
+        &mut dw1,
+        &mut dw2,
+        g.e,
+        c,
+        g.m,
+        g.h,
+    );
+    ws.put(dout);
     let du = dispatch_bwd(&ddisp, &st.routing);
-    let (mut grads, dx) = at_backward(g, &p.at, x, &st.at, dy, &du, &dgate);
+    ws.put(ddisp);
+    let (mut grads, dx) = at_backward_ws(g, &p.at, x, &st.at, dy, &du, &dgate, ws);
+    ws.put_all([du, dgate]);
+    st.recycle(ws);
     grads.push(dw1);
     grads.push(dw2);
     (grads, dx)
+}
+
+/// Recompute-based VJP of one block (allocating wrapper).
+pub fn block_backward(g: &Geo, p: &BlockParams, x: &[f32], c: usize, dy: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    block_backward_ws(g, p, x, c, dy, &mut Workspace::new())
 }
 
 // ---------------------------------------------------------------------------
@@ -306,22 +527,27 @@ pub fn block_backward(g: &Geo, p: &BlockParams, x: &[f32], c: usize, dy: &[f32])
 // ---------------------------------------------------------------------------
 
 /// Final norm + tied LM head + next-token cross-entropy, fused fwd+bwd
-/// (model.py `head_loss_fwd_bwd`). Returns `(loss, dxf, dembed, dnormf)`.
-pub fn head_loss(
+/// (model.py `head_loss_fwd_bwd`), workspace-pooled.
+/// Returns `(loss, dxf, dembed, dnormf)`.
+#[allow(clippy::too_many_arguments)]
+pub fn head_loss_ws(
     g: &Geo,
     embed: &[f32],
     normf: &[f32],
     xf: &[f32],
     tokens: &[i32],
     b: usize,
+    ws: &mut Workspace,
 ) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
     let (n, m, v) = (g.n_seq, g.m, g.vocab);
     let t = b * n;
-    let xn = kn::rmsnorm(xf, normf);
-    let logits = kn::matmul_nt(&xn, embed, t, m, v);
+    let mut xn = ws.take(t * m);
+    kn::rmsnorm_into(xf, normf, &mut xn);
+    let mut logits = ws.take(t * v);
+    kn::par_matmul_nt_into(&xn, embed, &mut logits, t, m, v);
     let count = (b * (n - 1)) as f32;
     let mut loss = 0.0f64;
-    let mut dlogits = vec![0.0f32; t * v];
+    let mut dlogits = ws.take(t * v);
     for bi in 0..b {
         for pos in 0..n - 1 {
             let ti = bi * n + pos;
@@ -339,21 +565,48 @@ pub fn head_loss(
         }
     }
     let loss = (loss / count as f64) as f32;
-    let dxn = kn::matmul(&dlogits, embed, t, v, m);
-    let dembed = kn::matmul_tn(&dlogits, &xn, t, v, m);
-    let (dxf, dnormf) = kn::rmsnorm_bwd(xf, normf, &dxn);
+    ws.put(logits);
+    let mut dxn = ws.take(t * m);
+    kn::par_matmul_into(&dlogits, embed, &mut dxn, t, v, m);
+    let mut dembed = ws.take(v * m);
+    kn::par_matmul_tn_into(&dlogits, &xn, &mut dembed, t, v, m);
+    ws.put_all([dlogits, xn]);
+    let mut dxf = ws.take(t * m);
+    let mut dnormf = ws.take(m);
+    kn::rmsnorm_bwd_into(xf, normf, &dxn, &mut dxf, &mut dnormf);
+    ws.put(dxn);
     (loss, dxf, dembed, dnormf)
+}
+
+/// Final norm + tied LM head + loss (allocating wrapper over
+/// [`head_loss_ws`]).
+pub fn head_loss(
+    g: &Geo,
+    embed: &[f32],
+    normf: &[f32],
+    xf: &[f32],
+    tokens: &[i32],
+    b: usize,
+) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    head_loss_ws(g, embed, normf, xf, tokens, b, &mut Workspace::new())
 }
 
 // ---------------------------------------------------------------------------
 // Fused train/grad step over the whole parameter list
 // ---------------------------------------------------------------------------
 
-/// Per-worker full-model gradient (model.py `grad_step`): forward through
-/// all blocks, head loss, full backward. `params` is the canonical flat
-/// list (embed, L x 9 block tensors, normf). Returns `(loss, grads)` with
-/// the tied embedding gradient already summed (input lookup + LM head).
-pub fn grad_step(g: &Geo, params: &[&[f32]], tokens: &[i32], b_full: usize) -> (f32, Vec<Vec<f32>>) {
+/// Per-worker full-model gradient (model.py `grad_step`), workspace-
+/// pooled: forward through all blocks, head loss, full backward.
+/// `params` is the canonical flat list (embed, L x 9 block tensors,
+/// normf). Returns `(loss, grads)` with the tied embedding gradient
+/// already summed (input lookup + LM head).
+pub fn grad_step_ws(
+    g: &Geo,
+    params: &[&[f32]],
+    tokens: &[i32],
+    b_full: usize,
+    ws: &mut Workspace,
+) -> (f32, Vec<Vec<f32>>) {
     let n_params = params.len();
     let l_blocks = (n_params - 2) / 9;
     let c = g.capacity(b_full);
@@ -362,37 +615,82 @@ pub fn grad_step(g: &Geo, params: &[&[f32]], tokens: &[i32], b_full: usize) -> (
         .collect();
 
     let mut xs = Vec::with_capacity(l_blocks + 1);
-    xs.push(kn::embed_lookup(params[0], tokens, g.m));
+    let mut x0 = ws.take(tokens.len() * g.m);
+    kn::embed_lookup_into(params[0], tokens, g.m, &mut x0);
+    xs.push(x0);
     for bp in &blocks {
-        let (y, _) = block_forward(g, bp, xs.last().unwrap(), c);
+        let (y, st) = block_forward_ws(g, bp, xs.last().unwrap(), c, ws);
+        st.recycle(ws);
         xs.push(y);
     }
-    let (loss, dxf, de_head, dnormf) = head_loss(g, params[0], params[n_params - 1], &xs[l_blocks], tokens, b_full);
+    let (loss, dxf, de_head, dnormf) =
+        head_loss_ws(g, params[0], params[n_params - 1], &xs[l_blocks], tokens, b_full, ws);
+    ws.put(xs.pop().unwrap()); // xs[l_blocks]: consumed by the head
 
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n_params];
     let mut dx = dxf;
     for l in (0..l_blocks).rev() {
-        let (bg, dx_next) = block_backward(g, &blocks[l], &xs[l], c, &dx);
+        let (bg, dx_next) = block_backward_ws(g, &blocks[l], &xs[l], c, &dx, ws);
+        ws.put(xs.pop().unwrap()); // xs[l]: this was its last use
         for (ti, gt) in bg.into_iter().enumerate() {
             grads[1 + l * 9 + ti] = gt;
         }
-        dx = dx_next;
+        ws.put(std::mem::replace(&mut dx, dx_next));
     }
-    let mut de = kn::embed_scatter(tokens, &dx, g.vocab, g.m);
+    let mut de = ws.take(g.vocab * g.m);
+    kn::embed_scatter_into(tokens, &dx, g.m, &mut de);
     for (a, b) in de.iter_mut().zip(&de_head) {
         *a += b;
     }
+    ws.put_all([dx, de_head]);
     grads[0] = de;
     grads[n_params - 1] = dnormf;
     (loss, grads)
+}
+
+/// Per-worker full-model gradient (allocating wrapper over
+/// [`grad_step_ws`]).
+pub fn grad_step(g: &Geo, params: &[&[f32]], tokens: &[i32], b_full: usize) -> (f32, Vec<Vec<f32>>) {
+    grad_step_ws(g, params, tokens, b_full, &mut Workspace::new())
 }
 
 /// Momentum coefficient baked into the fused `train_step` artifact
 /// (aot.py lowers `model.train_step` at its default `momentum=0.9`).
 pub const TRAIN_STEP_MOMENTUM: f32 = 0.9;
 
-/// Fused single-process SGD+momentum step (model.py `train_step`):
-/// returns `(new_params, new_moms, loss)`.
+/// Fused single-process SGD+momentum step (model.py `train_step`),
+/// workspace-pooled: returns `(new_params, new_moms, loss)`. The
+/// per-tensor updates fan out across the thread budget; gradients are
+/// retired to the pool afterwards.
+pub fn train_step_ws(
+    g: &Geo,
+    params: &[&[f32]],
+    moms: &[&[f32]],
+    tokens: &[i32],
+    lr: f32,
+    b_full: usize,
+    ws: &mut Workspace,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
+    let (loss, grads) = grad_step_ws(g, params, tokens, b_full, ws);
+    let n = params.len();
+    let updated: Vec<(Vec<f32>, Vec<f32>)> = scope::par_map_vec(n, |i| {
+        let (p, m, gr) = (params[i], moms[i], &grads[i]);
+        let nm: Vec<f32> = m.iter().zip(gr).map(|(mv, gv)| TRAIN_STEP_MOMENTUM * mv + gv).collect();
+        let np: Vec<f32> = p.iter().zip(&nm).map(|(pv, mv)| pv - lr * mv).collect();
+        (np, nm)
+    });
+    ws.put_all(grads);
+    let mut new_params = Vec::with_capacity(n);
+    let mut new_moms = Vec::with_capacity(n);
+    for (np, nm) in updated {
+        new_params.push(np);
+        new_moms.push(nm);
+    }
+    (new_params, new_moms, loss)
+}
+
+/// Fused single-process SGD+momentum step (allocating wrapper over
+/// [`train_step_ws`]).
 pub fn train_step(
     g: &Geo,
     params: &[&[f32]],
@@ -401,16 +699,7 @@ pub fn train_step(
     lr: f32,
     b_full: usize,
 ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
-    let (loss, grads) = grad_step(g, params, tokens, b_full);
-    let mut new_params = Vec::with_capacity(params.len());
-    let mut new_moms = Vec::with_capacity(params.len());
-    for ((p, m), gr) in params.iter().zip(moms).zip(&grads) {
-        let nm: Vec<f32> = m.iter().zip(gr).map(|(mv, gv)| TRAIN_STEP_MOMENTUM * mv + gv).collect();
-        let np: Vec<f32> = p.iter().zip(&nm).map(|(pv, mv)| pv - lr * mv).collect();
-        new_params.push(np);
-        new_moms.push(nm);
-    }
-    (new_params, new_moms, loss)
+    train_step_ws(g, params, moms, tokens, lr, b_full, &mut Workspace::new())
 }
 
 #[cfg(test)]
@@ -467,6 +756,27 @@ mod tests {
         assert_eq!(y1, y2);
         assert_eq!(y1.len(), x.len());
         assert!(y1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh_buffers() {
+        // the same block through a shared (dirty) workspace twice must
+        // match the throwaway-workspace wrapper exactly
+        let g = tiny_geo();
+        let params = rand_params(&g, 1, 3);
+        let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let bp = BlockParams::new(&refs[1..10]);
+        let mut rng = Rng::new(29);
+        let x: Vec<f32> = (0..16 * g.m).map(|_| rng.normal() as f32 * 0.5).collect();
+        let (want, _) = block_forward(&g, &bp, &x, g.capacity(1));
+        let mut ws = Workspace::new();
+        for round in 0..2 {
+            let (y, st) = block_forward_ws(&g, &bp, &x, g.capacity(1), &mut ws);
+            assert_eq!(y, want, "round {round}");
+            st.recycle(&mut ws);
+            ws.put(y);
+            assert!(ws.pooled() > 0);
+        }
     }
 
     #[test]

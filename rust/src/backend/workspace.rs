@@ -1,0 +1,126 @@
+//! Scratch-buffer arena for the native backend's hot path.
+//!
+//! One training step allocates dozens of large f32 temporaries
+//! (activations, per-tensor gradients, attention projections, expert
+//! dispatch slabs). Allocating them fresh in every `block_fwd/bwd` call
+//! of every layer of every step churns the allocator and defeats cache
+//! reuse. [`Workspace`] is a deliberately simple pool: [`Workspace::take`]
+//! hands out a zeroed `Vec<f32>` (reusing the best-fitting retired
+//! buffer), [`Workspace::put`] retires one. The model functions in
+//! [`super::model`] thread a `&mut Workspace` through the whole
+//! forward/backward so temporaries recycle across layers, and
+//! [`super::NativeBackend`] keeps one workspace alive across `execute`
+//! calls so they also recycle across steps.
+//!
+//! Buffers are plain `Vec<f32>`s, so anything that must escape (returned
+//! gradients, outputs) can be taken from the pool and moved out — it
+//! simply doesn't come back.
+//!
+//! Determinism: `take` always returns a zero-filled buffer of exactly
+//! the requested length, so results are bit-identical whether a buffer
+//! is fresh or recycled (asserted by `tests/kernel_parity.rs`).
+
+/// Pool of reusable f32 scratch buffers. See the module docs.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Number of retired buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Total f32 capacity currently pooled.
+    pub fn pooled_elems(&self) -> usize {
+        self.pool.iter().map(|v| v.capacity()).sum()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements: the smallest
+    /// pooled buffer whose capacity fits (else the largest pooled buffer,
+    /// grown; else a fresh allocation).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None; // smallest adequate
+        let mut largest: Option<usize> = None;
+        for (i, buf) in self.pool.iter().enumerate() {
+            let cap = buf.capacity();
+            if cap >= len && best.is_none_or(|b| cap < self.pool[b].capacity()) {
+                best = Some(i);
+            }
+            if largest.is_none_or(|l| cap > self.pool[l].capacity()) {
+                largest = Some(i);
+            }
+        }
+        let mut v = match best.or(largest) {
+            Some(i) => self.pool.swap_remove(i),
+            None => Vec::with_capacity(len),
+        };
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Retire a buffer into the pool for later [`Workspace::take`] reuse.
+    /// Zero-capacity buffers are dropped (nothing to reuse).
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// Retire every buffer of an iterator (convenience for states).
+    pub fn put_all<I: IntoIterator<Item = Vec<f32>>>(&mut self, bufs: I) {
+        for v in bufs {
+            self.put(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_exact_len() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(8);
+        assert_eq!(a, vec![0.0f32; 8]);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.put(a);
+        // recycled buffer comes back zeroed, at the new length
+        let b = ws.take(5);
+        assert_eq!(b, vec![0.0f32; 5]);
+        assert!(b.capacity() >= 8, "recycled the retired allocation");
+    }
+
+    #[test]
+    fn take_prefers_smallest_adequate_buffer() {
+        let mut ws = Workspace::new();
+        ws.put(Vec::with_capacity(100));
+        ws.put(Vec::with_capacity(10));
+        let v = ws.take(8);
+        assert!(v.capacity() >= 8 && v.capacity() < 100, "cap {}", v.capacity());
+        assert_eq!(ws.pooled(), 1); // the 100-cap buffer remains
+    }
+
+    #[test]
+    fn take_grows_largest_when_nothing_fits() {
+        let mut ws = Workspace::new();
+        ws.put(Vec::with_capacity(4));
+        let v = ws.take(64);
+        assert_eq!(v.len(), 64);
+        assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn put_all_retires_everything() {
+        let mut ws = Workspace::new();
+        ws.put_all(vec![vec![1.0f32; 3], vec![2.0f32; 5], Vec::new()]);
+        assert_eq!(ws.pooled(), 2); // the empty vec is dropped
+    }
+}

@@ -26,6 +26,13 @@ pub struct Routing {
     pub disp: Vec<f32>,
     /// (T, k) [expert, slot] pairs; slot == C marks a dropped token.
     pub comb: Vec<(u32, u32)>,
+    /// Hoisted dispatch mask: one `(token, k-slot, slab offset)` entry
+    /// per **kept** (non-overflowed) assignment, in `comb` order, with
+    /// the slab offset pre-resolved to `(expert*C + slot) * M`. Built
+    /// once in [`dispatch`] so [`combine`], [`combine_bwd`] and
+    /// [`dispatch_bwd`] iterate kept rows directly instead of re-walking
+    /// all T*k pairs and re-deriving the capacity test + slab index.
+    pub kept: Vec<(u32, u32, usize)>,
     pub e: usize,
     pub c: usize,
     pub m: usize,
@@ -46,6 +53,7 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
         return Routing {
             disp: vec![0.0; e * c * m],
             comb: Vec::new(),
+            kept: Vec::new(),
             e,
             c,
             m,
@@ -56,6 +64,7 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
     let mut counters = vec![0u32; e];
     let mut disp = vec![0.0f32; e * c * m];
     let mut comb = Vec::with_capacity(t * k);
+    let mut kept = Vec::with_capacity(t * k);
     for ti in 0..t {
         for ki in 0..k {
             let ex = idx[ti * k + ki] as usize;
@@ -68,6 +77,7 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
                     disp[dst + j] += u[src + j];
                 }
                 comb.push((ex as u32, slot));
+                kept.push((ti as u32, ki as u32, dst));
             } else {
                 comb.push((ex as u32, c as u32)); // dropped
             }
@@ -76,6 +86,7 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
     Routing {
         disp,
         comb,
+        kept,
         e,
         c,
         m,
@@ -84,7 +95,9 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
 }
 
 /// Weighted gather of expert outputs back to tokens — rust mirror of
-/// `ref.combine_ref`. `out` is (E, C, M) flattened.
+/// `ref.combine_ref`. `out` is (E, C, M) flattened. Walks the hoisted
+/// `kept` list (same order as the full T*k loop, so identical float
+/// summation), skipping dropped tokens without re-deriving the mask.
 pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
     debug_assert_eq!(out.len(), e * c * m);
@@ -93,22 +106,20 @@ pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
     }
     let t = routing.comb.len() / k;
     let mut y = vec![0.0f32; t * m];
-    for ti in 0..t {
-        for ki in 0..k {
-            let (ex, slot) = routing.comb[ti * k + ki];
-            if (slot as usize) < c {
-                let g = gate[ti * k + ki];
-                let src = (ex as usize * c + slot as usize) * m;
-                for j in 0..m {
-                    y[ti * m + j] += g * out[src + j];
-                }
-            }
+    for &(ti, ki, src) in &routing.kept {
+        let (ti, ki) = (ti as usize, ki as usize);
+        let g = gate[ti * k + ki];
+        let yrow = &mut y[ti * m..(ti + 1) * m];
+        for (yv, &ov) in yrow.iter_mut().zip(&out[src..src + m]) {
+            *yv += g * ov;
         }
     }
     y
 }
 
 /// Backward of [`combine`]: returns (d_out (E,C,M), d_gate (T,k)).
+/// Shares the forward's hoisted `kept` mask (dropped tokens keep zero
+/// gate gradient and contribute nothing to d_out).
 pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
     if k == 0 {
@@ -117,41 +128,34 @@ pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> 
     let t = routing.comb.len() / k;
     let mut dout = vec![0.0f32; e * c * m];
     let mut dgate = vec![0.0f32; t * k];
-    for ti in 0..t {
-        for ki in 0..k {
-            let (ex, slot) = routing.comb[ti * k + ki];
-            if (slot as usize) < c {
-                let g = gate[ti * k + ki];
-                let o = (ex as usize * c + slot as usize) * m;
-                let mut dot = 0.0f32;
-                for j in 0..m {
-                    dout[o + j] += g * dy[ti * m + j];
-                    dot += dy[ti * m + j] * out[o + j];
-                }
-                dgate[ti * k + ki] = dot;
-            }
+    for &(ti, ki, o) in &routing.kept {
+        let (ti, ki) = (ti as usize, ki as usize);
+        let g = gate[ti * k + ki];
+        let dyrow = &dy[ti * m..(ti + 1) * m];
+        let mut dot = 0.0f32;
+        for ((dov, &dyv), &ov) in dout[o..o + m].iter_mut().zip(dyrow).zip(&out[o..o + m]) {
+            *dov += g * dyv;
+            dot += dyv * ov;
         }
+        dgate[ti * k + ki] = dot;
     }
     (dout, dgate)
 }
 
-/// Backward of [`dispatch`]: scatter d_disp back onto token gradients.
+/// Backward of [`dispatch`]: scatter d_disp back onto token gradients,
+/// via the forward's hoisted `kept` mask.
 pub fn dispatch_bwd(d_disp: &[f32], routing: &Routing) -> Vec<f32> {
-    let (c, m, k) = (routing.c, routing.m, routing.k);
+    let (m, k) = (routing.m, routing.k);
     if k == 0 {
         return Vec::new(); // empty routing: no token gradients
     }
     let t = routing.comb.len() / k;
     let mut du = vec![0.0f32; t * m];
-    for ti in 0..t {
-        for ki in 0..k {
-            let (ex, slot) = routing.comb[ti * k + ki];
-            if (slot as usize) < c {
-                let src = (ex as usize * c + slot as usize) * m;
-                for j in 0..m {
-                    du[ti * m + j] += d_disp[src + j];
-                }
-            }
+    for &(ti, _ki, src) in &routing.kept {
+        let ti = ti as usize;
+        let durow = &mut du[ti * m..(ti + 1) * m];
+        for (dv, &sv) in durow.iter_mut().zip(&d_disp[src..src + m]) {
+            *dv += sv;
         }
     }
     du
@@ -359,6 +363,9 @@ pub fn run_ep_cluster(
 ) -> Result<Vec<EpResult>> {
     let coll = Collective::new(p);
     let dir = artifacts.to_path_buf();
+    // kernel-level threads compose with worker-level parallelism: each
+    // worker gets an equal share of the caller's budget (min 1)
+    let worker_budget = (crate::sweep::scope::current_budget() / p).max(1);
     let mut handles = Vec::new();
     for w in 0..p {
         let coll = Arc::clone(&coll);
@@ -369,13 +376,15 @@ pub fn run_ep_cluster(
         let x = xs[w].clone();
         let dy = dys[w].clone();
         handles.push(std::thread::spawn(move || -> Result<EpResult> {
-            let mut engine = Engine::new(&dir)?;
-            let geo = ep_geometry(&engine, &cfg, p)?;
-            let shard = w1_full.len() / p;
-            let shard2 = w2_full.len() / p;
-            let w1 = &w1_full[w * shard..(w + 1) * shard];
-            let w2 = &w2_full[w * shard2..(w + 1) * shard2];
-            ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
+            crate::sweep::scope::with_budget(worker_budget, || {
+                let mut engine = Engine::new(&dir)?;
+                let geo = ep_geometry(&engine, &cfg, p)?;
+                let shard = w1_full.len() / p;
+                let shard2 = w2_full.len() / p;
+                let w1 = &w1_full[w * shard..(w + 1) * shard];
+                let w2 = &w2_full[w * shard2..(w + 1) * shard2];
+                ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
+            })
         }));
     }
     let mut out = Vec::new();
@@ -429,6 +438,23 @@ mod tests {
         assert_eq!(&r.disp[2..4], &[5.0, 6.0]);
         assert_eq!(&r.disp[4..6], &[3.0, 4.0]);
         assert_eq!(r.comb[3], (0, 2)); // dropped (slot == c)
+    }
+
+    #[test]
+    fn kept_list_matches_comb_mask() {
+        let (u, idx, gate, e, c, m) = routing_fixture();
+        let r = dispatch(&u, &idx, gate.len(), e, c, m);
+        // kept holds exactly the non-dropped (ti, ki) pairs in comb
+        // order, with the (E,C,M) slab offset pre-resolved
+        let mut want = Vec::new();
+        for (i, &(ex, slot)) in r.comb.iter().enumerate() {
+            if (slot as usize) < c {
+                let (ti, ki) = (i / r.k, i % r.k);
+                want.push((ti as u32, ki as u32, (ex as usize * c + slot as usize) * m));
+            }
+        }
+        assert_eq!(r.kept, want);
+        assert_eq!(r.kept.len(), 3, "token 3 overflowed expert 0");
     }
 
     #[test]

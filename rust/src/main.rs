@@ -227,4 +227,8 @@ fn cmd_info(args: &Args) {
             a.outputs.len()
         );
     }
+    println!(
+        "\nthread budget: {} (override with FLOWMOE_THREADS; kernels, experts, heads and sweeps share it)",
+        flowmoe::sweep::scope::default_budget()
+    );
 }

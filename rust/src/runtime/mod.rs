@@ -264,7 +264,7 @@ impl Engine {
     /// synthesizes the native manifest, so a clean checkout executes the
     /// `tiny`/`e2e` configs with no artifacts at all.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        Engine::with_backend(artifacts_dir, Box::new(crate::backend::NativeBackend))
+        Engine::with_backend(artifacts_dir, Box::new(crate::backend::NativeBackend::default()))
     }
 
     /// Engine on an explicit backend (pluggable dispatch).

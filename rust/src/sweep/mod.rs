@@ -24,6 +24,8 @@
 //! per-case evaluation (used by `fig6_custom_layers`, `perf_hotpath`,
 //! `examples/sweep_custom_layers` and the `flowmoe sweep` subcommand).
 
+pub mod scope;
+
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
@@ -75,15 +77,13 @@ impl Default for Sweeper {
 }
 
 impl Sweeper {
-    /// A sweeper using every available core, claiming one case at a time
-    /// (finest-grained balancing; each simulator case is ~ms, far above
-    /// the cost of one atomic claim).
+    /// A sweeper using the caller's thread budget ([`scope::current_budget`]:
+    /// `FLOWMOE_THREADS` or every available core), claiming one case at a
+    /// time (finest-grained balancing; each simulator case is ~ms, far
+    /// above the cost of one atomic claim).
     pub fn new() -> Sweeper {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
         Sweeper {
-            threads,
+            threads: scope::current_budget(),
             chunk: 1,
             progress: None,
         }
@@ -170,20 +170,24 @@ impl Sweeper {
                     let cursor = &cursor;
                     let done = &done;
                     handles.push(s.spawn(move || {
-                        let mut local: Vec<(usize, Result<R, CasePanic>)> = Vec::new();
-                        loop {
-                            // steal the next unclaimed chunk of the range
-                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= n {
-                                break;
+                        // budget 1 inside: a case that itself calls the
+                        // parallel kernels must not oversubscribe the host
+                        scope::with_budget(1, || {
+                            let mut local: Vec<(usize, Result<R, CasePanic>)> = Vec::new();
+                            loop {
+                                // steal the next unclaimed chunk of the range
+                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= n {
+                                    break;
+                                }
+                                let end = (start + chunk).min(n);
+                                for i in start..end {
+                                    local.push((i, run_case(f, i, &items[i])));
+                                    self.report(done, n, t0);
+                                }
                             }
-                            let end = (start + chunk).min(n);
-                            for i in start..end {
-                                local.push((i, run_case(f, i, &items[i])));
-                                self.report(done, n, t0);
-                            }
-                        }
-                        local
+                            local
+                        })
                     }));
                 }
                 for h in handles {

@@ -1,0 +1,312 @@
+//! Intra-step parallelism primitives with a crate-wide thread budget.
+//!
+//! The sweep engine parallelizes *across* independent benchmark cases;
+//! the native backend parallelizes *inside* one training step (matmul
+//! row bands, experts, attention heads, per-tensor optimizer updates).
+//! Both kinds of parallelism can nest — a sweep case may run a model
+//! step, a `train_dp` worker runs kernels — so raw
+//! `available_parallelism()` everywhere would oversubscribe the host.
+//!
+//! This module is the single arbiter:
+//!
+//! * [`default_budget`] — process-wide thread budget, `FLOWMOE_THREADS`
+//!   env var when set, else the detected core count.
+//! * [`current_budget`] / [`with_budget`] — a thread-local override so a
+//!   coordinator (e.g. `trainer::train_dp` spawning P workers) can hand
+//!   each child `budget / P` threads.
+//! * Worker threads spawned by the primitives below run with budget 1,
+//!   so nested `par_*` calls degrade to serial instead of multiplying.
+//!
+//! Every primitive is **deterministic**: work is split into contiguous
+//! input-ordered bands and each unit of work is computed exactly as the
+//! serial path computes it, so results are byte-identical to a serial
+//! run for any budget (the property `perf_hotpath` and the kernel
+//! parity tests assert).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Process-wide default thread budget: the `FLOWMOE_THREADS` env var
+/// when set to a positive integer, else the detected core count (read
+/// once; changing the env var mid-process has no effect).
+pub fn default_budget() -> usize {
+    static BUDGET: OnceLock<usize> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        std::env::var("FLOWMOE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+thread_local! {
+    static LOCAL_BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Thread budget of the calling thread: the innermost [`with_budget`]
+/// override, else [`default_budget`].
+pub fn current_budget() -> usize {
+    LOCAL_BUDGET.with(|b| b.get()).unwrap_or_else(default_budget)
+}
+
+/// Restores the previous thread-local budget on drop (panic-safe).
+struct BudgetGuard {
+    prev: Option<usize>,
+}
+
+impl BudgetGuard {
+    fn set(n: usize) -> BudgetGuard {
+        let prev = LOCAL_BUDGET.with(|b| {
+            let p = b.get();
+            b.set(Some(n.max(1)));
+            p
+        });
+        BudgetGuard { prev }
+    }
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        LOCAL_BUDGET.with(|b| b.set(prev));
+    }
+}
+
+/// Run `f` with the calling thread's budget overridden to `n` (min 1).
+/// Nested overrides stack; the previous value is restored afterwards,
+/// panic included.
+pub fn with_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _guard = BudgetGuard::set(n);
+    f()
+}
+
+/// Split `n` items into at most `parts` contiguous `(start, len)` bands
+/// of near-equal size (first `n % parts` bands get one extra item).
+fn bands(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Split the rows of a row-major `(rows, row_len)` buffer into
+/// contiguous bands across the thread budget; each band is processed as
+/// `f(first_row, band)` on its own scoped thread (budget 1 inside).
+///
+/// `f` must compute each row independently of the banding (the kernel
+/// contract in `backend::kernels`), so the buffer contents are
+/// byte-identical to `f(0, out)` for any budget.
+pub fn par_rows<F>(out: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    // hard assert: a ragged buffer would make the banding drop the tail
+    // in the parallel path only, breaking the byte-identity contract
+    assert_eq!(out.len() % row_len, 0, "par_rows: buffer not a whole number of rows");
+    let rows = out.len() / row_len;
+    let threads = current_budget().min(rows);
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        for (start, len) in bands(rows, threads) {
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
+            rest = tail;
+            s.spawn(move || {
+                let _g = BudgetGuard::set(1);
+                f(start, band);
+            });
+        }
+    });
+}
+
+/// Distribute owned work items across the thread budget; item `i` is
+/// handled exactly once as `f(i, item)` (budget 1 inside the workers).
+/// Items typically carry disjoint `&mut` views of one output — e.g. the
+/// per-expert slabs of `expert_ffn` — which keeps the result
+/// independent of the distribution.
+pub fn par_items<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let n = items.len();
+    let threads = current_budget().min(n);
+    if threads <= 1 {
+        for (i, it) in items.into_iter().enumerate() {
+            f(i, it);
+        }
+        return;
+    }
+    // peel contiguous index bands off the tail so each thread owns a sub-vec
+    let mut rest = items;
+    let mut parts: Vec<(usize, Vec<T>)> = Vec::with_capacity(threads);
+    for (start, _len) in bands(n, threads).into_iter().rev() {
+        parts.push((start, rest.split_off(start)));
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for (start, chunk) in parts {
+            s.spawn(move || {
+                let _g = BudgetGuard::set(1);
+                for (j, it) in chunk.into_iter().enumerate() {
+                    f(start + j, it);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel input-ordered map over `0..n`: returns
+/// `[f(0), f(1), ..., f(n-1)]`, identical to the serial map for pure
+/// `f` (contiguous bands, one scoped thread each, budget 1 inside).
+pub fn par_map_vec<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = current_budget().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let banding = bands(n, threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = banding
+            .into_iter()
+            .map(|(start, len)| {
+                s.spawn(move || {
+                    let _g = BudgetGuard::set(1);
+                    (start..start + len).map(f).collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join().expect("par_map_vec worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn bands_cover_range_exactly_once() {
+        for n in [0usize, 1, 2, 7, 64, 101] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let b = bands(n, parts);
+                let mut next = 0;
+                for (start, len) in b {
+                    assert_eq!(start, next);
+                    assert!(len >= 1);
+                    next += len;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn with_budget_overrides_and_restores() {
+        let outer = current_budget();
+        with_budget(3, || {
+            assert_eq!(current_budget(), 3);
+            with_budget(1, || assert_eq!(current_budget(), 1));
+            assert_eq!(current_budget(), 3);
+        });
+        assert_eq!(current_budget(), outer);
+    }
+
+    #[test]
+    fn with_budget_floors_at_one() {
+        with_budget(0, || assert_eq!(current_budget(), 1));
+    }
+
+    #[test]
+    fn par_rows_matches_serial_bitwise() {
+        let row_len = 17;
+        let rows = 23;
+        let fill = |first_row: usize, band: &mut [f32]| {
+            for (r, row) in band.chunks_exact_mut(row_len).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((first_row + r) * 1000 + j) as f32 * 0.25;
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; rows * row_len];
+        fill(0, &mut serial);
+        for budget in [1usize, 2, 3, 8, 64] {
+            let mut par = vec![0.0f32; rows * row_len];
+            with_budget(budget, || par_rows(&mut par, row_len, fill));
+            assert!(serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn par_rows_workers_run_with_budget_one() {
+        let mut out = vec![0.0f32; 16];
+        with_budget(4, || {
+            par_rows(&mut out, 4, |_, band| {
+                assert_eq!(current_budget(), 1);
+                band.fill(1.0);
+            });
+        });
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn par_items_processes_each_item_once_in_place() {
+        let n = 37;
+        let mut data = vec![0u64; n];
+        let items: Vec<(usize, &mut u64)> = data.iter_mut().enumerate().collect();
+        let calls = AtomicUsize::new(0);
+        with_budget(5, || {
+            par_items(items, |i, (orig, slot)| {
+                assert_eq!(i, orig);
+                *slot = i as u64 * 7 + 1;
+                calls.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), n);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 7 + 1);
+        }
+    }
+
+    #[test]
+    fn par_map_vec_is_input_ordered() {
+        for budget in [1usize, 2, 4, 9] {
+            let out = with_budget(budget, || par_map_vec(25, |i| i * i));
+            assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>(), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn default_budget_is_positive() {
+        assert!(default_budget() >= 1);
+        assert!(current_budget() >= 1);
+    }
+}

@@ -27,6 +27,7 @@ use anyhow::{anyhow, Result};
 use crate::commpool::{partition_ranges, Collective, CommPool};
 use crate::data::Corpus;
 use crate::runtime::{Engine, HostTensor, PjRtBuffer};
+use crate::sweep::scope;
 use crate::util::Rng;
 
 /// Per-run report.
@@ -135,13 +136,21 @@ fn full_batch(engine: &Engine, cfg: &str) -> Result<usize> {
 }
 
 /// SGD + momentum update (matches the HLO train_step formula exactly).
+/// The per-tensor updates are independent, so they fan out across the
+/// worker's thread budget (identical results for any budget).
 fn sgd_update(params: &mut [Vec<f32>], moms: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32, mu: f32) {
-    for ((p, m), g) in params.iter_mut().zip(moms.iter_mut()).zip(grads.iter()) {
+    let items: Vec<(&mut Vec<f32>, &mut Vec<f32>, &Vec<f32>)> = params
+        .iter_mut()
+        .zip(moms.iter_mut())
+        .zip(grads.iter())
+        .map(|((p, m), g)| (p, m, g))
+        .collect();
+    scope::par_items(items, |_, (p, m, g)| {
         for i in 0..p.len() {
             m[i] = mu * m[i] + g[i];
             p[i] -= lr * m[i];
         }
-    }
+    });
 }
 
 /// Single-process fused-train_step path.
@@ -199,16 +208,24 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
 
 /// Distributed data-parallel path: P workers, per-block pipelined
 /// backward, chunked-AR overlap through the comm pool.
+///
+/// The caller's thread budget ([`scope::current_budget`]) is divided
+/// across the workers: each worker runs its kernels with `budget / P`
+/// threads (min 1), so worker-level and kernel-level parallelism compose
+/// without oversubscribing the host.
 pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainReport> {
     assert!(p >= 1);
     let coll = Collective::new(p);
     let dir: PathBuf = artifacts.to_path_buf();
+    let worker_budget = (scope::current_budget() / p).max(1);
     let mut handles = Vec::new();
     for w in 0..p {
         let coll = Arc::clone(&coll);
         let opts = opts.clone();
         let dir = dir.clone();
-        handles.push(std::thread::spawn(move || worker_dp(w, p, coll, &dir, &opts)));
+        handles.push(std::thread::spawn(move || {
+            scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts))
+        }));
     }
     let mut reports: Vec<TrainReport> = Vec::new();
     for h in handles {

@@ -1,0 +1,244 @@
+//! Parity and determinism contracts of the blocked/parallel native
+//! kernels (§Perf):
+//!
+//! * blocked matmuls agree with the naive `*_ref` oracles within 1e-4
+//!   rel-tol across odd/prime/irregular shapes,
+//! * parallel (M-banded / expert-banded) execution is **byte-identical**
+//!   to serial for any thread budget,
+//! * `Workspace` reuse (dirty recycled buffers) is byte-identical to
+//!   fresh allocation, across consecutive `train_step` calls.
+
+use flowmoe::backend::kernels as kn;
+use flowmoe::backend::model as nm;
+use flowmoe::backend::Workspace;
+use flowmoe::config::preset;
+use flowmoe::sweep::scope;
+use flowmoe::util::Rng;
+
+fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * s).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[track_caller]
+fn assert_rel_close(got: &[f32], want: &[f32], rel: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = rel * (g.abs() + w.abs()) + 1e-5;
+        assert!((g - w).abs() <= tol, "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// The satellite contract: blocked kernels vs the naive reference across
+/// every (m, k, n) in {1, 3, 17, 64, 100}^3 — odd, prime, tile-aligned
+/// and remainder-heavy shapes — within 1e-4 relative tolerance.
+#[test]
+fn blocked_matmuls_match_reference_across_odd_shapes() {
+    let dims = [1usize, 3, 17, 64, 100];
+    let mut rng = Rng::new(2024);
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let a = randv(&mut rng, m * k, 1.0);
+                let b = randv(&mut rng, k * n, 1.0);
+                assert_rel_close(
+                    &kn::matmul(&a, &b, m, k, n),
+                    &kn::matmul_ref(&a, &b, m, k, n),
+                    1e-4,
+                    &format!("matmul {m}x{k}x{n}"),
+                );
+                let bt = randv(&mut rng, n * k, 1.0);
+                assert_rel_close(
+                    &kn::matmul_nt(&a, &bt, m, k, n),
+                    &kn::matmul_nt_ref(&a, &bt, m, k, n),
+                    1e-4,
+                    &format!("matmul_nt {m}x{k}x{n}"),
+                );
+                let at = randv(&mut rng, k * m, 1.0);
+                assert_rel_close(
+                    &kn::matmul_tn(&at, &b, k, m, n),
+                    &kn::matmul_tn_ref(&at, &b, k, m, n),
+                    1e-4,
+                    &format!("matmul_tn {m}x{k}x{n}"),
+                );
+            }
+        }
+    }
+}
+
+/// Parallel row-banding must not change a single bit, for any budget.
+/// Shapes sit above the kernels' parallel work threshold so the banded
+/// path really runs when the budget allows it.
+#[test]
+fn parallel_matmuls_byte_identical_across_budgets() {
+    let mut rng = Rng::new(7);
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (101, 53, 67)] {
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let bt = randv(&mut rng, n * k, 1.0);
+        let at = randv(&mut rng, k * m, 1.0);
+        let s_mm = scope::with_budget(1, || kn::par_matmul(&a, &b, m, k, n));
+        let s_nt = scope::with_budget(1, || kn::par_matmul_nt(&a, &bt, m, k, n));
+        let s_tn = scope::with_budget(1, || kn::par_matmul_tn(&at, &b, k, m, n));
+        for budget in [2usize, 3, 5, 16] {
+            scope::with_budget(budget, || {
+                assert!(bits_eq(&s_mm, &kn::par_matmul(&a, &b, m, k, n)), "mm b={budget}");
+                assert!(bits_eq(&s_nt, &kn::par_matmul_nt(&a, &bt, m, k, n)), "nt b={budget}");
+                assert!(bits_eq(&s_tn, &kn::par_matmul_tn(&at, &b, k, m, n)), "tn b={budget}");
+            });
+        }
+    }
+}
+
+/// Expert-axis fan-out of the FFN (fwd + bwd) must be byte-identical to
+/// the serial loop. Shapes exceed the per-expert parallel threshold.
+#[test]
+fn parallel_expert_ffn_byte_identical_across_budgets() {
+    let (e, c, m, h) = (4usize, 32usize, 32usize, 256usize);
+    let mut rng = Rng::new(9);
+    let x = randv(&mut rng, e * c * m, 0.7);
+    let w1 = randv(&mut rng, e * m * h, 0.4);
+    let w2 = randv(&mut rng, e * h * m, 0.4);
+    let dy = randv(&mut rng, e * c * m, 1.0);
+    let fwd_s = scope::with_budget(1, || kn::expert_ffn(&x, &w1, &w2, e, c, m, h));
+    let (dx_s, dw1_s, dw2_s) = scope::with_budget(1, || kn::expert_ffn_bwd(&x, &w1, &w2, &dy, e, c, m, h));
+    for budget in [2usize, 4, 8] {
+        scope::with_budget(budget, || {
+            assert!(bits_eq(&fwd_s, &kn::expert_ffn(&x, &w1, &w2, e, c, m, h)), "fwd b={budget}");
+            let (dx, dw1, dw2) = kn::expert_ffn_bwd(&x, &w1, &w2, &dy, e, c, m, h);
+            assert!(bits_eq(&dx_s, &dx), "dx b={budget}");
+            assert!(bits_eq(&dw1_s, &dw1), "dw1 b={budget}");
+            assert!(bits_eq(&dw2_s, &dw2), "dw2 b={budget}");
+        });
+    }
+}
+
+/// The per-(sample, head) MHA fan-out must be byte-identical to the
+/// serial head loop. The geometry clears the head-parallel threshold
+/// (units * N^2 * hd) while staying cheap.
+#[test]
+fn parallel_mha_heads_byte_identical_across_budgets() {
+    let g = nm::Geo {
+        m: 32,
+        e: 4,
+        h: 16,
+        top_k: 2,
+        n_heads: 4,
+        n_seq: 32,
+        f: 4.0,
+        vocab: 64,
+    };
+    let mut rng = Rng::new(11);
+    let params: Vec<Vec<f32>> = vec![
+        vec![1.0; g.m],                       // n1
+        randv(&mut rng, g.m * g.m, 0.3),      // wq
+        randv(&mut rng, g.m * g.m, 0.3),      // wk
+        randv(&mut rng, g.m * g.m, 0.3),      // wv
+        randv(&mut rng, g.m * g.m, 0.3),      // wo
+        vec![1.0; g.m],                       // n2
+        randv(&mut rng, g.m * g.e, 0.5),      // wg
+    ];
+    let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let atp = nm::AtParams::new(&refs);
+    let b = 4usize;
+    let x = randv(&mut rng, b * g.n_seq * g.m, 0.5);
+    let dh = randv(&mut rng, x.len(), 1.0);
+    let (h_s, grads_s, dx_s) = scope::with_budget(1, || {
+        let st = nm::mha_forward(&g, &atp, &x);
+        let (grads, dx) = nm::mha_backward(&g, &atp, &x, &st, &dh);
+        (st.h, grads, dx)
+    });
+    for budget in [2usize, 4] {
+        scope::with_budget(budget, || {
+            let st = nm::mha_forward(&g, &atp, &x);
+            assert!(bits_eq(&h_s, &st.h), "h b={budget}");
+            let (grads, dx) = nm::mha_backward(&g, &atp, &x, &st, &dh);
+            assert!(bits_eq(&dx_s, &dx), "dx b={budget}");
+            for (i, (gp, gs)) in grads.iter().zip(&grads_s).enumerate() {
+                assert!(bits_eq(gs, gp), "grad {i} b={budget}");
+            }
+        });
+    }
+}
+
+/// The workspace satellite contract: two consecutive `train_step` calls
+/// through one shared (dirty) workspace produce bit-identical losses and
+/// parameters — and match the fresh-allocation wrapper exactly.
+#[test]
+fn workspace_reuse_bit_identical_train_steps() {
+    let g = nm::Geo::from_cfg(&preset("tiny").unwrap());
+    let mut rng = Rng::new(17);
+    let mut shapes: Vec<usize> = vec![g.vocab * g.m];
+    shapes.extend([
+        g.m,
+        g.m * g.m,
+        g.m * g.m,
+        g.m * g.m,
+        g.m * g.m,
+        g.m,
+        g.m * g.e,
+        g.e * g.m * g.h,
+        g.e * g.h * g.m,
+    ]);
+    shapes.push(g.m);
+    let params: Vec<Vec<f32>> = shapes.iter().map(|&n| randv(&mut rng, n, 0.15)).collect();
+    let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let moms: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mrefs: Vec<&[f32]> = moms.iter().map(|v| v.as_slice()).collect();
+    let b = 2usize;
+    let tokens: Vec<i32> = (0..b * g.n_seq).map(|_| rng.below(g.vocab) as i32).collect();
+    let lr = 0.05f32;
+
+    let (p_fresh, m_fresh, loss_fresh) = nm::train_step(&g, &refs, &mrefs, &tokens, lr, b);
+    let mut ws = Workspace::new();
+    let (p1, m1, loss1) = nm::train_step_ws(&g, &refs, &mrefs, &tokens, lr, b, &mut ws);
+    assert!(ws.pooled() > 0, "workspace retired no buffers");
+    // second call re-runs the same step on the now-dirty pool
+    let (p2, m2, loss2) = nm::train_step_ws(&g, &refs, &mrefs, &tokens, lr, b, &mut ws);
+    assert_eq!(loss1.to_bits(), loss2.to_bits(), "losses differ across reuse");
+    assert_eq!(loss1.to_bits(), loss_fresh.to_bits(), "ws loss differs from fresh");
+    for i in 0..p1.len() {
+        assert!(bits_eq(&p1[i], &p2[i]), "params {i} differ across reuse");
+        assert!(bits_eq(&p1[i], &p_fresh[i]), "params {i} differ from fresh");
+        assert!(bits_eq(&m1[i], &m2[i]), "moms {i} differ across reuse");
+        assert!(bits_eq(&m1[i], &m_fresh[i]), "moms {i} differ from fresh");
+    }
+}
+
+/// Full grad_step must be deterministic and budget-independent on the
+/// tiny config (covers gating, routing, heads, experts, head loss).
+#[test]
+fn grad_step_byte_identical_across_budgets() {
+    let g = nm::Geo::from_cfg(&preset("tiny").unwrap());
+    let mut rng = Rng::new(23);
+    let mut shapes: Vec<usize> = vec![g.vocab * g.m];
+    for _ in 0..2 {
+        shapes.extend([
+            g.m,
+            g.m * g.m,
+            g.m * g.m,
+            g.m * g.m,
+            g.m * g.m,
+            g.m,
+            g.m * g.e,
+            g.e * g.m * g.h,
+            g.e * g.h * g.m,
+        ]);
+    }
+    shapes.push(g.m);
+    let params: Vec<Vec<f32>> = shapes.iter().map(|&n| randv(&mut rng, n, 0.15)).collect();
+    let refs: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let b = 2usize;
+    let tokens: Vec<i32> = (0..b * g.n_seq).map(|_| rng.below(g.vocab) as i32).collect();
+    let (loss_s, grads_s) = scope::with_budget(1, || nm::grad_step(&g, &refs, &tokens, b));
+    for budget in [2usize, 4] {
+        let (loss, grads) = scope::with_budget(budget, || nm::grad_step(&g, &refs, &tokens, b));
+        assert_eq!(loss_s.to_bits(), loss.to_bits(), "loss b={budget}");
+        for (i, (gp, gs)) in grads.iter().zip(&grads_s).enumerate() {
+            assert!(bits_eq(gs, gp), "grad {i} b={budget}");
+        }
+    }
+}
