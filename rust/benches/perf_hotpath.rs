@@ -1,13 +1,17 @@
 //! Hot-path microbenchmarks (§Perf): DAG build + simulation throughput
 //! (the coordinator's scheduling cost), the multi-core sweep engine vs
-//! the old serial loop, the native backend's blocked/parallel kernels
-//! (serial vs M-banded parallel; results must be byte-identical), and
-//! the comm-pool / collective primitives.
-//! Paper bound: scheduling overhead < 1 % of iteration time.
+//! the old serial loop, the native backend's kernel dispatch tiers
+//! (naive vs blocked vs simd, serial vs M-banded parallel; within a
+//! tier results must be byte-identical), and the comm-pool / collective
+//! primitives. Paper bound: scheduling overhead < 1 % of iteration time.
 //!
 //! Kernel rows are also written to `BENCH_native_kernels.json`
-//! (op, shape, naive_ms, serial_ms, parallel_ms, speedup) so future PRs
-//! have a machine-readable perf trajectory to compare against.
+//! (op, shape, naive_ms, serial_ms, parallel_ms, speedup, simd_ms) so
+//! future PRs have a machine-readable perf trajectory to compare
+//! against: `naive_ms/serial_ms` is the blocking win, `speedup` the
+//! threading win, `serial_ms/simd_ms` the f32x8 win on this host. When
+//! AVX2+FMA is detected the matmul simd-vs-blocked ratio is asserted
+//! >= 1.5x (skipped, not failed, on hosts without AVX2).
 
 use std::sync::Arc;
 
@@ -26,10 +30,11 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
-/// Time one native kernel serial (budget 1) vs parallel (default
-/// budget), asserting byte-identical repeated parallel runs and
-/// parallel == serial. Appends two table rows and one JSON results row;
-/// returns the parallel speedup.
+/// Time one native kernel per dispatch tier: blocked serial (budget 1)
+/// vs blocked parallel (default budget) vs simd serial, asserting that
+/// within each tier repeated and parallel runs are byte-identical to the
+/// serial run. Appends table rows and one JSON results row; returns
+/// `(parallel speedup, simd-vs-blocked serial speedup)`.
 fn bench_kernel(
     op: &str,
     shape: &str,
@@ -37,21 +42,29 @@ fn bench_kernel(
     naive: Option<&dyn Fn() -> Vec<f32>>,
     t: &mut Table,
     json_rows: &mut Vec<String>,
-) -> f64 {
-    let serial_out = scope::with_budget(1, f);
-    let par1 = f();
-    let par2 = f();
-    assert!(bits_eq(&par1, &par2), "{op} {shape}: repeated parallel runs differ");
-    assert!(bits_eq(&serial_out, &par1), "{op} {shape}: parallel differs from serial");
-    let s_serial = scope::with_budget(1, || {
+) -> (f64, f64) {
+    use flowmoe::backend::kernels::Dispatch;
+    let run = |d: Dispatch| kn::with_dispatch(d, f);
+    // correctness: parallel == serial bitwise, within each tier
+    let blocked_serial = scope::with_budget(1, || run(Dispatch::Blocked));
+    let blocked_par = run(Dispatch::Blocked);
+    let blocked_par2 = run(Dispatch::Blocked);
+    assert!(bits_eq(&blocked_par, &blocked_par2), "{op} {shape}: repeated parallel runs differ");
+    assert!(bits_eq(&blocked_serial, &blocked_par), "{op} {shape}: blocked parallel differs from serial");
+    let simd_serial = scope::with_budget(1, || run(Dispatch::Simd));
+    let simd_par = run(Dispatch::Simd);
+    assert!(bits_eq(&simd_serial, &simd_par), "{op} {shape}: simd parallel differs from serial");
+    // timing per tier
+    let time = |d: Dispatch| {
         bench_median(1, 3, || {
-            std::hint::black_box(f().len());
+            std::hint::black_box(kn::with_dispatch(d, f).len());
         })
-    });
-    let s_par = bench_median(1, 3, || {
-        std::hint::black_box(f().len());
-    });
+    };
+    let s_serial = scope::with_budget(1, || time(Dispatch::Blocked));
+    let s_par = time(Dispatch::Blocked);
+    let s_simd = scope::with_budget(1, || time(Dispatch::Simd));
     let speedup = s_serial / s_par;
+    let simd_ratio = s_serial / s_simd;
     let mut json = format!("{{\"op\":\"{op}\",\"shape\":\"{shape}\"");
     if let Some(nf) = naive {
         let s_naive = bench_median(1, 3, || {
@@ -75,14 +88,21 @@ fn bench_kernel(
         format!("{:.1} ms", s_par * 1e3),
         format!("{speedup:.2}x vs serial, byte-identical"),
     ]);
+    let simd_kind = if kn::avx2_available() { "avx2+fma" } else { "portable lanes" };
+    t.row(vec![
+        format!("kernel {op} {shape}, simd serial ({simd_kind})"),
+        format!("{:.1} ms", s_simd * 1e3),
+        format!("{simd_ratio:.2}x vs blocked serial"),
+    ]);
     json.push_str(&format!(
-        ",\"serial_ms\":{:.3},\"parallel_ms\":{:.3},\"speedup\":{:.3}}}",
+        ",\"serial_ms\":{:.3},\"parallel_ms\":{:.3},\"speedup\":{:.3},\"simd_ms\":{:.3}}}",
         s_serial * 1e3,
         s_par * 1e3,
-        speedup
+        speedup,
+        s_simd * 1e3
     ));
     json_rows.push(json);
-    speedup
+    (speedup, simd_ratio)
 }
 
 fn main() {
@@ -168,7 +188,7 @@ fn main() {
     let b = randv(k * n);
     let bt = randv(n * k);
     let at = randv(k * m);
-    let mm_speedup = bench_kernel(
+    let (mm_speedup, mm_simd) = bench_kernel(
         "matmul",
         &format!("{m}x{k}x{n}"),
         &|| kn::matmul(&a, &b, m, k, n),
@@ -210,9 +230,25 @@ fn main() {
             "parallel blocked matmul speedup {mm_speedup:.2}x < 3x on {cores} cores"
         );
     }
+    // the simd acceptance gate: only asserted where the AVX2+FMA path
+    // actually runs; the portable fallback makes no speed promise
+    if kn::avx2_available() {
+        assert!(
+            mm_simd >= 1.5,
+            "simd matmul speedup {mm_simd:.2}x < 1.5x vs blocked with AVX2+FMA detected"
+        );
+    } else {
+        t.row(vec![
+            "simd >= 1.5x matmul assert".into(),
+            "skipped".into(),
+            "AVX2+FMA not detected (portable lanes fallback)".into(),
+        ]);
+    }
     let json = format!(
-        "{{\"bench\":\"native_kernels\",\"host_cores\":{cores},\"thread_budget\":{},\"results\":[{}]}}\n",
+        "{{\"bench\":\"native_kernels\",\"host_cores\":{cores},\"thread_budget\":{},\"avx2\":{},\"dispatch\":\"{}\",\"results\":[{}]}}\n",
         scope::current_budget(),
+        kn::avx2_available(),
+        kn::default_dispatch().name(),
         json_rows.join(",")
     );
     let json_path = "BENCH_native_kernels.json";

@@ -12,28 +12,49 @@
 //!
 //! # Performance (§Perf)
 //!
-//! The three matmul variants are **cache-blocked**: a 4-row (`MR`)
-//! micro-kernel accumulates into register/L1-resident output rows while
-//! one `NC`-wide stripe of `b` streams through, giving 4x reuse of every
-//! `b` load and four independent FMA chains per column for ILP. The
-//! `matmul_nt` dot-product variant uses a 4x4 register tile (16
-//! independent accumulator chains) instead. `par_*` variants additionally
-//! split the M dimension into contiguous row bands across
-//! [`crate::sweep::scope`]'s thread budget; `expert_ffn`/`expert_ffn_bwd`
-//! fan the expert axis out the same way.
+//! Every hot kernel routes through one **dispatch chooser**
+//! ([`Dispatch`], selected by the `FLOWMOE_KERNELS` env var or a
+//! thread-local [`with_dispatch`] override) with three tiers:
+//!
+//! * `naive` — the reference triple loops (the `*_ref` oracles run as
+//!   the production kernel; debugging tier).
+//! * `blocked` — cache-blocked micro-kernels: a 4-row (`MR`) band
+//!   accumulates into register/L1-resident output rows while one
+//!   `NC`-wide stripe of `b` streams through (4x reuse of every `b`
+//!   load, four independent accumulation chains per column); the
+//!   `matmul_nt` dot-product variant uses a 4x4 register tile.
+//! * `simd` — explicit f32x8 vectorization: AVX2+FMA intrinsics
+//!   (`std::arch::x86_64`, selected by runtime feature detection) with a
+//!   portable 8-lane-unrolled scalar fallback on other hosts. Large
+//!   `matmul_nt` additionally packs `b` into 8-wide column panels
+//!   (optionally [`Workspace`]-pooled, see [`par_matmul_nt_into_ws`]) so
+//!   the LM-head and expert GEMMs stream one contiguous panel instead of
+//!   striding cold rows. Softmax/RMSNorm/cross-entropy reductions use
+//!   8-lane accumulators with a fixed lane-combine order.
+//!
+//! `FLOWMOE_KERNELS=auto` (the default) resolves to `simd` when AVX2+FMA
+//! is detected and `blocked` otherwise; requesting `simd` explicitly on
+//! a host without AVX2 is an **error**, not a silent scalar fallback.
+//! `par_*` variants split the M dimension into contiguous row bands
+//! across [`crate::sweep::scope`]'s thread budget;
+//! `expert_ffn`/`expert_ffn_bwd` fan the expert axis out the same way.
 //!
 //! Numerics contract: parity with the naive `*_ref` kernels is
-//! **tolerance-based** (blocking may reorder summation; tests use 1e-4
-//! rel-tol). The current tiling happens to keep each output element's
-//! accumulation order ascending in the contraction index — so today the
-//! blocked, parallel and reference kernels agree bit-for-bit — but only
-//! the tolerance contract is guaranteed (future SIMD/k-split kernels may
-//! reassociate). What **is** guaranteed: every kernel is deterministic,
-//! each row's result is independent of the row banding, and therefore
-//! parallel results are byte-identical to serial results for any thread
-//! budget (asserted by `perf_hotpath` and `tests/kernel_parity.rs`).
+//! **tolerance-based** (tests use 1e-4 rel-tol). The `simd` tier
+//! exercises that freedom: FMA contraction and 8-lane reductions
+//! reassociate/re-round relative to the scalar tiers. What **is**
+//! guaranteed: every kernel is deterministic *within a fixed dispatch
+//! tier on a fixed host*, each row's result is independent of the row
+//! banding, and therefore parallel results are byte-identical to serial
+//! results for any thread budget (asserted by `perf_hotpath`,
+//! `tests/kernel_parity.rs` and `tests/kernel_conformance.rs`).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
 
 use crate::sweep::scope;
+
+use super::workspace::Workspace;
 
 /// Output rows per micro-kernel tile (register blocking).
 const MR: usize = 4;
@@ -44,6 +65,149 @@ const NC: usize = 512;
 /// wrappers stay serial: spawning scoped threads costs tens of
 /// microseconds, so only matmuls of ~ms scale fan out.
 const PAR_MIN_MACS: usize = 1 << 18;
+/// SIMD lane count of the f32x8 tier (AVX2 register width).
+const L: usize = 8;
+/// Minimum M rows for the packed-B `matmul_nt` path: packing costs one
+/// pass over `b`, amortized across the row loop.
+const NT_PACK_MIN_ROWS: usize = 8;
+/// Minimum `k*n` (elements of `b`) for the packed-B `matmul_nt` path;
+/// below this `b` is L1/L2-resident anyway and the dot-product kernel
+/// wins.
+const NT_PACK_MIN_BN: usize = 1 << 12;
+
+// ---------------------------------------------------------------------------
+// Kernel dispatch: naive / blocked / simd, env-selected, overridable
+// ---------------------------------------------------------------------------
+
+/// Kernel implementation tier. See the module docs (§Perf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Reference triple loops (`*_ref` semantics).
+    Naive,
+    /// Cache-blocked scalar micro-kernels.
+    Blocked,
+    /// Explicit f32x8: AVX2+FMA when detected, 8-lane portable fallback
+    /// otherwise (reachable via [`with_dispatch`]; the env knob refuses
+    /// `simd` without AVX2 — see [`resolve_dispatch`]).
+    Simd,
+}
+
+impl Dispatch {
+    /// Stable lowercase name (matches the `FLOWMOE_KERNELS` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Naive => "naive",
+            Dispatch::Blocked => "blocked",
+            Dispatch::Simd => "simd",
+        }
+    }
+}
+
+/// Whether the AVX2+FMA fast path is available on this host (runtime
+/// feature detection; always `false` off x86_64).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Parse a `FLOWMOE_KERNELS` value: `Ok(None)` = auto (unset/empty also
+/// count), `Ok(Some(tier))` = forced tier, `Err` = unrecognized value.
+pub fn parse_kernels(val: &str) -> Result<Option<Dispatch>, String> {
+    match val.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "naive" => Ok(Some(Dispatch::Naive)),
+        "blocked" => Ok(Some(Dispatch::Blocked)),
+        "simd" => Ok(Some(Dispatch::Simd)),
+        other => Err(format!(
+            "invalid FLOWMOE_KERNELS value {other:?}: expected auto, simd, blocked or naive"
+        )),
+    }
+}
+
+/// Resolve a parsed `FLOWMOE_KERNELS` choice against host capabilities.
+/// `auto` picks `simd` iff AVX2+FMA is detected; an explicit `simd`
+/// request without AVX2 errors (no silent scalar fallback — the caller
+/// asked for a specific performance tier).
+pub fn resolve_dispatch(choice: Option<Dispatch>, avx2: bool) -> Result<Dispatch, String> {
+    match choice {
+        None => Ok(if avx2 { Dispatch::Simd } else { Dispatch::Blocked }),
+        Some(Dispatch::Simd) if !avx2 => Err(
+            "FLOWMOE_KERNELS=simd requested but AVX2+FMA was not detected on this host; \
+             use FLOWMOE_KERNELS=auto (runtime detection) or FLOWMOE_KERNELS=blocked"
+            .to_string(),
+        ),
+        Some(d) => Ok(d),
+    }
+}
+
+/// Process-wide dispatch from the `FLOWMOE_KERNELS` env var (read once).
+/// Errors — an unrecognized value, or `simd` forced on a non-AVX2 host —
+/// are returned so the CLI can exit cleanly; library callers go through
+/// [`default_dispatch`], which panics with the same message.
+pub fn configured_dispatch() -> Result<Dispatch, String> {
+    static CONFIGURED: OnceLock<Result<Dispatch, String>> = OnceLock::new();
+    CONFIGURED
+        .get_or_init(|| {
+            let raw = std::env::var("FLOWMOE_KERNELS").unwrap_or_default();
+            resolve_dispatch(parse_kernels(&raw)?, avx2_available())
+        })
+        .clone()
+}
+
+/// Process-wide dispatch (see [`configured_dispatch`]); panics with a
+/// clear message on an invalid `FLOWMOE_KERNELS` request.
+pub fn default_dispatch() -> Dispatch {
+    configured_dispatch().unwrap_or_else(|e| panic!("{e}"))
+}
+
+thread_local! {
+    static LOCAL_DISPATCH: Cell<Option<Dispatch>> = const { Cell::new(None) };
+}
+
+/// Restores the previous thread-local dispatch on drop (panic-safe).
+struct DispatchGuard {
+    prev: Option<Dispatch>,
+}
+
+impl DispatchGuard {
+    fn set(d: Dispatch) -> DispatchGuard {
+        let prev = LOCAL_DISPATCH.with(|c| {
+            let p = c.get();
+            c.set(Some(d));
+            p
+        });
+        DispatchGuard { prev }
+    }
+}
+
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        LOCAL_DISPATCH.with(|c| c.set(prev));
+    }
+}
+
+/// Dispatch tier of the calling thread: the innermost [`with_dispatch`]
+/// override, else the env-selected [`default_dispatch`].
+pub fn active_dispatch() -> Dispatch {
+    LOCAL_DISPATCH.with(|c| c.get()).unwrap_or_else(default_dispatch)
+}
+
+/// Run `f` with the calling thread's kernel dispatch overridden (tests,
+/// benches, and the fan-out points that must propagate the caller's tier
+/// into [`scope`] worker threads). Unlike the env knob, forcing
+/// [`Dispatch::Simd`] here is allowed on any host: it runs the portable
+/// 8-lane fallback when AVX2 is unavailable.
+pub fn with_dispatch<R>(d: Dispatch, f: impl FnOnce() -> R) -> R {
+    let _guard = DispatchGuard::set(d);
+    f()
+}
 
 // ---------------------------------------------------------------------------
 // Reference (naive) matmuls — the parity oracle for the blocked kernels
@@ -282,25 +446,995 @@ fn tn_band(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usiz
 }
 
 // ---------------------------------------------------------------------------
-// Public matmuls: blocked `_into`, parallel `par_*`, allocating wrappers
+// Naive band kernels (the `naive` dispatch tier: `*_ref` semantics per band)
 // ---------------------------------------------------------------------------
 
-/// Serial blocked `a (m,k) @ b (k,n)` into `out (m,n)` (overwrites).
+/// Naive `a_band (rows,k) @ b (k,n)` into `out` — per-band mirror of
+/// [`matmul_ref`] (bitwise-equal accumulation order).
+fn mm_band_naive(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    out.fill(0.0);
+    for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        for (p, &av) in arow.iter().enumerate() {
+            for (o, &bv) in orow.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Naive `a_band (rows,k) @ b^T`, `b (n,k)`, into `out` — per-band
+/// mirror of [`matmul_nt_ref`].
+fn nt_band_naive(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        for (o, brow) in orow.iter_mut().zip(b.chunks_exact(k)) {
+            *o = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
+/// Naive `a^T @ b` band (output rows `col0..col0+rows`) — per-element
+/// mirror of [`matmul_tn_ref`] (accumulation ascending in `p`).
+fn tn_band_naive(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    out.fill(0.0);
+    for p in 0..k {
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, orow) in out.chunks_exact_mut(n).enumerate() {
+            let av = a[p * m + col0 + i];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32x8 tier: portable 8-lane kernels + AVX2/FMA intrinsics twins
+// ---------------------------------------------------------------------------
+
+/// Fixed lane-combine order shared by the portable and AVX2 reducers, so
+/// both produce the same reduction tree (only FMA rounding differs).
+#[inline]
+fn hsum8(l: &[f32; L]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Pack `b (n,k)` row-major into 8-wide column panels for the packed
+/// `matmul_nt` micro-kernel: group `g` covers b-rows (output columns)
+/// `8g..8g+8` and stores `packed[g*k*8 + p*8 + c] = b[(8g+c)*k + p]`,
+/// zero-filling the padded tail columns, so the kernel streams one
+/// contiguous unit-stride panel per column group.
+fn pack_b_nt(b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    let groups = n.div_ceil(L);
+    debug_assert!(packed.len() >= groups * k * L);
+    for g in 0..groups {
+        let block = &mut packed[g * k * L..(g + 1) * k * L];
+        for c in 0..L {
+            let col = g * L + c;
+            if col < n {
+                let src = &b[col * k..(col + 1) * k];
+                for (&v, slot) in src.iter().zip(block[c..].iter_mut().step_by(L)) {
+                    *slot = v;
+                }
+            } else {
+                for slot in block[c..].iter_mut().step_by(L) {
+                    *slot = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Portable 8-lane-unrolled kernels — the `simd` tier on hosts without
+/// AVX2 (and the behavioural model for the intrinsics twins in [`avx2`]):
+/// same loop structure, same fixed lane-combine order, separate mul+add
+/// where AVX2 uses FMA.
+mod lanes {
+    use super::{hsum8, L, MR};
+
+    /// `acc += a * x`, 8 lanes at a time (element-exact vs the scalar
+    /// loop: per-element order is unchanged).
+    pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+        let mut ac = acc.chunks_exact_mut(L);
+        let mut xc = x.chunks_exact(L);
+        for (av, xv) in (&mut ac).zip(&mut xc) {
+            for (s, &v) in av.iter_mut().zip(xv) {
+                *s += a * v;
+            }
+        }
+        for (s, &v) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+            *s += a * v;
+        }
+    }
+
+    /// `v *= s`, 8 lanes at a time.
+    pub fn scale(v: &mut [f32], s: f32) {
+        let mut vc = v.chunks_exact_mut(L);
+        for c in &mut vc {
+            for x in c.iter_mut() {
+                *x *= s;
+            }
+        }
+        for x in vc.into_remainder().iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// `v = max(v, 0)` (elementwise; simple enough that the
+    /// autovectorizer handles the lanes).
+    pub fn relu(v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = x.max(0.0);
+        }
+    }
+
+    pub fn sum(x: &[f32]) -> f32 {
+        let mut acc = [0.0f32; L];
+        let mut c = x.chunks_exact(L);
+        for ch in &mut c {
+            for (a, &v) in acc.iter_mut().zip(ch) {
+                *a += v;
+            }
+        }
+        let mut s = hsum8(&acc);
+        for &v in c.remainder() {
+            s += v;
+        }
+        s
+    }
+
+    pub fn max(x: &[f32]) -> f32 {
+        let mut acc = [f32::NEG_INFINITY; L];
+        let mut c = x.chunks_exact(L);
+        for ch in &mut c {
+            for (a, &v) in acc.iter_mut().zip(ch) {
+                *a = a.max(v);
+            }
+        }
+        let mut m = acc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for &v in c.remainder() {
+            m = m.max(v);
+        }
+        m
+    }
+
+    pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let mut acc = [0.0f32; L];
+        let mut xc = x.chunks_exact(L);
+        let mut yc = y.chunks_exact(L);
+        for (xv, yv) in (&mut xc).zip(&mut yc) {
+            for ((a, &xe), &ye) in acc.iter_mut().zip(xv).zip(yv) {
+                *a += xe * ye;
+            }
+        }
+        let mut s = hsum8(&acc);
+        for (&xe, &ye) in xc.remainder().iter().zip(yc.remainder()) {
+            s += xe * ye;
+        }
+        s
+    }
+
+    pub fn sum_sq(x: &[f32]) -> f32 {
+        let mut acc = [0.0f32; L];
+        let mut c = x.chunks_exact(L);
+        for ch in &mut c {
+            for (a, &v) in acc.iter_mut().zip(ch) {
+                *a += v * v;
+            }
+        }
+        let mut s = hsum8(&acc);
+        for &v in c.remainder() {
+            s += v * v;
+        }
+        s
+    }
+
+    /// `sum_i (a_i * b_i) * c_i` (rmsnorm backward's weighted dot).
+    pub fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+        let mut acc = [0.0f32; L];
+        let mut ac = a.chunks_exact(L);
+        let mut bc = b.chunks_exact(L);
+        let mut cc = c.chunks_exact(L);
+        for ((av, bv), cv) in (&mut ac).zip(&mut bc).zip(&mut cc) {
+            for (((s, &ae), &be), &ce) in acc.iter_mut().zip(av).zip(bv).zip(cv) {
+                *s += (ae * be) * ce;
+            }
+        }
+        let mut s = hsum8(&acc);
+        for ((&ae, &be), &ce) in ac
+            .remainder()
+            .iter()
+            .zip(bc.remainder())
+            .zip(cc.remainder())
+        {
+            s += (ae * be) * ce;
+        }
+        s
+    }
+
+    /// 8-lane `a_band (rows,k) @ b (k,n)`: per output row, `out_row +=
+    /// a[p] * b_row(p)` via [`axpy`] — per-element accumulation ascending
+    /// in `p`, rows independent of the banding.
+    pub fn mm_band(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        out.fill(0.0);
+        for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+            for (p, &av) in arow.iter().enumerate() {
+                axpy(orow, &b[p * n..(p + 1) * n], av);
+            }
+        }
+    }
+
+    /// 8-lane `a^T @ b` band (output rows `col0..col0+rows`).
+    pub fn tn_band(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        out.fill(0.0);
+        for (i, orow) in out.chunks_exact_mut(n).enumerate() {
+            let c = col0 + i;
+            for p in 0..k {
+                axpy(orow, &b[p * n..(p + 1) * n], a[p * m + c]);
+            }
+        }
+    }
+
+    /// 8-lane dot-product `a_band @ b^T` (the unpacked small-NT kernel).
+    pub fn nt_band_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+            for (o, brow) in orow.iter_mut().zip(b.chunks_exact(k)) {
+                *o = dot(arow, brow);
+            }
+        }
+    }
+
+    /// Packed-panel `a_band @ b^T`: `packed` is the [`super::pack_b_nt`]
+    /// layout; the micro-kernel runs MR rows x one 8-wide column group
+    /// with per-element accumulation ascending in `p`.
+    pub fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        let groups = n.div_ceil(L);
+        let mut i = 0;
+        while i < rows {
+            let mr = MR.min(rows - i);
+            for g in 0..groups {
+                let panel = &packed[g * k * L..(g + 1) * k * L];
+                let j0 = g * L;
+                let w = L.min(n - j0);
+                if mr == MR {
+                    let a0 = &a[i * k..(i + 1) * k];
+                    let a1 = &a[(i + 1) * k..(i + 2) * k];
+                    let a2 = &a[(i + 2) * k..(i + 3) * k];
+                    let a3 = &a[(i + 3) * k..(i + 4) * k];
+                    let mut s0 = [0.0f32; L];
+                    let mut s1 = [0.0f32; L];
+                    let mut s2 = [0.0f32; L];
+                    let mut s3 = [0.0f32; L];
+                    for (p, bv) in panel.chunks_exact(L).enumerate() {
+                        let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+                        for (s, &bvv) in s0.iter_mut().zip(bv) {
+                            *s += v0 * bvv;
+                        }
+                        for (s, &bvv) in s1.iter_mut().zip(bv) {
+                            *s += v1 * bvv;
+                        }
+                        for (s, &bvv) in s2.iter_mut().zip(bv) {
+                            *s += v2 * bvv;
+                        }
+                        for (s, &bvv) in s3.iter_mut().zip(bv) {
+                            *s += v3 * bvv;
+                        }
+                    }
+                    out[i * n + j0..i * n + j0 + w].copy_from_slice(&s0[..w]);
+                    out[(i + 1) * n + j0..(i + 1) * n + j0 + w].copy_from_slice(&s1[..w]);
+                    out[(i + 2) * n + j0..(i + 2) * n + j0 + w].copy_from_slice(&s2[..w]);
+                    out[(i + 3) * n + j0..(i + 3) * n + j0 + w].copy_from_slice(&s3[..w]);
+                } else {
+                    for r in 0..mr {
+                        let ar = &a[(i + r) * k..(i + r + 1) * k];
+                        let mut s = [0.0f32; L];
+                        for (p, bv) in panel.chunks_exact(L).enumerate() {
+                            let v = ar[p];
+                            for (sv, &bvv) in s.iter_mut().zip(bv) {
+                                *sv += v * bvv;
+                            }
+                        }
+                        out[(i + r) * n + j0..(i + r) * n + j0 + w].copy_from_slice(&s[..w]);
+                    }
+                }
+            }
+            i += mr;
+        }
+    }
+}
+
+/// AVX2+FMA twins of the [`lanes`] kernels. Every function is compiled
+/// with the `avx2`/`fma` target features and must only be called after
+/// [`avx2_available`] returned true (guarded in the dispatch shims
+/// below); loop structure and lane-combine order mirror [`lanes`], with
+/// fused multiply-add in place of mul+add.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{hsum8, L, MR, NC};
+
+    /// SAFETY (all functions): caller guarantees AVX2+FMA support; all
+    /// pointer accesses stay inside the slice bounds established by the
+    /// loop guards, exactly as in the safe `lanes` twins.
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+        let len = acc.len().min(x.len());
+        let w8 = len / L * L;
+        let av = _mm256_set1_ps(a);
+        let (pa, px) = (acc.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i < w8 {
+            let r = _mm256_fmadd_ps(av, _mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(pa.add(i)));
+            _mm256_storeu_ps(pa.add(i), r);
+            i += L;
+        }
+        while i < len {
+            *pa.add(i) += a * *px.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale(v: &mut [f32], s: f32) {
+        let len = v.len();
+        let w8 = len / L * L;
+        let sv = _mm256_set1_ps(s);
+        let p = v.as_mut_ptr();
+        let mut i = 0;
+        while i < w8 {
+            _mm256_storeu_ps(p.add(i), _mm256_mul_ps(sv, _mm256_loadu_ps(p.add(i))));
+            i += L;
+        }
+        while i < len {
+            *p.add(i) *= s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn relu(v: &mut [f32]) {
+        let len = v.len();
+        let w8 = len / L * L;
+        let z = _mm256_setzero_ps();
+        let p = v.as_mut_ptr();
+        let mut i = 0;
+        while i < w8 {
+            _mm256_storeu_ps(p.add(i), _mm256_max_ps(_mm256_loadu_ps(p.add(i)), z));
+            i += L;
+        }
+        while i < len {
+            let x = *p.add(i);
+            *p.add(i) = x.max(0.0);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let len = x.len();
+        let w8 = len / L * L;
+        let p = x.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < w8 {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(p.add(i)));
+            i += L;
+        }
+        let mut tmp = [0.0f32; L];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut s = hsum8(&tmp);
+        while i < len {
+            s += *p.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn max(x: &[f32]) -> f32 {
+        let len = x.len();
+        let w8 = len / L * L;
+        let p = x.as_ptr();
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i < w8 {
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(p.add(i)));
+            i += L;
+        }
+        let mut tmp = [0.0f32; L];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut m = tmp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        while i < len {
+            m = m.max(*p.add(i));
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let len = x.len().min(y.len());
+        let w8 = len / L * L;
+        let (px, py) = (x.as_ptr(), y.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < w8 {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(py.add(i)), acc);
+            i += L;
+        }
+        let mut tmp = [0.0f32; L];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut s = hsum8(&tmp);
+        while i < len {
+            s += *px.add(i) * *py.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum_sq(x: &[f32]) -> f32 {
+        let len = x.len();
+        let w8 = len / L * L;
+        let p = x.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < w8 {
+            let v = _mm256_loadu_ps(p.add(i));
+            acc = _mm256_fmadd_ps(v, v, acc);
+            i += L;
+        }
+        let mut tmp = [0.0f32; L];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut s = hsum8(&tmp);
+        while i < len {
+            let v = *p.add(i);
+            s += v * v;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+        let len = a.len().min(b.len()).min(c.len());
+        let w8 = len / L * L;
+        let (pa, pb, pc) = (a.as_ptr(), b.as_ptr(), c.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < w8 {
+            let ab = _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc = _mm256_fmadd_ps(ab, _mm256_loadu_ps(pc.add(i)), acc);
+            i += L;
+        }
+        let mut tmp = [0.0f32; L];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        let mut s = hsum8(&tmp);
+        while i < len {
+            s += (*pa.add(i) * *pb.add(i)) * *pc.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// 4-row band `a (rows,k) @ b (k,n)` with broadcast-FMA over 8-wide
+    /// column chunks inside NC stripes (per-element accumulation
+    /// ascending in `p`, like the blocked kernel).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn mm_band(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        out.fill(0.0);
+        let op = out.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i + MR <= rows {
+            let o0 = op.add(i * n);
+            let o1 = op.add((i + 1) * n);
+            let o2 = op.add((i + 2) * n);
+            let o3 = op.add((i + 3) * n);
+            let a0 = ap.add(i * k);
+            let a1 = ap.add((i + 1) * k);
+            let a2 = ap.add((i + 2) * k);
+            let a3 = ap.add((i + 3) * k);
+            let mut j0 = 0;
+            while j0 < n {
+                let jn = (j0 + NC).min(n);
+                let w8 = j0 + (jn - j0) / L * L;
+                for p in 0..k {
+                    let (s0, s1, s2, s3) = (*a0.add(p), *a1.add(p), *a2.add(p), *a3.add(p));
+                    let v0 = _mm256_set1_ps(s0);
+                    let v1 = _mm256_set1_ps(s1);
+                    let v2 = _mm256_set1_ps(s2);
+                    let v3 = _mm256_set1_ps(s3);
+                    let br = bp.add(p * n);
+                    let mut j = j0;
+                    while j < w8 {
+                        let bv = _mm256_loadu_ps(br.add(j));
+                        _mm256_storeu_ps(o0.add(j), _mm256_fmadd_ps(v0, bv, _mm256_loadu_ps(o0.add(j))));
+                        _mm256_storeu_ps(o1.add(j), _mm256_fmadd_ps(v1, bv, _mm256_loadu_ps(o1.add(j))));
+                        _mm256_storeu_ps(o2.add(j), _mm256_fmadd_ps(v2, bv, _mm256_loadu_ps(o2.add(j))));
+                        _mm256_storeu_ps(o3.add(j), _mm256_fmadd_ps(v3, bv, _mm256_loadu_ps(o3.add(j))));
+                        j += L;
+                    }
+                    while j < jn {
+                        let bv = *br.add(j);
+                        *o0.add(j) += s0 * bv;
+                        *o1.add(j) += s1 * bv;
+                        *o2.add(j) += s2 * bv;
+                        *o3.add(j) += s3 * bv;
+                        j += 1;
+                    }
+                }
+                j0 = jn;
+            }
+            i += MR;
+        }
+        while i < rows {
+            let o = op.add(i * n);
+            let ar = ap.add(i * k);
+            let mut j0 = 0;
+            while j0 < n {
+                let jn = (j0 + NC).min(n);
+                let w8 = j0 + (jn - j0) / L * L;
+                for p in 0..k {
+                    let s = *ar.add(p);
+                    let v = _mm256_set1_ps(s);
+                    let br = bp.add(p * n);
+                    let mut j = j0;
+                    while j < w8 {
+                        let r = _mm256_fmadd_ps(v, _mm256_loadu_ps(br.add(j)), _mm256_loadu_ps(o.add(j)));
+                        _mm256_storeu_ps(o.add(j), r);
+                        j += L;
+                    }
+                    while j < jn {
+                        *o.add(j) += s * *br.add(j);
+                        j += 1;
+                    }
+                }
+                j0 = jn;
+            }
+            i += 1;
+        }
+    }
+
+    /// 4-row `a^T @ b` band (same broadcast-FMA micro-kernel as
+    /// [`mm_band`]; the band's `a` columns `col0+i..col0+i+4` are
+    /// contiguous per `p`-row).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn tn_band(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        out.fill(0.0);
+        let op = out.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i + MR <= rows {
+            let o0 = op.add(i * n);
+            let o1 = op.add((i + 1) * n);
+            let o2 = op.add((i + 2) * n);
+            let o3 = op.add((i + 3) * n);
+            let c = col0 + i;
+            let mut j0 = 0;
+            while j0 < n {
+                let jn = (j0 + NC).min(n);
+                let w8 = j0 + (jn - j0) / L * L;
+                for p in 0..k {
+                    let av = ap.add(p * m + c);
+                    let (s0, s1, s2, s3) = (*av, *av.add(1), *av.add(2), *av.add(3));
+                    let v0 = _mm256_set1_ps(s0);
+                    let v1 = _mm256_set1_ps(s1);
+                    let v2 = _mm256_set1_ps(s2);
+                    let v3 = _mm256_set1_ps(s3);
+                    let br = bp.add(p * n);
+                    let mut j = j0;
+                    while j < w8 {
+                        let bv = _mm256_loadu_ps(br.add(j));
+                        _mm256_storeu_ps(o0.add(j), _mm256_fmadd_ps(v0, bv, _mm256_loadu_ps(o0.add(j))));
+                        _mm256_storeu_ps(o1.add(j), _mm256_fmadd_ps(v1, bv, _mm256_loadu_ps(o1.add(j))));
+                        _mm256_storeu_ps(o2.add(j), _mm256_fmadd_ps(v2, bv, _mm256_loadu_ps(o2.add(j))));
+                        _mm256_storeu_ps(o3.add(j), _mm256_fmadd_ps(v3, bv, _mm256_loadu_ps(o3.add(j))));
+                        j += L;
+                    }
+                    while j < jn {
+                        let bv = *br.add(j);
+                        *o0.add(j) += s0 * bv;
+                        *o1.add(j) += s1 * bv;
+                        *o2.add(j) += s2 * bv;
+                        *o3.add(j) += s3 * bv;
+                        j += 1;
+                    }
+                }
+                j0 = jn;
+            }
+            i += MR;
+        }
+        while i < rows {
+            let o = op.add(i * n);
+            let c = col0 + i;
+            let mut j0 = 0;
+            while j0 < n {
+                let jn = (j0 + NC).min(n);
+                let w8 = j0 + (jn - j0) / L * L;
+                for p in 0..k {
+                    let s = *ap.add(p * m + c);
+                    let v = _mm256_set1_ps(s);
+                    let br = bp.add(p * n);
+                    let mut j = j0;
+                    while j < w8 {
+                        let r = _mm256_fmadd_ps(v, _mm256_loadu_ps(br.add(j)), _mm256_loadu_ps(o.add(j)));
+                        _mm256_storeu_ps(o.add(j), r);
+                        j += L;
+                    }
+                    while j < jn {
+                        *o.add(j) += s * *br.add(j);
+                        j += 1;
+                    }
+                }
+                j0 = jn;
+            }
+            i += 1;
+        }
+    }
+
+    /// 8-lane dot-product `a_band @ b^T` (the unpacked small-NT kernel).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn nt_band_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                out[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+
+    /// Packed-panel `a_band @ b^T` (see [`super::pack_b_nt`]): MR rows x
+    /// one 8-wide column group, broadcast-FMA ascending in `p`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        let groups = n.div_ceil(L);
+        let pk = packed.as_ptr();
+        let ap = a.as_ptr();
+        let mut i = 0;
+        while i < rows {
+            let mr = MR.min(rows - i);
+            for g in 0..groups {
+                let panel = pk.add(g * k * L);
+                let j0 = g * L;
+                let w = L.min(n - j0);
+                let mut tmp = [0.0f32; L];
+                if mr == MR {
+                    let a0 = ap.add(i * k);
+                    let a1 = ap.add((i + 1) * k);
+                    let a2 = ap.add((i + 2) * k);
+                    let a3 = ap.add((i + 3) * k);
+                    let mut s0 = _mm256_setzero_ps();
+                    let mut s1 = _mm256_setzero_ps();
+                    let mut s2 = _mm256_setzero_ps();
+                    let mut s3 = _mm256_setzero_ps();
+                    for p in 0..k {
+                        let bv = _mm256_loadu_ps(panel.add(p * L));
+                        s0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(p)), bv, s0);
+                        s1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(p)), bv, s1);
+                        s2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.add(p)), bv, s2);
+                        s3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.add(p)), bv, s3);
+                    }
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), s0);
+                    out[i * n + j0..i * n + j0 + w].copy_from_slice(&tmp[..w]);
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), s1);
+                    out[(i + 1) * n + j0..(i + 1) * n + j0 + w].copy_from_slice(&tmp[..w]);
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), s2);
+                    out[(i + 2) * n + j0..(i + 2) * n + j0 + w].copy_from_slice(&tmp[..w]);
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), s3);
+                    out[(i + 3) * n + j0..(i + 3) * n + j0 + w].copy_from_slice(&tmp[..w]);
+                } else {
+                    for r in 0..mr {
+                        let ar = ap.add((i + r) * k);
+                        let mut s = _mm256_setzero_ps();
+                        for p in 0..k {
+                            s = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(p)), _mm256_loadu_ps(panel.add(p * L)), s);
+                        }
+                        _mm256_storeu_ps(tmp.as_mut_ptr(), s);
+                        out[(i + r) * n + j0..(i + r) * n + j0 + w].copy_from_slice(&tmp[..w]);
+                    }
+                }
+            }
+            i += mr;
+        }
+    }
+}
+
+// --- simd shims: runtime-dispatch between the AVX2 and portable twins.
+// Each shim checks AVX2+FMA once per call (the std detection macro is a
+// cached atomic load) and otherwise falls back to the portable lanes.
+// SAFETY (all `unsafe` blocks below): the target-feature functions are
+// only reachable after `avx2_available()` returned true, and they only
+// require that plus in-bounds slices (guaranteed by their own loop
+// guards over the slice lengths).
+
+fn mm_band_simd(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::mm_band(a, b, out, k, n) };
+        return;
+    }
+    lanes::mm_band(a, b, out, k, n);
+}
+
+fn tn_band_simd(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::tn_band(a, b, out, col0, k, m, n) };
+        return;
+    }
+    lanes::tn_band(a, b, out, col0, k, m, n);
+}
+
+fn nt_band_simd_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::nt_band_small(a, b, out, k, n) };
+        return;
+    }
+    lanes::nt_band_small(a, b, out, k, n);
+}
+
+fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::nt_band_packed(a, packed, out, k, n) };
+        return;
+    }
+    lanes::nt_band_packed(a, packed, out, k, n);
+}
+
+fn simd_axpy(acc: &mut [f32], x: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::axpy(acc, x, a) };
+        return;
+    }
+    lanes::axpy(acc, x, a);
+}
+
+fn simd_scale(v: &mut [f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::scale(v, s) };
+        return;
+    }
+    lanes::scale(v, s);
+}
+
+fn simd_relu(v: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        unsafe { avx2::relu(v) };
+        return;
+    }
+    lanes::relu(v);
+}
+
+fn simd_sum(x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return unsafe { avx2::sum(x) };
+    }
+    lanes::sum(x)
+}
+
+fn simd_max(x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return unsafe { avx2::max(x) };
+    }
+    lanes::max(x)
+}
+
+fn simd_dot(x: &[f32], y: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return unsafe { avx2::dot(x, y) };
+    }
+    lanes::dot(x, y)
+}
+
+fn simd_sum_sq(x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return unsafe { avx2::sum_sq(x) };
+    }
+    lanes::sum_sq(x)
+}
+
+fn simd_dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return unsafe { avx2::dot3(a, b, c) };
+    }
+    lanes::dot3(a, b, c)
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch-aware reductions and elementwise helpers (shared by model,
+// trainer and cluster, so every caller goes through the one chooser)
+// ---------------------------------------------------------------------------
+
+/// Max over `x` (`-inf` when empty) under an explicit dispatch tier.
+pub fn reduce_max_d(x: &[f32], d: Dispatch) -> f32 {
+    if d == Dispatch::Simd {
+        simd_max(x)
+    } else {
+        x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// Sum over `x` under an explicit dispatch tier (the `simd` tier uses 8
+/// accumulator lanes with a fixed combine order — reassociates).
+pub fn reduce_sum_d(x: &[f32], d: Dispatch) -> f32 {
+    if d == Dispatch::Simd {
+        simd_sum(x)
+    } else {
+        x.iter().sum()
+    }
+}
+
+/// Dot product under an explicit dispatch tier.
+pub fn reduce_dot_d(x: &[f32], y: &[f32], d: Dispatch) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    if d == Dispatch::Simd {
+        simd_dot(x, y)
+    } else {
+        x.iter().zip(y).map(|(a, b)| a * b).sum()
+    }
+}
+
+/// Dot product under the calling thread's [`active_dispatch`].
+pub fn reduce_dot(x: &[f32], y: &[f32]) -> f32 {
+    reduce_dot_d(x, y, active_dispatch())
+}
+
+/// Sum of squares under an explicit dispatch tier.
+fn reduce_sq_d(x: &[f32], d: Dispatch) -> f32 {
+    if d == Dispatch::Simd {
+        simd_sum_sq(x)
+    } else {
+        x.iter().map(|v| v * v).sum()
+    }
+}
+
+/// `sum_i (a_i * b_i) * c_i` under an explicit dispatch tier.
+fn reduce_dot3_d(a: &[f32], b: &[f32], c: &[f32], d: Dispatch) -> f32 {
+    if d == Dispatch::Simd {
+        simd_dot3(a, b, c)
+    } else {
+        a.iter().zip(b).zip(c).map(|((&av, &bv), &cv)| av * bv * cv).sum()
+    }
+}
+
+/// `acc += a * x`, elementwise (dispatch-aware; per-element order is
+/// identical across tiers, the `simd` tier fuses the multiply-add).
+pub fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    if active_dispatch() == Dispatch::Simd {
+        simd_axpy(acc, x, a);
+    } else {
+        for (dv, &s) in acc.iter_mut().zip(x) {
+            *dv += a * s;
+        }
+    }
+}
+
+/// `v *= s`, elementwise (dispatch-aware).
+pub fn scale(v: &mut [f32], s: f32) {
+    if active_dispatch() == Dispatch::Simd {
+        simd_scale(v, s);
+    } else {
+        for x in v.iter_mut() {
+            *x *= s;
+        }
+    }
+}
+
+/// `v = max(v, 0)` under an explicit dispatch tier.
+fn relu_inplace_d(v: &mut [f32], d: Dispatch) {
+    if d == Dispatch::Simd {
+        simd_relu(v);
+    } else {
+        for x in v.iter_mut() {
+            *x = x.max(0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public matmuls: dispatch-routed `_into`, parallel `par_*`, wrappers
+// ---------------------------------------------------------------------------
+
+/// Band-kernel function types (chosen once per public call, then shared
+/// by every row band so [`with_dispatch`] overrides survive the fan-out).
+type MmBandFn = fn(&[f32], &[f32], &mut [f32], usize, usize);
+type TnBandFn = fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize);
+
+fn mm_band_for(d: Dispatch) -> MmBandFn {
+    match d {
+        Dispatch::Naive => mm_band_naive,
+        Dispatch::Blocked => mm_band,
+        Dispatch::Simd => mm_band_simd,
+    }
+}
+
+fn tn_band_for(d: Dispatch) -> TnBandFn {
+    match d {
+        Dispatch::Naive => tn_band_naive,
+        Dispatch::Blocked => tn_band,
+        Dispatch::Simd => tn_band_simd,
+    }
+}
+
+fn nt_band_for(d: Dispatch) -> MmBandFn {
+    match d {
+        Dispatch::Naive => nt_band_naive,
+        Dispatch::Blocked => nt_band,
+        Dispatch::Simd => nt_band_simd_small,
+    }
+}
+
+/// Serial `a (m,k) @ b (k,n)` into `out (m,n)` (overwrites;
+/// dispatch-routed).
 pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
-    mm_band(a, b, out, k, n);
+    mm_band_for(active_dispatch())(a, b, out, k, n);
 }
 
-/// Serial blocked `a (m,k) @ b^T`, `b (n,k)`, into `out (m,n)`.
+/// Serial `a (m,k) @ b^T`, `b (n,k)`, into `out (m,n)` (dispatch-routed;
+/// the `simd` tier packs B panels for large shapes).
 pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(out.len(), m * n);
-    nt_band(a, b, out, k, n);
+    nt_driver(a, b, out, m, k, n, false, None);
 }
 
-/// Serial blocked `a^T @ b`, `a (k,m)`, `b (k,n)`, into `out (m,n)`.
+/// Serial `a^T @ b`, `a (k,m)`, `b (k,n)`, into `out (m,n)`
+/// (dispatch-routed).
 pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
-    tn_band(a, b, out, 0, k, m, n);
+    tn_band_for(active_dispatch())(a, b, out, 0, k, m, n);
 }
 
 /// Whether a `(m,k,n)` matmul is worth fanning out on the current budget.
@@ -308,44 +1442,114 @@ fn par_worthwhile(m: usize, k: usize, n: usize) -> bool {
     m >= 2 && scope::current_budget() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
 }
 
-/// Parallel blocked matmul into `out`: splits the M rows into contiguous
-/// bands across the thread budget; stays serial below [`PAR_MIN_MACS`].
-/// Byte-identical to [`matmul_into`] for any budget.
+/// Whether the `simd` tier should pack B panels for a `(m,k,n)`
+/// `matmul_nt` (see [`NT_PACK_MIN_ROWS`]/[`NT_PACK_MIN_BN`]).
+fn nt_pack_worthwhile(m: usize, k: usize, n: usize) -> bool {
+    m >= NT_PACK_MIN_ROWS && k.saturating_mul(n) >= NT_PACK_MIN_BN
+}
+
+/// One `matmul_nt` driver behind every public NT entry point: picks the
+/// dispatch tier, packs B panels for large `simd`-tier shapes (buffer
+/// from `ws` when given, else a fresh allocation), and row-bands across
+/// the thread budget when `allow_par`. Row results never depend on the
+/// banding, so parallel == serial bitwise within a tier.
+#[allow(clippy::too_many_arguments)]
+fn nt_driver(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    allow_par: bool,
+    mut ws: Option<&mut Workspace>,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    if n == 0 || m == 0 {
+        return;
+    }
+    let d = active_dispatch();
+    if d == Dispatch::Simd && nt_pack_worthwhile(m, k, n) {
+        let plen = n.div_ceil(L) * k * L;
+        let mut packed = match ws.as_mut() {
+            Some(w) => w.take(plen),
+            None => vec![0.0f32; plen],
+        };
+        pack_b_nt(b, k, n, &mut packed);
+        if allow_par && par_worthwhile(m, k, n) {
+            scope::par_rows(out, n, |row0, band| {
+                let rows = band.len() / n;
+                nt_band_packed(&a[row0 * k..(row0 + rows) * k], &packed, band, k, n);
+            });
+        } else {
+            nt_band_packed(a, &packed, out, k, n);
+        }
+        if let Some(w) = ws {
+            w.put(packed);
+        }
+        return;
+    }
+    let band = nt_band_for(d);
+    if allow_par && par_worthwhile(m, k, n) {
+        scope::par_rows(out, n, |row0, bs| {
+            let rows = bs.len() / n;
+            band(&a[row0 * k..(row0 + rows) * k], b, bs, k, n);
+        });
+    } else {
+        band(a, b, out, k, n);
+    }
+}
+
+/// Parallel matmul into `out`: splits the M rows into contiguous bands
+/// across the thread budget; stays serial below [`PAR_MIN_MACS`].
+/// Byte-identical to [`matmul_into`] for any budget (within a tier).
 pub fn par_matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
+    let band = mm_band_for(active_dispatch());
     if !par_worthwhile(m, k, n) {
-        mm_band(a, b, out, k, n);
+        band(a, b, out, k, n);
         return;
     }
-    scope::par_rows(out, n, |row0, band| {
-        let rows = band.len() / n;
-        mm_band(&a[row0 * k..(row0 + rows) * k], b, band, k, n);
+    scope::par_rows(out, n, |row0, bs| {
+        let rows = bs.len() / n;
+        band(&a[row0 * k..(row0 + rows) * k], b, bs, k, n);
     });
 }
 
-/// Parallel blocked `matmul_nt` into `out` (M-banded, budget-gated).
+/// Parallel `matmul_nt` into `out` (M-banded, budget-gated; the `simd`
+/// tier packs B panels for large shapes).
 pub fn par_matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(out.len(), m * n);
-    if !par_worthwhile(m, k, n) {
-        nt_band(a, b, out, k, n);
-        return;
-    }
-    scope::par_rows(out, n, |row0, band| {
-        let rows = band.len() / n;
-        nt_band(&a[row0 * k..(row0 + rows) * k], b, band, k, n);
-    });
+    nt_driver(a, b, out, m, k, n, true, None);
 }
 
-/// Parallel blocked `matmul_tn` into `out` (output-row-banded over the
+/// [`par_matmul_nt_into`] with the packed-B panel buffer taken from (and
+/// retired to) the caller's [`Workspace`] — the LM-head path, where the
+/// panel is vocab-sized and worth pooling across steps.
+pub fn par_matmul_nt_into_ws(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ws: &mut Workspace,
+) {
+    nt_driver(a, b, out, m, k, n, true, Some(ws));
+}
+
+/// Parallel `matmul_tn` into `out` (output-row-banded over the
 /// M columns of `a`, budget-gated).
 pub fn par_matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
+    let band = tn_band_for(active_dispatch());
     if !par_worthwhile(m, k, n) {
-        tn_band(a, b, out, 0, k, m, n);
+        band(a, b, out, 0, k, m, n);
         return;
     }
-    scope::par_rows(out, n, |row0, band| {
-        tn_band(a, b, band, row0, k, m, n);
+    scope::par_rows(out, n, |row0, bs| {
+        band(a, b, bs, row0, k, m, n);
     });
 }
 
@@ -390,16 +1594,18 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
 // ---------------------------------------------------------------------------
 
 /// Row-wise softmax over `(t, n)`, numerically stable (max subtraction).
+/// The max and sum reductions are dispatch-routed (8-lane on the `simd`
+/// tier; the scalar tiers keep the historical ascending order bitwise).
 pub fn softmax_rows(x: &[f32], n: usize) -> Vec<f32> {
     debug_assert_eq!(x.len() % n, 0);
+    let d = active_dispatch();
     let mut out = vec![0.0f32; x.len()];
     for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
+        let mx = reduce_max_d(row, d);
         for (o, &v) in orow.iter_mut().zip(row) {
             *o = (v - mx).exp();
-            sum += *o;
         }
+        let sum = reduce_sum_d(orow, d);
         for o in orow.iter_mut() {
             *o /= sum;
         }
@@ -410,13 +1616,14 @@ pub fn softmax_rows(x: &[f32], n: usize) -> Vec<f32> {
 /// Backward of row-wise softmax: `dx_i = p_i * (dp_i - sum_j dp_j p_j)`.
 pub fn softmax_bwd_rows(p: &[f32], dp: &[f32], n: usize) -> Vec<f32> {
     debug_assert_eq!(p.len(), dp.len());
+    let d = active_dispatch();
     let mut out = vec![0.0f32; p.len()];
     for ((prow, dprow), orow) in p
         .chunks_exact(n)
         .zip(dp.chunks_exact(n))
         .zip(out.chunks_exact_mut(n))
     {
-        let dot: f32 = prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
+        let dot = reduce_dot_d(prow, dprow, d);
         for ((o, &pv), &dpv) in orow.iter_mut().zip(prow).zip(dprow) {
             *o = pv * (dpv - dot);
         }
@@ -428,12 +1635,14 @@ pub fn softmax_bwd_rows(p: &[f32], dp: &[f32], n: usize) -> Vec<f32> {
 pub const RMS_EPS: f32 = 1e-6;
 
 /// RMSNorm over the last axis of `(t, m)` with gain `g (m,)` into `out`.
+/// The mean-square reduction is dispatch-routed.
 pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     let m = g.len();
     debug_assert_eq!(x.len() % m, 0);
     debug_assert_eq!(out.len(), x.len());
+    let d = active_dispatch();
     for (row, orow) in x.chunks_exact(m).zip(out.chunks_exact_mut(m)) {
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / m as f32;
+        let ms = reduce_sq_d(row, d) / m as f32;
         let r = 1.0 / (ms + RMS_EPS).sqrt();
         for ((o, &xv), &gv) in orow.iter_mut().zip(row).zip(g) {
             *o = xv * r * gv;
@@ -459,20 +1668,16 @@ pub fn rmsnorm_bwd_into(x: &[f32], g: &[f32], dy: &[f32], dx: &mut [f32], dg: &m
     debug_assert_eq!(x.len(), dy.len());
     debug_assert_eq!(dx.len(), x.len());
     debug_assert_eq!(dg.len(), m);
+    let d = active_dispatch();
     dg.fill(0.0);
     for ((row, dyrow), dxrow) in x
         .chunks_exact(m)
         .zip(dy.chunks_exact(m))
         .zip(dx.chunks_exact_mut(m))
     {
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / m as f32;
+        let ms = reduce_sq_d(row, d) / m as f32;
         let r = 1.0 / (ms + RMS_EPS).sqrt();
-        let s: f32 = dyrow
-            .iter()
-            .zip(row)
-            .zip(g)
-            .map(|((&d, &xv), &gv)| d * gv * xv)
-            .sum();
+        let s = reduce_dot3_d(dyrow, g, row, d);
         let r3s = r * r * r * s / m as f32;
         for (j, (dxv, &xv)) in dxrow.iter_mut().zip(row).enumerate() {
             *dxv = r * g[j] * dyrow[j] - r3s * xv;
@@ -513,15 +1718,13 @@ pub fn embed_lookup(embed: &[f32], tokens: &[i32], m: usize) -> Vec<f32> {
 }
 
 /// Backward of [`embed_lookup`]: scatter-add `dx * sqrt(m)` into the
-/// zeroed `de (vocab, m)` buffer.
+/// zeroed `de (vocab, m)` buffer (rows via the dispatch-routed [`axpy`]).
 pub fn embed_scatter_into(tokens: &[i32], dx: &[f32], m: usize, de: &mut [f32]) {
-    let scale = (m as f64).sqrt() as f32;
+    let sc = (m as f64).sqrt() as f32;
     de.fill(0.0);
     for (t, &tok) in tokens.iter().enumerate() {
         let dst = tok as usize * m;
-        for (o, &d) in de[dst..dst + m].iter_mut().zip(&dx[t * m..(t + 1) * m]) {
-            *o += d * scale;
-        }
+        axpy(&mut de[dst..dst + m], &dx[t * m..(t + 1) * m], sc);
     }
 }
 
@@ -678,9 +1881,7 @@ fn expert_ffn_unit(
     let w1e = &w1[ei * m * h..(ei + 1) * m * h];
     let w2e = &w2[ei * h * m..(ei + 1) * h * m];
     par_matmul_into(xe, w1e, hid, c, m, h);
-    for v in hid.iter_mut() {
-        *v = v.max(0.0);
-    }
+    relu_inplace_d(hid, active_dispatch());
     par_matmul_into(hid, w2e, out, c, h, m);
 }
 
@@ -698,10 +1899,15 @@ fn expert_par_worthwhile(e: usize, c: usize, m: usize, h: usize) -> bool {
 pub fn expert_ffn_into(x: &[f32], w1: &[f32], w2: &[f32], out: &mut [f32], e: usize, c: usize, m: usize, h: usize) {
     debug_assert_eq!(out.len(), e * c * m);
     if expert_par_worthwhile(e, c, m, h) {
+        // capture the caller's dispatch tier: scope workers are fresh
+        // threads, so the thread-local override must be re-applied
+        let d = active_dispatch();
         let slabs: Vec<&mut [f32]> = out.chunks_mut(c * m).collect();
         scope::par_items(slabs, |ei, oslab| {
-            let mut hid = vec![0.0f32; c * h];
-            expert_ffn_unit(x, w1, w2, ei, oslab, &mut hid, c, m, h);
+            with_dispatch(d, || {
+                let mut hid = vec![0.0f32; c * h];
+                expert_ffn_unit(x, w1, w2, ei, oslab, &mut hid, c, m, h);
+            });
         });
     } else {
         let mut hid = vec![0.0f32; c * h];
@@ -739,7 +1945,15 @@ fn expert_ffn_bwd_unit(
     let dye = &dy[ei * c * m..(ei + 1) * c * m];
     let mut hid = vec![0.0f32; c * h];
     par_matmul_into(xe, w1e, &mut hid, c, m, h);
-    let hr: Vec<f32> = hid.iter().map(|&v| v.max(0.0)).collect();
+    // single fused read-map-write pass on the scalar tiers; the simd
+    // tier pays a memcpy for the vectorized relu pass
+    let hr: Vec<f32> = if active_dispatch() == Dispatch::Simd {
+        let mut hr = hid.clone();
+        simd_relu(&mut hr);
+        hr
+    } else {
+        hid.iter().map(|&v| v.max(0.0)).collect()
+    };
     let mut dhid = vec![0.0f32; c * h];
     par_matmul_nt_into(dye, w2e, &mut dhid, c, m, h);
     for (dv, &pre) in dhid.iter_mut().zip(&hid) {
@@ -779,8 +1993,11 @@ pub fn expert_ffn_bwd_into(
         .map(|((a, b), c_)| (a, b, c_))
         .collect();
     if expert_par_worthwhile(e, c, m, h) {
+        let d = active_dispatch();
         scope::par_items(units, |ei, (dxe, dw1e, dw2e)| {
-            expert_ffn_bwd_unit(x, w1, w2, dy, ei, dxe, dw1e, dw2e, c, m, h);
+            with_dispatch(d, || {
+                expert_ffn_bwd_unit(x, w1, w2, dy, ei, dxe, dw1e, dw2e, c, m, h);
+            });
         });
     } else {
         for (ei, (dxe, dw1e, dw2e)) in units.into_iter().enumerate() {
@@ -852,11 +2069,13 @@ mod tests {
         }
     }
 
-    /// Relative-tolerance comparison used by the blocked-vs-naive checks.
+    /// Relative-tolerance comparison used by the dispatch-vs-naive
+    /// checks (1e-5 absolute floor: the ambient tier may be `simd`,
+    /// whose FMA re-rounding shows up on cancellation-heavy elements).
     fn assert_rel_close(got: &[f32], want: &[f32], rel: f32, what: &str) {
         assert_eq!(got.len(), want.len(), "{what}: len");
         for (i, (g, w)) in got.iter().zip(want).enumerate() {
-            let tol = rel * (g.abs() + w.abs()) + 1e-6;
+            let tol = rel * (g.abs() + w.abs()) + 1e-5;
             assert!((g - w).abs() <= tol, "{what}[{i}]: {g} vs {w}");
         }
     }
@@ -1011,6 +2230,158 @@ mod tests {
         assert_eq!(dw1, vec![1.0, 0.0, 2.0, 0.0]);
         // dw2 = relu(hid)^T @ dy = [[2,2],[0,0]]
         assert_eq!(dw2, vec![2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_kernels_env_values_including_garbage() {
+        assert_eq!(parse_kernels(""), Ok(None));
+        assert_eq!(parse_kernels("auto"), Ok(None));
+        assert_eq!(parse_kernels(" AUTO "), Ok(None));
+        assert_eq!(parse_kernels(" SIMD "), Ok(Some(Dispatch::Simd)));
+        assert_eq!(parse_kernels("Blocked"), Ok(Some(Dispatch::Blocked)));
+        assert_eq!(parse_kernels("naive"), Ok(Some(Dispatch::Naive)));
+        for garbage in ["fast", "simd8", "1", "avx512", "block ed"] {
+            let err = parse_kernels(garbage).unwrap_err();
+            assert!(err.contains("FLOWMOE_KERNELS"), "{err}");
+            assert!(err.contains(&garbage.trim().to_ascii_lowercase()), "{err}");
+        }
+    }
+
+    #[test]
+    fn resolve_simd_without_avx2_errors_instead_of_silent_fallback() {
+        let err = resolve_dispatch(Some(Dispatch::Simd), false).unwrap_err();
+        assert!(err.contains("AVX2"), "{err}");
+        assert!(err.contains("blocked"), "{err}"); // actionable alternatives
+        assert_eq!(resolve_dispatch(Some(Dispatch::Simd), true), Ok(Dispatch::Simd));
+        assert_eq!(resolve_dispatch(None, true), Ok(Dispatch::Simd));
+        assert_eq!(resolve_dispatch(None, false), Ok(Dispatch::Blocked));
+        assert_eq!(resolve_dispatch(Some(Dispatch::Naive), false), Ok(Dispatch::Naive));
+        assert_eq!(resolve_dispatch(Some(Dispatch::Blocked), false), Ok(Dispatch::Blocked));
+    }
+
+    #[test]
+    fn with_dispatch_overrides_and_restores() {
+        let ambient = active_dispatch();
+        with_dispatch(Dispatch::Naive, || {
+            assert_eq!(active_dispatch(), Dispatch::Naive);
+            with_dispatch(Dispatch::Simd, || assert_eq!(active_dispatch(), Dispatch::Simd));
+            assert_eq!(active_dispatch(), Dispatch::Naive);
+        });
+        assert_eq!(active_dispatch(), ambient);
+    }
+
+    #[test]
+    fn pack_b_nt_layout_and_zero_padding() {
+        // b (n=3, k=2): rows [1,2], [3,4], [5,6]; one 8-wide group with 5
+        // padded tail columns; the buffer starts dirty on purpose
+        let b = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let (k, n) = (2usize, 3usize);
+        let mut packed = vec![7.0f32; k * 8];
+        pack_b_nt(&b, k, n, &mut packed);
+        assert_eq!(&packed[0..8], &[1.0, 3.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&packed[8..16], &[2.0, 4.0, 6.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn simd_reducers_match_scalar_within_tolerance() {
+        let mut rng = Rng::new(5);
+        for len in [0usize, 1, 7, 8, 9, 31, 100] {
+            let x = randv(&mut rng, len, 1.0);
+            let y = randv(&mut rng, len, 1.0);
+            let ss: f32 = x.iter().sum();
+            assert!((reduce_sum_d(&x, Dispatch::Simd) - ss).abs() <= 1e-4 * (ss.abs() + 1.0), "sum len {len}");
+            let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(reduce_max_d(&x, Dispatch::Simd), mx, "max len {len}"); // max is exact
+            let dt: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((reduce_dot_d(&x, &y, Dispatch::Simd) - dt).abs() <= 1e-4 * (dt.abs() + 1.0), "dot len {len}");
+        }
+    }
+
+    #[test]
+    fn every_dispatch_tier_matches_reference_incl_packed_nt() {
+        // in-module smoke only: one odd shape (small kernels, lane
+        // remainders) and one packed-B shape; the exhaustive awkward-
+        // shape sweep lives in tests/kernel_conformance.rs
+        let mut rng = Rng::new(6);
+        for &(m, k, n) in &[(5usize, 7usize, 9usize), (16, 64, 80)] {
+            let a = randv(&mut rng, m * k, 1.0);
+            let b = randv(&mut rng, k * n, 1.0);
+            let bt = randv(&mut rng, n * k, 1.0);
+            let at = randv(&mut rng, k * m, 1.0);
+            for d in [Dispatch::Naive, Dispatch::Blocked, Dispatch::Simd] {
+                with_dispatch(d, || {
+                    let tag = d.name();
+                    assert_rel_close(
+                        &matmul(&a, &b, m, k, n),
+                        &matmul_ref(&a, &b, m, k, n),
+                        1e-4,
+                        &format!("{tag} mm {m}x{k}x{n}"),
+                    );
+                    assert_rel_close(
+                        &matmul_nt(&a, &bt, m, k, n),
+                        &matmul_nt_ref(&a, &bt, m, k, n),
+                        1e-4,
+                        &format!("{tag} nt {m}x{k}x{n}"),
+                    );
+                    assert_rel_close(
+                        &matmul_tn(&at, &b, k, m, n),
+                        &matmul_tn_ref(&at, &b, k, m, n),
+                        1e-4,
+                        &format!("{tag} tn {m}x{k}x{n}"),
+                    );
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_pooled_nt_matches_plain_nt_bitwise() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (16usize, 64usize, 80usize); // packed-B shape
+        let a = randv(&mut rng, m * k, 1.0);
+        let bt = randv(&mut rng, n * k, 1.0);
+        for d in [Dispatch::Naive, Dispatch::Blocked, Dispatch::Simd] {
+            with_dispatch(d, || {
+                let mut plain = vec![0.0f32; m * n];
+                par_matmul_nt_into(&a, &bt, &mut plain, m, k, n);
+                let mut ws = Workspace::new();
+                ws.put(vec![7.0f32; 8]); // dirty pool
+                for round in 0..2 {
+                    let mut pooled = vec![0.0f32; m * n];
+                    par_matmul_nt_into_ws(&a, &bt, &mut pooled, m, k, n, &mut ws);
+                    assert!(
+                        plain.iter().zip(&pooled).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{} round {round}",
+                        d.name()
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn axpy_scale_relu_match_scalar_semantics_on_simd() {
+        let mut rng = Rng::new(9);
+        for len in [0usize, 1, 7, 8, 9, 31, 100] {
+            let base = randv(&mut rng, len, 1.0);
+            let x = randv(&mut rng, len, 1.0);
+            let mut got = base.clone();
+            with_dispatch(Dispatch::Simd, || axpy(&mut got, &x, 0.7));
+            for ((g, &b), &xv) in got.iter().zip(&base).zip(&x) {
+                let want = b + 0.7 * xv;
+                assert!((g - want).abs() <= 1e-5 * (want.abs() + 1.0), "axpy len {len}");
+            }
+            let mut got = base.clone();
+            with_dispatch(Dispatch::Simd, || scale(&mut got, -1.5));
+            for (g, &b) in got.iter().zip(&base) {
+                assert_eq!(*g, b * -1.5, "scale len {len}"); // mul is exact vs scalar
+            }
+            let mut got = base.clone();
+            relu_inplace_d(&mut got, Dispatch::Simd);
+            for (g, &b) in got.iter().zip(&base) {
+                assert_eq!(*g, b.max(0.0), "relu len {len}");
+            }
+        }
     }
 
     #[test]

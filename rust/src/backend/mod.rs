@@ -12,7 +12,10 @@
 //! Two entry points:
 //! * [`NativeBackend`] — executes a manifest [`ArtifactSpec`] whose config
 //!   is a known preset and whose name matches an exported entry point
-//!   (`train_step_*`, `block_fwd_*`, `at_bwd_*`, ...).
+//!   (`train_step_*`, `block_fwd_*`, `at_bwd_*`, ...). Every kernel it
+//!   reaches — matmuls, reductions, embedding scatter, expert FFN —
+//!   routes through the [`kernels::Dispatch`] chooser
+//!   (`FLOWMOE_KERNELS={auto,simd,blocked,naive}`, §Perf in `kernels`).
 //! * [`native_manifest`] — synthesizes the manifest the AOT exporter
 //!   would have written for the `tiny` and `e2e` configs (same artifact
 //!   names, same buffer names/shapes/dtypes), so `runtime::Engine` works

@@ -22,10 +22,14 @@
 //! (same numerics, used by tests and one-shot callers). Inside one step
 //! the embarrassingly parallel axes fan out across the
 //! [`crate::sweep::scope`] thread budget: matmul row bands (in
-//! `kernels`), experts (in `kernels::expert_ffn*`), and the per-(sample,
-//! head) attention loops here. All of it is deterministic: results are
-//! byte-identical for any thread budget and for fresh vs recycled
-//! buffers.
+//! `kernels`), experts (in `kernels::expert_ffn*`), the per-(sample,
+//! head) attention loops here, and the cross-entropy rows of
+//! [`head_loss_ws`]. Every kernel call routes through the
+//! [`kernels::Dispatch`](kn::Dispatch) chooser (`FLOWMOE_KERNELS`); the
+//! fan-out closures capture the caller's tier so a thread-local
+//! [`kn::with_dispatch`] override survives into scope workers. All of it
+//! is deterministic *within a tier*: results are byte-identical for any
+//! thread budget and for fresh vs recycled buffers.
 
 use crate::cluster::{combine, combine_bwd, dispatch, dispatch_bwd, Routing};
 use crate::sweep::scope;
@@ -209,12 +213,17 @@ pub fn mha_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> M
     let mut vf = ws.take(t * g.m);
     kn::par_matmul_into(&xn, p.wv, &mut vf, t, g.m, g.m);
     let units = b * g.n_heads;
+    // capture the dispatch tier: scope workers are fresh threads, so a
+    // thread-local override must be re-applied inside the fan-out
+    let disp = kn::active_dispatch();
     let head = |u: usize| {
-        let (bi, hh) = (u / g.n_heads, u % g.n_heads);
-        let q = gather_head(&qf, bi, hh, g.n_seq, g.m, hd);
-        let k = gather_head(&kf, bi, hh, g.n_seq, g.m, hd);
-        let v = gather_head(&vf, bi, hh, g.n_seq, g.m, hd);
-        kn::attention_causal(&q, &k, &v, g.n_seq, hd)
+        kn::with_dispatch(disp, || {
+            let (bi, hh) = (u / g.n_heads, u % g.n_heads);
+            let q = gather_head(&qf, bi, hh, g.n_seq, g.m, hd);
+            let k = gather_head(&kf, bi, hh, g.n_seq, g.m, hd);
+            let v = gather_head(&vf, bi, hh, g.n_seq, g.m, hd);
+            kn::attention_causal(&q, &k, &v, g.n_seq, hd)
+        })
     };
     let heads: Vec<(Vec<f32>, Vec<f32>)> = if par_heads(units, g.n_seq, hd) {
         scope::par_map_vec(units, head)
@@ -264,19 +273,22 @@ pub fn mha_backward_ws(
     let t = x.len() / g.m;
     let b = t / g.n_seq;
     let hd = g.head_dim();
-    // h = x + of @ wo
+    // h = x + of @ wo  (weight-NT GEMMs pool their packed-B panels)
     let mut dof = ws.take(t * g.m);
-    kn::par_matmul_nt_into(dh, p.wo, &mut dof, t, g.m, g.m);
+    kn::par_matmul_nt_into_ws(dh, p.wo, &mut dof, t, g.m, g.m, ws);
     let mut dwo = ws.take(g.m * g.m);
     kn::par_matmul_tn_into(&st.of, dh, &mut dwo, t, g.m, g.m);
     let units = b * g.n_heads;
+    let disp = kn::active_dispatch();
     let head = |u: usize| {
-        let (bi, hh) = (u / g.n_heads, u % g.n_heads);
-        let q = gather_head(&st.qf, bi, hh, g.n_seq, g.m, hd);
-        let k = gather_head(&st.kf, bi, hh, g.n_seq, g.m, hd);
-        let v = gather_head(&st.vf, bi, hh, g.n_seq, g.m, hd);
-        let doh = gather_head(&dof, bi, hh, g.n_seq, g.m, hd);
-        kn::attention_causal_bwd(&q, &k, &v, &st.att_w[u], &doh, g.n_seq, hd)
+        kn::with_dispatch(disp, || {
+            let (bi, hh) = (u / g.n_heads, u % g.n_heads);
+            let q = gather_head(&st.qf, bi, hh, g.n_seq, g.m, hd);
+            let k = gather_head(&st.kf, bi, hh, g.n_seq, g.m, hd);
+            let v = gather_head(&st.vf, bi, hh, g.n_seq, g.m, hd);
+            let doh = gather_head(&dof, bi, hh, g.n_seq, g.m, hd);
+            kn::attention_causal_bwd(&q, &k, &v, &st.att_w[u], &doh, g.n_seq, hd)
+        })
     };
     let heads: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = if par_heads(units, g.n_seq, hd) {
         scope::par_map_vec(units, head)
@@ -301,11 +313,11 @@ pub fn mha_backward_ws(
     let mut dwv = ws.take(g.m * g.m);
     kn::par_matmul_tn_into(&st.xn, &dvf, &mut dwv, t, g.m, g.m);
     let mut dxn = ws.take(t * g.m);
-    kn::par_matmul_nt_into(&dqf, p.wq, &mut dxn, t, g.m, g.m);
+    kn::par_matmul_nt_into_ws(&dqf, p.wq, &mut dxn, t, g.m, g.m, ws);
     let mut dxn_k = ws.take(t * g.m);
-    kn::par_matmul_nt_into(&dkf, p.wk, &mut dxn_k, t, g.m, g.m);
+    kn::par_matmul_nt_into_ws(&dkf, p.wk, &mut dxn_k, t, g.m, g.m, ws);
     let mut dxn_v = ws.take(t * g.m);
-    kn::par_matmul_nt_into(&dvf, p.wv, &mut dxn_v, t, g.m, g.m);
+    kn::par_matmul_nt_into_ws(&dvf, p.wv, &mut dxn_v, t, g.m, g.m, ws);
     for ((a, b_), c) in dxn.iter_mut().zip(&dxn_k).zip(&dxn_v) {
         *a += b_ + c;
     }
@@ -390,7 +402,7 @@ pub fn at_backward_ws(
     let mut dwg = ws.take(g.m * g.e);
     kn::par_matmul_tn_into(&st.u, &dlogits, &mut dwg, t, g.m, g.e);
     let mut du_int = ws.take(t * g.m);
-    kn::par_matmul_nt_into(&dlogits, p.wg, &mut du_int, t, g.e, g.m);
+    kn::par_matmul_nt_into_ws(&dlogits, p.wg, &mut du_int, t, g.e, g.m, ws);
     for (a, b) in du_int.iter_mut().zip(du) {
         *a += b;
     }
@@ -526,9 +538,20 @@ pub fn block_backward(g: &Geo, p: &BlockParams, x: &[f32], c: usize, dy: &[f32])
 // Embedding / LM head / loss
 // ---------------------------------------------------------------------------
 
+/// Work threshold (`t * vocab` logits elements) below which the
+/// cross-entropy row loop of [`head_loss_ws`] stays serial.
+const CE_PAR_MIN: usize = 1 << 14;
+
 /// Final norm + tied LM head + next-token cross-entropy, fused fwd+bwd
 /// (model.py `head_loss_fwd_bwd`), workspace-pooled.
 /// Returns `(loss, dxf, dembed, dnormf)`.
+///
+/// The LM-head `matmul_nt` runs through the workspace-pooled packed-B
+/// path (§Perf) and the cross-entropy rows fan out across the thread
+/// budget via [`scope::par_rows_pair`]: each row writes its `dlogits`
+/// row plus a per-row loss slot, and the row losses are summed in fixed
+/// ascending order afterwards, so the result is byte-identical for any
+/// budget (within a dispatch tier).
 #[allow(clippy::too_many_arguments)]
 pub fn head_loss_ws(
     g: &Geo,
@@ -544,28 +567,50 @@ pub fn head_loss_ws(
     let mut xn = ws.take(t * m);
     kn::rmsnorm_into(xf, normf, &mut xn);
     let mut logits = ws.take(t * v);
-    kn::par_matmul_nt_into(&xn, embed, &mut logits, t, m, v);
+    kn::par_matmul_nt_into_ws(&xn, embed, &mut logits, t, m, v, ws);
     let count = (b * (n - 1)) as f32;
-    let mut loss = 0.0f64;
     let mut dlogits = ws.take(t * v);
-    for bi in 0..b {
-        for pos in 0..n - 1 {
-            let ti = bi * n + pos;
-            let row = &logits[ti * v..(ti + 1) * v];
-            let target = tokens[bi * n + pos + 1] as usize;
-            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let sumexp: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
-            let logz = mx + sumexp.ln();
-            loss += (logz - row[target]) as f64;
-            let drow = &mut dlogits[ti * v..(ti + 1) * v];
-            for (j, (dv, &l)) in drow.iter_mut().zip(row).enumerate() {
-                let p = (l - logz).exp();
-                *dv = (p - if j == target { 1.0 } else { 0.0 }) / count;
+    let mut row_loss = ws.take(t);
+    let d = kn::active_dispatch();
+    let logits_ref: &[f32] = &logits;
+    // Fused CE fwd+bwd for one row; rows are independent (the last
+    // position of each sample has no next-token target and keeps its
+    // zeroed dlogits row / zero loss slot).
+    let ce_row = move |ti: usize, drow: &mut [f32], lslot: &mut f32| {
+        if ti % n == n - 1 {
+            return;
+        }
+        let row = &logits_ref[ti * v..(ti + 1) * v];
+        let target = tokens[ti + 1] as usize;
+        let mx = kn::reduce_max_d(row, d);
+        for (dv, &l) in drow.iter_mut().zip(row) {
+            *dv = (l - mx).exp();
+        }
+        let sumexp = kn::reduce_sum_d(drow, d);
+        let logz = mx + sumexp.ln();
+        *lslot = logz - row[target];
+        for (j, (dv, &l)) in drow.iter_mut().zip(row).enumerate() {
+            let p = (l - logz).exp();
+            *dv = (p - if j == target { 1.0 } else { 0.0 }) / count;
+        }
+    };
+    if t >= 2 && scope::current_budget() > 1 && t.saturating_mul(v) >= CE_PAR_MIN {
+        scope::par_rows_pair(&mut dlogits, v, &mut row_loss, 1, |row0, dband, lband| {
+            for (r, (drow, lslot)) in dband.chunks_exact_mut(v).zip(lband.iter_mut()).enumerate() {
+                ce_row(row0 + r, drow, lslot);
             }
+        });
+    } else {
+        for (ti, (drow, lslot)) in dlogits.chunks_exact_mut(v).zip(row_loss.iter_mut()).enumerate() {
+            ce_row(ti, drow, lslot);
         }
     }
+    let mut loss = 0.0f64;
+    for &rl in row_loss.iter() {
+        loss += rl as f64;
+    }
     let loss = (loss / count as f64) as f32;
-    ws.put(logits);
+    ws.put_all([logits, row_loss]);
     let mut dxn = ws.take(t * m);
     kn::par_matmul_into(&dlogits, embed, &mut dxn, t, v, m);
     let mut dembed = ws.take(v * m);

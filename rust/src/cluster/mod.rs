@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::kernels as kn;
 use crate::commpool::Collective;
 use crate::runtime::{Engine, HostTensor};
 
@@ -73,9 +74,8 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
             if (slot as usize) < c {
                 let dst = (ex * c + slot as usize) * m;
                 let src = ti * m;
-                for j in 0..m {
-                    disp[dst + j] += u[src + j];
-                }
+                // a = 1.0 keeps this an exact add under every dispatch tier
+                kn::axpy(&mut disp[dst..dst + m], &u[src..src + m], 1.0);
                 comb.push((ex as u32, slot));
                 kept.push((ti as u32, ki as u32, dst));
             } else {
@@ -109,10 +109,7 @@ pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
     for &(ti, ki, src) in &routing.kept {
         let (ti, ki) = (ti as usize, ki as usize);
         let g = gate[ti * k + ki];
-        let yrow = &mut y[ti * m..(ti + 1) * m];
-        for (yv, &ov) in yrow.iter_mut().zip(&out[src..src + m]) {
-            *yv += g * ov;
-        }
+        kn::axpy(&mut y[ti * m..(ti + 1) * m], &out[src..src + m], g);
     }
     y
 }
@@ -132,12 +129,8 @@ pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> 
         let (ti, ki) = (ti as usize, ki as usize);
         let g = gate[ti * k + ki];
         let dyrow = &dy[ti * m..(ti + 1) * m];
-        let mut dot = 0.0f32;
-        for ((dov, &dyv), &ov) in dout[o..o + m].iter_mut().zip(dyrow).zip(&out[o..o + m]) {
-            *dov += g * dyv;
-            dot += dyv * ov;
-        }
-        dgate[ti * k + ki] = dot;
+        kn::axpy(&mut dout[o..o + m], dyrow, g);
+        dgate[ti * k + ki] = kn::reduce_dot(dyrow, &out[o..o + m]);
     }
     (dout, dgate)
 }
@@ -153,10 +146,7 @@ pub fn dispatch_bwd(d_disp: &[f32], routing: &Routing) -> Vec<f32> {
     let mut du = vec![0.0f32; t * m];
     for &(ti, _ki, src) in &routing.kept {
         let ti = ti as usize;
-        let durow = &mut du[ti * m..(ti + 1) * m];
-        for (dv, &sv) in durow.iter_mut().zip(&d_disp[src..src + m]) {
-            *dv += sv;
-        }
+        kn::axpy(&mut du[ti * m..(ti + 1) * m], &d_disp[src..src + m], 1.0);
     }
     du
 }
@@ -364,8 +354,11 @@ pub fn run_ep_cluster(
     let coll = Collective::new(p);
     let dir = artifacts.to_path_buf();
     // kernel-level threads compose with worker-level parallelism: each
-    // worker gets an equal share of the caller's budget (min 1)
+    // worker gets an equal share of the caller's budget (min 1), and the
+    // caller's kernel-dispatch tier is re-applied inside the workers
+    // (spawned threads start with an empty thread-local override)
     let worker_budget = (crate::sweep::scope::current_budget() / p).max(1);
+    let disp = kn::active_dispatch();
     let mut handles = Vec::new();
     for w in 0..p {
         let coll = Arc::clone(&coll);
@@ -376,14 +369,16 @@ pub fn run_ep_cluster(
         let x = xs[w].clone();
         let dy = dys[w].clone();
         handles.push(std::thread::spawn(move || -> Result<EpResult> {
-            crate::sweep::scope::with_budget(worker_budget, || {
-                let mut engine = Engine::new(&dir)?;
-                let geo = ep_geometry(&engine, &cfg, p)?;
-                let shard = w1_full.len() / p;
-                let shard2 = w2_full.len() / p;
-                let w1 = &w1_full[w * shard..(w + 1) * shard];
-                let w2 = &w2_full[w * shard2..(w + 1) * shard2];
-                ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
+            kn::with_dispatch(disp, || {
+                crate::sweep::scope::with_budget(worker_budget, || {
+                    let mut engine = Engine::new(&dir)?;
+                    let geo = ep_geometry(&engine, &cfg, p)?;
+                    let shard = w1_full.len() / p;
+                    let shard2 = w2_full.len() / p;
+                    let w1 = &w1_full[w * shard..(w + 1) * shard];
+                    let w2 = &w2_full[w * shard2..(w + 1) * shard2];
+                    ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
+                })
             })
         }));
     }

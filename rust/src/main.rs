@@ -25,6 +25,12 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 
 fn main() {
     let args = Args::from_env();
+    // Fail fast on a bad FLOWMOE_KERNELS request (unknown value, or simd
+    // forced on a host without AVX2) instead of panicking mid-kernel.
+    if let Err(e) = flowmoe::backend::kernels::configured_dispatch() {
+        eprintln!("flowmoe: {e}");
+        std::process::exit(2);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "simulate" => cmd_simulate(&args),
@@ -230,5 +236,14 @@ fn cmd_info(args: &Args) {
     println!(
         "\nthread budget: {} (override with FLOWMOE_THREADS; kernels, experts, heads and sweeps share it)",
         flowmoe::sweep::scope::default_budget()
+    );
+    println!(
+        "kernel dispatch: {} (FLOWMOE_KERNELS=auto|simd|blocked|naive; avx2+fma {})",
+        flowmoe::backend::kernels::default_dispatch().name(),
+        if flowmoe::backend::kernels::avx2_available() {
+            "detected"
+        } else {
+            "not detected"
+        }
     );
 }

@@ -139,6 +139,47 @@ where
     });
 }
 
+/// Like [`par_rows`], but bands **two** row-major buffers by one shared
+/// row split: `f(first_row, band_a, band_b)` receives the same rows of
+/// `a` (row length `a_len`) and `b` (row length `b_len`). Both buffers
+/// must hold the same whole number of rows. Used by the native backend's
+/// cross-entropy loop, where each row produces a gradient row *and* a
+/// per-row loss slot; the same banding contract as [`par_rows`] applies,
+/// so the contents of both buffers are byte-identical to `f(0, a, b)`
+/// for any budget.
+pub fn par_rows_pair<F>(a: &mut [f32], a_len: usize, b: &mut [f32], b_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    if a_len == 0 || b_len == 0 || a.is_empty() {
+        return;
+    }
+    assert_eq!(a.len() % a_len, 0, "par_rows_pair: first buffer not a whole number of rows");
+    assert_eq!(b.len() % b_len, 0, "par_rows_pair: second buffer not a whole number of rows");
+    let rows = a.len() / a_len;
+    assert_eq!(b.len() / b_len, rows, "par_rows_pair: row counts differ");
+    let threads = current_budget().min(rows);
+    if threads <= 1 {
+        f(0, a, b);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest_a = a;
+        let mut rest_b = b;
+        for (start, len) in bands(rows, threads) {
+            let (band_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(len * a_len);
+            rest_a = tail_a;
+            let (band_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(len * b_len);
+            rest_b = tail_b;
+            s.spawn(move || {
+                let _g = BudgetGuard::set(1);
+                f(start, band_a, band_b);
+            });
+        }
+    });
+}
+
 /// Distribute owned work items across the thread budget; item `i` is
 /// handled exactly once as `f(i, item)` (budget 1 inside the workers).
 /// Items typically carry disjoint `&mut` views of one output — e.g. the
@@ -263,6 +304,39 @@ mod tests {
             with_budget(budget, || par_rows(&mut par, row_len, fill));
             assert!(serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()), "budget {budget}");
         }
+    }
+
+    #[test]
+    fn par_rows_pair_matches_serial_bitwise() {
+        let (a_len, b_len, rows) = (13usize, 2usize, 29usize);
+        let fill = |first: usize, a: &mut [f32], b: &mut [f32]| {
+            for (r, (arow, brow)) in a.chunks_exact_mut(a_len).zip(b.chunks_exact_mut(b_len)).enumerate() {
+                let row = first + r;
+                for (j, v) in arow.iter_mut().enumerate() {
+                    *v = (row * 100 + j) as f32 * 0.5;
+                }
+                brow[0] = row as f32;
+                brow[1] = arow.iter().sum();
+            }
+        };
+        let mut sa = vec![0.0f32; rows * a_len];
+        let mut sb = vec![0.0f32; rows * b_len];
+        fill(0, &mut sa, &mut sb);
+        for budget in [1usize, 2, 3, 7, 64] {
+            let mut pa = vec![0.0f32; rows * a_len];
+            let mut pb = vec![0.0f32; rows * b_len];
+            with_budget(budget, || par_rows_pair(&mut pa, a_len, &mut pb, b_len, fill));
+            assert!(sa.iter().zip(&pa).all(|(x, y)| x.to_bits() == y.to_bits()), "a budget {budget}");
+            assert!(sb.iter().zip(&pb).all(|(x, y)| x.to_bits() == y.to_bits()), "b budget {budget}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row counts differ")]
+    fn par_rows_pair_rejects_mismatched_row_counts() {
+        let mut a = vec![0.0f32; 6]; // 3 rows of 2
+        let mut b = vec![0.0f32; 4]; // 4 rows of 1
+        par_rows_pair(&mut a, 2, &mut b, 1, |_, _, _| {});
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::kernels::{active_dispatch, axpy, scale, with_dispatch};
 use crate::commpool::{partition_ranges, Collective, CommPool};
 use crate::data::Corpus;
 use crate::runtime::{Engine, HostTensor, PjRtBuffer};
@@ -218,13 +219,18 @@ pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainRep
     let coll = Collective::new(p);
     let dir: PathBuf = artifacts.to_path_buf();
     let worker_budget = (scope::current_budget() / p).max(1);
+    // re-apply the caller's kernel-dispatch tier inside the workers:
+    // spawned threads start with an empty thread-local override
+    let disp = active_dispatch();
     let mut handles = Vec::new();
     for w in 0..p {
         let coll = Arc::clone(&coll);
         let opts = opts.clone();
         let dir = dir.clone();
         handles.push(std::thread::spawn(move || {
-            scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts))
+            with_dispatch(disp, || {
+                scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts))
+            })
         }));
     }
     let mut reports: Vec<TrainReport> = Vec::new();
@@ -401,18 +407,8 @@ fn worker_dp(
     Ok(report)
 }
 
-fn scale(v: &mut [f32], s: f32) {
-    for x in v.iter_mut() {
-        *x *= s;
-    }
-}
-
-fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (d, s) in acc.iter_mut().zip(x.iter()) {
-        *d += a * *s;
-    }
-}
+// `scale`/`axpy` for the gradient hot loops come from
+// `backend::kernels` (dispatch-routed: f32x8 under the simd tier).
 
 /// Enqueue chunked all-reduce jobs for one tensor of the grad store.
 fn enqueue_tensor_ar(

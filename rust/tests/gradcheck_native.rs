@@ -11,6 +11,13 @@
 //! discrete choice flipped (the gradient is defined piecewise, exactly
 //! like `lax.top_k`'s), so the checks are deterministic under the fixed
 //! seeds.
+//!
+//! Every check also re-runs under the forced **SIMD** dispatch tier
+//! (`gradcheck_all_under_simd_dispatch`) so the backward kernels are
+//! gradient-checked on the code that actually ships on AVX2 hosts (the
+//! portable 8-lane fallback elsewhere). The tolerances already absorb
+//! the tier's documented 1e-4 reassociation contract, so no widening is
+//! needed.
 
 use flowmoe::backend::kernels as kn;
 use flowmoe::backend::model as nm;
@@ -356,4 +363,23 @@ fn gradcheck_embed_lookup_scatter_adjoint() {
     let fd = fd_dir(|ee| dot(&kn::embed_lookup(ee, &tokens, m), &dx), &embed, &ve, EPS);
     let an = dot(&kn::embed_scatter(&tokens, &dx, v, m), &ve);
     assert_close(fd, an, 0.02, "embed fd");
+}
+
+/// The SIMD satellite: every finite-difference check above re-runs with
+/// the `simd` tier forced (AVX2+FMA where detected, the portable 8-lane
+/// fallback otherwise), same seeds, same tolerances — so the shipping
+/// SIMD backward kernels are gradient-checked, not just the scalar ones.
+#[test]
+fn gradcheck_all_under_simd_dispatch() {
+    kn::with_dispatch(kn::Dispatch::Simd, || {
+        gradcheck_rmsnorm();
+        gradcheck_matmul_adjoints();
+        gradcheck_attention_causal();
+        gradcheck_gating_topk();
+        gradcheck_expert_ffn();
+        gradcheck_head_loss();
+        gradcheck_block_backward_all_tensors();
+        gradcheck_at_backward_all_tensors();
+        gradcheck_embed_lookup_scatter_adjoint();
+    });
 }

@@ -226,18 +226,54 @@ fn prop_ar_priority_ar_never_delays_ready_a2a_at_pick_time() {
 
 #[test]
 fn prop_partition_ranges_cover() {
+    // The paper's PARTITION procedure: chunks tile [0, len) exactly — no
+    // gap, no overlap, no empty chunk — the count is ceil(len/chunk),
+    // and only the last chunk may carry the remainder.
     check(200, |rng| {
         let len = rng.below(10_000);
         let chunk = rng.range(1, 4096);
         let ranges = flowmoe::commpool::partition_ranges(len, chunk);
         let total: usize = ranges.iter().map(|(_, l)| l).sum();
         prop_assert!(total == len, "covered {total} of {len}");
+        prop_assert!(ranges.len() == len.div_ceil(chunk), "count {} != ceil({len}/{chunk})", ranges.len());
         let mut pos = 0;
-        for (s, l) in ranges {
+        for (i, &(s, l)) in ranges.iter().enumerate() {
             prop_assert!(s == pos, "gap at {s} (expected {pos})");
             prop_assert!(l <= chunk && l > 0, "bad chunk len {l}");
+            if i + 1 < ranges.len() {
+                prop_assert!(l == chunk, "non-final chunk {i} has len {l} != {chunk}");
+            }
             pos = s + l;
         }
+        if let Some(&(_, last)) = ranges.last() {
+            let rem = len % chunk;
+            let want = if rem == 0 { chunk } else { rem };
+            prop_assert!(last == want, "last chunk {last} != remainder {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_ar_chunks_matches_partition_count() {
+    // The cost model's chunk count (`TaskCosts::ar_chunks`, f64 ceil)
+    // must agree with what the runtime partitioner actually produces for
+    // the same tensor and chunk size — for every (len, chunk) pair,
+    // including exact-multiple and remainder cases. (Both sides are
+    // exact: the byte counts are 4*integer, well inside f64's 2^53.)
+    check(150, |rng| {
+        let cfg = random_model(rng);
+        let cl = random_cluster(rng, cluster_p(&cfg));
+        let costs = TaskCosts::build(&cfg, &cl);
+        let chunk_elems = rng.range(1, 1 << 21);
+        let sp_bytes = (chunk_elems * 4) as f64;
+        let elems = (costs.ar_bytes / 4.0) as usize;
+        let parts = flowmoe::commpool::partition_ranges(elems, chunk_elems).len().max(1);
+        let chunks = costs.ar_chunks(sp_bytes);
+        prop_assert!(
+            chunks == parts,
+            "ar_chunks({sp_bytes}) = {chunks} but partition_ranges({elems}, {chunk_elems}) has {parts}"
+        );
         Ok(())
     });
 }
