@@ -1,0 +1,795 @@
+//! `flowmoe-lint`: dependency-free source lint enforcing repo invariants
+//! the compiler can't (see rust/README.md §Static analysis for the rule
+//! catalog). A small hand-rolled Rust lexer (strings, raw strings, char
+//! vs. lifetime, nested block comments, numbers) feeds token-level rules:
+//!
+//! * **FL001** `unsafe` without a nearby `SAFETY` comment.
+//! * **FL002** unscoped thread creation (`std::thread::spawn` /
+//!   `thread::Builder`) or `rayon` outside `sweep/scope.rs`. Scoped
+//!   threads (`thread::scope` + `s.spawn`) are allowed everywhere: they
+//!   cannot leak past their caller.
+//! * **FL003** `HashMap` in the deterministic hot modules (`sched`,
+//!   `sim`, `cost`, `cluster`): iteration order there must be stable
+//!   run-to-run or simulated timelines stop being reproducible.
+//! * **FL004** `.unwrap()` / `.expect()` in library code (tests exempt).
+//! * **FL005** every `pub fn par_*`/`*simd*` kernel in
+//!   `backend/kernels.rs` must be exercised by name in
+//!   `tests/kernel_conformance.rs` or `tests/kernel_parity.rs`.
+//!
+//! An audited site is silenced with a magic comment on the same line or
+//! the line above: `// flowmoe-lint: allow(<rule-name>) — <why>` where
+//! `<rule-name>` is `safety`, `thread_spawn`, `hashmap`, `unwrap` or
+//! `kernel_coverage`. Code under `#[cfg(test)]` is exempt from every
+//! rule. The lexer is intentionally approximate (it does not parse
+//! Rust), but it is token-exact for the constructs the rules inspect —
+//! in particular, nothing inside string literals or comments can ever
+//! match a rule pattern.
+
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One lint hit: file, 1-based line, stable rule id, and what to do.
+#[derive(Clone, Debug)]
+pub struct LintFinding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint every `.rs` file under `<root>/src` (library + binaries; the
+/// crate's `tests/`, `benches/` and `examples/` are exempt by design).
+/// `root` is the crate directory containing `src/` and `tests/`.
+pub fn lint_repo(root: &Path) -> Result<Vec<LintFinding>> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("src"), &mut files)?;
+    files.sort();
+
+    // identifiers exercised by the kernel test suites (FL005)
+    let mut test_idents: HashSet<String> = HashSet::new();
+    for tf in ["tests/kernel_conformance.rs", "tests/kernel_parity.rs"] {
+        if let Ok(src) = fs::read_to_string(root.join(tf)) {
+            for t in lex(&src) {
+                if let Tok::Ident(name) = t.tok {
+                    test_idents.insert(name);
+                }
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?;
+        out.extend(lint_file(&rel, &src, &test_idents));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for e in entries {
+        let path = e?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+    /// Any string/char/byte literal — contents never inspected.
+    Str,
+    Comment(String),
+    Num,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+struct Token {
+    tok: Tok,
+    line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Consume a `"..."` body starting *after* the opening quote; returns the
+/// index just past the closing quote.
+fn scan_string(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume a raw string body `"..."###` starting at the opening quote,
+/// with `hashes` trailing `#`s required to close.
+fn scan_raw_string(b: &[char], mut i: usize, hashes: usize, line: &mut usize) -> usize {
+    i += 1; // opening quote
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+        }
+        if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes {
+            return i + 1 + hashes;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Consume a char/byte-char body starting after the opening `'`.
+fn scan_char(b: &[char], mut i: usize) -> usize {
+    if i < b.len() && b[i] == '\\' {
+        i += 1;
+        if i < b.len() && b[i] == 'u' {
+            while i < b.len() && b[i] != '}' {
+                i += 1;
+            }
+        }
+        i += 1;
+    } else if i < b.len() {
+        i += 1;
+    }
+    if i < b.len() && b[i] == '\'' {
+        i += 1;
+    }
+    i
+}
+
+fn lex(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start_line = line;
+        // comments
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let s = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Token { tok: Tok::Comment(b[s..i].iter().collect()), line: start_line });
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let s = i;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token { tok: Tok::Comment(b[s..i].iter().collect()), line: start_line });
+            continue;
+        }
+        // string / char literals
+        if c == '"' {
+            i = scan_string(&b, i + 1, &mut line);
+            toks.push(Token { tok: Tok::Str, line: start_line });
+            continue;
+        }
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && is_ident_start(b[i + 1])
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Token { tok: Tok::Lifetime, line: start_line });
+                i = j;
+            } else {
+                i = scan_char(&b, i + 1);
+                toks.push(Token { tok: Tok::Str, line: start_line });
+            }
+            continue;
+        }
+        // prefixed literals and identifiers
+        if is_ident_start(c) {
+            // r"…", r#"…"#, r#ident
+            if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+                let mut k = i + 1;
+                while k < n && b[k] == '#' {
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    i = scan_raw_string(&b, k, k - (i + 1), &mut line);
+                    toks.push(Token { tok: Tok::Str, line: start_line });
+                    continue;
+                }
+                if k == i + 2 && k < n && is_ident_start(b[k]) {
+                    // raw identifier r#name
+                    let mut j = k;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    toks.push(Token {
+                        tok: Tok::Ident(b[k..j].iter().collect()),
+                        line: start_line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            // b"…", b'…'
+            if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+                if b[i + 1] == '"' {
+                    i = scan_string(&b, i + 2, &mut line);
+                } else {
+                    i = scan_char(&b, i + 2);
+                }
+                toks.push(Token { tok: Tok::Str, line: start_line });
+                continue;
+            }
+            // br"…", br#"…"#
+            if c == 'b' && i + 2 < n && b[i + 1] == 'r' && (b[i + 2] == '"' || b[i + 2] == '#') {
+                let mut k = i + 2;
+                while k < n && b[k] == '#' {
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    i = scan_raw_string(&b, k, k - (i + 2), &mut line);
+                    toks.push(Token { tok: Tok::Str, line: start_line });
+                    continue;
+                }
+            }
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Token { tok: Tok::Ident(b[i..j].iter().collect()), line: start_line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                if is_ident_cont(b[j]) {
+                    j += 1;
+                } else if b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1; // decimal point, but stop before `..` ranges
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token { tok: Tok::Num, line: start_line });
+            i = j;
+            continue;
+        }
+        toks.push(Token { tok: Tok::Punct(c), line: start_line });
+        i += 1;
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------------
+// per-file analysis
+// ---------------------------------------------------------------------------
+
+struct FileLint {
+    toks: Vec<Token>,
+    /// Indices into `toks` of non-comment tokens, in order.
+    code: Vec<usize>,
+    /// Per-token: inside a `#[cfg(test)]` item (rules exempt).
+    masked: Vec<bool>,
+    /// Per-token: part of an attribute `#[...]` / `#![...]`.
+    attr: Vec<bool>,
+    /// Line -> upper-cased concatenated comment text on that line.
+    comment_upper: HashMap<usize, String>,
+    /// Lines carrying at least one non-attribute code token.
+    plain_code_lines: HashSet<usize>,
+}
+
+impl FileLint {
+    fn new(src: &str) -> FileLint {
+        let toks = lex(src);
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !matches!(t.tok, Tok::Comment(_)))
+            .map(|(i, _)| i)
+            .collect();
+        let mut masked = vec![false; toks.len()];
+        let mut attr = vec![false; toks.len()];
+
+        let is_punct =
+            |p: usize, c: char| -> bool { matches!(toks[code[p]].tok, Tok::Punct(x) if x == c) };
+        let is_ident = |p: usize, name: &str| -> bool {
+            matches!(&toks[code[p]].tok, Tok::Ident(x) if x == name)
+        };
+        // `]` position closing the attribute whose `[` is at code pos `open`
+        let bracket_end = |open: usize| -> usize {
+            let mut depth = 0i32;
+            let mut p = open;
+            while p < code.len() {
+                if is_punct(p, '[') {
+                    depth += 1;
+                }
+                if is_punct(p, ']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        return p;
+                    }
+                }
+                p += 1;
+            }
+            code.len().saturating_sub(1)
+        };
+
+        let mut k = 0usize;
+        while k < code.len() {
+            if !is_punct(k, '#') {
+                k += 1;
+                continue;
+            }
+            let mut open = k + 1;
+            if open < code.len() && is_punct(open, '!') {
+                open += 1; // inner attribute #![...]
+            }
+            if open >= code.len() || !is_punct(open, '[') {
+                k += 1;
+                continue;
+            }
+            let end = bracket_end(open);
+            for p in k..=end {
+                attr[code[p]] = true;
+            }
+            let is_cfg_test = end == open + 4
+                && is_ident(open + 1, "cfg")
+                && is_punct(open + 2, '(')
+                && is_ident(open + 3, "test")
+                && is_punct(open + 4, ')');
+            if !is_cfg_test {
+                k = end + 1;
+                continue;
+            }
+            // skip any further attributes on the same item
+            let mut m = end + 1;
+            while m < code.len() && is_punct(m, '#') {
+                let mut o = m + 1;
+                if o < code.len() && is_punct(o, '!') {
+                    o += 1;
+                }
+                if o >= code.len() || !is_punct(o, '[') {
+                    break;
+                }
+                let e = bracket_end(o);
+                for p in m..=e {
+                    attr[code[p]] = true;
+                }
+                m = e + 1;
+            }
+            // mask the item: through its matching `}` or a top-level `;`
+            let item_start = m;
+            let mut depth = 0i32;
+            while m < code.len() {
+                if is_punct(m, '{') {
+                    depth += 1;
+                } else if is_punct(m, '}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if is_punct(m, ';') && depth == 0 {
+                    break;
+                }
+                m += 1;
+            }
+            for p in item_start..=m.min(code.len().saturating_sub(1)) {
+                masked[code[p]] = true;
+            }
+            k = m + 1;
+        }
+
+        let mut comment_upper: HashMap<usize, String> = HashMap::new();
+        for t in &toks {
+            if let Tok::Comment(text) = &t.tok {
+                for (off, seg) in text.split('\n').enumerate() {
+                    comment_upper
+                        .entry(t.line + off)
+                        .or_default()
+                        .push_str(&seg.to_ascii_uppercase());
+                }
+            }
+        }
+        let mut plain_code_lines = HashSet::new();
+        for &i in &code {
+            if !attr[i] {
+                plain_code_lines.insert(toks[i].line);
+            }
+        }
+        FileLint { toks, code, masked, attr, comment_upper, plain_code_lines }
+    }
+
+    fn ctok(&self, p: usize) -> &Tok {
+        &self.toks[self.code[p]].tok
+    }
+
+    fn cline(&self, p: usize) -> usize {
+        self.toks[self.code[p]].line
+    }
+
+    fn cmasked(&self, p: usize) -> bool {
+        self.masked[self.code[p]]
+    }
+
+    fn is_punct(&self, p: usize, c: char) -> bool {
+        matches!(*self.ctok(p), Tok::Punct(x) if x == c)
+    }
+
+    fn ident(&self, p: usize) -> Option<&str> {
+        match self.ctok(p) {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// `// flowmoe-lint: allow(<name>)` on the same line or the line above.
+    fn allowed(&self, line: usize, name: &str) -> bool {
+        let needle = format!("FLOWMOE-LINT: ALLOW({})", name.to_ascii_uppercase());
+        [line, line.saturating_sub(1)]
+            .iter()
+            .any(|l| self.comment_upper.get(l).is_some_and(|t| t.contains(&needle)))
+    }
+
+    /// A `SAFETY` comment on this line, or on a run of comment/attribute/
+    /// blank lines immediately above it (a plain-code line breaks the run).
+    fn has_safety_near(&self, line: usize) -> bool {
+        let hit = |l: usize| self.comment_upper.get(&l).is_some_and(|t| t.contains("SAFETY"));
+        if hit(line) {
+            return true;
+        }
+        let mut l = line;
+        for _ in 0..10 {
+            if l <= 1 {
+                break;
+            }
+            l -= 1;
+            if hit(l) {
+                return true;
+            }
+            if self.plain_code_lines.contains(&l) {
+                break;
+            }
+        }
+        false
+    }
+}
+
+fn lint_file(rel: &str, src: &str, kernel_test_idents: &HashSet<String>) -> Vec<LintFinding> {
+    let fl = FileLint::new(src);
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        out.push(LintFinding { file: rel.to_string(), line, rule, message });
+    };
+
+    // FL001: unsafe requires a SAFETY comment
+    for p in 0..fl.code.len() {
+        if fl.cmasked(p) || fl.attr[fl.code[p]] {
+            continue;
+        }
+        if fl.ident(p) == Some("unsafe") {
+            let line = fl.cline(p);
+            if !fl.has_safety_near(line) && !fl.allowed(line, "safety") {
+                push(line, "FL001", "`unsafe` without a covering `// SAFETY:` comment".into());
+            }
+        }
+    }
+
+    // FL002: unscoped thread creation / rayon outside sweep/scope.rs
+    if !rel.ends_with("sweep/scope.rs") {
+        for p in 0..fl.code.len() {
+            if fl.cmasked(p) {
+                continue;
+            }
+            let line = fl.cline(p);
+            if fl.ident(p) == Some("rayon") && !fl.allowed(line, "thread_spawn") {
+                push(line, "FL002", "rayon is off-limits; use sweep::scope".into());
+            }
+            if fl.ident(p) == Some("thread")
+                && p + 3 < fl.code.len()
+                && fl.is_punct(p + 1, ':')
+                && fl.is_punct(p + 2, ':')
+                && matches!(fl.ident(p + 3), Some("spawn") | Some("Builder"))
+                && !fl.allowed(line, "thread_spawn")
+            {
+                push(
+                    line,
+                    "FL002",
+                    "unscoped thread creation outside sweep/scope.rs (use thread::scope)".into(),
+                );
+            }
+        }
+    }
+
+    // FL003: HashMap in deterministic hot modules
+    let hot = ["/sched/", "/sim/", "/cost/", "/cluster/"];
+    if hot.iter().any(|d| rel.contains(d)) {
+        for p in 0..fl.code.len() {
+            if fl.cmasked(p) {
+                continue;
+            }
+            if fl.ident(p) == Some("HashMap") {
+                let line = fl.cline(p);
+                if !fl.allowed(line, "hashmap") {
+                    push(
+                        line,
+                        "FL003",
+                        "HashMap in a deterministic hot module (iteration order is unstable); use a Vec or BTreeMap".into(),
+                    );
+                }
+            }
+        }
+    }
+
+    // FL004: unwrap/expect in library code
+    for p in 0..fl.code.len() {
+        if fl.cmasked(p) {
+            continue;
+        }
+        if matches!(fl.ident(p), Some("unwrap") | Some("expect"))
+            && p > 0
+            && fl.is_punct(p - 1, '.')
+            && p + 1 < fl.code.len()
+            && fl.is_punct(p + 1, '(')
+        {
+            let line = fl.cline(p);
+            if !fl.allowed(line, "unwrap") {
+                push(
+                    line,
+                    "FL004",
+                    "unwrap()/expect() in library code; propagate anyhow::Result or add an audited allow".into(),
+                );
+            }
+        }
+    }
+
+    // FL005: kernel coverage
+    if rel.ends_with("backend/kernels.rs") {
+        for p in 0..fl.code.len() {
+            if fl.cmasked(p) || fl.ident(p) != Some("fn") || p + 1 >= fl.code.len() {
+                continue;
+            }
+            let Some(name) = fl.ident(p + 1) else { continue };
+            if !(name.starts_with("par_") || name.contains("simd")) {
+                continue;
+            }
+            // only pub kernels: walk back over qualifiers to find `pub`
+            let mut is_pub = false;
+            let mut q = p;
+            for _ in 0..8 {
+                if q == 0 {
+                    break;
+                }
+                q -= 1;
+                match fl.ctok(q) {
+                    Tok::Ident(s)
+                        if matches!(
+                            s.as_str(),
+                            "unsafe" | "const" | "extern" | "crate" | "super" | "self" | "in"
+                        ) => {}
+                    Tok::Ident(s) if s == "pub" => {
+                        is_pub = true;
+                        break;
+                    }
+                    Tok::Str | Tok::Punct('(') | Tok::Punct(')') => {}
+                    _ => break,
+                }
+            }
+            if !is_pub {
+                continue;
+            }
+            if !kernel_test_idents.contains(name) {
+                let line = fl.cline(p + 1);
+                if !fl.allowed(line, "kernel_coverage") {
+                    push(
+                        line,
+                        "FL005",
+                        format!(
+                            "kernel `{name}` is not exercised by tests/kernel_conformance.rs or tests/kernel_parity.rs"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, src: &str) -> Vec<LintFinding> {
+        lint_file(rel, src, &HashSet::new())
+    }
+
+    #[test]
+    fn lexer_strings_comments_and_chars() {
+        let src = r##"
+// a comment with unsafe unwrap thread::spawn
+/* block /* nested */ still comment */
+fn f<'a>(x: &'a str) -> char {
+    let _s = "unsafe .unwrap() thread::spawn";
+    let _r = r#"raw "quoted" unsafe"#;
+    let _b = b"bytes";
+    let _n = 1.5e-3 + 0x1F;
+    'x'
+}
+"##;
+        let toks = lex(src);
+        // no Ident token from inside strings/comments
+        assert!(!toks
+            .iter()
+            .any(|t| matches!(&t.tok, Tok::Ident(s) if s == "unsafe" || s == "unwrap")));
+        assert!(toks.iter().any(|t| matches!(t.tok, Tok::Lifetime)));
+        assert_eq!(lint_str("src/x.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged() {
+        let bad = "pub fn f() { unsafe { g(); } }\n";
+        let vs = lint_str("src/x.rs", bad);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "FL001");
+
+        let good = "pub fn f() {\n    // SAFETY: g has no requirements\n    unsafe { g(); }\n}\n";
+        assert_eq!(lint_str("src/x.rs", good).len(), 0);
+
+        // SAFETY above an attribute line still covers the fn
+        let attr = "// SAFETY: callers must check for AVX2\n#[target_feature(enable = \"avx2\")]\npub unsafe fn g() {}\n";
+        assert_eq!(lint_str("src/x.rs", attr).len(), 0);
+
+        // a plain-code line between comment and unsafe breaks coverage
+        let far = "// SAFETY: stale\nlet x = 1;\nunsafe { g(); }\n";
+        assert_eq!(lint_str("src/x.rs", far).len(), 1);
+    }
+
+    #[test]
+    fn unwrap_flagged_and_allow_honored() {
+        let bad = "fn f() { x.unwrap(); y.expect(\"m\"); }\n";
+        let vs = lint_str("src/x.rs", bad);
+        assert_eq!(vs.len(), 2, "{vs:?}");
+        assert!(vs.iter().all(|v| v.rule == "FL004"));
+
+        let allowed =
+            "fn f() {\n    // flowmoe-lint: allow(unwrap) — invariant: non-empty\n    x.unwrap();\n}\n";
+        assert_eq!(lint_str("src/x.rs", allowed).len(), 0);
+
+        // unwrap_or and friends are different identifiers
+        assert_eq!(lint_str("src/x.rs", "fn f() { x.unwrap_or(0); }\n").len(), 0);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); unsafe { g(); } }\n}\n";
+        assert_eq!(lint_str("src/x.rs", src).len(), 0);
+        // ...but code after the masked item is linted again
+        let after = "#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\nfn f() { y.unwrap(); }\n";
+        assert_eq!(lint_str("src/x.rs", after).len(), 1);
+    }
+
+    #[test]
+    fn thread_rules() {
+        let vs = lint_str("src/x.rs", "fn f() { std::thread::spawn(|| {}); }\n");
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "FL002");
+        assert_eq!(
+            lint_str("src/x.rs", "fn f() { let b = thread::Builder::new(); }\n").len(),
+            1
+        );
+        // scoped threads are fine anywhere
+        let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert_eq!(lint_str("src/x.rs", scoped).len(), 0);
+        // the scope shim itself is exempt
+        assert_eq!(
+            lint_str("src/sweep/scope.rs", "fn f() { std::thread::spawn(|| {}); }\n").len(),
+            0
+        );
+    }
+
+    #[test]
+    fn hashmap_only_flagged_in_hot_modules() {
+        let src = "use std::collections::HashMap;\n";
+        let vs = lint_str("src/sched/mod.rs", src);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "FL003");
+        assert_eq!(lint_str("src/sim/mod.rs", src).len(), 1);
+        assert_eq!(lint_str("src/analyze/mod.rs", src).len(), 0);
+        assert_eq!(lint_str("src/commpool/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn kernel_coverage_rule() {
+        let kernels = "pub fn par_matmul() {}\nfn simd_shim() {}\npub fn plain() {}\n";
+        let mut idents = HashSet::new();
+        let vs = lint_file("src/backend/kernels.rs", kernels, &idents);
+        // only the pub par_* fn is required; the private simd shim and the
+        // unprefixed pub fn are not
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "FL005");
+        idents.insert("par_matmul".to_string());
+        assert_eq!(lint_file("src/backend/kernels.rs", kernels, &idents).len(), 0);
+        // the rule only applies to kernels.rs
+        assert_eq!(lint_file("src/other.rs", kernels, &HashSet::new()).len(), 0);
+    }
+
+    #[test]
+    fn pub_unsafe_kernels_detected_through_qualifiers() {
+        let kernels = "// SAFETY: caller checks avx2\npub unsafe fn par_axpy_simd() {}\n";
+        let vs = lint_file("src/backend/kernels.rs", kernels, &HashSet::new());
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "FL005");
+    }
+
+    /// The repo itself must be lint-clean: this is the same gate CI runs
+    /// via the `flowmoe-lint` binary, enforced from `cargo test` too.
+    #[test]
+    fn repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_repo(root).expect("lint walk");
+        let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(findings.is_empty(), "lint findings:\n{}", report.join("\n"));
+    }
+}

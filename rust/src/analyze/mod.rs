@@ -1,0 +1,928 @@
+//! Static schedule verification — the `flowmoe analyze` pass.
+//!
+//! The paper's claims rest on the *structure* of the multi-type task
+//! pipeline (Sec. 3.2, Eqs. 2–5, Algorithm 2): MHA+gating, dispatch A2A,
+//! expert compute, combine A2A and priority-scheduled AR chunks must obey
+//! a strict dependency/priority discipline. The dynamic checker
+//! ([`crate::sim::verify_timeline`]) only validates whatever happened to
+//! be simulated; this module proves well-formedness *without* simulating:
+//!
+//! * [`check_dag_structure`] — policy-free invariants every DAG must hold
+//!   (id/duration sanity, duplicate edges, cycle-freeness via a real DFS,
+//!   AR-chunk FIFO discipline). This is what [`crate::sim::simulate`]
+//!   asserts in debug builds.
+//! * [`check_dag`] — the full rule set for a `(Dag, Policy)` pair: stream
+//!   legality, connectivity, per-layer pipeline shape, fwd/bwd phase
+//!   ordering, and the policy-dependent AR-chunk partition checks (which
+//!   reuse [`crate::commpool::partition_ranges`], the runtime's own
+//!   PARTITION procedure).
+//! * [`check_schedule`] — builds the DAG for `(cfg, costs, policy)` and
+//!   additionally reconciles AR chunk counts/bytes against the cost model.
+//!
+//! Rule families **cascade**: each family assumes every earlier family
+//! holds, and `check_dag` stops at the first failing family. That keeps
+//! later checks free of defensive re-validation and makes every broken
+//! fixture trigger exactly one rule family (see the unit tests).
+//!
+//! The second prong of the static layer — the dependency-free source lint
+//! behind the `flowmoe-lint` binary — lives in [`lint`].
+
+pub mod lint;
+
+use std::fmt;
+
+use crate::commpool::partition_ranges;
+use crate::config::ModelCfg;
+use crate::cost::TaskCosts;
+use crate::sched::{build_dag, Policy};
+use crate::tasks::{Dag, Phase, Stream, Task, TaskId, TaskKind};
+
+/// Analyzer rule families. One stable id per family (the catalog is
+/// documented in rust/README.md §Static analysis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Basic structure: ids consecutive, finite non-negative durations,
+    /// dep ids in range, no self- or duplicate edges.
+    Structure,
+    /// Cycle-freeness of the dependency relation (DFS, not just id-range).
+    Cycle,
+    /// Stream legality: compute kinds on the compute stream, A2A on the
+    /// comm stream, AR on comm (or the concurrent AR channel when the
+    /// policy enables one).
+    StreamLegality,
+    /// Pipeline shape: per layer, fwd AT -> D -> E -> C and the mirrored
+    /// backward chain, with the subtask counts the policy implies.
+    PipelineShape,
+    /// Phase ordering: every forward task FIFO-ranks before the head,
+    /// every backward task after it.
+    PhaseOrder,
+    /// AR-chunk discipline: chunks partition the block's gradient tensor
+    /// exactly, priorities are FIFO-monotone (the paper's tensor-chunk
+    /// priority mechanism cannot invert), and no chunk depends on a
+    /// later-seq task.
+    ArChunks,
+    /// Connectivity: no task is disconnected from the iteration's
+    /// dependency structure (orphan tasks would silently skew makespans).
+    Connectivity,
+}
+
+impl Rule {
+    /// Stable rule id, e.g. `S006-ar-chunk`.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Structure => "S001-structure",
+            Rule::Cycle => "S002-cycle",
+            Rule::StreamLegality => "S003-stream",
+            Rule::PipelineShape => "S004-shape",
+            Rule::PhaseOrder => "S005-phase",
+            Rule::ArChunks => "S006-ar-chunk",
+            Rule::Connectivity => "S007-connectivity",
+        }
+    }
+}
+
+/// One analyzer finding: which rule, which tasks, and why.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: Rule,
+    pub tasks: Vec<TaskId>,
+    pub message: String,
+}
+
+impl Violation {
+    fn new(rule: Rule, tasks: Vec<TaskId>, message: String) -> Violation {
+        Violation { rule, tasks, message }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] tasks {:?}: {}", self.rule.id(), self.tasks, self.message)
+    }
+}
+
+/// Policy-free structural invariants every DAG must satisfy before it is
+/// simulated: `Dag::validate`'s checks (split into the Structure and
+/// Cycle families) plus the AR FIFO discipline — AR chunk priorities
+/// strictly increase in creation order, and no AR chunk waits on a task
+/// the FIFO ranks *after* it (which could deadlock a priority executor).
+///
+/// Deliberately excludes stream legality and the AR-below-A2A seq band:
+/// those depend on the policy (and the simulator's own unit fixtures
+/// violate them on purpose).
+pub fn check_dag_structure(dag: &Dag) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    let n = dag.tasks.len();
+    for (i, t) in dag.tasks.iter().enumerate() {
+        if t.id != i {
+            vs.push(Violation::new(
+                Rule::Structure,
+                vec![i],
+                format!("task at index {i} has id {}", t.id),
+            ));
+        }
+        if !(t.dur.is_finite() && t.dur >= 0.0) {
+            vs.push(Violation::new(
+                Rule::Structure,
+                vec![i],
+                format!("task {} ({}) has bad duration {}", t.id, t.kind, t.dur),
+            ));
+        }
+        for (j, &d) in t.deps.iter().enumerate() {
+            if d >= n {
+                vs.push(Violation::new(
+                    Rule::Structure,
+                    vec![i],
+                    format!("task {i} depends on out-of-range task {d} (n={n})"),
+                ));
+            } else if d == i {
+                vs.push(Violation::new(
+                    Rule::Structure,
+                    vec![i],
+                    format!("task {i} depends on itself"),
+                ));
+            } else if t.deps[..j].contains(&d) {
+                vs.push(Violation::new(
+                    Rule::Structure,
+                    vec![i, d],
+                    format!("task {i} has a duplicate dep edge to task {d}"),
+                ));
+            }
+        }
+    }
+    if !vs.is_empty() {
+        return vs;
+    }
+    if let Some(cycle) = dag.find_cycle() {
+        let path: Vec<String> = cycle.iter().map(|id| dag.tasks[*id].kind.to_string()).collect();
+        vs.push(Violation::new(
+            Rule::Cycle,
+            cycle,
+            format!("dependency cycle: {}", path.join(" -> ")),
+        ));
+        return vs;
+    }
+    // AR FIFO discipline (Algorithm 2 runs AR chunks in creation order)
+    let mut prev_ar: Option<&Task> = None;
+    for t in dag.tasks.iter().filter(|t| t.kind.is_ar()) {
+        if let Some(p) = prev_ar {
+            if t.seq <= p.seq {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    vec![p.id, t.id],
+                    format!(
+                        "AR priority inversion: {} (seq {}) not above earlier {} (seq {})",
+                        t.kind, t.seq, p.kind, p.seq
+                    ),
+                ));
+            }
+        }
+        prev_ar = Some(t);
+        for &d in &t.deps {
+            let dep = &dag.tasks[d];
+            if !dep.kind.is_ar() && dep.seq >= t.seq {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    vec![t.id, d],
+                    format!(
+                        "AR chunk {} (seq {}) depends on later-seq task {} (seq {})",
+                        t.kind, t.seq, dep.kind, dep.seq
+                    ),
+                ));
+            }
+        }
+    }
+    vs
+}
+
+/// Full static verification of a `(Dag, Policy)` pair. Returns the first
+/// failing rule family's violations (empty = provably well-formed under
+/// every rule). See the module docs for the cascade rationale.
+pub fn check_dag(dag: &Dag, policy: &Policy) -> Vec<Violation> {
+    let vs = check_dag_structure(dag);
+    if !vs.is_empty() {
+        return vs;
+    }
+    let vs = check_streams(dag, policy);
+    if !vs.is_empty() {
+        return vs;
+    }
+    let vs = check_connectivity(dag);
+    if !vs.is_empty() {
+        return vs;
+    }
+    let vs = check_shape(dag, policy);
+    if !vs.is_empty() {
+        return vs;
+    }
+    let vs = check_phase_order(dag);
+    if !vs.is_empty() {
+        return vs;
+    }
+    check_ar_policy(dag, policy)
+}
+
+/// Build the iteration DAG for `(cfg, costs, policy)`, statically verify
+/// it, and reconcile the AR chunking against the cost model (chunk count
+/// per block, total bytes == the block's replicated-gradient tensor).
+/// Returns the DAG so callers can reuse it.
+pub fn check_schedule(cfg: &ModelCfg, costs: &TaskCosts, policy: &Policy) -> (Dag, Vec<Violation>) {
+    let dag = build_dag(cfg, costs, policy);
+    let mut vs = check_dag(&dag, policy);
+    if vs.is_empty() {
+        let want_n = if policy.pipe_ar { costs.ar_chunks(policy.sp_bytes) } else { 1 };
+        for l in 0..cfg.l {
+            let chunks: Vec<&Task> = dag
+                .tasks
+                .iter()
+                .filter(|t| t.kind.is_ar() && t.kind.layer() == Some(l))
+                .collect();
+            let total: f64 = chunks.iter().map(|t| t.bytes).sum();
+            if chunks.len() != want_n {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    chunks.iter().map(|t| t.id).collect(),
+                    format!(
+                        "layer {l}: {} AR chunks, cost model implies {want_n}",
+                        chunks.len()
+                    ),
+                ));
+            }
+            if (total - costs.ar_bytes).abs() > costs.ar_bytes * 1e-9 + 1e-6 {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    chunks.iter().map(|t| t.id).collect(),
+                    format!(
+                        "layer {l}: AR chunks sum to {total} bytes, tensor is {} bytes",
+                        costs.ar_bytes
+                    ),
+                ));
+            }
+        }
+    }
+    (dag, vs)
+}
+
+/// The policy matrix the `flowmoe analyze` sweep exercises: the paper's
+/// five baselines, the FlowMoE ablations (AT-only, AR-only), full FlowMoE
+/// at the requested R plus the degenerate R=1 edge case, the concurrent-
+/// channel variant and the +ScheMoE combination — 11 policies covering
+/// every `(pipe_moe, pipe_at, pipe_ar, ar_channel)` combination the
+/// builders can produce.
+pub fn policy_matrix(r: usize, sp_bytes: f64) -> Vec<Policy> {
+    vec![
+        Policy::vanilla_ep(),
+        Policy::faster_moe(r),
+        Policy::tutel(r),
+        Policy::sche_moe(r),
+        Policy::fs_moe(r),
+        Policy::flow_moe_at(r),
+        Policy::flow_moe_ar(r, sp_bytes),
+        Policy::flow_moe(r, sp_bytes),
+        Policy::flow_moe(1, sp_bytes),
+        Policy::flow_moe_cc(r, sp_bytes),
+        Policy::flow_moe_sche(r, sp_bytes),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// rule families (internal; see check_dag for the cascade order)
+// ---------------------------------------------------------------------------
+
+fn pidx(p: Phase) -> usize {
+    match p {
+        Phase::Fwd => 0,
+        Phase::Bwd => 1,
+    }
+}
+
+/// S003: every task kind on its legal stream.
+fn check_streams(dag: &Dag, policy: &Policy) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    for t in &dag.tasks {
+        let ok = match t.kind {
+            TaskKind::At { .. } | TaskKind::Exp { .. } | TaskKind::Head => {
+                t.stream == Stream::Compute
+            }
+            TaskKind::Disp { .. } | TaskKind::Comb { .. } => t.stream == Stream::Comm,
+            TaskKind::Ar { .. } => {
+                t.stream == Stream::Comm || (policy.ar_channel && t.stream == Stream::ArComm)
+            }
+        };
+        if !ok {
+            vs.push(Violation::new(
+                Rule::StreamLegality,
+                vec![t.id],
+                format!("{} illegally placed on stream {:?}", t.kind, t.stream),
+            ));
+        }
+    }
+    vs
+}
+
+/// S007: single weakly-connected component (union-find over dep edges).
+fn check_connectivity(dag: &Dag) -> Vec<Violation> {
+    let n = dag.tasks.len();
+    if n <= 1 {
+        return Vec::new();
+    }
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]]; // path halving
+            x = parent[x];
+        }
+        x
+    }
+    for t in &dag.tasks {
+        for &d in &t.deps {
+            let (a, b) = (find(&mut parent, t.id), find(&mut parent, d));
+            if a != b {
+                parent[a] = b;
+            }
+        }
+    }
+    let roots: Vec<usize> = (0..n).map(|i| find(&mut parent, i)).collect();
+    let mut size = vec![0usize; n];
+    for &r in &roots {
+        size[r] += 1;
+    }
+    let main_root = (0..n).fold(0, |best, i| if size[i] > size[best] { i } else { best });
+    let orphans: Vec<TaskId> = (0..n).filter(|&i| roots[i] != main_root).collect();
+    if orphans.is_empty() {
+        Vec::new()
+    } else {
+        let msg = format!(
+            "{} task(s) disconnected from the iteration DAG (e.g. {})",
+            orphans.len(),
+            dag.tasks[orphans[0]].kind
+        );
+        vec![Violation::new(Rule::Connectivity, orphans, msg)]
+    }
+}
+
+/// S004: per-layer pipeline shape — subtask counts match the policy's
+/// (R, pipe_moe, pipe_at), and every task carries its Eq. 2–5 / 6a–6e
+/// pipeline-predecessor dependency.
+fn check_shape(dag: &Dag, policy: &Policy) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    let r_moe = if policy.pipe_moe { policy.r.max(1) } else { 1 };
+    let r_at = if policy.pipe_at { r_moe } else { 1 };
+    let l_blocks = dag
+        .tasks
+        .iter()
+        .filter_map(|t| t.kind.layer())
+        .max()
+        .map_or(0, |l| l + 1);
+
+    let heads: Vec<&Task> = dag
+        .tasks
+        .iter()
+        .filter(|t| matches!(t.kind, TaskKind::Head))
+        .collect();
+    if heads.len() != 1 || l_blocks == 0 {
+        return vec![Violation::new(
+            Rule::PipelineShape,
+            heads.iter().map(|t| t.id).collect(),
+            format!(
+                "expected 1 HEAD task and >=1 layer, found {} head(s), {} layer(s)",
+                heads.len(),
+                l_blocks
+            ),
+        )];
+    }
+    let head = heads[0];
+
+    // subtask counts per (layer, phase, kind class)
+    const KIND_NAMES: [&str; 4] = ["AT", "D", "E", "C"];
+    let mut counts = vec![[[0usize; 4]; 2]; l_blocks];
+    for t in &dag.tasks {
+        let (l, k, ph) = match t.kind {
+            TaskKind::At { l, phase, .. } => (l, 0, phase),
+            TaskKind::Disp { l, phase, .. } => (l, 1, phase),
+            TaskKind::Exp { l, phase, .. } => (l, 2, phase),
+            TaskKind::Comb { l, phase, .. } => (l, 3, phase),
+            TaskKind::Ar { .. } | TaskKind::Head => continue,
+        };
+        counts[l][pidx(ph)][k] += 1;
+    }
+    let want = [r_at, r_moe, r_moe, r_moe];
+    for (l, per_phase) in counts.iter().enumerate() {
+        for (pi, pname) in [(0, "fwd"), (1, "bwd")] {
+            for k in 0..4 {
+                if per_phase[pi][k] != want[k] {
+                    vs.push(Violation::new(
+                        Rule::PipelineShape,
+                        Vec::new(),
+                        format!(
+                            "layer {l} {pname}: {} {} subtasks, policy {} implies {}",
+                            per_phase[pi][k], KIND_NAMES[k], policy.name, want[k]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if !vs.is_empty() {
+        return vs; // dep-presence checks below assume the counts are right
+    }
+
+    // Eq. 2–5 (fwd) / 6a–6e (bwd) pipeline-predecessor dependencies. When
+    // r_at < r_moe the monolithic AT feeds/collects every MoE subtask, so
+    // the r index is not constrained across the AT<->MoE boundary.
+    let dep_any = |t: &Task, f: &dyn Fn(TaskKind) -> bool| -> bool {
+        t.deps.iter().any(|&d| f(dag.tasks[d].kind))
+    };
+    let same_r = r_at == r_moe;
+    for t in &dag.tasks {
+        let ok = match t.kind {
+            TaskKind::At { l, phase: Phase::Fwd, .. } => {
+                l == 0
+                    || dep_any(t, &|k| {
+                        matches!(k, TaskKind::Comb { l: dl, phase: Phase::Fwd, .. } if dl == l - 1)
+                    })
+            }
+            TaskKind::Disp { l, r, phase: Phase::Fwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::At { l: dl, r: dr, phase: Phase::Fwd }
+                    if dl == l && (!same_r || dr == r))
+            }),
+            TaskKind::Exp { l, r, phase: Phase::Fwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::Disp { l: dl, r: dr, phase: Phase::Fwd } if dl == l && dr == r)
+            }),
+            TaskKind::Comb { l, r, phase: Phase::Fwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::Exp { l: dl, r: dr, phase: Phase::Fwd } if dl == l && dr == r)
+            }),
+            TaskKind::Comb { l, r, phase: Phase::Bwd } => {
+                if l == l_blocks - 1 {
+                    dep_any(t, &|k| matches!(k, TaskKind::Head))
+                } else {
+                    dep_any(t, &|k| {
+                        matches!(k, TaskKind::At { l: dl, r: dr, phase: Phase::Bwd }
+                            if dl == l + 1 && (!same_r || dr == r))
+                    })
+                }
+            }
+            TaskKind::Exp { l, r, phase: Phase::Bwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::Comb { l: dl, r: dr, phase: Phase::Bwd } if dl == l && dr == r)
+            }),
+            TaskKind::Disp { l, r, phase: Phase::Bwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::Exp { l: dl, r: dr, phase: Phase::Bwd } if dl == l && dr == r)
+            }),
+            TaskKind::At { l, r, phase: Phase::Bwd } => dep_any(t, &|k| {
+                matches!(k, TaskKind::Disp { l: dl, r: dr, phase: Phase::Bwd }
+                    if dl == l && (!same_r || dr == r))
+            }),
+            TaskKind::Ar { .. } | TaskKind::Head => true, // S006 / below
+        };
+        if !ok {
+            vs.push(Violation::new(
+                Rule::PipelineShape,
+                vec![t.id],
+                format!("{} is missing its pipeline-predecessor dependency", t.kind),
+            ));
+        }
+    }
+    // the head must collect every last-layer combine (fwd -> loss)
+    for r in 0..r_moe {
+        let has = head.deps.iter().any(|&d| {
+            matches!(dag.tasks[d].kind, TaskKind::Comb { l, r: dr, phase: Phase::Fwd }
+                if l == l_blocks - 1 && dr == r)
+        });
+        if !has {
+            vs.push(Violation::new(
+                Rule::PipelineShape,
+                vec![head.id],
+                format!("HEAD does not depend on Cf[{},{r}]", l_blocks - 1),
+            ));
+        }
+    }
+    vs
+}
+
+/// S005: FIFO ranks respect the fwd -> head -> bwd phase order (Eqs. 2–5
+/// rank forward tasks before the turnaround and backward tasks after it;
+/// AR chunks live in their own FIFO band and are checked by S006).
+fn check_phase_order(dag: &Dag) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    let head_seq = match dag.tasks.iter().find(|t| matches!(t.kind, TaskKind::Head)) {
+        Some(h) => h.seq,
+        None => return vs, // shape (S004) already requires a head
+    };
+    for t in &dag.tasks {
+        let phase = match t.kind {
+            TaskKind::At { phase, .. }
+            | TaskKind::Disp { phase, .. }
+            | TaskKind::Exp { phase, .. }
+            | TaskKind::Comb { phase, .. } => phase,
+            TaskKind::Ar { .. } | TaskKind::Head => continue,
+        };
+        let bad = match phase {
+            Phase::Fwd => t.seq >= head_seq,
+            Phase::Bwd => t.seq <= head_seq,
+        };
+        if bad {
+            vs.push(Violation::new(
+                Rule::PhaseOrder,
+                vec![t.id],
+                format!(
+                    "{} (seq {}) FIFO-ranks on the wrong side of HEAD (seq {head_seq})",
+                    t.kind, t.seq
+                ),
+            ));
+        }
+    }
+    vs
+}
+
+/// S006 (policy half): AR chunks sit strictly below the A2A/compute FIFO
+/// band, every block's chunks are an exact equal partition of its tensor
+/// (cross-checked against the runtime's own PARTITION procedure,
+/// [`partition_ranges`]), chunk indices are contiguous, pipelined chunks
+/// wait on the whole block's AT-backward (Appendix H), and centralized
+/// policies emit exactly one post-backward AR per block.
+fn check_ar_policy(dag: &Dag, policy: &Policy) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    let l_blocks = dag
+        .tasks
+        .iter()
+        .filter_map(|t| t.kind.layer())
+        .max()
+        .map_or(0, |l| l + 1);
+
+    let max_nonar_seq = dag
+        .tasks
+        .iter()
+        .filter(|t| !t.kind.is_ar())
+        .map(|t| t.seq)
+        .max()
+        .unwrap_or(0);
+
+    let mut per_layer: Vec<Vec<&Task>> = vec![Vec::new(); l_blocks];
+    let mut at_bwd: Vec<Vec<TaskId>> = vec![Vec::new(); l_blocks];
+    for t in &dag.tasks {
+        match t.kind {
+            TaskKind::Ar { l, .. } => per_layer[l].push(t),
+            TaskKind::At { l, phase: Phase::Bwd, .. } => at_bwd[l].push(t.id),
+            _ => {}
+        }
+        if t.kind.is_ar() && t.seq <= max_nonar_seq {
+            vs.push(Violation::new(
+                Rule::ArChunks,
+                vec![t.id],
+                format!(
+                    "{} (seq {}) not strictly below the A2A/compute FIFO band (max non-AR seq {max_nonar_seq})",
+                    t.kind, t.seq
+                ),
+            ));
+        }
+    }
+
+    let mut layer_totals: Vec<f64> = Vec::with_capacity(l_blocks);
+    for (l, chunks) in per_layer.iter().enumerate() {
+        if chunks.is_empty() {
+            vs.push(Violation::new(
+                Rule::ArChunks,
+                Vec::new(),
+                format!("layer {l} has no all-reduce task"),
+            ));
+            layer_totals.push(0.0);
+            continue;
+        }
+        let ids: Vec<TaskId> = chunks.iter().map(|t| t.id).collect();
+        let mut idxs: Vec<usize> = chunks
+            .iter()
+            .map(|t| match t.kind {
+                TaskKind::Ar { c, .. } => c,
+                _ => 0,
+            })
+            .collect();
+        idxs.sort_unstable();
+        if idxs != (0..chunks.len()).collect::<Vec<usize>>() {
+            vs.push(Violation::new(
+                Rule::ArChunks,
+                ids.clone(),
+                format!("layer {l}: AR chunk indices not contiguous 0..{}", chunks.len()),
+            ));
+            layer_totals.push(chunks.iter().map(|t| t.bytes).sum());
+            continue;
+        }
+        let total: f64 = chunks.iter().map(|t| t.bytes).sum();
+        layer_totals.push(total);
+
+        if policy.pipe_ar {
+            // exact equal partition of the block tensor (gaps/overlaps in
+            // the chunk cover show up as a deviating chunk size)
+            let want = total / chunks.len() as f64;
+            for t in chunks {
+                if (t.bytes - want).abs() > want * 1e-9 + 1e-6 {
+                    vs.push(Violation::new(
+                        Rule::ArChunks,
+                        vec![t.id],
+                        format!(
+                            "layer {l}: {} carries {} bytes, breaking the equal {}-byte partition of {} bytes",
+                            t.kind, t.bytes, want, total
+                        ),
+                    ));
+                }
+            }
+            // cross-check against the runtime's PARTITION procedure: a
+            // greedy partition at the largest chunk size must reproduce
+            // the chunk count (skip degenerate tiny tensors where integer
+            // rounding dominates; real tensors are MBs)
+            let chunk_max = chunks.iter().map(|t| t.bytes).fold(0.0, f64::max);
+            let n_sq = (chunks.len() * chunks.len()) as f64;
+            if chunk_max >= 1024.0 && n_sq <= total {
+                let n_greedy =
+                    partition_ranges(total.round() as usize, chunk_max.ceil() as usize).len();
+                if n_greedy != chunks.len() {
+                    vs.push(Violation::new(
+                        Rule::ArChunks,
+                        ids.clone(),
+                        format!(
+                            "layer {l}: {} chunks, but PARTITION({:.0}, {:.0}) yields {n_greedy}",
+                            chunks.len(),
+                            total,
+                            chunk_max
+                        ),
+                    ));
+                }
+            }
+            // S_p ceiling and minimality: no chunk exceeds S_p, and one
+            // fewer chunk of size S_p could not cover the tensor
+            if policy.sp_bytes.is_finite() && policy.sp_bytes > 0.0 {
+                let sp = policy.sp_bytes;
+                for t in chunks {
+                    if t.bytes > sp * (1.0 + 1e-9) + 1.0 {
+                        vs.push(Violation::new(
+                            Rule::ArChunks,
+                            vec![t.id],
+                            format!("layer {l}: {} carries {} bytes > S_p = {sp}", t.kind, t.bytes),
+                        ));
+                    }
+                }
+                if (chunks.len() as f64 - 1.0) * sp >= total * (1.0 + 1e-9) + 1.0 {
+                    vs.push(Violation::new(
+                        Rule::ArChunks,
+                        ids.clone(),
+                        format!(
+                            "layer {l}: {} chunks is not minimal for {} bytes at S_p = {sp}",
+                            chunks.len(),
+                            total
+                        ),
+                    ));
+                }
+            }
+            // gradient availability (Appendix H): each chunk waits on the
+            // whole block's AT-backward
+            for t in chunks {
+                for &a in &at_bwd[l] {
+                    if !t.deps.contains(&a) {
+                        vs.push(Violation::new(
+                            Rule::ArChunks,
+                            vec![t.id, a],
+                            format!(
+                                "{} does not wait on {} (gradient availability)",
+                                t.kind, dag.tasks[a].kind
+                            ),
+                        ));
+                    }
+                }
+            }
+        } else {
+            // centralized baseline: one whole-tensor AR per block, after
+            // the backward pass (i.e. it has at least one dependency)
+            if chunks.len() != 1 {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    ids.clone(),
+                    format!("layer {l}: centralized policy emitted {} AR chunks", chunks.len()),
+                ));
+            }
+            for t in chunks {
+                if t.deps.is_empty() {
+                    vs.push(Violation::new(
+                        Rule::ArChunks,
+                        vec![t.id],
+                        format!("{} has no dependency anchoring it after backward", t.kind),
+                    ));
+                }
+            }
+        }
+    }
+    // every block all-reduces the same replicated tensor
+    if let Some(&first) = layer_totals.first() {
+        for (l, &total) in layer_totals.iter().enumerate().skip(1) {
+            if (total - first).abs() > first.abs() * 1e-9 + 1e-6 {
+                vs.push(Violation::new(
+                    Rule::ArChunks,
+                    per_layer[l].iter().map(|t| t.id).collect(),
+                    format!(
+                        "layer {l} all-reduces {total} bytes, layer 0 all-reduces {first}"
+                    ),
+                ));
+            }
+        }
+    }
+    vs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, ClusterProfile};
+    use crate::sim::{simulate, verify_timeline};
+
+    fn fixture(policy: &Policy) -> (Dag, TaskCosts, ModelCfg) {
+        let cfg = preset("GPT2-Tiny-MoE").expect("preset");
+        let costs = TaskCosts::build(&cfg, &ClusterProfile::cluster1(16));
+        let dag = build_dag(&cfg, &costs, policy);
+        (dag, costs, cfg)
+    }
+
+    #[track_caller]
+    fn only_rule(vs: &[Violation], rule: Rule) {
+        assert!(!vs.is_empty(), "expected violations of {:?}", rule);
+        for v in vs {
+            assert_eq!(v.rule, rule, "unexpected family: {v}");
+        }
+    }
+
+    fn first_task<F: Fn(&Task) -> bool>(dag: &Dag, f: F) -> TaskId {
+        dag.tasks.iter().position(|t| f(t)).expect("fixture task")
+    }
+
+    #[test]
+    fn matrix_has_eleven_policies() {
+        let pols = policy_matrix(2, 2.5e6);
+        assert_eq!(pols.len(), 11);
+    }
+
+    #[test]
+    fn clean_for_every_matrix_policy() {
+        for pol in policy_matrix(2, 2.5e6) {
+            let (dag, costs, cfg) = fixture(&pol);
+            let vs = check_dag(&dag, &pol);
+            assert!(vs.is_empty(), "{} ({}): {}", pol.name, pol.r, vs[0]);
+            let (_, vs) = check_schedule(&cfg, &costs, &pol);
+            assert!(vs.is_empty(), "{} schedule: {}", pol.name, vs[0]);
+        }
+    }
+
+    #[test]
+    fn cycle_fixture_triggers_cycle_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let last = dag.tasks.len() - 1;
+        dag.tasks[0].deps.push(last); // last transitively depends on 0
+        only_rule(&check_dag(&dag, &pol), Rule::Cycle);
+    }
+
+    #[test]
+    fn duplicate_edge_fixture_triggers_structure_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| !t.deps.is_empty());
+        let d = dag.tasks[i].deps[0];
+        dag.tasks[i].deps.push(d);
+        only_rule(&check_dag(&dag, &pol), Rule::Structure);
+    }
+
+    #[test]
+    fn wrong_stream_fixture_triggers_stream_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| matches!(t.kind, TaskKind::At { .. }));
+        dag.tasks[i].stream = Stream::Comm;
+        let vs = check_dag(&dag, &pol);
+        only_rule(&vs, Rule::StreamLegality);
+        assert!(vs[0].tasks.contains(&i));
+    }
+
+    #[test]
+    fn ar_channel_stream_is_policy_gated() {
+        // the same ArComm placement is legal under FlowMoE-CC and illegal
+        // under strict FlowMoE
+        let cc = Policy::flow_moe_cc(2, 2.5e6);
+        let (dag, _, _) = fixture(&cc);
+        assert!(check_dag(&dag, &cc).is_empty());
+        let strict = Policy::flow_moe(2, 2.5e6);
+        only_rule(&check_dag(&dag, &strict), Rule::StreamLegality);
+    }
+
+    #[test]
+    fn ar_partition_gap_fixture_triggers_ar_rule() {
+        let pol = Policy::flow_moe(2, 0.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| t.kind.is_ar());
+        dag.tasks[i].bytes *= 0.5; // a gap in the chunk cover
+        only_rule(&check_dag(&dag, &pol), Rule::ArChunks);
+    }
+
+    #[test]
+    fn ar_priority_inversion_fixture_triggers_ar_rule() {
+        let pol = Policy::flow_moe(2, 0.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let ars: Vec<TaskId> =
+            dag.tasks.iter().filter(|t| t.kind.is_ar()).map(|t| t.id).collect();
+        assert!(ars.len() >= 2, "fixture needs >=2 AR chunks");
+        let (a, b) = (ars[0], ars[1]);
+        let tmp = dag.tasks[a].seq;
+        dag.tasks[a].seq = dag.tasks[b].seq;
+        dag.tasks[b].seq = tmp;
+        only_rule(&check_dag(&dag, &pol), Rule::ArChunks);
+    }
+
+    #[test]
+    fn ar_below_a2a_band_is_enforced() {
+        // an AR chunk ranked inside the A2A FIFO band is an inversion of
+        // Algorithm 2's priority rule even if AR-internal order is intact
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| t.kind.is_ar());
+        dag.tasks[i].seq = 0;
+        only_rule(&check_dag(&dag, &pol), Rule::ArChunks);
+    }
+
+    #[test]
+    fn orphan_fixture_triggers_connectivity_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let id = dag.tasks.len();
+        dag.tasks.push(Task {
+            id,
+            kind: TaskKind::Exp { l: 0, r: 0, phase: Phase::Fwd },
+            stream: Stream::Compute,
+            dur: 1e-4,
+            deps: vec![],
+            seq: 3,
+            bytes: 0.0,
+        });
+        let vs = check_dag(&dag, &pol);
+        only_rule(&vs, Rule::Connectivity);
+        assert!(vs[0].tasks.contains(&id));
+    }
+
+    #[test]
+    fn phase_order_fixture_triggers_phase_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| {
+            matches!(t.kind, TaskKind::Disp { phase: Phase::Fwd, .. })
+        });
+        let max_nonar = dag
+            .tasks
+            .iter()
+            .filter(|t| !t.kind.is_ar())
+            .map(|t| t.seq)
+            .max()
+            .unwrap_or(0);
+        dag.tasks[i].seq = max_nonar + 10; // fwd task ranked after the head
+        only_rule(&check_dag(&dag, &pol), Rule::PhaseOrder);
+    }
+
+    #[test]
+    fn missing_pipeline_dep_fixture_triggers_shape_rule() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let (mut dag, _, _) = fixture(&pol);
+        let i = first_task(&dag, |t| {
+            matches!(t.kind, TaskKind::Exp { phase: Phase::Fwd, .. })
+        });
+        let keep: Vec<TaskId> = dag.tasks[i]
+            .deps
+            .iter()
+            .copied()
+            .filter(|&d| !matches!(dag.tasks[d].kind, TaskKind::Disp { .. }))
+            .collect();
+        assert!(!keep.is_empty(), "chain dep keeps the task connected");
+        dag.tasks[i].deps = keep;
+        only_rule(&check_dag(&dag, &pol), Rule::PipelineShape);
+    }
+
+    #[test]
+    fn structure_check_is_policy_free() {
+        // the simulator's own unit fixtures put HEAD on the comm stream
+        // and rank AR below A2A — the debug-build hook (structure only)
+        // must accept that, while the full policy check rejects it
+        let mut d = Dag::new();
+        d.add(TaskKind::Head, Stream::Comm, 1.0, vec![], 0);
+        assert!(check_dag_structure(&d).is_empty());
+        assert!(!check_dag(&d, &Policy::vanilla_ep()).is_empty());
+    }
+
+    #[test]
+    fn violations_display_rule_id() {
+        let v = Violation::new(Rule::ArChunks, vec![3, 4], "msg".into());
+        let s = format!("{v}");
+        assert!(s.contains("S006-ar-chunk") && s.contains("[3, 4]"), "{s}");
+    }
+
+    #[test]
+    fn static_and_dynamic_verifiers_agree_on_clean_dags() {
+        for pol in policy_matrix(2, 2.5e6) {
+            let (dag, _, _) = fixture(&pol);
+            assert!(check_dag(&dag, &pol).is_empty(), "{}", pol.name);
+            let tl = simulate(&dag);
+            verify_timeline(&dag, &tl).expect("timeline");
+        }
+    }
+}

@@ -775,10 +775,10 @@ mod avx2 {
 
     use super::{hsum8, L, MR, NC};
 
-    /// SAFETY (all functions): caller guarantees AVX2+FMA support; all
-    /// pointer accesses stay inside the slice bounds established by the
-    /// loop guards, exactly as in the safe `lanes` twins.
-
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support. All pointer accesses stay
+    /// inside `acc`/`x`: `len = min(acc.len(), x.len())` bounds both the
+    /// 8-wide loop (`w8 = len / L * L`) and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn axpy(acc: &mut [f32], x: &[f32], a: f32) {
         let len = acc.len().min(x.len());
@@ -797,6 +797,9 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; every access is bounded by
+    /// `v.len()` through the `w8` guard and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn scale(v: &mut [f32], s: f32) {
         let len = v.len();
@@ -814,6 +817,9 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; every access is bounded by
+    /// `v.len()` through the `w8` guard and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn relu(v: &mut [f32]) {
         let len = v.len();
@@ -832,6 +838,9 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; reads are bounded by
+    /// `x.len()` through the `w8` guard and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn sum(x: &[f32]) -> f32 {
         let len = x.len();
@@ -853,6 +862,9 @@ mod avx2 {
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; reads are bounded by
+    /// `x.len()` through the `w8` guard and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn max(x: &[f32]) -> f32 {
         let len = x.len();
@@ -874,6 +886,9 @@ mod avx2 {
         m
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; reads are bounded by
+    /// `len = min(x.len(), y.len())` in both the vector and scalar loops.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
         let len = x.len().min(y.len());
@@ -895,6 +910,9 @@ mod avx2 {
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; reads are bounded by
+    /// `x.len()` through the `w8` guard and the scalar tail.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn sum_sq(x: &[f32]) -> f32 {
         let len = x.len();
@@ -918,6 +936,9 @@ mod avx2 {
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; reads are bounded by
+    /// `len = min(a.len(), b.len(), c.len())` in both loops.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
         let len = a.len().min(b.len()).min(c.len());
@@ -943,6 +964,12 @@ mod avx2 {
     /// 4-row band `a (rows,k) @ b (k,n)` with broadcast-FMA over 8-wide
     /// column chunks inside NC stripes (per-element accumulation
     /// ascending in `p`, like the blocked kernel).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support and the blocked-kernel shape
+    /// contract: `a.len() >= rows*k`, `b.len() >= k*n`, `out.len() = rows*n`
+    /// with `rows = out.len() / n`; all pointer offsets derive from those
+    /// bounds via the row/stripe loop guards.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn mm_band(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
         if n == 0 {
@@ -1027,6 +1054,12 @@ mod avx2 {
     /// 4-row `a^T @ b` band (same broadcast-FMA micro-kernel as
     /// [`mm_band`]; the band's `a` columns `col0+i..col0+i+4` are
     /// contiguous per `p`-row).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support and the TN shape contract:
+    /// `a.len() >= k*m` with band columns `col0..col0+rows` in range,
+    /// `b.len() >= k*n`, `out.len() = rows*n`; all offsets stay inside
+    /// those bounds via the row/stripe loop guards.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn tn_band(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
         if n == 0 {
@@ -1107,6 +1140,12 @@ mod avx2 {
     }
 
     /// 8-lane dot-product `a_band @ b^T` (the unpacked small-NT kernel).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; `a.len() >= rows*k` and
+    /// `b.len() >= n*k` with `rows = out.len() / n` (all indexing here is
+    /// safe slicing; only the [`dot`] calls are unchecked, bounded by the
+    /// slice lengths passed in).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn nt_band_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
         if n == 0 {
@@ -1123,6 +1162,12 @@ mod avx2 {
 
     /// Packed-panel `a_band @ b^T` (see [`super::pack_b_nt`]): MR rows x
     /// one 8-wide column group, broadcast-FMA ascending in `p`.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support; `a.len() >= rows*k` and
+    /// `packed.len() >= n.div_ceil(8)*k*8` (the [`super::pack_b_nt`]
+    /// layout) with `rows = out.len() / n`; panel and row offsets stay
+    /// inside those bounds via the group/row loop guards.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize) {
         if n == 0 {
@@ -1192,6 +1237,7 @@ mod avx2 {
 fn mm_band_simd(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; callers pass mm_band-shaped slices.
         unsafe { avx2::mm_band(a, b, out, k, n) };
         return;
     }
@@ -1201,6 +1247,7 @@ fn mm_band_simd(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
 fn tn_band_simd(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m: usize, n: usize) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; callers pass tn_band-shaped slices.
         unsafe { avx2::tn_band(a, b, out, col0, k, m, n) };
         return;
     }
@@ -1210,6 +1257,7 @@ fn tn_band_simd(a: &[f32], b: &[f32], out: &mut [f32], col0: usize, k: usize, m:
 fn nt_band_simd_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; callers pass NT-shaped slices.
         unsafe { avx2::nt_band_small(a, b, out, k, n) };
         return;
     }
@@ -1219,6 +1267,7 @@ fn nt_band_simd_small(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize)
 fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; `packed` uses the pack_b_nt layout.
         unsafe { avx2::nt_band_packed(a, packed, out, k, n) };
         return;
     }
@@ -1228,6 +1277,7 @@ fn nt_band_packed(a: &[f32], packed: &[f32], out: &mut [f32], k: usize, n: usize
 fn simd_axpy(acc: &mut [f32], x: &[f32], a: f32) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; axpy bounds itself by the slice lens.
         unsafe { avx2::axpy(acc, x, a) };
         return;
     }
@@ -1237,6 +1287,7 @@ fn simd_axpy(acc: &mut [f32], x: &[f32], a: f32) {
 fn simd_scale(v: &mut [f32], s: f32) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; scale bounds itself by v.len().
         unsafe { avx2::scale(v, s) };
         return;
     }
@@ -1246,6 +1297,7 @@ fn simd_scale(v: &mut [f32], s: f32) {
 fn simd_relu(v: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; relu bounds itself by v.len().
         unsafe { avx2::relu(v) };
         return;
     }
@@ -1255,6 +1307,7 @@ fn simd_relu(v: &mut [f32]) {
 fn simd_sum(x: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; sum bounds itself by x.len().
         return unsafe { avx2::sum(x) };
     }
     lanes::sum(x)
@@ -1263,6 +1316,7 @@ fn simd_sum(x: &[f32]) -> f32 {
 fn simd_max(x: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; max bounds itself by x.len().
         return unsafe { avx2::max(x) };
     }
     lanes::max(x)
@@ -1271,6 +1325,7 @@ fn simd_max(x: &[f32]) -> f32 {
 fn simd_dot(x: &[f32], y: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; dot bounds itself by both lens.
         return unsafe { avx2::dot(x, y) };
     }
     lanes::dot(x, y)
@@ -1279,6 +1334,7 @@ fn simd_dot(x: &[f32], y: &[f32]) -> f32 {
 fn simd_sum_sq(x: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; sum_sq bounds itself by x.len().
         return unsafe { avx2::sum_sq(x) };
     }
     lanes::sum_sq(x)
@@ -1287,6 +1343,7 @@ fn simd_sum_sq(x: &[f32]) -> f32 {
 fn simd_dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
+        // SAFETY: avx2_available() holds; dot3 bounds itself by all three lens.
         return unsafe { avx2::dot3(a, b, c) };
     }
     lanes::dot3(a, b, c)
@@ -1817,7 +1874,7 @@ pub fn gating_topk(logits: &[f32], e: usize, k: usize) -> Gating {
         let mut raw_sum = 0.0f32;
         for ki in 0..k {
             let best = work.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let first = work.iter().position(|&v| v == best).unwrap();
+            let first = work.iter().position(|&v| v == best).unwrap_or(0);
             idx[ti * k + ki] = first as i32;
             gate[ti * k + ki] = row[first];
             raw_sum += row[first];

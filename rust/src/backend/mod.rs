@@ -300,7 +300,7 @@ pub fn native_manifest(dir: &Path) -> Manifest {
         dir: dir.to_path_buf(),
     };
     for name in NATIVE_CONFIGS {
-        let cfg = preset(name).expect("native config preset");
+        let Some(cfg) = preset(name) else { continue };
         let ep = if name == "tiny" { NATIVE_EP_WORKERS } else { 0 };
         push_config(&mut man, &cfg, NATIVE_MICRO_R, ep);
     }
@@ -344,7 +344,8 @@ fn push_config(man: &mut Manifest, cfg: &ModelCfg, micro_r: usize, ep_workers: u
     let tm = bm * cfg.n;
     let x_sp = f32_spec("x", &[tm, cfg.m]);
     let tok_m = i32_spec("tokens", &[bm, cfg.n]);
-    let block_name = |(n, _): &(String, Vec<usize>)| n.split_once('.').expect("block tensor name").1.to_string();
+    let block_name =
+        |(n, _): &(String, Vec<usize>)| n.split_once('.').map_or(n.as_str(), |(_, rest)| rest).to_string();
     let block9: Vec<BufSpec> = ps[1..10]
         .iter()
         .map(|t| f32_spec(&format!("bp.{}", block_name(t)), &t.1))

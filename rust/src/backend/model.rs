@@ -663,20 +663,24 @@ pub fn grad_step_ws(
     let mut x0 = ws.take(tokens.len() * g.m);
     kn::embed_lookup_into(params[0], tokens, g.m, &mut x0);
     xs.push(x0);
-    for bp in &blocks {
-        let (y, st) = block_forward_ws(g, bp, xs.last().unwrap(), c, ws);
+    for (l, bp) in blocks.iter().enumerate() {
+        let (y, st) = block_forward_ws(g, bp, &xs[l], c, ws);
         st.recycle(ws);
         xs.push(y);
     }
     let (loss, dxf, de_head, dnormf) =
         head_loss_ws(g, params[0], params[n_params - 1], &xs[l_blocks], tokens, b_full, ws);
-    ws.put(xs.pop().unwrap()); // xs[l_blocks]: consumed by the head
+    if let Some(x) = xs.pop() {
+        ws.put(x); // xs[l_blocks]: consumed by the head
+    }
 
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n_params];
     let mut dx = dxf;
     for l in (0..l_blocks).rev() {
         let (bg, dx_next) = block_backward_ws(g, &blocks[l], &xs[l], c, &dx, ws);
-        ws.put(xs.pop().unwrap()); // xs[l]: this was its last use
+        if let Some(x) = xs.pop() {
+            ws.put(x); // xs[l]: this was its last use
+        }
         for (ti, gt) in bg.into_iter().enumerate() {
             grads[1 + l * 9 + ti] = gt;
         }

@@ -1,0 +1,34 @@
+//! `flowmoe-lint` — dependency-free repo lint (see `flowmoe::analyze::lint`
+//! for the rule catalog). Exits non-zero on any finding; CI runs it next
+//! to `cargo clippy`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use flowmoe::analyze::lint::lint_repo;
+
+fn main() -> ExitCode {
+    // run from the crate dir (`rust/`) or the repo root
+    let root = if Path::new("src/lib.rs").is_file() {
+        Path::new(".")
+    } else {
+        Path::new("rust")
+    };
+    match lint_repo(root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("flowmoe-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("flowmoe-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("flowmoe-lint: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -80,7 +80,7 @@ impl BoTuner {
         self.observations
             .iter()
             .copied()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     /// The `i`-th point of the log-spaced acquisition candidate grid
@@ -106,7 +106,7 @@ impl BoTuner {
     /// Score every grid candidate under the current posterior.
     fn scored_candidates(&self) -> Vec<(f64, f64)> {
         let (gp, ymean, ystd) = self.fit();
-        let ybest = (self.best().unwrap().1 - ymean) / ystd;
+        let ybest = (self.best().map_or(0.0, |(_, y)| y) - ymean) / ystd;
         (0..self.n_candidates)
             .map(|i| {
                 let x = self.candidate(i);
@@ -145,7 +145,7 @@ impl BoTuner {
         }
         let scored = self.scored_candidates();
         let mut order: Vec<usize> = (0..scored.len()).collect();
-        order.sort_by(|&a, &b| scored[b].1.partial_cmp(&scored[a].1).unwrap());
+        order.sort_by(|&a, &b| scored[b].1.total_cmp(&scored[a].1));
         let window = (self.n_candidates / (4 * q)).max(1);
         let mut picked: Vec<usize> = Vec::with_capacity(q);
         for &i in &order {
@@ -192,7 +192,7 @@ impl BoTuner {
             let y = objective(sp);
             self.observe(sp, y);
         }
-        self.best().unwrap().0
+        self.best().map_or(self.max_bytes, |(sp, _)| sp)
     }
 
     /// Batched tuning loop: draws up to `batch` joint candidates per
@@ -215,7 +215,7 @@ impl BoTuner {
             }
             remaining -= cands.len();
         }
-        self.best().unwrap().0
+        self.best().map_or(self.max_bytes, |(sp, _)| sp)
     }
 }
 

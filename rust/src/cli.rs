@@ -20,8 +20,8 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
-                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), v);
                 } else {
                     out.flags.push(key.to_string());
                 }

@@ -169,7 +169,7 @@ pub fn ep_geometry(engine: &Engine, cfg: &str, p: usize) -> Result<EpGeo> {
     let xd = &ef.inputs[2]; // (el, cw, m)
     let (e_local, cw, m) = (xd.shape[0], xd.shape[1], xd.shape[2]);
     let ab = engine.manifest().get(&format!("at_bwd_{cfg}"))?;
-    let dg = ab.inputs.last().unwrap(); // dgate (T, k)
+    let dg = ab.inputs.last().ok_or_else(|| anyhow!("at_bwd_{cfg} has no inputs"))?; // dgate (T, k)
     let (t, k) = (dg.shape[0], dg.shape[1]);
     if cw % p != 0 {
         return Err(anyhow!("cw {cw} not divisible by P {p}"));
@@ -258,7 +258,7 @@ pub fn ep_block_fwd_bwd(
     let w2_t = HostTensor::F32(w2.to_vec());
     let xd_t = HostTensor::F32(xd.clone());
     let yd = engine.run(&exp_fwd, &[&w1_t, &w2_t, &xd_t])?;
-    let yd = yd.into_iter().next().unwrap();
+    let yd = yd.into_iter().next().ok_or_else(|| anyhow!("{exp_fwd} produced no outputs"))?;
 
     // ---- combine A2A (outputs back to sources) ----
     for s in 0..p {
@@ -368,6 +368,9 @@ pub fn run_ep_cluster(
         let (w1_full, w2_full) = (w1_full.clone(), w2_full.clone());
         let x = xs[w].clone();
         let dy = dys[w].clone();
+        // EP workers model independent GPU ranks whose lifetime spans the
+        // whole collective round; joined below.
+        // flowmoe-lint: allow(thread_spawn) — long-lived worker, not a task
         handles.push(std::thread::spawn(move || -> Result<EpResult> {
             kn::with_dispatch(disp, || {
                 crate::sweep::scope::with_budget(worker_budget, || {

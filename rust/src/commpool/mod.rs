@@ -14,11 +14,23 @@
 //! the same requirement NCCL imposes on the paper's implementation).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 /// A communication job (runs on the pool thread).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Poison-tolerant lock: a panicked worker already fails the run through
+/// its join handle, so recover the inner state instead of cascading the
+/// panic into every thread sharing the pool.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant condvar wait (same rationale as [`lock_recover`]).
+fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Default)]
 struct Queues {
@@ -40,13 +52,14 @@ impl CommPool {
     pub fn new() -> CommPool {
         let inner = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
         let inner2 = Arc::clone(&inner);
+        // flowmoe-lint: allow(thread_spawn) — the pool thread outlives scopes
         let handle = std::thread::Builder::new()
             .name("commpool".into())
             .spawn(move || {
                 let (lock, cv) = &*inner2;
                 loop {
                     let job = {
-                        let mut q = lock.lock().unwrap();
+                        let mut q = lock_recover(lock);
                         loop {
                             // Algorithm 2: A2A first, then AR chunks.
                             if let Some(j) = q.a2a.pop_front() {
@@ -58,14 +71,14 @@ impl CommPool {
                             if q.closed {
                                 break None;
                             }
-                            q = cv.wait(q).unwrap();
+                            q = wait_recover(cv, q);
                         }
                     };
                     match job {
                         Some(j) => {
                             j();
                             let (lock, cv) = &*inner2;
-                            let mut q = lock.lock().unwrap();
+                            let mut q = lock_recover(lock);
                             q.done += 1;
                             cv.notify_all();
                         }
@@ -73,6 +86,9 @@ impl CommPool {
                     }
                 }
             })
+            // audited: the OS refusing a thread at pool construction is
+            // unrecoverable for the trainer, so a panic here is deliberate
+            // flowmoe-lint: allow(unwrap)
             .expect("spawn commpool");
         CommPool {
             inner,
@@ -83,7 +99,7 @@ impl CommPool {
     /// Enqueue a high-priority A2A job.
     pub fn submit_a2a(&self, job: Job) {
         let (lock, cv) = &*self.inner;
-        let mut q = lock.lock().unwrap();
+        let mut q = lock_recover(lock);
         q.a2a.push_back(job);
         q.submitted += 1;
         cv.notify_all();
@@ -92,7 +108,7 @@ impl CommPool {
     /// Enqueue a low-priority all-reduce chunk job.
     pub fn submit_ar(&self, job: Job) {
         let (lock, cv) = &*self.inner;
-        let mut q = lock.lock().unwrap();
+        let mut q = lock_recover(lock);
         q.ar.push_back(job);
         q.submitted += 1;
         cv.notify_all();
@@ -101,9 +117,9 @@ impl CommPool {
     /// Block until every submitted job has run.
     pub fn drain(&self) {
         let (lock, cv) = &*self.inner;
-        let mut q = lock.lock().unwrap();
+        let mut q = lock_recover(lock);
         while q.done < q.submitted {
-            q = cv.wait(q).unwrap();
+            q = wait_recover(cv, q);
         }
     }
 }
@@ -118,7 +134,7 @@ impl Drop for CommPool {
     fn drop(&mut self) {
         {
             let (lock, cv) = &*self.inner;
-            let mut q = lock.lock().unwrap();
+            let mut q = lock_recover(lock);
             q.closed = true;
             cv.notify_all();
         }
@@ -189,7 +205,7 @@ impl Collective {
     /// Every worker must call with the same tag and equal lengths; tags
     /// must be globally ordered consistently (see module docs).
     pub fn all_reduce_sum(&self, tag: u64, data: &mut [f32]) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         {
             let slot = st.reduce.entry(tag).or_insert_with(|| AllReduceSlot {
                 buf: vec![0.0; data.len()],
@@ -206,12 +222,14 @@ impl Collective {
             self.cv.notify_all();
         } else {
             while st.reduce.get(&tag).map(|s| s.arrived) != Some(self.p) {
-                st = self.cv.wait(st).unwrap();
+                st = wait_recover(&self.cv, st);
             }
         }
         // copy out; last reader removes the slot
         let remove = {
-            let slot = st.reduce.get_mut(&tag).unwrap();
+            let Some(slot) = st.reduce.get_mut(&tag) else {
+                return; // unreachable: the slot exists until the last copy below
+            };
             data.copy_from_slice(&slot.buf);
             slot.copied += 1;
             slot.copied == self.p
@@ -224,7 +242,7 @@ impl Collective {
 
     /// Deposit a message for `to` (non-blocking).
     pub fn send(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let prev = st.mail.insert((from, to, tag), data);
         assert!(prev.is_none(), "duplicate send ({from}->{to}, tag {tag})");
         self.cv.notify_all();
@@ -232,18 +250,18 @@ impl Collective {
 
     /// Blocking receive from `from`.
     pub fn recv(&self, from: usize, to: usize, tag: u64) -> Vec<f32> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if let Some(v) = st.mail.remove(&(from, to, tag)) {
                 return v;
             }
-            st = self.cv.wait(st).unwrap();
+            st = wait_recover(&self.cv, st);
         }
     }
 
     /// Generation barrier across all workers.
     pub fn barrier(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let gen = st.barrier_gen;
         st.barrier_arrived += 1;
         if st.barrier_arrived == self.p {
@@ -252,7 +270,7 @@ impl Collective {
             self.cv.notify_all();
         } else {
             while st.barrier_gen == gen {
-                st = self.cv.wait(st).unwrap();
+                st = wait_recover(&self.cv, st);
             }
         }
     }

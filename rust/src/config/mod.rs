@@ -16,6 +16,6 @@ pub fn preset(name: &str) -> Option<ModelCfg> {
 pub fn table2_models() -> Vec<ModelCfg> {
     ["GPT2-Tiny-MoE", "BERT-Large-MoE", "LLaMA2-MoE", "DeepSeek-V2-S"]
         .iter()
-        .map(|n| preset(n).unwrap())
+        .filter_map(|&n| preset(n))
         .collect()
 }

@@ -49,8 +49,8 @@ pub fn parse_sections(text: &str) -> Result<Sections> {
             cur = line[1..line.len() - 1].trim().to_string();
             out.entry(cur.clone()).or_default();
         } else if let Some((k, v)) = line.split_once('=') {
-            out.get_mut(&cur)
-                .unwrap()
+            out.entry(cur.clone())
+                .or_default()
                 .insert(k.trim().to_string(), v.trim().to_string());
         } else {
             bail!("line {}: expected key = value, got {raw}", lineno + 1);

@@ -27,6 +27,9 @@
 //!   training works with no JAX and no artifacts,
 //! * [`cluster`] — an in-process multi-worker distributed runtime with
 //!   real chunked ring all-reduce and real A2A dispatch,
+//! * [`analyze`] — the static verification layer: schedule/DAG analyzer
+//!   behind `flowmoe analyze` plus the dependency-free source lint
+//!   behind the `flowmoe-lint` binary,
 //! * [`trainer`] — the end-to-end training loop,
 //! * [`data`] — deterministic synthetic corpus,
 //! * [`metrics`] — time/energy/memory/occupancy models,
@@ -35,6 +38,7 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! binary is self-contained afterwards.
 
+pub mod analyze;
 pub mod backend;
 pub mod bo;
 pub mod cli;

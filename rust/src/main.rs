@@ -3,15 +3,21 @@
 //! Subcommands:
 //!   simulate  — simulate one iteration of a model under every scheduler
 //!   sweep     — the customized-MoE-layer sweep (Fig. 6)
+//!   analyze   — static schedule verification over the Fig. 6 grid × the
+//!               full policy matrix (see src/analyze)
 //!   tune      — BO-tune S_p for a model (Fig. 4)
 //!   train     — end-to-end distributed training on real PJRT compute
 //!   info      — print presets and artifact manifest summary
 
 use std::path::PathBuf;
+use std::process::ExitCode;
 
+use anyhow::{anyhow, bail, Result};
+use flowmoe::analyze::{check_schedule, policy_matrix};
 use flowmoe::bo::BoTuner;
 use flowmoe::cli::Args;
-use flowmoe::config::{preset, table2_models, ClusterProfile};
+use flowmoe::config::{preset, table2_models, ClusterProfile, ModelCfg};
+use flowmoe::cost::TaskCosts;
 use flowmoe::metrics::{energy_joules, peak_memory, sm_utilization};
 use flowmoe::report::Table;
 use flowmoe::sched::{build_dag, iteration_time, Policy};
@@ -23,32 +29,43 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
-fn main() {
+fn main() -> ExitCode {
     let args = Args::from_env();
     // Fail fast on a bad FLOWMOE_KERNELS request (unknown value, or simd
     // forced on a host without AVX2) instead of panicking mid-kernel.
     if let Err(e) = flowmoe::backend::kernels::configured_dispatch() {
         eprintln!("flowmoe: {e}");
-        std::process::exit(2);
+        return ExitCode::from(2);
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let res = match cmd {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "analyze" => cmd_analyze(&args),
         "tune" => cmd_tune(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: flowmoe <simulate|sweep|tune|train|info> [options]\n\
+                "usage: flowmoe <simulate|sweep|analyze|tune|train|info> [options]\n\
                  \n\
                  simulate --model <name> --gpus N --r R --sp MB    per-framework iteration time\n\
                  sweep    --gpus N --limit K --threads T            customized-layer speedup sweep (parallel)\n\
+                 analyze  --grid fig6 | --model <name>              static schedule verification, all policies\n\
+                          --gpus N --r R --sp MB --limit K\n\
                  tune     --model <name> --gpus N --samples K       BO-tune S_p (--batch B: parallel rounds)\n\
                  train    --config tiny|e2e --workers P --steps N   real distributed training (native backend\n\
                                                                     by default; AOT artifacts when built)\n\
                  info                                               presets + artifacts"
             );
+            Ok(())
+        }
+    };
+    match res {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("flowmoe {cmd}: {e:#}");
+            ExitCode::FAILURE
         }
     }
 }
@@ -64,15 +81,12 @@ fn policies(r: usize, sp: f64) -> Vec<Policy> {
     ]
 }
 
-fn cmd_simulate(args: &Args) {
+fn cmd_simulate(args: &Args) -> Result<()> {
     let model = args.get_or("model", "BERT-Large-MoE");
     let gpus = args.usize_or("gpus", 16);
     let r = args.usize_or("r", 2);
     let sp = args.f64_or("sp", 2.5) * 1e6;
-    let cfg = preset(&model).unwrap_or_else(|| {
-        eprintln!("unknown model {model}");
-        std::process::exit(1);
-    });
+    let cfg = preset(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let cluster = if args.get_or("cluster", "1") == "2" {
         ClusterProfile::cluster2(gpus)
     } else {
@@ -84,7 +98,7 @@ fn cmd_simulate(args: &Args) {
     );
     let mut base = 0.0;
     for pol in policies(r, sp) {
-        let costs = flowmoe::cost::TaskCosts::build(&cfg, &cluster);
+        let costs = TaskCosts::build(&cfg, &cluster);
         let dag = build_dag(&cfg, &costs, &pol);
         let tl = simulate(&dag);
         if pol.name == "vanillaEP" {
@@ -101,9 +115,10 @@ fn cmd_simulate(args: &Args) {
         ]);
     }
     t.print();
+    Ok(())
 }
 
-fn cmd_sweep(args: &Args) {
+fn cmd_sweep(args: &Args) -> Result<()> {
     let gpus = args.usize_or("gpus", 16);
     let limit = args.usize_or("limit", usize::MAX);
     let cluster = ClusterProfile::cluster1(gpus);
@@ -132,14 +147,83 @@ fn cmd_sweep(args: &Args) {
             40
         )
     );
+    Ok(())
 }
 
-fn cmd_tune(args: &Args) {
+/// Static schedule verification (`flowmoe analyze`): build and check every
+/// schedule in the Fig. 6 customized-layer grid (or one preset model)
+/// under the full 11-policy matrix — no simulation involved. Exits
+/// non-zero on any violation; CI runs `analyze --grid fig6`.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let gpus = args.usize_or("gpus", 16);
+    let r = args.usize_or("r", 2);
+    let sp = args.f64_or("sp", 2.5) * 1e6;
+    let limit = args.usize_or("limit", usize::MAX);
+    if let Some(grid) = args.get("grid") {
+        if grid != "fig6" {
+            bail!("unknown grid {grid} (only fig6)");
+        }
+    }
+    let cfgs: Vec<ModelCfg> = if let Some(model) = args.get("model") {
+        vec![preset(model).ok_or_else(|| anyhow!("unknown model {model}"))?]
+    } else {
+        let mut grid = flowmoe::sweep::custom_layer_grid(gpus);
+        grid.truncate(limit);
+        grid
+    };
+    let cluster = ClusterProfile::cluster1(gpus);
+    let mut sweeper = flowmoe::sweep::Sweeper::new();
+    if let Some(t) = args.get("threads").and_then(|t| t.parse().ok()) {
+        sweeper = sweeper.with_threads(t);
+    }
+    let pols = policy_matrix(r, sp);
+    let reports: Vec<(usize, Vec<String>)> = sweeper.run(&cfgs, |i, cfg| {
+        let costs = TaskCosts::build(cfg, &cluster);
+        let mut msgs = Vec::new();
+        let mut tasks = 0usize;
+        for pol in &pols {
+            let (dag, vs) = check_schedule(cfg, &costs, pol);
+            tasks += dag.len();
+            for v in vs {
+                msgs.push(format!(
+                    "config {i} (B={} N={} M={} H={}) under {}: {v}",
+                    cfg.b, cfg.n, cfg.m, cfg.h, pol.name
+                ));
+            }
+        }
+        (tasks, msgs)
+    });
+    let mut violations: Vec<String> = Vec::new();
+    let mut tasks = 0usize;
+    for (t, msgs) in reports {
+        tasks += t;
+        violations.extend(msgs);
+    }
+    for v in violations.iter().take(50) {
+        println!("{v}");
+    }
+    if violations.len() > 50 {
+        println!("... and {} more", violations.len() - 50);
+    }
+    println!(
+        "flowmoe analyze: {} config(s) x {} policies = {} schedules ({tasks} tasks) checked, {} violation(s)",
+        cfgs.len(),
+        pols.len(),
+        cfgs.len() * pols.len(),
+        violations.len()
+    );
+    if !violations.is_empty() {
+        bail!("{} violation(s)", violations.len());
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
     let model = args.get_or("model", "BERT-Large-MoE");
     let gpus = args.usize_or("gpus", 16);
     let samples = args.usize_or("samples", 8);
     let batch = args.usize_or("batch", 1);
-    let cfg = preset(&model).expect("unknown model");
+    let cfg = preset(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let cluster = ClusterProfile::cluster1(gpus);
     let max = cfg.ar_bytes_per_block() * 1.0;
     let mut bo = BoTuner::new(max, args.usize_or("seed", 42) as u64);
@@ -155,16 +239,17 @@ fn cmd_tune(args: &Args) {
     for (sp, t) in &bo.observations {
         println!("  S_p = {:7.3} MB -> {} ms", sp / 1e6, fmt_ms(t * 1e3));
     }
-    let (b_sp, b_t) = bo.best().unwrap();
+    let (b_sp, b_t) = bo.best().ok_or_else(|| anyhow!("BO produced no samples"))?;
     println!(
         "BO best: S_p = {:.3} MB ({} ms) after {samples} samples",
         b_sp / 1e6,
         fmt_ms(b_t * 1e3)
     );
     let _ = best;
+    Ok(())
 }
 
-fn cmd_train(args: &Args) {
+fn cmd_train(args: &Args) -> Result<()> {
     let cfg = args.get_or("config", "tiny");
     let p = args.usize_or("workers", 2);
     let steps = args.usize_or("steps", 20);
@@ -175,30 +260,31 @@ fn cmd_train(args: &Args) {
     opts.overlap = !args.has_flag("centralized");
     opts.log_every = args.usize_or("log-every", 10);
     let report = if args.has_flag("fused") {
-        train_fused(&dir, &opts).expect("train")
+        train_fused(&dir, &opts)?
     } else {
-        train_dp(&dir, p, &opts).expect("train")
+        train_dp(&dir, p, &opts)?
     };
     println!("step,loss,seconds");
     for (i, (l, s)) in report.losses.iter().zip(&report.step_secs).enumerate() {
         println!("{i},{l:.4},{s:.3}");
     }
     let n = report.losses.len();
-    println!(
-        "# first loss {:.4} -> last loss {:.4} over {n} steps",
-        report.losses.first().unwrap(),
-        report.losses.last().unwrap()
-    );
+    if let (Some(first), Some(last)) = (report.losses.first(), report.losses.last()) {
+        println!("# first loss {first:.4} -> last loss {last:.4} over {n} steps");
+    }
+    Ok(())
 }
 
-fn cmd_info(args: &Args) {
+fn cmd_info(args: &Args) -> Result<()> {
     let mut t = Table::new(
         "Model presets (paper Table 2)",
         &["name", "L", "B", "N", "M", "H", "E", "k", "params (M)"],
     );
-    for cfg in table2_models().iter().chain(
-        [preset("LLaMA2-MoE-L").unwrap(), preset("DeepSeek-V2-M").unwrap(), preset("tiny").unwrap(), preset("e2e").unwrap()].iter(),
-    ) {
+    let extra: Vec<ModelCfg> = ["LLaMA2-MoE-L", "DeepSeek-V2-M", "tiny", "e2e"]
+        .iter()
+        .filter_map(|&n| preset(n))
+        .collect();
+    for cfg in table2_models().iter().chain(extra.iter()) {
         t.row(vec![
             cfg.name.into(),
             cfg.l.to_string(),
@@ -246,4 +332,5 @@ fn cmd_info(args: &Args) {
             "not detected"
         }
     );
+    Ok(())
 }

@@ -66,7 +66,7 @@ pub fn peak_grad_cache_blocks(dag: &Dag, tl: &Timeline, l_blocks: usize) -> f64 
         events.push((*a, 1));
         events.push((*b, -1));
     }
-    events.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then(x.1.cmp(&y.1)));
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
     let mut cur = 0i32;
     let mut peak = 0i32;
     for (_, d) in events {

@@ -70,7 +70,7 @@ pub fn histogram(title: &str, samples: &[f64], n_bins: usize, width: usize) -> S
         let i = (((s - lo) / span) * n_bins as f64) as usize;
         bins[i.min(n_bins - 1)] += 1;
     }
-    let maxc = *bins.iter().max().unwrap();
+    let maxc = bins.iter().copied().max().unwrap_or(1).max(1);
     let mut out = format!("\n{title} (n={}, mean={:.3})\n", samples.len(), crate::util::mean(samples));
     for (i, &c) in bins.iter().enumerate() {
         let a = lo + span * i as f64 / n_bins as f64;

@@ -416,7 +416,9 @@ pub fn build_dag(cfg: &ModelCfg, costs: &TaskCosts, policy: &Policy) -> Dag {
     if !policy.pipe_ar {
         // Centralized all-reduce: one AR per block, executed after the
         // entire backward propagation (the baselines' behaviour).
-        let last_compute = prev_comp.unwrap();
+        // prev_comp always holds the last backward compute task here; fall
+        // back to the head (always present) rather than unwrap.
+        let last_compute = prev_comp.unwrap_or(head);
         let mut prev_ar: Option<TaskId> = None;
         for l in (0..l_blocks).rev() {
             let mut deps = vec![last_compute];

@@ -53,7 +53,7 @@ impl Timeline {
             events.push((s.start, 1, is_comm));
             events.push((s.end, -1, is_comm));
         }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let (mut nc, mut nm) = (0i32, 0i32);
         let mut last = 0.0;
         let mut overlap = 0.0;
@@ -80,7 +80,7 @@ impl Timeline {
                 events.push((s.end, -1));
             }
         }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let mut n = 0i32;
         let mut last = 0.0;
         let mut busy = 0.0;
@@ -150,7 +150,14 @@ pub fn json_escape(s: &str) -> String {
 
 /// Simulate the DAG; panics on invalid DAGs (validated in debug).
 pub fn simulate(dag: &Dag) -> Timeline {
-    debug_assert!(dag.validate().is_ok());
+    #[cfg(debug_assertions)]
+    {
+        // Static pre-flight (policy-free half of the analyzer): cycles,
+        // duplicate/out-of-range edges, AR FIFO discipline. Policy-aware
+        // rules (streams, shape, AR partition) run via `flowmoe analyze`.
+        let vs = crate::analyze::check_dag_structure(dag);
+        assert!(vs.is_empty(), "simulate() given an invalid DAG: {}", vs[0]);
+    }
     let n = dag.tasks.len();
     let mut indeg: Vec<u32> = vec![0; n];
     let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
@@ -284,7 +291,7 @@ pub fn verify_timeline(dag: &Dag, tl: &Timeline) -> Result<(), String> {
     // same-stream non-overlap
     for stream in [Stream::Compute, Stream::Comm, Stream::ArComm] {
         let mut xs: Vec<&Span> = tl.spans.iter().filter(|s| s.stream == stream).collect();
-        xs.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        xs.sort_by(|a, b| a.start.total_cmp(&b.start));
         for w in xs.windows(2) {
             if w[0].end > w[1].start + 1e-9 {
                 return Err(format!(

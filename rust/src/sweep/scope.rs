@@ -243,6 +243,8 @@ where
             .collect();
         let mut out = Vec::with_capacity(n);
         for h in handles {
+            // audited: re-raising a worker panic on the caller thread
+            // flowmoe-lint: allow(unwrap)
             out.extend(h.join().expect("par_map_vec worker panicked"));
         }
         out

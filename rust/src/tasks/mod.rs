@@ -89,6 +89,29 @@ impl fmt::Display for TaskKind {
 
 pub type TaskId = usize;
 
+/// Structural validation failure: the offending task ids plus a message.
+/// Returned by [`Dag::validate`] so callers (tests, the static analyzer)
+/// can point at the broken tasks instead of re-parsing an error string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DagError {
+    pub tasks: Vec<TaskId>,
+    pub message: String,
+}
+
+impl DagError {
+    fn new(tasks: Vec<TaskId>, message: String) -> DagError {
+        DagError { tasks, message }
+    }
+}
+
+impl fmt::Display for DagError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for DagError {}
+
 /// One schedulable task.
 #[derive(Clone, Debug)]
 pub struct Task {
@@ -169,23 +192,104 @@ impl Dag {
         finish.iter().copied().fold(0.0, f64::max)
     }
 
-    /// Structural validation: ids consecutive, deps acyclic (guaranteed by
-    /// construction), durations non-negative and finite.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Structural validation: ids consecutive, durations non-negative and
+    /// finite, dep ids in range, no self-edges, no duplicate edges, and no
+    /// dependency cycles (a real DFS — `build_dag` only emits forward
+    /// edges, but hand-built or mutated DAGs can be arbitrary). Cheap:
+    /// O(V + E) plus the short per-task duplicate scan.
+    pub fn validate(&self) -> Result<(), DagError> {
+        let n = self.tasks.len();
         for (i, t) in self.tasks.iter().enumerate() {
             if t.id != i {
-                return Err(format!("task {i} has id {}", t.id));
+                return Err(DagError::new(vec![i], format!("task at index {i} has id {}", t.id)));
             }
             if !(t.dur.is_finite() && t.dur >= 0.0) {
-                return Err(format!("task {} ({}) bad duration {}", t.id, t.kind, t.dur));
+                return Err(DagError::new(
+                    vec![i],
+                    format!("task {} ({}) bad duration {}", t.id, t.kind, t.dur),
+                ));
             }
-            for &d in &t.deps {
-                if d >= i {
-                    return Err(format!("task {} depends on later task {}", i, d));
+            for (j, &d) in t.deps.iter().enumerate() {
+                if d >= n {
+                    return Err(DagError::new(
+                        vec![i],
+                        format!("task {i} depends on out-of-range task {d} (n={n})"),
+                    ));
+                }
+                if d == i {
+                    return Err(DagError::new(vec![i], format!("task {i} depends on itself")));
+                }
+                if t.deps[..j].contains(&d) {
+                    return Err(DagError::new(
+                        vec![i, d],
+                        format!("task {i} has a duplicate dep edge to task {d}"),
+                    ));
                 }
             }
         }
+        if let Some(cycle) = self.find_cycle() {
+            let path: Vec<String> = cycle.iter().map(|t| t.to_string()).collect();
+            return Err(DagError::new(
+                cycle,
+                format!("dependency cycle: {}", path.join(" -> ")),
+            ));
+        }
         Ok(())
+    }
+
+    /// Find one dependency cycle, if any, returning the task ids along it
+    /// in dependency order. Iterative three-color DFS over `deps` edges;
+    /// out-of-range deps are skipped (reported by [`Dag::validate`]).
+    pub fn find_cycle(&self) -> Option<Vec<TaskId>> {
+        const WHITE: u8 = 0;
+        const GRAY: u8 = 1;
+        const BLACK: u8 = 2;
+        let n = self.tasks.len();
+        let mut color = vec![WHITE; n];
+        let mut parent = vec![usize::MAX; n];
+        for root in 0..n {
+            if color[root] != WHITE {
+                continue;
+            }
+            color[root] = GRAY;
+            // explicit stack of (node, next-dep cursor) — DAGs here can be
+            // hundreds of thousands of tasks deep, too deep for recursion
+            let mut stack: Vec<(usize, usize)> = vec![(root, 0)];
+            while let Some(frame) = stack.last_mut() {
+                let u = frame.0;
+                if frame.1 < self.tasks[u].deps.len() {
+                    let v = self.tasks[u].deps[frame.1];
+                    frame.1 += 1;
+                    if v >= n {
+                        continue;
+                    }
+                    match color[v] {
+                        WHITE => {
+                            color[v] = GRAY;
+                            parent[v] = u;
+                            stack.push((v, 0));
+                        }
+                        GRAY => {
+                            // gray-on-gray back edge u -> v closes a cycle
+                            // v -> ... -> u; walk the parent chain back.
+                            let mut cyc = vec![u];
+                            let mut w = u;
+                            while w != v {
+                                w = parent[w];
+                                cyc.push(w);
+                            }
+                            cyc.reverse();
+                            return Some(cyc);
+                        }
+                        _ => {}
+                    }
+                } else {
+                    color[u] = BLACK;
+                    stack.pop();
+                }
+            }
+        }
+        None
     }
 
     /// Count tasks of a coarse category (for tests/reports).
@@ -236,6 +340,61 @@ mod tests {
         d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
         d.tasks[0].dur = f64::NAN;
         assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![a], 1);
+        let c = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![b], 2);
+        d.tasks[a].deps.push(c); // close the loop a -> b -> c -> a
+        let err = d.validate().expect_err("cycle must be rejected");
+        assert!(err.message.contains("cycle"), "{err}");
+        let mut ids = err.tasks.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![a, b, c]);
+        assert_eq!(d.find_cycle().map(|c| c.len()), Some(3));
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        d.tasks[a].deps.push(a);
+        let err = d.validate().expect_err("self-loop must be rejected");
+        assert_eq!(err.tasks, vec![a]);
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_edge() {
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![a], 1);
+        d.tasks[b].deps.push(a);
+        let err = d.validate().expect_err("duplicate edge must be rejected");
+        assert_eq!(err.tasks, vec![b, a]);
+        assert!(err.message.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_dep() {
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        d.tasks[a].deps.push(99);
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_accepts_acyclic_backward_edge() {
+        // edges are validated by cycle-freeness now, not id order: a DAG
+        // whose textual order disagrees with topological order is legal
+        let mut d = Dag::new();
+        let a = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 0);
+        let b = d.add(TaskKind::Head, Stream::Compute, 1.0, vec![], 1);
+        d.tasks[a].deps.push(b);
+        assert!(d.validate().is_ok());
+        assert!(d.find_cycle().is_none());
     }
 
     #[test]

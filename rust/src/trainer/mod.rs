@@ -166,7 +166,7 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
         .inputs
         .iter()
         .find(|b| b.name == "tokens")
-        .unwrap()
+        .ok_or_else(|| anyhow!("{name} has no tokens input"))?
         .shape[1];
 
     let mut params = init_params(&engine, cfg, opts.seed)?;
@@ -227,6 +227,7 @@ pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainRep
         let coll = Arc::clone(&coll);
         let opts = opts.clone();
         let dir = dir.clone();
+        // flowmoe-lint: allow(thread_spawn) — DP workers outlive any one scope
         handles.push(std::thread::spawn(move || {
             with_dispatch(disp, || {
                 scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts))
@@ -302,13 +303,13 @@ fn worker_dp(
             let t = HostTensor::I32(corpus.batch(bm, n_tok));
             let mut xs = Vec::with_capacity(l_blocks + 1);
             let x0 = engine.run(&embed_fwd, &[&HostTensor::F32(params[0].clone()), &t])?;
-            xs.push(x0.into_iter().next().unwrap());
+            xs.push(x0.into_iter().next().ok_or_else(|| anyhow!("{embed_fwd}: no output"))?);
             for l in 0..l_blocks {
                 let x_lit = engine.buffer_f32(xs[l].f32(), &x_spec)?;
                 let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
                 inp.push(&x_lit);
                 let y = engine.run_buffers(&block_fwd, &inp)?;
-                xs.push(y.into_iter().next().unwrap());
+                xs.push(y.into_iter().next().ok_or_else(|| anyhow!("{block_fwd}: no output"))?);
             }
             toks.push(t);
             acts.push(xs);
@@ -330,7 +331,7 @@ fn worker_dp(
             let mut dxf = outs[1].f32().to_vec();
             scale(&mut dxf, inv_r);
             dxs.push(HostTensor::F32(dxf));
-            let mut g = gstore.lock().unwrap();
+            let mut g = locked(&gstore);
             axpy(&mut g[0], outs[2].f32(), inv_r);
             axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
         }
@@ -350,12 +351,12 @@ fn worker_dp(
                 inp.push(&dy_lit);
                 let outs = engine.run_buffers(&block_bwd, &inp)?;
                 {
-                    let mut g = gstore.lock().unwrap();
+                    let mut g = locked(&gstore);
                     for t in 0..9 {
                         axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
                     }
                 }
-                dxs[r] = outs.into_iter().nth(9).unwrap();
+                dxs[r] = outs.into_iter().nth(9).ok_or_else(|| anyhow!("{block_bwd}: missing dx output"))?;
             }
             if opts.overlap {
                 enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
@@ -364,7 +365,7 @@ fn worker_dp(
         // embedding gradient via the input-lookup path
         for r in 0..r_deg {
             let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
-            let mut g = gstore.lock().unwrap();
+            let mut g = locked(&gstore);
             axpy(&mut g[0], outs[0].f32(), 1.0);
         }
         // embed + normf AR (layer ids l_blocks, l_blocks+1)
@@ -383,7 +384,7 @@ fn worker_dp(
 
         // ---------------- update ----------------
         {
-            let mut g = gstore.lock().unwrap();
+            let mut g = locked(&gstore);
             let scale_w = 1.0 / p as f32;
             for gv in g.iter_mut() {
                 scale(gv, scale_w);
@@ -410,6 +411,13 @@ fn worker_dp(
 // `scale`/`axpy` for the gradient hot loops come from
 // `backend::kernels` (dispatch-routed: f32x8 under the simd tier).
 
+/// Lock the shared gradient store, tolerating poisoning: a panicked
+/// worker already fails the step via its join handle, so recover the
+/// inner data instead of double-panicking in unrelated threads.
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Enqueue chunked all-reduce jobs for one tensor of the grad store.
 fn enqueue_tensor_ar(
     pool: &CommPool,
@@ -420,18 +428,18 @@ fn enqueue_tensor_ar(
     chunk_elems: usize,
     tag: &mut impl FnMut(usize, usize, usize) -> u64,
 ) {
-    let len = gstore.lock().unwrap()[tensor_idx].len();
+    let len = locked(&gstore)[tensor_idx].len();
     for (c, (start, l)) in partition_ranges(len, chunk_elems).into_iter().enumerate() {
         let coll = Arc::clone(coll);
         let gstore = Arc::clone(gstore);
         let t = tag(layer_id, tensor_idx, c);
         pool.submit_ar(Box::new(move || {
             let mut chunk = {
-                let g = gstore.lock().unwrap();
+                let g = locked(&gstore);
                 g[tensor_idx][start..start + l].to_vec()
             };
             coll.all_reduce_sum(t, &mut chunk);
-            let mut g = gstore.lock().unwrap();
+            let mut g = locked(&gstore);
             g[tensor_idx][start..start + l].copy_from_slice(&chunk);
         }));
     }

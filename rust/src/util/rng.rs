@@ -87,7 +87,7 @@ impl Rng {
     /// cumulative scan is fine for the corpus generator's n (<= vocab).
     pub fn zipf(&mut self, cdf: &[f64]) -> usize {
         let u = self.f64();
-        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(cdf.len() - 1),
         }

@@ -1,0 +1,192 @@
+//! Integration tests for the static verification layer (`flowmoe
+//! analyze`): the whole Fig. 6 customized-layer grid must be violation-
+//! free under the full policy matrix, and the static analyzer must agree
+//! with the dynamic pair (`simulate` + `verify_timeline`) — clean DAGs
+//! pass both, seeded mutations are caught by the static pass (and, where
+//! the mutation breaks structural invariants, by the simulator's debug
+//! pre-flight as well).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use flowmoe::analyze::{check_dag, check_schedule, policy_matrix, Rule};
+use flowmoe::config::{preset, table2_models, ClusterProfile};
+use flowmoe::cost::TaskCosts;
+use flowmoe::sched::{build_dag, Policy};
+use flowmoe::sim::{simulate, verify_timeline};
+use flowmoe::sweep::{custom_layer_grid, Sweeper};
+use flowmoe::tasks::{Dag, Stream, TaskKind};
+
+const GPUS: usize = 16;
+const SP: f64 = 2.5e6;
+
+/// The full Fig. 6 grid (675 customized MoE layers) x all 11 policies is
+/// statically clean — the same exhaustive pass CI runs through the
+/// `flowmoe analyze --grid fig6` subcommand, here on the sweep engine.
+#[test]
+fn fig6_grid_is_clean_under_every_policy() {
+    let cl = ClusterProfile::cluster1(GPUS);
+    let grid = custom_layer_grid(GPUS);
+    assert_eq!(grid.len(), 675, "Fig. 6 grid size");
+    let pols = policy_matrix(2, SP);
+    assert_eq!(pols.len(), 11, "policy matrix size");
+    let sweeper = Sweeper::new();
+    let bad: Vec<String> = sweeper
+        .run(&grid, |i, cfg| {
+            let costs = TaskCosts::build(cfg, &cl);
+            let mut msgs = Vec::new();
+            for pol in &pols {
+                let (_, vs) = check_schedule(cfg, &costs, pol);
+                for v in vs {
+                    msgs.push(format!("config {i} under {}: {v}", pol.name));
+                }
+            }
+            msgs
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    assert!(bad.is_empty(), "{} violation(s); first: {}", bad.len(), bad[0]);
+}
+
+/// The paper's Table 2 presets (multi-layer DAGs, unlike the l=1 grid)
+/// are clean under every policy and several (r, S_p) settings.
+#[test]
+fn table2_presets_are_clean_under_every_policy() {
+    let cl = ClusterProfile::cluster1(GPUS);
+    let mut cfgs = table2_models();
+    cfgs.extend(["tiny", "e2e"].iter().filter_map(|&n| preset(n)));
+    for cfg in &cfgs {
+        let costs = TaskCosts::build(cfg, &cl);
+        for (r, sp) in [(1, SP), (2, SP), (4, 0.7e6)] {
+            for pol in policy_matrix(r, sp) {
+                let (_, vs) = check_schedule(cfg, &costs, &pol);
+                assert!(
+                    vs.is_empty(),
+                    "{} under {} (r={r}, sp={sp}): {}",
+                    cfg.name,
+                    pol.name,
+                    vs[0]
+                );
+            }
+        }
+    }
+}
+
+fn fixture() -> (Dag, Policy) {
+    let cfg = preset("GPT2-Tiny-MoE").expect("preset");
+    let cl = ClusterProfile::cluster1(GPUS);
+    let costs = TaskCosts::build(&cfg, &cl);
+    let pol = Policy::flow_moe(2, SP);
+    (build_dag(&cfg, &costs, &pol), pol)
+}
+
+fn rules_of(dag: &Dag, pol: &Policy) -> Vec<Rule> {
+    check_dag(dag, pol).iter().map(|v| v.rule).collect()
+}
+
+/// Clean DAG: static verifier and dynamic verifier both pass.
+#[test]
+fn verifiers_agree_on_clean_dag() {
+    let (dag, pol) = fixture();
+    assert!(check_dag(&dag, &pol).is_empty());
+    let tl = simulate(&dag);
+    verify_timeline(&dag, &tl).expect("dynamic verification");
+}
+
+/// Cycle mutation: the static pass reports S002, and the simulator's
+/// debug-build pre-flight (which calls the structural half of the same
+/// analyzer) refuses the DAG instead of deadlocking.
+#[test]
+fn cycle_mutation_caught_by_both_verifiers() {
+    let (mut dag, pol) = fixture();
+    let last = dag.tasks.len() - 1;
+    dag.tasks[0].deps.push(last);
+    let rules = rules_of(&dag, &pol);
+    assert!(rules.contains(&Rule::Cycle), "static: {rules:?}");
+    let r = catch_unwind(AssertUnwindSafe(|| simulate(&dag)));
+    assert!(r.is_err(), "debug pre-flight must reject a cyclic DAG");
+}
+
+/// Stream-legality mutation is a *policy* violation: the static pass
+/// flags it, while the dynamic pair still passes (the simulator will
+/// happily schedule a compute task on a comm stream).
+#[test]
+fn stream_mutation_caught_only_statically() {
+    let (mut dag, pol) = fixture();
+    let at = dag
+        .tasks
+        .iter()
+        .position(|t| matches!(t.kind, TaskKind::At { .. }))
+        .expect("an AT task");
+    dag.tasks[at].stream = Stream::Comm;
+    let rules = rules_of(&dag, &pol);
+    assert!(rules.contains(&Rule::StreamLegality), "static: {rules:?}");
+    let tl = simulate(&dag);
+    verify_timeline(&dag, &tl).expect("dynamic pass still accepts it");
+}
+
+/// AR partition mutation (a chunk shrunk to half size, so the chunks no
+/// longer cover the tensor): statically an S006, dynamically invisible.
+#[test]
+fn ar_partition_mutation_caught_only_statically() {
+    let (mut dag, pol) = fixture();
+    let ar = dag
+        .tasks
+        .iter()
+        .position(|t| matches!(t.kind, TaskKind::Ar { .. }))
+        .expect("an AR task");
+    dag.tasks[ar].bytes *= 0.5;
+    let rules = rules_of(&dag, &pol);
+    assert!(rules.contains(&Rule::ArChunks), "static: {rules:?}");
+    let tl = simulate(&dag);
+    verify_timeline(&dag, &tl).expect("dynamic pass still accepts it");
+}
+
+/// AR priority inversion (two chunk seqs swapped): statically an S006;
+/// the simulator's debug pre-flight also rejects it, because AR FIFO
+/// discipline is part of the structural contract `simulate` assumes.
+#[test]
+fn ar_priority_inversion_caught_by_both_verifiers() {
+    let (mut dag, pol) = fixture();
+    let ars: Vec<usize> = dag
+        .tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t.kind, TaskKind::Ar { .. }))
+        .map(|(i, _)| i)
+        .take(2)
+        .collect();
+    assert_eq!(ars.len(), 2, "need two AR chunks");
+    let (s0, s1) = (dag.tasks[ars[0]].seq, dag.tasks[ars[1]].seq);
+    dag.tasks[ars[0]].seq = s1;
+    dag.tasks[ars[1]].seq = s0;
+    let rules = rules_of(&dag, &pol);
+    assert!(rules.contains(&Rule::ArChunks), "static: {rules:?}");
+    // the pre-flight only runs under debug_assertions; in release the
+    // inverted seqs simulate fine (they only reorder the AR stream)
+    if cfg!(debug_assertions) {
+        let r = catch_unwind(AssertUnwindSafe(|| simulate(&dag)));
+        assert!(r.is_err(), "debug pre-flight must reject AR seq inversion");
+    }
+}
+
+/// Orphan-task mutation: statically an S007 (connectivity), dynamically
+/// invisible (the extra task simply runs).
+#[test]
+fn orphan_mutation_caught_only_statically() {
+    let (mut dag, pol) = fixture();
+    let id = dag.tasks.len();
+    dag.tasks.push(flowmoe::tasks::Task {
+        id,
+        kind: TaskKind::Exp { l: 0, r: 0, phase: flowmoe::tasks::Phase::Fwd },
+        stream: Stream::Compute,
+        dur: 1e-5,
+        deps: Vec::new(),
+        seq: 3,
+        bytes: 0.0,
+    });
+    let rules = rules_of(&dag, &pol);
+    assert!(rules.contains(&Rule::Connectivity), "static: {rules:?}");
+    let tl = simulate(&dag);
+    verify_timeline(&dag, &tl).expect("dynamic pass still accepts it");
+}

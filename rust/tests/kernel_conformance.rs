@@ -315,3 +315,52 @@ fn mha_dispatch_override_survives_head_fanout() {
         });
     }
 }
+
+/// The `_into` drivers (the non-allocating entry points the model layer
+/// actually calls, including the workspace-pooled NT head path) conform
+/// to the same oracles and are byte-identical to their allocating twins
+/// across budgets.
+#[test]
+fn into_variants_match_oracles_and_allocating_twins() {
+    use flowmoe::backend::Workspace;
+    let mut rng = Rng::new(77);
+    // small/awkward plus one shape past the packed-B and banding gates
+    let shapes = [(3usize, 7usize, 9usize), (17, 31, 8), (64, 100, 64)];
+    for (m, k, n) in shapes {
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let bt = randv(&mut rng, n * k, 1.0);
+        let at = randv(&mut rng, k * m, 1.0);
+        let want_mm = kn::matmul_ref(&a, &b, m, k, n);
+        let want_nt = kn::matmul_nt_ref(&a, &bt, m, k, n);
+        let want_tn = kn::matmul_tn_ref(&at, &b, k, m, n);
+        for d in PATHS {
+            kn::with_dispatch(d, || {
+                let tag = format!("{} {m}x{k}x{n}", d.name());
+                let mut out = vec![0.0f32; m * n];
+                for budget in [1usize, 2, 7] {
+                    scope::with_budget(budget, || {
+                        kn::par_matmul_into(&a, &b, &mut out, m, k, n);
+                        assert_rel_close(&out, &want_mm, 1e-4, &format!("{tag} mm_into b={budget}"));
+                        assert!(bits_eq(&out, &kn::par_matmul(&a, &b, m, k, n)), "{tag} mm twin");
+
+                        kn::par_matmul_nt_into(&a, &bt, &mut out, m, k, n);
+                        assert_rel_close(&out, &want_nt, 1e-4, &format!("{tag} nt_into b={budget}"));
+                        assert!(bits_eq(&out, &kn::par_matmul_nt(&a, &bt, m, k, n)), "{tag} nt twin");
+
+                        // the workspace-pooled NT path must agree bit-for-bit
+                        // with the plain NT driver (same kernels, pooled panel)
+                        let mut ws = Workspace::new();
+                        let mut out_ws = vec![0.0f32; m * n];
+                        kn::par_matmul_nt_into_ws(&a, &bt, &mut out_ws, m, k, n, &mut ws);
+                        assert!(bits_eq(&out_ws, &out), "{tag} nt_ws b={budget}");
+
+                        kn::par_matmul_tn_into(&at, &b, &mut out, k, m, n);
+                        assert_rel_close(&out, &want_tn, 1e-4, &format!("{tag} tn_into b={budget}"));
+                        assert!(bits_eq(&out, &kn::par_matmul_tn(&at, &b, k, m, n)), "{tag} tn twin");
+                    });
+                }
+            });
+        }
+    }
+}
