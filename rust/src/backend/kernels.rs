@@ -1564,6 +1564,7 @@ fn nt_driver(
 /// Byte-identical to [`matmul_into`] for any budget (within a tier).
 pub fn par_matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
+    let _sp = crate::obs::span("mm");
     let band = mm_band_for(active_dispatch());
     if !par_worthwhile(m, k, n) {
         band(a, b, out, k, n);
@@ -1578,6 +1579,7 @@ pub fn par_matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize
 /// Parallel `matmul_nt` into `out` (M-banded, budget-gated; the `simd`
 /// tier packs B panels for large shapes).
 pub fn par_matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let _sp = crate::obs::span("mm_nt");
     nt_driver(a, b, out, m, k, n, true, None);
 }
 
@@ -1593,6 +1595,7 @@ pub fn par_matmul_nt_into_ws(
     n: usize,
     ws: &mut Workspace,
 ) {
+    let _sp = crate::obs::span("mm_nt");
     nt_driver(a, b, out, m, k, n, true, Some(ws));
 }
 
@@ -1600,6 +1603,7 @@ pub fn par_matmul_nt_into_ws(
 /// M columns of `a`, budget-gated).
 pub fn par_matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
+    let _sp = crate::obs::span("mm_tn");
     let band = tn_band_for(active_dispatch());
     if !par_worthwhile(m, k, n) {
         band(a, b, out, 0, k, m, n);
@@ -1955,6 +1959,7 @@ fn expert_par_worthwhile(e: usize, c: usize, m: usize, h: usize) -> bool {
 #[allow(clippy::too_many_arguments)]
 pub fn expert_ffn_into(x: &[f32], w1: &[f32], w2: &[f32], out: &mut [f32], e: usize, c: usize, m: usize, h: usize) {
     debug_assert_eq!(out.len(), e * c * m);
+    let _sp = crate::obs::span("expert_ffn");
     if expert_par_worthwhile(e, c, m, h) {
         // capture the caller's dispatch tier: scope workers are fresh
         // threads, so the thread-local override must be re-applied
@@ -2043,6 +2048,7 @@ pub fn expert_ffn_bwd_into(
     debug_assert_eq!(dx.len(), e * c * m);
     debug_assert_eq!(dw1.len(), e * m * h);
     debug_assert_eq!(dw2.len(), e * h * m);
+    let _sp = crate::obs::span("expert_ffn_bwd");
     let units: Vec<(&mut [f32], &mut [f32], &mut [f32])> = dx
         .chunks_mut(c * m)
         .zip(dw1.chunks_mut(m * h))

@@ -201,6 +201,7 @@ impl MhaState {
 /// Multi-head causal attention over flat `(T, M)` tokens (model.py `mha`),
 /// workspace-pooled. Heads fan out across the thread budget.
 pub fn mha_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> MhaState {
+    let _sp = crate::obs::span("mha_fwd");
     let t = x.len() / g.m;
     let b = t / g.n_seq;
     let hd = g.head_dim();
@@ -270,6 +271,7 @@ pub fn mha_backward_ws(
     dh: &[f32],
     ws: &mut Workspace,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let _sp = crate::obs::span("mha_bwd");
     let t = x.len() / g.m;
     let b = t / g.n_seq;
     let hd = g.head_dim();
@@ -368,6 +370,9 @@ impl AtState {
 pub fn at_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> AtState {
     let t = x.len() / g.m;
     let mha = mha_forward_ws(g, p, x, ws);
+    // span opens after MHA so it covers only the gating head (norm +
+    // router matmul + top-k); MHA records its own span above
+    let _sp = crate::obs::span("gating_fwd");
     let mut u = ws.take(t * g.m);
     kn::rmsnorm_into(&mha.h, p.n2, &mut u);
     let mut logits = ws.take(t * g.e);
@@ -398,6 +403,7 @@ pub fn at_backward_ws(
     ws: &mut Workspace,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
     let t = x.len() / g.m;
+    let sp = crate::obs::span("gating_bwd");
     let dlogits = kn::gating_topk_bwd(&st.gating, g.e, g.top_k, dgate);
     let mut dwg = ws.take(g.m * g.e);
     kn::par_matmul_tn_into(&st.u, &dlogits, &mut dwg, t, g.m, g.e);
@@ -416,6 +422,7 @@ pub fn at_backward_ws(
         *o = a + b;
     }
     ws.put(dh_norm);
+    drop(sp); // close the gating span before the nested MHA backward
     let (mut grads, dx) = mha_backward_ws(g, p, x, &st.mha, &dh_tot, ws);
     ws.put(dh_tot);
     grads.push(dn2);
@@ -465,7 +472,10 @@ pub fn block_forward_ws(g: &Geo, p: &BlockParams, x: &[f32], c: usize, ws: &mut 
     let at = at_forward_ws(g, &p.at, x, ws);
     let routing = dispatch(&at.u, &at.gating.idx, at.gating.gate.len(), g.e, c, g.m);
     let mut expert_out = ws.take(g.e * c * g.m);
-    kn::expert_ffn_into(&routing.disp, p.w1, p.w2, &mut expert_out, g.e, c, g.m, g.h);
+    {
+        let _sp = crate::obs::span("expert_fwd");
+        kn::expert_ffn_into(&routing.disp, p.w1, p.w2, &mut expert_out, g.e, c, g.m, g.h);
+    }
     let yc = combine(&expert_out, &routing, &at.gating.gate);
     let mut y = ws.take(x.len());
     for ((yv, &hv), &cv) in y.iter_mut().zip(&at.mha.h).zip(&yc) {
@@ -505,19 +515,22 @@ pub fn block_backward_ws(
     let mut ddisp = ws.take(g.e * c * g.m);
     let mut dw1 = ws.take(g.e * g.m * g.h);
     let mut dw2 = ws.take(g.e * g.h * g.m);
-    kn::expert_ffn_bwd_into(
-        &st.routing.disp,
-        p.w1,
-        p.w2,
-        &dout,
-        &mut ddisp,
-        &mut dw1,
-        &mut dw2,
-        g.e,
-        c,
-        g.m,
-        g.h,
-    );
+    {
+        let _sp = crate::obs::span("expert_bwd");
+        kn::expert_ffn_bwd_into(
+            &st.routing.disp,
+            p.w1,
+            p.w2,
+            &dout,
+            &mut ddisp,
+            &mut dw1,
+            &mut dw2,
+            g.e,
+            c,
+            g.m,
+            g.h,
+        );
+    }
     ws.put(dout);
     let du = dispatch_bwd(&ddisp, &st.routing);
     ws.put(ddisp);
@@ -562,6 +575,7 @@ pub fn head_loss_ws(
     b: usize,
     ws: &mut Workspace,
 ) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let _sp = crate::obs::span("head_loss");
     let (n, m, v) = (g.n_seq, g.m, g.vocab);
     let t = b * n;
     let mut xn = ws.take(t * m);
@@ -721,6 +735,7 @@ pub fn train_step_ws(
     ws: &mut Workspace,
 ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
     let (loss, grads) = grad_step_ws(g, params, tokens, b_full, ws);
+    let _sp = crate::obs::span("update");
     let n = params.len();
     let updated: Vec<(Vec<f32>, Vec<f32>)> = scope::par_map_vec(n, |i| {
         let (p, m, gr) = (params[i], moms[i], &grads[i]);

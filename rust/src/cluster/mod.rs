@@ -49,6 +49,7 @@ pub struct Routing {
 /// dividing by zero. [`combine`]/[`combine_bwd`]/[`dispatch_bwd`] treat
 /// such a routing as a no-op.
 pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: usize) -> Routing {
+    let _sp = crate::obs::span("dispatch");
     let t = if m == 0 { 0 } else { u.len() / m };
     if t == 0 {
         return Routing {
@@ -99,6 +100,7 @@ pub fn dispatch(u: &[f32], idx: &[i32], gate_len: usize, e: usize, c: usize, m: 
 /// `kept` list (same order as the full T*k loop, so identical float
 /// summation), skipping dropped tokens without re-deriving the mask.
 pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
+    let _sp = crate::obs::span("combine");
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
     debug_assert_eq!(out.len(), e * c * m);
     if k == 0 {
@@ -118,6 +120,7 @@ pub fn combine(out: &[f32], routing: &Routing, gate: &[f32]) -> Vec<f32> {
 /// Shares the forward's hoisted `kept` mask (dropped tokens keep zero
 /// gate gradient and contribute nothing to d_out).
 pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let _sp = crate::obs::span("combine_bwd");
     let (e, c, m, k) = (routing.e, routing.c, routing.m, routing.k);
     if k == 0 {
         return (vec![0.0; e * c * m], Vec::new()); // empty routing
@@ -138,6 +141,7 @@ pub fn combine_bwd(dy: &[f32], out: &[f32], routing: &Routing, gate: &[f32]) -> 
 /// Backward of [`dispatch`]: scatter d_disp back onto token gradients,
 /// via the forward's hoisted `kept` mask.
 pub fn dispatch_bwd(d_disp: &[f32], routing: &Routing) -> Vec<f32> {
+    let _sp = crate::obs::span("dispatch_bwd");
     let (m, k) = (routing.m, routing.k);
     if k == 0 {
         return Vec::new(); // empty routing: no token gradients
@@ -238,6 +242,7 @@ pub fn ep_block_fwd_bwd(
     // ---- routing + dispatch A2A ----
     let routing = dispatch(&u, &idx, gate.len(), geo.e, c, m);
     let slab = el * c * m;
+    let sp = crate::obs::span("a2a_dispatch");
     for o in 0..p {
         let part = routing.disp[o * slab..(o + 1) * slab].to_vec();
         coll.send(w, o, tag_base, part);
@@ -252,6 +257,7 @@ pub fn ep_block_fwd_bwd(
             xd[dst..dst + c * m].copy_from_slice(&part[src..src + c * m]);
         }
     }
+    drop(sp);
 
     // ---- expert fwd ----
     let w1_t = HostTensor::F32(w1.to_vec());
@@ -261,6 +267,7 @@ pub fn ep_block_fwd_bwd(
     let yd = yd.into_iter().next().ok_or_else(|| anyhow!("{exp_fwd} produced no outputs"))?;
 
     // ---- combine A2A (outputs back to sources) ----
+    let sp = crate::obs::span("a2a_combine");
     for s in 0..p {
         let mut part = vec![0.0f32; slab];
         for e in 0..el {
@@ -274,6 +281,7 @@ pub fn ep_block_fwd_bwd(
         let part = coll.recv(o, w, tag_base + 1);
         out_full[o * slab..(o + 1) * slab].copy_from_slice(&part);
     }
+    drop(sp);
     let yc = combine(&out_full, &routing, &gate);
     let mut y = h.clone();
     for i in 0..y.len() {
@@ -284,6 +292,7 @@ pub fn ep_block_fwd_bwd(
     // residual: dh = dy; combine-bwd
     let (dout, dgate) = combine_bwd(dy, &out_full, &routing, &gate);
     // A2A dout to owners (same layout as dispatch)
+    let sp = crate::obs::span("a2a_combine_bwd");
     for o in 0..p {
         coll.send(w, o, tag_base + 2, dout[o * slab..(o + 1) * slab].to_vec());
     }
@@ -295,6 +304,7 @@ pub fn ep_block_fwd_bwd(
             dyd[dst..dst + c * m].copy_from_slice(&part[e * c * m..(e + 1) * c * m]);
         }
     }
+    drop(sp);
     // expert bwd on the owner
     let dyd_t = HostTensor::F32(dyd);
     let outs = engine.run(&exp_bwd, &[&w1_t, &w2_t, &xd_t, &dyd_t])?;
@@ -302,6 +312,7 @@ pub fn ep_block_fwd_bwd(
     let dw2 = outs[1].f32().to_vec();
     let dxd = outs[2].f32().to_vec();
     // A2A dxd back to sources
+    let sp = crate::obs::span("a2a_dispatch_bwd");
     for s in 0..p {
         let mut part = vec![0.0f32; slab];
         for e in 0..el {
@@ -315,6 +326,7 @@ pub fn ep_block_fwd_bwd(
         let part = coll.recv(o, w, tag_base + 3);
         d_disp[o * slab..(o + 1) * slab].copy_from_slice(&part);
     }
+    drop(sp);
     let du = dispatch_bwd(&d_disp, &routing);
 
     // AT bwd closes the chain

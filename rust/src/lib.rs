@@ -33,6 +33,8 @@
 //! * [`trainer`] — the end-to-end training loop,
 //! * [`data`] — deterministic synthetic corpus,
 //! * [`metrics`] — time/energy/memory/occupancy models,
+//! * [`obs`] — runtime span tracing + metrics registry: measured (not
+//!   modeled) overlap for the native execution path,
 //! * [`report`] — paper-table renderers and the bench harness.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
@@ -48,6 +50,7 @@ pub mod config;
 pub mod cost;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -55,8 +55,11 @@ fn main() -> ExitCode {
                           --gpus N --r R --sp MB --limit K\n\
                  tune     --model <name> --gpus N --samples K       BO-tune S_p (--batch B: parallel rounds)\n\
                  train    --config tiny|e2e --workers P --steps N   real distributed training (native backend\n\
-                                                                    by default; AOT artifacts when built)\n\
-                 info                                               presets + artifacts"
+                          --trace out.json                           by default; AOT artifacts when built);\n\
+                                                                    --trace (or FLOWMOE_TRACE) writes a\n\
+                                                                    chrome-trace of the run + measured-vs-\n\
+                                                                    modeled overlap report\n\
+                 info                                               presets + artifacts + obs status"
             );
             Ok(())
         }
@@ -259,11 +262,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.sp_bytes = (args.f64_or("sp", 1.0) * 1e6) as usize;
     opts.overlap = !args.has_flag("centralized");
     opts.log_every = args.usize_or("log-every", 10);
+    // runtime span tracing: --trace out.json, or the FLOWMOE_TRACE env
+    // var (used by CI so the smoke needs no extra plumbing)
+    let trace_path: Option<String> = args
+        .get("trace")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("FLOWMOE_TRACE").ok().filter(|s| !s.is_empty()));
+    if trace_path.is_some() {
+        flowmoe::obs::set_enabled(true);
+    }
     let report = if args.has_flag("fused") {
         train_fused(&dir, &opts)?
     } else {
         train_dp(&dir, p, &opts)?
     };
+    flowmoe::obs::set_enabled(false);
     println!("step,loss,seconds");
     for (i, (l, s)) in report.losses.iter().zip(&report.step_secs).enumerate() {
         println!("{i},{l:.4},{s:.3}");
@@ -271,6 +284,45 @@ fn cmd_train(args: &Args) -> Result<()> {
     let n = report.losses.len();
     if let (Some(first), Some(last)) = (report.losses.first(), report.losses.last()) {
         println!("# first loss {first:.4} -> last loss {last:.4} over {n} steps");
+    }
+    // per-run metrics: step/phase wall-time p50/p95/p99 + counters
+    for line in flowmoe::report::stats_lines(&report.stats) {
+        println!("# {line}");
+    }
+    if let Some(path) = trace_path {
+        let spans = flowmoe::obs::take_spans();
+        let json = flowmoe::obs::chrome_trace(&spans);
+        // self-check before writing: a malformed trace is a bug, not a file
+        if let Err(e) = flowmoe::testutil::scan_json(&json) {
+            bail!("runtime trace failed the JSON well-formedness scan: {e}");
+        }
+        std::fs::write(&path, &json)?;
+        println!(
+            "# trace: {} spans -> {path} (open in chrome://tracing or Perfetto)",
+            spans.len()
+        );
+        // the payoff: measured overlap from real spans, side by side with
+        // the simulator's prediction for the same config
+        let measured = flowmoe::obs::OverlapStats::from_spans(&spans);
+        if let Some(model_cfg) = preset(&cfg) {
+            let cluster = ClusterProfile::cluster1(p.max(2));
+            let costs = TaskCosts::build(&model_cfg, &cluster);
+            let r = flowmoe::backend::NATIVE_MICRO_R;
+            let pol = if opts.overlap {
+                Policy::flow_moe(r, opts.sp_bytes as f64)
+            } else {
+                Policy::tutel(r)
+            };
+            let dag = build_dag(&model_cfg, &costs, &pol);
+            let modeled = flowmoe::obs::OverlapStats::from_timeline(&simulate(&dag));
+            print!("{}", flowmoe::obs::overlap_report(&measured, &modeled));
+        } else {
+            println!("# (no sim preset named {cfg}: measured overlap only)");
+            print!(
+                "{}",
+                flowmoe::obs::overlap_report(&measured, &flowmoe::obs::OverlapStats::default())
+            );
+        }
     }
     Ok(())
 }
@@ -331,6 +383,18 @@ fn cmd_info(args: &Args) -> Result<()> {
         } else {
             "not detected"
         }
+    );
+    let trace_env = std::env::var("FLOWMOE_TRACE").ok().filter(|s| !s.is_empty());
+    println!(
+        "observability: span tracing {} (trace path: {}; enable with `train --trace out.json` or FLOWMOE_TRACE)",
+        if flowmoe::obs::enabled() { "enabled" } else { "disabled" },
+        trace_env.as_deref().unwrap_or("unset")
+    );
+    println!(
+        "  metrics histograms: {} exponential buckets from {:.0}us, x{:.0} per bucket (p50/p95/p99 in train output)",
+        flowmoe::obs::HIST_BUCKETS,
+        flowmoe::obs::HIST_START_S * 1e6,
+        flowmoe::obs::HIST_FACTOR
     );
     Ok(())
 }

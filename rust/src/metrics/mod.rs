@@ -104,6 +104,16 @@ pub fn load_imbalance_utilization(
     base_util: f64,
 ) -> (f64, f64) {
     assert!(!expert_tokens.is_empty() && experts_per_worker > 0);
+    // Integer division used to silently drop the trailing experts of a
+    // ragged histogram — a caller passing 17 experts at 2/worker got 8
+    // workers and expert 16's load vanished from the imbalance numbers.
+    assert!(
+        expert_tokens.len() % experts_per_worker == 0,
+        "expert_tokens.len() = {} is not a multiple of experts_per_worker = {}: \
+         trailing experts would be silently dropped",
+        expert_tokens.len(),
+        experts_per_worker
+    );
     let workers = expert_tokens.len() / experts_per_worker;
     let mut loads: Vec<f64> = (0..workers)
         .map(|w| {
@@ -194,6 +204,14 @@ mod tests {
     fn load_imbalance_uniform_is_balanced() {
         let (maxu, minu) = load_imbalance_utilization(&[1.0; 16], 2, 0.88);
         assert!((maxu - minu).abs() < 0.02);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of experts_per_worker")]
+    fn load_imbalance_rejects_ragged_histogram() {
+        // 17 experts at 2/worker used to silently truncate expert 16;
+        // now it's a hard error.
+        load_imbalance_utilization(&[1.0; 17], 2, 0.88);
     }
 
     #[test]

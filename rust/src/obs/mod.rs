@@ -1,0 +1,795 @@
+//! Runtime observability: lock-light span tracing + a metrics registry
+//! for the **native execution path** — measured, not modeled.
+//!
+//! Everything else in the crate observes *simulated* timelines
+//! ([`crate::sim::Timeline`], [`crate::metrics`]). This module records
+//! what the real threads actually did, so FlowMoE's overlap claim can be
+//! checked against wall-clock spans instead of the cost model:
+//!
+//! * **Span tracing** — [`span`] returns a scoped guard that records a
+//!   `(label, thread, seq, start, end)` record into a per-thread buffer
+//!   on drop. The whole machinery sits behind one process-wide
+//!   [`AtomicBool`]: with tracing disabled (the default) a [`span`] call
+//!   costs a single relaxed load, so the instrumentation can live
+//!   permanently inside the kernel dispatch entry points, the model
+//!   phases, the trainer step phases, the cluster A2A sections and the
+//!   [`crate::sweep::scope`] workers (`perf_hotpath` asserts the
+//!   disabled-path overhead stays under 2 % of a kernel call).
+//!   Timestamps are monotonic ([`std::time::Instant`]) relative to one
+//!   process epoch; [`take_spans`] drains every thread's buffer and
+//!   returns the records in deterministic `(thread, seq)` order.
+//! * **Metrics registry** — [`Registry`]: named [`Counter`]s,
+//!   [`Gauge`]s and fixed-bucket exponential [`Histogram`]s with
+//!   p50/p95/p99 extraction. The trainer feeds per-step phase timings
+//!   into a per-run registry (surfaced as
+//!   [`RegistrySnapshot`] on `TrainReport`); `perf_hotpath` feeds kernel
+//!   rep times into [`global`] and emits them as the `stats` block of
+//!   `BENCH_native_kernels.json`.
+//! * **Exports** — [`chrome_trace`] renders drained spans in the exact
+//!   chrome://tracing JSON shape the simulator already emits (shared
+//!   [`crate::util::json_escape`]); [`OverlapStats`] + [`overlap_report`]
+//!   compute measured compute/comm busy fractions and their overlap from
+//!   real spans and print them side by side with the [`crate::sim`]
+//!   prediction for the same config (`flowmoe train --trace out.json`).
+//!
+//! Tracing must never perturb results: spans carry no data, only
+//! timestamps, and `tests/obs_trace.rs` asserts a traced `train_fused`
+//! run is bit-identical to an untraced one.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::sim::Timeline;
+use crate::tasks::Stream;
+use crate::util::json_escape;
+
+/// Lock a mutex, tolerating poisoning: a panicked recorder thread has
+/// already surfaced its failure elsewhere; the observed data stays valid.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Span tracing
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether span tracing is currently on (one relaxed load — this is the
+/// entire disabled-path cost of an instrumented call site).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span tracing on or off process-wide. Spans already buffered are
+/// kept; disabling only stops new records.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Process epoch all span timestamps are relative to (first use wins).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One recorded span: a labelled `[start, end)` interval on one thread.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRec {
+    /// Task-kind label (static so the hot path never allocates).
+    pub label: &'static str,
+    /// Small dense thread id (assigned on a thread's first record).
+    pub tid: u32,
+    /// Per-thread record sequence number (collection sorts by (tid, seq)).
+    pub seq: u32,
+    /// Start, nanoseconds since the process epoch (monotonic).
+    pub start_ns: u64,
+    /// End, nanoseconds since the process epoch (monotonic).
+    pub end_ns: u64,
+}
+
+type Buffer = Arc<Mutex<Vec<SpanRec>>>;
+
+/// All per-thread buffers ever registered (buffers outlive their
+/// threads, so scoped workers' spans survive the scope).
+fn buffers() -> &'static Mutex<Vec<Buffer>> {
+    static BUFFERS: OnceLock<Mutex<Vec<Buffer>>> = OnceLock::new();
+    BUFFERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    /// This thread's (id, buffer); registered globally on first record.
+    /// Only the owning thread pushes, so the per-buffer mutex is
+    /// uncontended except during [`take_spans`] — "lock-light".
+    static RECORDER: (u32, Buffer) = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let buf: Buffer = Arc::new(Mutex::new(Vec::new()));
+        locked(buffers()).push(Arc::clone(&buf));
+        (tid, buf)
+    };
+}
+
+fn record(label: &'static str, start_ns: u64, end_ns: u64) {
+    RECORDER.with(|(tid, buf)| {
+        let mut b = locked(buf);
+        let seq = b.len() as u32;
+        b.push(SpanRec {
+            label,
+            tid: *tid,
+            seq,
+            start_ns,
+            end_ns,
+        });
+    });
+}
+
+/// Scoped span guard: records the span on drop (panic included, so a
+/// panicking phase still leaves its trace).
+#[must_use = "bind the guard (`let _sp = obs::span(..)`) — dropping it immediately records an empty span"]
+pub struct SpanGuard {
+    label: &'static str,
+    start_ns: u64,
+    armed: bool,
+}
+
+/// Open a span labelled `label` on the calling thread. With tracing
+/// disabled this is ~one atomic load and a no-op guard.
+#[inline]
+pub fn span(label: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            label,
+            start_ns: 0,
+            armed: false,
+        };
+    }
+    SpanGuard {
+        label,
+        start_ns: now_ns(),
+        armed: true,
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            record(self.label, self.start_ns, now_ns());
+        }
+    }
+}
+
+/// Drain every thread's span buffer, returning all records sorted by
+/// `(tid, seq)` — a deterministic collection order for whatever set of
+/// spans was recorded. Call after the traced work has joined its
+/// threads; concurrent recorders keep working (their later spans land in
+/// the next drain).
+pub fn take_spans() -> Vec<SpanRec> {
+    let mut out = Vec::new();
+    {
+        let bufs = locked(buffers());
+        for b in bufs.iter() {
+            out.append(&mut locked(b));
+        }
+    }
+    out.sort_by_key(|s| (s.tid, s.seq));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lanes + measured overlap
+// ---------------------------------------------------------------------------
+
+/// Which resource a span occupies, in the paper's two-stream model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Compute,
+    Comm,
+}
+
+/// Classify a span label into the two-stream model: data-movement task
+/// families (dispatch/combine, A2A, AR chunks) are `Comm` — the same
+/// assignment [`crate::sched`] gives their DAG tasks — compute task
+/// families are `Compute`, and enclosing wrapper spans (`step`, `fwd`,
+/// `bwd`, worker lifetimes) are `None` so they don't count everything
+/// as busy.
+pub fn lane_of(label: &str) -> Option<Lane> {
+    if label.starts_with("a2a_") || label.starts_with("ar_") {
+        return Some(Lane::Comm);
+    }
+    match label {
+        "dispatch" | "dispatch_bwd" | "combine" | "combine_bwd" => Some(Lane::Comm),
+        "mha_fwd" | "mha_bwd" | "gating_fwd" | "gating_bwd" | "expert_fwd" | "expert_bwd" | "head_loss"
+        | "update" | "mm" | "mm_nt" | "mm_tn" | "expert_ffn" | "expert_ffn_bwd" => Some(Lane::Compute),
+        _ => None,
+    }
+}
+
+/// Busy/overlap accounting over one set of spans (or one simulated
+/// timeline): wall time, per-lane union-busy time, and the time both
+/// lanes are simultaneously busy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStats {
+    pub wall_s: f64,
+    pub compute_busy_s: f64,
+    pub comm_busy_s: f64,
+    pub overlap_s: f64,
+}
+
+impl OverlapStats {
+    /// Measured stats from real spans. Lane membership comes from
+    /// [`lane_of`]; unclassified (wrapper) spans are ignored. Nested
+    /// same-lane spans are unioned, not double-counted.
+    pub fn from_spans(spans: &[SpanRec]) -> OverlapStats {
+        // sweep over span boundaries, counting active spans per lane
+        // (the sim::Timeline::overlap algorithm, on measured intervals)
+        let mut events: Vec<(u64, i32, Lane)> = Vec::new();
+        for s in spans {
+            if let Some(lane) = lane_of(s.label) {
+                events.push((s.start_ns, 1, lane));
+                events.push((s.end_ns, -1, lane));
+            }
+        }
+        if events.is_empty() {
+            return OverlapStats::default();
+        }
+        events.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        let (mut nc, mut nm) = (0i64, 0i64);
+        let mut last = events[0].0;
+        let (mut busy_c, mut busy_m, mut both) = (0u64, 0u64, 0u64);
+        let t0 = events[0].0;
+        let t1 = events[events.len() - 1].0;
+        for (t, d, lane) in events {
+            let dt = t - last;
+            if nc > 0 {
+                busy_c += dt;
+            }
+            if nm > 0 {
+                busy_m += dt;
+            }
+            if nc > 0 && nm > 0 {
+                both += dt;
+            }
+            last = t;
+            match lane {
+                Lane::Compute => nc += d as i64,
+                Lane::Comm => nm += d as i64,
+            }
+        }
+        OverlapStats {
+            wall_s: (t1 - t0) as f64 * 1e-9,
+            compute_busy_s: busy_c as f64 * 1e-9,
+            comm_busy_s: busy_m as f64 * 1e-9,
+            overlap_s: both as f64 * 1e-9,
+        }
+    }
+
+    /// Modeled stats from a simulated [`Timeline`] (same quantities the
+    /// sim already defines: compute busy, unioned comm busy, overlap).
+    pub fn from_timeline(tl: &Timeline) -> OverlapStats {
+        OverlapStats {
+            wall_s: tl.makespan,
+            compute_busy_s: tl.busy(Stream::Compute),
+            comm_busy_s: tl.busy_comm(),
+            overlap_s: tl.overlap(),
+        }
+    }
+
+    pub fn compute_frac(&self) -> f64 {
+        if self.wall_s > 0.0 { self.compute_busy_s / self.wall_s } else { 0.0 }
+    }
+
+    pub fn comm_frac(&self) -> f64 {
+        if self.wall_s > 0.0 { self.comm_busy_s / self.wall_s } else { 0.0 }
+    }
+
+    /// Fraction of communication time hidden under compute.
+    pub fn hidden_comm_frac(&self) -> f64 {
+        if self.comm_busy_s > 0.0 { self.overlap_s / self.comm_busy_s } else { 0.0 }
+    }
+}
+
+/// Render measured (real spans) vs modeled (simulated timeline) overlap
+/// side by side — the first measured-vs-modeled comparison in the repo.
+/// Wall times differ by construction (the sim predicts one iteration at
+/// calibrated GPU costs; the measurement is CPU wall time over the run),
+/// so compare the *fractions*, which is what the overlap claim is about.
+pub fn overlap_report(measured: &OverlapStats, modeled: &OverlapStats) -> String {
+    let mut out = String::new();
+    out.push_str("overlap: measured (runtime spans) vs modeled (sim timeline)\n");
+    out.push_str(&format!(
+        "  {:<26} {:>12} {:>12}\n",
+        "quantity", "measured", "modeled"
+    ));
+    let row = |name: &str, a: f64, b: f64, pct: bool| {
+        if pct {
+            format!("  {:<26} {:>11.1}% {:>11.1}%\n", name, a * 100.0, b * 100.0)
+        } else {
+            format!("  {name:<26} {a:>11.4}s {b:>11.4}s\n")
+        }
+    };
+    out.push_str(&row("wall time", measured.wall_s, modeled.wall_s, false));
+    out.push_str(&row("compute busy / wall", measured.compute_frac(), modeled.compute_frac(), true));
+    out.push_str(&row("comm busy / wall", measured.comm_frac(), modeled.comm_frac(), true));
+    out.push_str(&row(
+        "comm hidden under compute",
+        measured.hidden_comm_frac(),
+        modeled.hidden_comm_frac(),
+        true,
+    ));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace export
+// ---------------------------------------------------------------------------
+
+/// Render drained spans as a chrome://tracing / Perfetto JSON string —
+/// the exact event shape [`Timeline::to_chrome_trace`] emits (complete
+/// "X" events, ts/dur in microseconds, labels through
+/// [`json_escape`]), with the recorder thread id as the trace `tid`.
+/// Timestamps are re-based to the earliest span so traces start at 0.
+pub fn chrome_trace(spans: &[SpanRec]) -> String {
+    if spans.is_empty() {
+        return "[]\n".to_string();
+    }
+    let t0 = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let mut out = String::from("[\n");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}",
+            json_escape(s.label),
+            s.tid,
+            (s.start_ns - t0) as f64 * 1e-3,
+            (s.end_ns - s.start_ns) as f64 * 1e-3
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Default histogram bucketing: exponential upper bounds starting at
+/// [`HIST_START_S`] seconds, doubling [`HIST_BUCKETS`] times — 10 µs to
+/// ~5.6 min, which covers a kernel call through a full training step.
+pub const HIST_START_S: f64 = 1e-5;
+pub const HIST_FACTOR: f64 = 2.0;
+pub const HIST_BUCKETS: usize = 25;
+
+/// The default bucket upper bounds (seconds).
+pub fn hist_bounds() -> Vec<f64> {
+    let mut b = Vec::with_capacity(HIST_BUCKETS);
+    let mut v = HIST_START_S;
+    for _ in 0..HIST_BUCKETS {
+        b.push(v);
+        v *= HIST_FACTOR;
+    }
+    b
+}
+
+#[derive(Clone, Debug, Default)]
+struct HistData {
+    /// counts[i] observations in (bounds[i-1], bounds[i]]; one overflow
+    /// slot past the last bound.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Fixed-bucket histogram over f64 observations (seconds by
+/// convention). Percentiles interpolate linearly inside the bucket the
+/// requested rank falls in, clamped to the exact observed min/max.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    data: Mutex<HistData>,
+}
+
+impl Histogram {
+    /// Histogram with explicit ascending bucket upper bounds.
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            data: Mutex::new(HistData {
+                counts: vec![0; n + 1],
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            }),
+        }
+    }
+
+    /// Histogram with the default exponential bounds ([`hist_bounds`]).
+    pub fn new() -> Histogram {
+        Histogram::with_bounds(hist_bounds())
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        let mut d = locked(&self.data);
+        d.counts[idx] += 1;
+        d.count += 1;
+        d.sum += v;
+        d.min = d.min.min(v);
+        d.max = d.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        locked(&self.data).count
+    }
+
+    pub fn sum(&self) -> f64 {
+        locked(&self.data).sum
+    }
+
+    /// Approximate quantile `q` in [0, 1]: walk buckets to the one
+    /// holding the rank, interpolate linearly between its edges, clamp
+    /// to the observed min/max (so p0/p100 are exact and the overflow
+    /// bucket can't report +inf).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let d = locked(&self.data);
+        if d.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * d.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in d.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { d.max };
+                let frac = (rank - (seen - c)) as f64 / c as f64;
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(d.min, d.max);
+            }
+        }
+        d.max
+    }
+
+    fn stat(&self, name: &str) -> HistStat {
+        HistStat {
+            name: name.to_string(),
+            count: self.count(),
+            total_s: self.sum(),
+            p50_s: self.quantile(0.50),
+            p95_s: self.quantile(0.95),
+            p99_s: self.quantile(0.99),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Summary of one named histogram (seconds by convention) — the per-step
+/// phase breakdown shape `TrainReport` carries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistStat {
+    pub name: String,
+    pub count: u64,
+    pub total_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// Point-in-time export of a [`Registry`], sorted by metric name.
+#[derive(Clone, Debug, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<HistStat>,
+}
+
+use std::collections::BTreeMap;
+
+/// Named metrics, created on first use. `BTreeMap` keeps snapshots in
+/// deterministic name order. Instantiate per run (the trainer does) or
+/// use the process-wide [`global`] registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(locked(&self.counters).entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(locked(&self.gauges).entry(name.to_string()).or_default())
+    }
+
+    /// Histogram with the default exponential seconds buckets.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(locked(&self.hists).entry(name.to_string()).or_default())
+    }
+
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: locked(&self.counters).iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            gauges: locked(&self.gauges).iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            hists: locked(&self.hists).iter().map(|(k, v)| v.stat(k)).collect(),
+        }
+    }
+}
+
+/// Process-wide registry (benches, CLI). Prefer a per-run [`Registry`]
+/// where the lifetime is scoped, as the trainer does.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that toggle the process-wide tracing gate.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = locked(&GATE);
+        set_enabled(false);
+        let _ = take_spans(); // drain stray spans from other tests
+        {
+            let _sp = span("test_disabled");
+        }
+        // other tests' armed guards may straggle in concurrently; only
+        // assert that the disabled-path span itself recorded nothing
+        let spans = take_spans();
+        assert!(!spans.iter().any(|s| s.label == "test_disabled"));
+    }
+
+    #[test]
+    fn enabled_spans_collect_in_thread_seq_order() {
+        let _g = locked(&GATE);
+        set_enabled(true);
+        let _ = take_spans(); // clear
+        {
+            let _a = span("test_outer");
+            let _b = span("test_inner");
+        }
+        set_enabled(false);
+        let spans = take_spans();
+        let mine: Vec<&SpanRec> = spans.iter().filter(|s| s.label.starts_with("test_")).collect();
+        assert_eq!(mine.len(), 2);
+        // drop order: inner guard drops first, so it records first
+        assert_eq!(mine[0].label, "test_inner");
+        assert_eq!(mine[1].label, "test_outer");
+        assert!(mine[0].seq < mine[1].seq);
+        assert_eq!(mine[0].tid, mine[1].tid);
+        for s in mine {
+            assert!(s.end_ns >= s.start_ns);
+        }
+        // global order is (tid, seq)
+        assert!(spans.windows(2).all(|w| (w[0].tid, w[0].seq) <= (w[1].tid, w[1].seq)));
+    }
+
+    #[test]
+    fn spans_survive_scoped_worker_threads() {
+        let _g = locked(&GATE);
+        set_enabled(true);
+        let _ = take_spans();
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    let _sp = span("test_worker_span");
+                });
+            }
+        });
+        set_enabled(false);
+        let spans = take_spans();
+        let n = spans.iter().filter(|s| s.label == "test_worker_span").count();
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn lane_classification() {
+        assert_eq!(lane_of("mha_fwd"), Some(Lane::Compute));
+        assert_eq!(lane_of("expert_ffn_bwd"), Some(Lane::Compute));
+        assert_eq!(lane_of("update"), Some(Lane::Compute));
+        assert_eq!(lane_of("dispatch"), Some(Lane::Comm));
+        assert_eq!(lane_of("combine_bwd"), Some(Lane::Comm));
+        assert_eq!(lane_of("ar_chunk"), Some(Lane::Comm));
+        assert_eq!(lane_of("a2a_combine"), Some(Lane::Comm));
+        assert_eq!(lane_of("step"), None);
+        assert_eq!(lane_of("scope_worker"), None);
+    }
+
+    fn rec(label: &'static str, tid: u32, start: u64, end: u64) -> SpanRec {
+        SpanRec {
+            label,
+            tid,
+            seq: 0,
+            start_ns: start,
+            end_ns: end,
+        }
+    }
+
+    #[test]
+    fn overlap_stats_from_hand_built_spans() {
+        // compute [0,10) and [20,30), comm [5,25): overlap = 5 + 5
+        let spans = vec![
+            rec("mha_fwd", 0, 0, 10_000_000_000),
+            rec("expert_fwd", 0, 20_000_000_000, 30_000_000_000),
+            rec("ar_chunk", 1, 5_000_000_000, 25_000_000_000),
+            rec("step", 0, 0, 30_000_000_000), // wrapper: ignored
+        ];
+        let st = OverlapStats::from_spans(&spans);
+        assert!((st.wall_s - 30.0).abs() < 1e-9);
+        assert!((st.compute_busy_s - 20.0).abs() < 1e-9);
+        assert!((st.comm_busy_s - 20.0).abs() < 1e-9);
+        assert!((st.overlap_s - 10.0).abs() < 1e-9);
+        assert!((st.hidden_comm_frac() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_stats_union_not_double_count() {
+        // two nested compute spans: busy is 10, not 18
+        let spans = vec![rec("mha_fwd", 0, 0, 10_000_000_000), rec("mm", 0, 1_000_000_000, 9_000_000_000)];
+        let st = OverlapStats::from_spans(&spans);
+        assert!((st.compute_busy_s - 10.0).abs() < 1e-9);
+        assert_eq!(st.overlap_s, 0.0);
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_escaping() {
+        let spans = vec![rec("mha_fwd", 3, 2_000, 5_000)];
+        let json = chrome_trace(&spans);
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        // rebased to the first span, ns -> us
+        assert!(json.contains("\"name\": \"mha_fwd\""));
+        assert!(json.contains("\"tid\": 3"));
+        assert!(json.contains("\"ts\": 0.000"));
+        assert!(json.contains("\"dur\": 3.000"));
+        assert_eq!(chrome_trace(&[]), "[]\n");
+    }
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("x").get(), 5);
+        let g = r.gauge("y");
+        g.set(2.5);
+        assert_eq!(r.gauge("y").get(), 2.5);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters, vec![("x".to_string(), 5)]);
+        assert_eq!(snap.gauges, vec![("y".to_string(), 2.5)]);
+    }
+
+    #[test]
+    fn histogram_percentiles_interpolate_and_clamp() {
+        // bounds 1,2,4: 100 obs of 1.5 -> every quantile inside (1,2]
+        let h = Histogram::with_bounds(vec![1.0, 2.0, 4.0]);
+        for _ in 0..100 {
+            h.observe(1.5);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 150.0).abs() < 1e-9);
+        for q in [0.5, 0.95, 0.99] {
+            let v = h.quantile(q);
+            assert!((1.0..=2.0).contains(&v), "q{q} = {v}");
+        }
+        // clamping: a single observation reports itself exactly
+        let h1 = Histogram::with_bounds(vec![1.0, 2.0]);
+        h1.observe(1.25);
+        assert_eq!(h1.quantile(0.5), 1.25);
+        assert_eq!(h1.quantile(0.99), 1.25);
+        // overflow bucket is finite (clamped to the observed max)
+        let h2 = Histogram::with_bounds(vec![1.0]);
+        h2.observe(50.0);
+        assert_eq!(h2.quantile(0.99), 50.0);
+    }
+
+    #[test]
+    fn histogram_quantile_orders_across_buckets() {
+        let h = Histogram::new();
+        for i in 0..90 {
+            h.observe(1e-4 + i as f64 * 1e-6); // fast cluster
+        }
+        for _ in 0..10 {
+            h.observe(1.0); // slow tail
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 < 1e-3, "p50 = {p50}");
+        assert!(p95 >= p50 && p99 >= p95);
+        assert!(p99 > 0.5, "p99 = {p99} should land in the slow tail");
+    }
+
+    #[test]
+    fn registry_snapshot_sorted_and_stats_shaped() {
+        let r = Registry::new();
+        r.histogram("b").observe(0.5);
+        r.histogram("a").observe(0.1);
+        r.histogram("a").observe(0.2);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.hists.iter().map(|h| h.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(snap.hists[0].count, 2);
+        assert!((snap.hists[0].total_s - 0.3).abs() < 1e-9);
+        assert!(snap.hists[0].p50_s > 0.0);
+    }
+
+    #[test]
+    fn overlap_report_renders_both_columns() {
+        let m = OverlapStats {
+            wall_s: 2.0,
+            compute_busy_s: 1.5,
+            comm_busy_s: 0.5,
+            overlap_s: 0.25,
+        };
+        let s = overlap_report(&m, &m);
+        assert!(s.contains("measured"));
+        assert!(s.contains("modeled"));
+        assert!(s.contains("75.0%"));
+        assert!(s.contains("comm hidden under compute"));
+    }
+}

@@ -81,6 +81,27 @@ pub fn histogram(title: &str, samples: &[f64], n_bins: usize, width: usize) -> S
     out
 }
 
+/// Render a metrics snapshot ([`crate::obs::RegistrySnapshot`]) as
+/// one line per metric — counters, gauges, then histograms with count /
+/// total / p50 / p95 / p99. `flowmoe train` prints these as `#`-prefixed
+/// comment lines after the per-step CSV.
+pub fn stats_lines(snap: &crate::obs::RegistrySnapshot) -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, v) in &snap.counters {
+        out.push(format!("{name} = {v}"));
+    }
+    for (name, v) in &snap.gauges {
+        out.push(format!("{name} = {v:.4}"));
+    }
+    for h in &snap.hists {
+        out.push(format!(
+            "{}: n={} total={:.3}s p50={:.4}s p95={:.4}s p99={:.4}s",
+            h.name, h.count, h.total_s, h.p50_s, h.p95_s, h.p99_s
+        ));
+    }
+    out
+}
+
 /// Time a closure: `reps` runs after `warmup`, returns per-run seconds.
 pub fn time_runs<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
     for _ in 0..warmup {
@@ -148,6 +169,20 @@ mod tests {
             std::hint::black_box(s);
         });
         assert!(m >= 0.0);
+    }
+
+    #[test]
+    fn stats_lines_cover_all_metric_kinds() {
+        let reg = crate::obs::Registry::new();
+        reg.counter("steps").add(3);
+        reg.gauge("loss_last").set(1.25);
+        reg.histogram("step_s").observe(0.5);
+        let lines = stats_lines(&reg.snapshot());
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("steps = 3"));
+        assert!(lines[1].contains("loss_last = 1.2500"));
+        assert!(lines[2].contains("step_s: n=1"));
+        assert!(lines[2].contains("p99="));
     }
 
     #[test]

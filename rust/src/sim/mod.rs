@@ -128,25 +128,9 @@ impl Timeline {
     }
 }
 
-/// Escape a string for embedding in a JSON string literal: backslash and
-/// double quote get a backslash prefix, control characters become \u
-/// escapes. (The old exporter *deleted* `"` from task names, corrupting
-/// any quoted label.)
-pub fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '\\' => out.push_str("\\\\"),
-            '"' => out.push_str("\\\""),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
+// JSON string escaping lives in `util` (shared with the runtime tracer
+// in `obs`); re-exported here for compatibility with existing callers.
+pub use crate::util::json_escape;
 
 /// Simulate the DAG; panics on invalid DAGs (validated in debug).
 pub fn simulate(dag: &Dag) -> Timeline {

@@ -133,6 +133,7 @@ where
             rest = tail;
             s.spawn(move || {
                 let _g = BudgetGuard::set(1);
+                let _sp = crate::obs::span("scope_worker");
                 f(start, band);
             });
         }
@@ -174,6 +175,7 @@ where
             rest_b = tail_b;
             s.spawn(move || {
                 let _g = BudgetGuard::set(1);
+                let _sp = crate::obs::span("scope_worker");
                 f(start, band_a, band_b);
             });
         }
@@ -209,6 +211,7 @@ where
         for (start, chunk) in parts {
             s.spawn(move || {
                 let _g = BudgetGuard::set(1);
+                let _sp = crate::obs::span("scope_worker");
                 for (j, it) in chunk.into_iter().enumerate() {
                     f(start + j, it);
                 }
@@ -237,6 +240,7 @@ where
             .map(|(start, len)| {
                 s.spawn(move || {
                     let _g = BudgetGuard::set(1);
+                    let _sp = crate::obs::span("scope_worker");
                     (start..start + len).map(f).collect::<Vec<R>>()
                 })
             })

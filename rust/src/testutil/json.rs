@@ -1,0 +1,133 @@
+//! Dependency-free JSON well-formedness scanner (no serde offline).
+//!
+//! Not a full parser — a structural scanner strong enough to catch the
+//! ways hand-rolled JSON writers actually go wrong: unbalanced braces or
+//! brackets, unterminated strings, invalid escape sequences, and bare
+//! `NaN`/`Infinity` tokens (what `format!("{}", f64::NAN)` emits, which
+//! JSON forbids). Applied to both the simulator's chrome trace and the
+//! runtime span trace ([`crate::obs::chrome_trace`]); `flowmoe train
+//! --trace` runs it on the trace before writing the file.
+
+/// Scan `s` for JSON structural well-formedness. Returns `Ok(())` or a
+/// description of the first problem with its byte offset.
+pub fn scan_json(s: &str) -> Result<(), String> {
+    let mut depth_obj: i64 = 0;
+    let mut depth_arr: i64 = 0;
+    let mut in_string = false;
+    let mut chars = s.char_indices().peekable();
+
+    // the document must begin with an object or array
+    match s.trim_start().chars().next() {
+        Some('{') | Some('[') => {}
+        Some(c) => return Err(format!("document starts with '{c}', expected '{{' or '['")),
+        None => return Err("empty document".to_string()),
+    }
+
+    while let Some((i, c)) = chars.next() {
+        if in_string {
+            match c {
+                '"' => in_string = false,
+                '\\' => match chars.next() {
+                    Some((_, e)) if matches!(e, '"' | '\\' | '/' | 'b' | 'f' | 'n' | 'r' | 't') => {}
+                    Some((j, 'u')) => {
+                        for _ in 0..4 {
+                            match chars.next() {
+                                Some((_, h)) if h.is_ascii_hexdigit() => {}
+                                _ => return Err(format!("byte {j}: \\u escape needs 4 hex digits")),
+                            }
+                        }
+                    }
+                    Some((j, e)) => return Err(format!("byte {j}: invalid escape '\\{e}'")),
+                    None => return Err(format!("byte {i}: trailing backslash in string")),
+                },
+                '\n' | '\r' => return Err(format!("byte {i}: raw newline inside string")),
+                _ => {}
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' => depth_obj += 1,
+            '}' => {
+                depth_obj -= 1;
+                if depth_obj < 0 {
+                    return Err(format!("byte {i}: unmatched '}}'"));
+                }
+            }
+            '[' => depth_arr += 1,
+            ']' => {
+                depth_arr -= 1;
+                if depth_arr < 0 {
+                    return Err(format!("byte {i}: unmatched ']'"));
+                }
+            }
+            // bare non-finite float tokens (JSON has no NaN/Infinity);
+            // only need the leading letter — 'N' and 'I' start no valid
+            // JSON token outside a string ('n' starts "null")
+            'N' if s[i..].starts_with("NaN") => {
+                return Err(format!("byte {i}: bare NaN token"));
+            }
+            'I' if s[i..].starts_with("Infinity") => {
+                return Err(format!("byte {i}: bare Infinity token"));
+            }
+            'i' if s[i..].starts_with("inf") => {
+                return Err(format!("byte {i}: bare inf token"));
+            }
+            _ => {}
+        }
+    }
+    if in_string {
+        return Err("unterminated string at end of document".to_string());
+    }
+    if depth_obj != 0 {
+        return Err(format!("unbalanced braces: depth {depth_obj} at end"));
+    }
+    if depth_arr != 0 {
+        return Err(format!("unbalanced brackets: depth {depth_arr} at end"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_wellformed_documents() {
+        scan_json(r#"{}"#).unwrap();
+        scan_json("[]\n").unwrap();
+        scan_json(r#"{"a": [1, 2.5, -3e-4], "b": {"c": "x"}}"#).unwrap();
+        scan_json(r#"["esc \" \\ \/ \b \f \n \r \t é ok"]"#).unwrap();
+        // braces/brackets inside strings don't count toward nesting
+        scan_json(r#"{"a": "}{][ not structure"}"#).unwrap();
+        // 'null' is fine (starts with lowercase n, not the NaN check)
+        scan_json(r#"{"a": null}"#).unwrap();
+    }
+
+    #[test]
+    fn rejects_structural_errors() {
+        assert!(scan_json("").is_err());
+        assert!(scan_json("42").is_err(), "document must be object/array");
+        assert!(scan_json(r#"{"a": 1"#).is_err(), "unbalanced brace");
+        assert!(scan_json(r#"[1, 2"#).is_err(), "unbalanced bracket");
+        assert!(scan_json(r#"[1]]"#).is_err(), "extra bracket");
+        assert!(scan_json(r#"{"a": "unterminated}"#).is_err());
+        assert!(scan_json("{\"a\": \"line\nbreak\"}").is_err(), "raw newline in string");
+    }
+
+    #[test]
+    fn rejects_invalid_escapes() {
+        assert!(scan_json(r#"{"a": "bad \x escape"}"#).is_err());
+        assert!(scan_json(r#"{"a": "short \u00g0"}"#).is_err());
+        assert!(scan_json(r#"{"a": "truncated \u00"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_tokens() {
+        assert!(scan_json(r#"{"a": NaN}"#).is_err());
+        assert!(scan_json(r#"{"a": Infinity}"#).is_err());
+        assert!(scan_json(r#"{"a": -inf}"#).is_err());
+        // ...but the same words inside strings are fine
+        scan_json(r#"{"a": "NaN and Infinity and inf"}"#).unwrap();
+    }
+}

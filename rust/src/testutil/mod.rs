@@ -1,7 +1,10 @@
-//! Minimal property-testing harness (no proptest offline): runs a check
-//! over many seeded random cases and reports the failing seed for
-//! reproduction.
+//! Test support: a minimal property-testing harness (no proptest
+//! offline) that runs a check over many seeded random cases and reports
+//! the failing seed for reproduction, plus a dep-free JSON
+//! well-formedness scanner for the hand-rolled trace/bench writers.
 
+pub mod json;
 pub mod prop;
 
+pub use json::scan_json;
 pub use prop::check;

@@ -27,6 +27,7 @@ use anyhow::{anyhow, Result};
 use crate::backend::kernels::{active_dispatch, axpy, scale, with_dispatch};
 use crate::commpool::{partition_ranges, Collective, CommPool};
 use crate::data::Corpus;
+use crate::obs;
 use crate::runtime::{Engine, HostTensor, PjRtBuffer};
 use crate::sweep::scope;
 use crate::util::Rng;
@@ -40,6 +41,11 @@ pub struct TrainReport {
     pub step_secs: Vec<f64>,
     /// Final parameters of worker 0 (for parity tests).
     pub final_params: Vec<Vec<f32>>,
+    /// Per-run metrics: step/phase wall-time histograms (p50/p95/p99),
+    /// step and AR-chunk counters. On the DP path the histograms pool
+    /// observations from **all** workers (each worker-step observes
+    /// once), taken after every worker has joined.
+    pub stats: obs::RegistrySnapshot,
 }
 
 /// Training options.
@@ -140,6 +146,7 @@ fn full_batch(engine: &Engine, cfg: &str) -> Result<usize> {
 /// The per-tensor updates are independent, so they fan out across the
 /// worker's thread budget (identical results for any budget).
 fn sgd_update(params: &mut [Vec<f32>], moms: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32, mu: f32) {
+    let _sp = obs::span("update");
     let items: Vec<(&mut Vec<f32>, &mut Vec<f32>, &Vec<f32>)> = params
         .iter_mut()
         .zip(moms.iter_mut())
@@ -176,9 +183,12 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
         opts.seed ^ 0x0,
     );
 
+    let reg = obs::Registry::new();
+    let step_hist = reg.histogram("step_s");
     let mut report = TrainReport::default();
     for step in 0..opts.steps {
         let t0 = std::time::Instant::now();
+        let _sp_step = obs::span("step");
         let tokens = HostTensor::I32(corpus.batch(b_full, n_tok));
         let lr = HostTensor::F32(vec![opts.lr]);
         let mut inputs: Vec<HostTensor> = Vec::with_capacity(2 * n_params + 2);
@@ -198,12 +208,17 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
         }
         let loss = outs[2 * n_params].scalar_f32();
         report.losses.push(loss);
-        report.step_secs.push(t0.elapsed().as_secs_f64());
+        let secs = t0.elapsed().as_secs_f64();
+        report.step_secs.push(secs);
+        step_hist.observe(secs);
+        reg.counter("steps").inc();
+        reg.gauge("loss_last").set(loss as f64);
         if opts.log_every > 0 && step % opts.log_every == 0 {
             eprintln!("[fused {cfg}] step {step}: loss {loss:.4}");
         }
     }
     report.final_params = params;
+    report.stats = reg.snapshot();
     Ok(report)
 }
 
@@ -222,15 +237,19 @@ pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainRep
     // re-apply the caller's kernel-dispatch tier inside the workers:
     // spawned threads start with an empty thread-local override
     let disp = active_dispatch();
+    // one run-wide registry shared by all workers: every worker-step
+    // observes into the same phase histograms
+    let reg = Arc::new(obs::Registry::new());
     let mut handles = Vec::new();
     for w in 0..p {
         let coll = Arc::clone(&coll);
         let opts = opts.clone();
         let dir = dir.clone();
+        let reg = Arc::clone(&reg);
         // flowmoe-lint: allow(thread_spawn) — DP workers outlive any one scope
         handles.push(std::thread::spawn(move || {
             with_dispatch(disp, || {
-                scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts))
+                scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts, &reg))
             })
         }));
     }
@@ -238,7 +257,11 @@ pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainRep
     for h in handles {
         reports.push(h.join().map_err(|_| anyhow!("worker panicked"))??);
     }
-    Ok(reports.remove(0))
+    let mut rep = reports.remove(0);
+    // snapshot only after every worker has joined, so the counts are
+    // complete and the snapshot is race-free
+    rep.stats = reg.snapshot();
+    Ok(rep)
 }
 
 fn worker_dp(
@@ -247,6 +270,7 @@ fn worker_dp(
     coll: Arc<Collective>,
     artifacts: &Path,
     opts: &TrainOpts,
+    reg: &obs::Registry,
 ) -> Result<TrainReport> {
     let cfg = opts.cfg_name.clone();
     let mut engine = Engine::new(artifacts)?;
@@ -283,6 +307,7 @@ fn worker_dp(
     for step in 0..opts.steps {
         coll.barrier();
         let t0 = std::time::Instant::now();
+        let _sp_step = obs::span("step");
         // marshal current params once (device buffers — leak-free
         // execute_b path, see runtime::Engine::buffer docs)
         let mut block_lits: Vec<Vec<PjRtBuffer>> = Vec::with_capacity(l_blocks);
@@ -297,6 +322,8 @@ fn worker_dp(
         let normf_lit = engine.buffer_f32(&params[n_params - 1], &hl_spec.inputs[1])?;
 
         // ---------------- forward (all microbatches) ----------------
+        let sp_fwd = obs::span("fwd");
+        let t_fwd = std::time::Instant::now();
         let mut toks: Vec<HostTensor> = Vec::with_capacity(r_deg);
         let mut acts: Vec<Vec<HostTensor>> = Vec::with_capacity(r_deg); // acts[r][l]
         for _ in 0..r_deg {
@@ -314,8 +341,11 @@ fn worker_dp(
             toks.push(t);
             acts.push(xs);
         }
+        drop(sp_fwd);
+        reg.histogram("fwd_s").observe(t_fwd.elapsed().as_secs_f64());
 
         // ---------------- head / loss ----------------
+        let t_head = std::time::Instant::now();
         let mut loss = 0.0f32;
         let mut dxs: Vec<HostTensor> = Vec::with_capacity(r_deg);
         // gradient store shared with the comm pool: [n_params] tensors
@@ -335,8 +365,12 @@ fn worker_dp(
             axpy(&mut g[0], outs[2].f32(), inv_r);
             axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
         }
+        reg.histogram("head_s").observe(t_head.elapsed().as_secs_f64());
 
         // ---------------- backward per block, AR overlap ----------------
+        let sp_bwd = obs::span("bwd");
+        let t_bwd = std::time::Instant::now();
+        let mut ar_chunks = 0usize;
         let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
             (((step * (l_blocks + 2) + layer) as u64) << 24)
                 | ((tensor as u64) << 16)
@@ -359,7 +393,7 @@ fn worker_dp(
                 dxs[r] = outs.into_iter().nth(9).ok_or_else(|| anyhow!("{block_bwd}: missing dx output"))?;
             }
             if opts.overlap {
-                enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                ar_chunks += enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
             }
         }
         // embedding gradient via the input-lookup path
@@ -370,32 +404,48 @@ fn worker_dp(
         }
         // embed + normf AR (layer ids l_blocks, l_blocks+1)
         if opts.overlap {
-            enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
-            enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
         } else {
             // centralized: everything after backward completes
             for l in (0..l_blocks).rev() {
-                enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                ar_chunks += enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
             }
-            enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
-            enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
         }
-        pool.drain();
+        drop(sp_bwd);
+        reg.histogram("bwd_s").observe(t_bwd.elapsed().as_secs_f64());
+        reg.counter("ar_chunks").add(ar_chunks as u64);
+        {
+            let _sp = obs::span("ar_drain");
+            let t_drain = std::time::Instant::now();
+            pool.drain();
+            reg.histogram("drain_s").observe(t_drain.elapsed().as_secs_f64());
+        }
 
         // ---------------- update ----------------
         {
+            let t_upd = std::time::Instant::now();
             let mut g = locked(&gstore);
             let scale_w = 1.0 / p as f32;
             for gv in g.iter_mut() {
                 scale(gv, scale_w);
             }
             sgd_update(&mut params, &mut moms, &g, opts.lr, opts.momentum);
+            reg.histogram("update_s").observe(t_upd.elapsed().as_secs_f64());
         }
         let mut lbuf = [loss];
         coll.all_reduce_sum(u64::MAX - step as u64, &mut lbuf);
         let mean_loss = lbuf[0] / p as f32;
         report.losses.push(mean_loss);
-        report.step_secs.push(t0.elapsed().as_secs_f64());
+        let secs = t0.elapsed().as_secs_f64();
+        report.step_secs.push(secs);
+        reg.histogram("step_s").observe(secs);
+        reg.counter("worker_steps").inc();
+        if w == 0 {
+            reg.gauge("loss_last").set(mean_loss as f64);
+        }
         if w == 0 && opts.log_every > 0 && step % opts.log_every == 0 {
             eprintln!(
                 "[dp{p} {cfg} overlap={}] step {step}: loss {mean_loss:.4} ({:.2}s)",
@@ -419,6 +469,7 @@ fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 }
 
 /// Enqueue chunked all-reduce jobs for one tensor of the grad store.
+/// Returns the number of chunks enqueued.
 fn enqueue_tensor_ar(
     pool: &CommPool,
     coll: &Arc<Collective>,
@@ -427,13 +478,18 @@ fn enqueue_tensor_ar(
     layer_id: usize,
     chunk_elems: usize,
     tag: &mut impl FnMut(usize, usize, usize) -> u64,
-) {
+) -> usize {
     let len = locked(&gstore)[tensor_idx].len();
-    for (c, (start, l)) in partition_ranges(len, chunk_elems).into_iter().enumerate() {
+    let ranges = partition_ranges(len, chunk_elems);
+    let n = ranges.len();
+    for (c, (start, l)) in ranges.into_iter().enumerate() {
         let coll = Arc::clone(coll);
         let gstore = Arc::clone(gstore);
         let t = tag(layer_id, tensor_idx, c);
         pool.submit_ar(Box::new(move || {
+            // runs on the comm-pool thread: this span is the measured
+            // communication time of one AR chunk
+            let _sp = obs::span("ar_chunk");
             let mut chunk = {
                 let g = locked(&gstore);
                 g[tensor_idx][start..start + l].to_vec()
@@ -443,9 +499,11 @@ fn enqueue_tensor_ar(
             g[tensor_idx][start..start + l].copy_from_slice(&chunk);
         }));
     }
+    n
 }
 
-/// Enqueue chunked AR for all tensors of one block.
+/// Enqueue chunked AR for all tensors of one block. Returns the number
+/// of chunks enqueued.
 #[allow(clippy::too_many_arguments)]
 fn enqueue_block_ar(
     pool: &CommPool,
@@ -456,10 +514,12 @@ fn enqueue_block_ar(
     n_tensors: usize,
     chunk_elems: usize,
     tag: &mut impl FnMut(usize, usize, usize) -> u64,
-) {
+) -> usize {
+    let mut n = 0;
     for t in 0..n_tensors {
-        enqueue_tensor_ar(pool, coll, gstore, first_tensor + t, layer_id, chunk_elems, tag);
+        n += enqueue_tensor_ar(pool, coll, gstore, first_tensor + t, layer_id, chunk_elems, tag);
     }
+    n
 }
 
 #[cfg(test)]

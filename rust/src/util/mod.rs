@@ -1,4 +1,5 @@
-//! Small utilities: deterministic PRNG, statistics, formatting.
+//! Small utilities: deterministic PRNG, statistics, formatting, JSON
+//! string escaping.
 //!
 //! The offline crate set has no `rand`, so we carry our own
 //! xoshiro256**-based PRNG (seeded via SplitMix64) — deterministic across
@@ -10,6 +11,28 @@ pub mod stats;
 
 pub use rng::Rng;
 pub use stats::{mean, median, percentile, stddev};
+
+/// Escape a string for embedding in a JSON string literal: backslash and
+/// double quote get a backslash prefix, control characters become \u
+/// escapes. Shared by the simulator's chrome-trace exporter and the
+/// runtime span tracer ([`crate::obs`]) so both emit identical escaping.
+/// (The original sim-local exporter *deleted* `"` from task names,
+/// corrupting any quoted label.)
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
 
 /// Format a duration in milliseconds with sensible precision.
 pub fn fmt_ms(ms: f64) -> String {
