@@ -563,7 +563,7 @@ fn lint_file(rel: &str, src: &str, kernel_test_idents: &HashSet<String>) -> Vec<
     }
 
     // FL003: HashMap in deterministic hot modules
-    let hot = ["/sched/", "/sim/", "/cost/", "/cluster/"];
+    let hot = ["/sched/", "/sim/", "/cost/", "/cluster/", "/serve/"];
     if hot.iter().any(|d| rel.contains(d)) {
         for p in 0..fl.code.len() {
             if fl.cmasked(p) {
@@ -756,6 +756,7 @@ fn f<'a>(x: &'a str) -> char {
         assert_eq!(vs.len(), 1);
         assert_eq!(vs[0].rule, "FL003");
         assert_eq!(lint_str("src/sim/mod.rs", src).len(), 1);
+        assert_eq!(lint_str("src/serve/sched.rs", src).len(), 1, "serving hot path is covered");
         assert_eq!(lint_str("src/analyze/mod.rs", src).len(), 0);
         assert_eq!(lint_str("src/commpool/mod.rs", src).len(), 0);
     }

@@ -365,20 +365,30 @@ impl AtState {
     }
 }
 
-/// The paper's AT task (model.py `at_task`): MHA + gating for one
-/// (micro)batch of flat `(T, M)` tokens, workspace-pooled.
-pub fn at_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> AtState {
-    let t = x.len() / g.m;
-    let mha = mha_forward_ws(g, p, x, ws);
-    // span opens after MHA so it covers only the gating head (norm +
-    // router matmul + top-k); MHA records its own span above
+/// The gating head over residual-stream rows `h`, flat `(T, M)`: norm2 +
+/// router matmul + top-k. The non-MHA half of the AT task, shared by
+/// [`at_forward_ws`] (training, full prefixes) and the serving decode
+/// path ([`crate::serve`], one row per in-flight sequence). Returns the
+/// normed MoE input `u` and the gating decision.
+pub fn gate_forward_ws(g: &Geo, p: &AtParams, h: &[f32], ws: &mut Workspace) -> (Vec<f32>, kn::Gating) {
+    // the span covers only the gating head; MHA (full-prefix or cached
+    // decode) records its own span in the caller
     let _sp = crate::obs::span("gating_fwd");
+    let t = h.len() / g.m;
     let mut u = ws.take(t * g.m);
-    kn::rmsnorm_into(&mha.h, p.n2, &mut u);
+    kn::rmsnorm_into(h, p.n2, &mut u);
     let mut logits = ws.take(t * g.e);
     kn::par_matmul_into(&u, p.wg, &mut logits, t, g.m, g.e);
     let gating = kn::gating_topk(&logits, g.e, g.top_k);
     ws.put(logits);
+    (u, gating)
+}
+
+/// The paper's AT task (model.py `at_task`): MHA + gating for one
+/// (micro)batch of flat `(T, M)` tokens, workspace-pooled.
+pub fn at_forward_ws(g: &Geo, p: &AtParams, x: &[f32], ws: &mut Workspace) -> AtState {
+    let mha = mha_forward_ws(g, p, x, ws);
+    let (u, gating) = gate_forward_ws(g, p, &mha.h, ws);
     AtState { mha, u, gating }
 }
 
@@ -465,23 +475,43 @@ impl BlockState {
     }
 }
 
+/// The MoE half of one block over already-gated rows: dispatch ->
+/// expert FFN -> combine -> residual. `h` is the residual stream and
+/// `u` the normed MoE input (both flat `(T, M)`), `w1`/`w2` the expert
+/// weights. Shared by [`block_forward_ws`] and the serving decode path
+/// (whose expert-parallel variant replaces only the FFN slab with an
+/// A2A round trip). Returns `(y, routing, expert_out)`.
+pub fn moe_forward_ws(
+    g: &Geo,
+    w1: &[f32],
+    w2: &[f32],
+    h: &[f32],
+    u: &[f32],
+    gating: &kn::Gating,
+    c: usize,
+    ws: &mut Workspace,
+) -> (Vec<f32>, Routing, Vec<f32>) {
+    let routing = dispatch(u, &gating.idx, gating.gate.len(), g.e, c, g.m);
+    let mut expert_out = ws.take(g.e * c * g.m);
+    {
+        let _sp = crate::obs::span("expert_fwd");
+        kn::expert_ffn_into(&routing.disp, w1, w2, &mut expert_out, g.e, c, g.m, g.h);
+    }
+    let yc = combine(&expert_out, &routing, &gating.gate);
+    let mut y = ws.take(h.len());
+    for ((yv, &hv), &cv) in y.iter_mut().zip(h).zip(&yc) {
+        *yv = hv + cv;
+    }
+    ws.put(yc);
+    (y, routing, expert_out)
+}
+
 /// One transformer block forward over flat `(T, M)` activations with
 /// per-expert capacity `c` (model.py `block_fwd`), workspace-pooled.
 /// Returns `(y, state)`.
 pub fn block_forward_ws(g: &Geo, p: &BlockParams, x: &[f32], c: usize, ws: &mut Workspace) -> (Vec<f32>, BlockState) {
     let at = at_forward_ws(g, &p.at, x, ws);
-    let routing = dispatch(&at.u, &at.gating.idx, at.gating.gate.len(), g.e, c, g.m);
-    let mut expert_out = ws.take(g.e * c * g.m);
-    {
-        let _sp = crate::obs::span("expert_fwd");
-        kn::expert_ffn_into(&routing.disp, p.w1, p.w2, &mut expert_out, g.e, c, g.m, g.h);
-    }
-    let yc = combine(&expert_out, &routing, &at.gating.gate);
-    let mut y = ws.take(x.len());
-    for ((yv, &hv), &cv) in y.iter_mut().zip(&at.mha.h).zip(&yc) {
-        *yv = hv + cv;
-    }
-    ws.put(yc);
+    let (y, routing, expert_out) = moe_forward_ws(g, p.w1, p.w2, &at.mha.h, &at.u, &at.gating, c, ws);
     (
         y,
         BlockState {
@@ -635,6 +665,22 @@ pub fn head_loss_ws(
     kn::rmsnorm_bwd_into(xf, normf, &dxn, &mut dxf, &mut dnormf);
     ws.put(dxn);
     (loss, dxf, dembed, dnormf)
+}
+
+/// Final norm + tied LM head, forward only (the serving logits path):
+/// flat `(T, vocab)` next-token logits for residual-stream rows `xf`.
+/// Same numerics as the head of [`head_loss_ws`], without the loss or
+/// backward; the LM-head `matmul_nt` reuses the workspace-pooled
+/// packed-B panel.
+pub fn lm_head_logits_ws(g: &Geo, embed: &[f32], normf: &[f32], xf: &[f32], ws: &mut Workspace) -> Vec<f32> {
+    let _sp = crate::obs::span("decode_head");
+    let t = xf.len() / g.m;
+    let mut xn = ws.take(t * g.m);
+    kn::rmsnorm_into(xf, normf, &mut xn);
+    let mut logits = ws.take(t * g.vocab);
+    kn::par_matmul_nt_into_ws(&xn, embed, &mut logits, t, g.m, g.vocab, ws);
+    ws.put(xn);
+    logits
 }
 
 /// Final norm + tied LM head + loss (allocating wrapper over

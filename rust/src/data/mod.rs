@@ -8,7 +8,7 @@
 //! enough sequential structure that next-token loss meaningfully drops
 //! during training.
 
-use crate::util::{rng::zipf_cdf, Rng};
+use crate::util::{rng::zipf_cdf, Pcg32, Rng};
 
 /// Synthetic corpus generator.
 pub struct Corpus {
@@ -17,6 +17,11 @@ pub struct Corpus {
     /// Per-domain Zipf CDFs over a domain-shuffled vocab mapping.
     domain_cdfs: Vec<Vec<f64>>,
     domain_maps: Vec<Vec<u32>>,
+    /// Per-domain bigram successor permutations: `succ[d][prev]` is the
+    /// deterministic chain continuation for token `prev` in domain `d`.
+    /// Built from one split [`Pcg32`] stream per domain (previously an
+    /// ad-hoc `prev*31+7` LCG baked into `sample`).
+    succ: Vec<Vec<u32>>,
     rng: Rng,
     /// Probability of continuing the local bigram chain vs resampling.
     chain_p: f64,
@@ -26,21 +31,29 @@ impl Corpus {
     pub fn new(vocab: usize, seed: u64) -> Corpus {
         let n_domains = 8;
         let mut rng = Rng::new(seed);
+        let mut streams = Pcg32::new(seed);
         let cdf = zipf_cdf(vocab, 1.1);
         let mut domain_cdfs = Vec::new();
         let mut domain_maps = Vec::new();
+        let mut succ = Vec::new();
         for _ in 0..n_domains {
             // each domain ranks the vocab differently (disjoint "topics")
             let mut map: Vec<u32> = (0..vocab as u32).collect();
             rng.shuffle(&mut map);
             domain_cdfs.push(cdf.clone());
             domain_maps.push(map);
+            // ... and chains tokens through its own random permutation,
+            // from an independent per-domain PRNG stream
+            let mut s: Vec<u32> = (0..vocab as u32).collect();
+            streams.split().shuffle(&mut s);
+            succ.push(s);
         }
         Corpus {
             vocab,
             n_domains,
             domain_cdfs,
             domain_maps,
+            succ,
             rng,
             chain_p: 0.55,
         }
@@ -54,10 +67,9 @@ impl Corpus {
         for _ in 0..n {
             let tok = if prev >= 0 && self.rng.f64() < self.chain_p {
                 // deterministic bigram successor within the domain:
-                // tok = map[(inv(prev) * 31 + 7) mod vocab] — a fixed
-                // permutation chain the model can learn.
-                let r = (prev as u64).wrapping_mul(31).wrapping_add(7) % self.vocab as u64;
-                self.domain_maps[d][r as usize] as i32
+                // tok = succ[d][prev] — a fixed seeded permutation chain
+                // the model can learn.
+                self.succ[d][prev as usize] as i32
             } else {
                 let r = self.rng.zipf(&self.domain_cdfs[d]);
                 self.domain_maps[d][r] as i32

@@ -31,6 +31,9 @@
 //!   behind `flowmoe analyze` plus the dependency-free source lint
 //!   behind the `flowmoe-lint` binary,
 //! * [`trainer`] — the end-to-end training loop,
+//! * [`serve`] — continuous-batching MoE inference: KV-cached decode,
+//!   FIFO admission against a KV budget, expert-parallel serving with
+//!   hot-expert replication, and a seeded synthetic-traffic bench,
 //! * [`data`] — deterministic synthetic corpus,
 //! * [`metrics`] — time/energy/memory/occupancy models,
 //! * [`obs`] — runtime span tracing + metrics registry: measured (not
@@ -54,6 +57,7 @@ pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod tasks;

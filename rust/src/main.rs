@@ -7,6 +7,7 @@
 //!               full policy matrix (see src/analyze)
 //!   tune      — BO-tune S_p for a model (Fig. 4)
 //!   train     — end-to-end distributed training on real PJRT compute
+//!   serve     — continuous-batching MoE inference under synthetic load
 //!   info      — print presets and artifact manifest summary
 
 use std::path::PathBuf;
@@ -44,6 +45,7 @@ fn main() -> ExitCode {
         "analyze" => cmd_analyze(&args),
         "tune" => cmd_tune(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
@@ -59,7 +61,10 @@ fn main() -> ExitCode {
                                                                     --trace (or FLOWMOE_TRACE) writes a\n\
                                                                     chrome-trace of the run + measured-vs-\n\
                                                                     modeled overlap report\n\
-                 info                                               presets + artifacts + obs status"
+                 serve    --synthetic --config tiny --requests N    continuous-batching inference under\n\
+                          --seed S --max-batch D --kv-budget T       seeded open-loop load; writes\n\
+                          --workers W --warmup K --trace out.json    BENCH_serve.json (--out to rename)\n\
+                 info                                               presets + artifacts + obs + serving status"
             );
             Ok(())
         }
@@ -327,6 +332,74 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    if !args.has_flag("synthetic") {
+        bail!("only synthetic load is supported: flowmoe serve --synthetic [options]");
+    }
+    let mut opts = flowmoe::serve::ServeOpts::new(&args.get_or("config", "tiny"));
+    opts.seed = args.usize_or("seed", 7) as u64;
+    opts.requests = args.usize_or("requests", 200);
+    opts.max_batch = args.usize_or("max-batch", flowmoe::serve::DEFAULT_MAX_BATCH);
+    opts.kv_budget = args.usize_or("kv-budget", flowmoe::serve::DEFAULT_KV_BUDGET);
+    opts.workers = args.get("workers").and_then(|w| w.parse().ok());
+    opts.warmup_steps = args.usize_or("warmup", 16) as u64;
+    opts.mean_gap_steps = args.f64_or("gap", 2.0);
+    opts.max_prompt = args.usize_or("max-prompt", 24);
+    opts.max_new = args.usize_or("max-new", 16);
+    // same trace plumbing as cmd_train: --trace or FLOWMOE_TRACE
+    let trace_path: Option<String> = args
+        .get("trace")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("FLOWMOE_TRACE").ok().filter(|s| !s.is_empty()));
+    if trace_path.is_some() {
+        flowmoe::obs::set_enabled(true);
+    }
+    let report = flowmoe::serve::run_synthetic(&opts)?;
+    flowmoe::obs::set_enabled(false);
+    println!(
+        "served {} request(s) in {} decode step(s) ({} prefill + {} generated tokens, {:.0} tok/s)",
+        report.finished, report.steps, report.prefill_tokens, report.generated_tokens, report.tokens_per_s
+    );
+    println!(
+        "latency: per-token p50 {:.3} ms / p99 {:.3} ms; per-request p50 {:.3} ms / p99 {:.3} ms",
+        report.token_ms_p50, report.token_ms_p99, report.req_ms_p50, report.req_ms_p99
+    );
+    println!(
+        "virtual-time: request latency p50 {:.1} / p99 {:.1} steps; queue wait p50 {:.1} / p99 {:.1} steps",
+        report.req_latency_steps_p50,
+        report.req_latency_steps_p99,
+        report.queue_wait_steps_p50,
+        report.queue_wait_steps_p99
+    );
+    println!(
+        "expert parallelism: {} worker(s), capacity {} rows/expert/step, replicas {:?}",
+        report.workers_used, report.capacity, report.replicas
+    );
+    for line in flowmoe::report::stats_lines(&report.stats) {
+        println!("# {line}");
+    }
+    let json = flowmoe::serve::bench_json(&opts, &report);
+    if let Err(e) = flowmoe::testutil::scan_json(&json) {
+        bail!("BENCH_serve.json failed the JSON well-formedness scan: {e}");
+    }
+    let out = args.get_or("out", "BENCH_serve.json");
+    std::fs::write(&out, &json)?;
+    println!("# bench: {out}");
+    if let Some(path) = trace_path {
+        let spans = flowmoe::obs::take_spans();
+        let json = flowmoe::obs::chrome_trace(&spans);
+        if let Err(e) = flowmoe::testutil::scan_json(&json) {
+            bail!("serve trace failed the JSON well-formedness scan: {e}");
+        }
+        std::fs::write(&path, &json)?;
+        println!(
+            "# trace: {} spans -> {path} (open in chrome://tracing or Perfetto)",
+            spans.len()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let mut t = Table::new(
         "Model presets (paper Table 2)",
@@ -395,6 +468,14 @@ fn cmd_info(args: &Args) -> Result<()> {
         flowmoe::obs::HIST_BUCKETS,
         flowmoe::obs::HIST_START_S * 1e6,
         flowmoe::obs::HIST_FACTOR
+    );
+    // serving defaults, printed from the same constants the bench JSON
+    // header uses so `info` and BENCH_serve.json always agree
+    println!(
+        "serving: max batch {} sequence(s)/step, KV budget {} cached tokens (flowmoe serve --synthetic; \
+         --max-batch/--kv-budget to override)",
+        flowmoe::serve::DEFAULT_MAX_BATCH,
+        flowmoe::serve::DEFAULT_KV_BUDGET
     );
     Ok(())
 }

@@ -207,7 +207,8 @@ pub fn lane_of(label: &str) -> Option<Lane> {
     match label {
         "dispatch" | "dispatch_bwd" | "combine" | "combine_bwd" => Some(Lane::Comm),
         "mha_fwd" | "mha_bwd" | "gating_fwd" | "gating_bwd" | "expert_fwd" | "expert_bwd" | "head_loss"
-        | "update" | "mm" | "mm_nt" | "mm_tn" | "expert_ffn" | "expert_ffn_bwd" => Some(Lane::Compute),
+        | "update" | "mm" | "mm_nt" | "mm_tn" | "expert_ffn" | "expert_ffn_bwd" | "decode_mha"
+        | "decode_head" => Some(Lane::Compute),
         _ => None,
     }
 }
@@ -656,7 +657,10 @@ mod tests {
         assert_eq!(lane_of("combine_bwd"), Some(Lane::Comm));
         assert_eq!(lane_of("ar_chunk"), Some(Lane::Comm));
         assert_eq!(lane_of("a2a_combine"), Some(Lane::Comm));
+        assert_eq!(lane_of("decode_mha"), Some(Lane::Compute));
+        assert_eq!(lane_of("decode_head"), Some(Lane::Compute));
         assert_eq!(lane_of("step"), None);
+        assert_eq!(lane_of("decode_step"), None);
         assert_eq!(lane_of("scope_worker"), None);
     }
 

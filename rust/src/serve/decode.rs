@@ -1,0 +1,349 @@
+//! Incremental (KV-cached) decode on the native backend.
+//!
+//! One [`Decoder::decode_step`] call feeds **one token per in-flight
+//! sequence** through the whole model: cached multi-head attention over
+//! each sequence's prefix, then the same gating head, routing and
+//! expert FFN the trainer runs — shared with `model.rs` via
+//! [`model::gate_forward_ws`] / [`model::moe_forward_ws`] rather than
+//! duplicated — and finally the tied LM head
+//! ([`model::lm_head_logits_ws`]).
+//!
+//! # Why cached decode matches full-prefix recompute
+//!
+//! Every non-attention op is row-independent, and the single-row
+//! attention here follows exactly the last-row recipe of
+//! [`kn::attention_causal`] (scores over the prefix, scale, softmax,
+//! weighted V gather) — the causal mask never touches the last row. So
+//! with drop-free capacity, decoding token `t` against the cache equals
+//! row `t` of a full `block_forward` over the whole prefix to fp
+//! tolerance; `tests/serve_decode.rs` pins this at every step.
+//!
+//! Batching is ragged: token-level ops run as a flat `(D, M)` batch
+//! over the D active sequences while attention fans out per
+//! `(sequence, head)` unit over each sequence's own prefix length, on
+//! the same [`scope`] thread budget (and with the same capture-the-
+//! dispatch-tier idiom) as the trainer's per-head loops.
+
+use crate::backend::kernels as kn;
+use crate::backend::model::{self, BlockParams, Geo};
+use crate::backend::Workspace;
+use crate::sweep::scope;
+use crate::util::Rng;
+
+use super::ep::EpExperts;
+use super::kv::KvCache;
+
+/// How each decode step's expert FFNs execute.
+pub enum ExpertBackend {
+    /// In-process, over the local expert weights.
+    Local,
+    /// On the expert-parallel serving cluster (see [`super::ep`]).
+    Ep(EpExperts),
+}
+
+/// Per-expert slot capacity of a decode step over `d` single-token rows:
+/// GShard `ceil(f * k * d / E)`, at least 1. (The trainer's
+/// [`Geo::capacity`] counts `b * N` tokens; a decode step has exactly
+/// `d`.) Sized once for the maximum batch so slab shapes — and the EP
+/// message sizes — are step-invariant.
+pub fn serve_capacity(g: &Geo, d: usize) -> usize {
+    ((g.f * (g.top_k * d) as f64 / g.e as f64).ceil() as usize).max(1)
+}
+
+/// Deterministic model init in the canonical flat parameter order
+/// (embed, L x 9 block tensors, normf): unit norm gains, fan-in-scaled
+/// normals elsewhere — the trainer's init recipe, reproduced from a
+/// seed so `serve --synthetic` needs no checkpoint.
+pub fn init_params(g: &Geo, l_blocks: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    // (elems, fan_in) per tensor; fan_in 0 marks a norm gain (init 1.0)
+    let mut shapes: Vec<(usize, usize)> = vec![(g.vocab * g.m, g.vocab)];
+    for _ in 0..l_blocks {
+        shapes.extend([
+            (g.m, 0),
+            (g.m * g.m, g.m),
+            (g.m * g.m, g.m),
+            (g.m * g.m, g.m),
+            (g.m * g.m, g.m),
+            (g.m, 0),
+            (g.m * g.e, g.m),
+            (g.e * g.m * g.h, g.m),
+            (g.e * g.h * g.m, g.h),
+        ]);
+    }
+    shapes.push((g.m, 0));
+    shapes
+        .iter()
+        .map(|&(n, fan_in)| {
+            if fan_in == 0 {
+                vec![1.0f32; n]
+            } else {
+                let s = (fan_in as f64).powf(-0.5);
+                (0..n).map(|_| (rng.normal() * s) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// Greedy next-token choice per `(D, vocab)` logits row, ties to the
+/// smaller index (the same tie rule as `gating_topk`) — deterministic
+/// sampling for the synthetic server.
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(vocab)
+        .map(|row| {
+            let mut best = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = j;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+/// Copy head `hh` out of flat `(T, M)` rows into a contiguous `(T, hd)`
+/// tile (the cached-prefix analogue of `model.rs`'s `gather_head`).
+fn gather_head_rows(xf: &[f32], t: usize, m: usize, hh: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * hd];
+    for i in 0..t {
+        let src = i * m + hh * hd;
+        out[i * hd..(i + 1) * hd].copy_from_slice(&xf[src..src + hd]);
+    }
+    out
+}
+
+/// Incremental decoder: model parameters + workspace + expert backend.
+pub struct Decoder {
+    pub geo: Geo,
+    params: Vec<Vec<f32>>,
+    l_blocks: usize,
+    /// Fixed per-expert slot capacity of every decode step.
+    c: usize,
+    ws: Workspace,
+    backend: ExpertBackend,
+    /// Observed routing assignments per expert (drives the EP cluster's
+    /// hot-expert replication plan).
+    pub expert_counts: Vec<u64>,
+}
+
+impl Decoder {
+    /// A local-expert decoder sized for decode batches up to `max_batch`.
+    pub fn new(geo: Geo, params: Vec<Vec<f32>>, max_batch: usize) -> Decoder {
+        let l_blocks = (params.len() - 2) / 9;
+        debug_assert_eq!(params.len(), 2 + l_blocks * 9);
+        let c = serve_capacity(&geo, max_batch.max(1));
+        let expert_counts = vec![0u64; geo.e];
+        Decoder {
+            geo,
+            params,
+            l_blocks,
+            c,
+            ws: Workspace::new(),
+            backend: ExpertBackend::Local,
+            expert_counts,
+        }
+    }
+
+    pub fn l_blocks(&self) -> usize {
+        self.l_blocks
+    }
+
+    /// The step-invariant per-expert slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.c
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// The workspace pool (KV slabs are taken from / retired to it so
+    /// caches and decode temporaries share one arena).
+    pub fn workspace(&mut self) -> &mut Workspace {
+        &mut self.ws
+    }
+
+    /// Swap the expert backend (e.g. local -> EP cluster after warmup).
+    /// Returns the previous backend so a cluster can be shut down.
+    pub fn set_backend(&mut self, backend: ExpertBackend) -> ExpertBackend {
+        std::mem::replace(&mut self.backend, backend)
+    }
+
+    /// Decode one token per sequence: `tokens[i]` extends `caches[i]`.
+    /// Returns the next-token logits, flat `(D, vocab)`, taken from the
+    /// workspace pool (retire with `workspace().put(..)` when done).
+    pub fn decode_logits(&mut self, tokens: &[i32], caches: &mut [&mut KvCache]) -> Vec<f32> {
+        let _sp = crate::obs::span("decode_step");
+        let Decoder {
+            geo: g,
+            params,
+            l_blocks,
+            c,
+            ws,
+            backend,
+            expert_counts,
+        } = self;
+        let d = tokens.len();
+        debug_assert_eq!(d, caches.len());
+        let (m, hd, n_heads) = (g.m, g.head_dim(), g.n_heads);
+        let mut x = ws.take(d * m);
+        kn::embed_lookup_into(&params[0], tokens, m, &mut x);
+        for l in 0..*l_blocks {
+            let refs: Vec<&[f32]> = params[1 + l * 9..1 + (l + 1) * 9].iter().map(|v| v.as_slice()).collect();
+            let bp = BlockParams::new(&refs);
+            // --- cached MHA: project the new rows, append K/V, attend
+            // over each sequence's prefix ---
+            let h = {
+                let _sp = crate::obs::span("decode_mha");
+                let mut xn = ws.take(d * m);
+                kn::rmsnorm_into(&x, bp.at.n1, &mut xn);
+                let mut qf = ws.take(d * m);
+                kn::par_matmul_into(&xn, bp.at.wq, &mut qf, d, m, m);
+                let mut kf = ws.take(d * m);
+                kn::par_matmul_into(&xn, bp.at.wk, &mut kf, d, m, m);
+                let mut vf = ws.take(d * m);
+                kn::par_matmul_into(&xn, bp.at.wv, &mut vf, d, m, m);
+                for (i, cache) in caches.iter_mut().enumerate() {
+                    cache.append(l, &kf[i * m..(i + 1) * m], &vf[i * m..(i + 1) * m]);
+                }
+                // ragged per-(sequence, head) attention over the cached
+                // prefixes; immutable views gathered up front so the
+                // fan-out closure borrows them Sync-ly
+                let views: Vec<(usize, &[f32], &[f32])> = caches
+                    .iter()
+                    .map(|cc| (cc.len() + 1, cc.k_with_pending(l), cc.v_with_pending(l)))
+                    .collect();
+                let units = d * n_heads;
+                let disp = kn::active_dispatch();
+                let qf_ref: &[f32] = &qf;
+                let head = |u: usize| {
+                    kn::with_dispatch(disp, || {
+                        let (di, hh) = (u / n_heads, u % n_heads);
+                        let (t_i, kc, vc) = views[di];
+                        let q = &qf_ref[di * m + hh * hd..di * m + (hh + 1) * hd];
+                        let kh = gather_head_rows(kc, t_i, m, hh, hd);
+                        let vh = gather_head_rows(vc, t_i, m, hh, hd);
+                        // last-row recipe of `kn::attention_causal`: the
+                        // newest query attends to every cached position,
+                        // so no mask is needed
+                        let scale = 1.0 / (hd as f64).sqrt() as f32;
+                        let mut s = kn::matmul_nt(q, &kh, 1, hd, t_i);
+                        for sv in s.iter_mut() {
+                            *sv *= scale;
+                        }
+                        let w = kn::softmax_rows(&s, t_i);
+                        kn::matmul(&w, &vh, 1, t_i, hd)
+                    })
+                };
+                let heads: Vec<Vec<f32>> = scope::par_map_vec(units, head);
+                let mut of = ws.take(d * m);
+                for (u, o) in heads.into_iter().enumerate() {
+                    let (di, hh) = (u / n_heads, u % n_heads);
+                    of[di * m + hh * hd..di * m + (hh + 1) * hd].copy_from_slice(&o);
+                }
+                let mut proj = ws.take(d * m);
+                kn::par_matmul_into(&of, bp.at.wo, &mut proj, d, m, m);
+                let mut h = ws.take(d * m);
+                for ((hv, &xv), &pv) in h.iter_mut().zip(x.iter()).zip(&proj) {
+                    *hv = xv + pv;
+                }
+                ws.put_all([xn, qf, kf, vf, of, proj]);
+                h
+            };
+            // --- gating + expert FFN + combine: the trainer's own code ---
+            let (u, gating) = model::gate_forward_ws(g, &bp.at, &h, ws);
+            for &ex in &gating.idx {
+                expert_counts[ex as usize] += 1;
+            }
+            let y = match backend {
+                ExpertBackend::Local => {
+                    let (y, routing, expert_out) = model::moe_forward_ws(g, bp.w1, bp.w2, &h, &u, &gating, *c, ws);
+                    ws.put_all([routing.disp, expert_out]);
+                    y
+                }
+                ExpertBackend::Ep(cluster) => cluster.moe_step(g, &h, &u, &gating, *c, ws),
+            };
+            ws.put_all([h, u, gating.probs, gating.gate]);
+            ws.put(std::mem::replace(&mut x, y));
+        }
+        for cache in caches.iter_mut() {
+            cache.advance();
+        }
+        let logits = model::lm_head_logits_ws(g, &params[0], &params[params.len() - 1], &x, ws);
+        ws.put(x);
+        logits
+    }
+
+    /// [`Decoder::decode_logits`] + greedy sampling: the next token per
+    /// sequence.
+    pub fn decode_step(&mut self, tokens: &[i32], caches: &mut [&mut KvCache]) -> Vec<i32> {
+        let logits = self.decode_logits(tokens, caches);
+        let next = argmax_rows(&logits, self.geo.vocab);
+        self.ws.put(logits);
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn tiny_geo() -> Geo {
+        match preset("tiny") {
+            Some(cfg) => Geo::from_cfg(&cfg),
+            None => unreachable!("tiny preset always exists"),
+        }
+    }
+
+    #[test]
+    fn serve_capacity_scales_with_batch() {
+        let g = tiny_geo(); // f=4, k=2, E=4
+        assert_eq!(serve_capacity(&g, 1), 2);
+        assert_eq!(serve_capacity(&g, 8), 16);
+        // drop-free for any routing: d tokens can all pick one expert
+        for d in 1..=16 {
+            assert!(serve_capacity(&g, d) >= d);
+        }
+    }
+
+    #[test]
+    fn init_params_shapes_and_gains() {
+        let g = tiny_geo();
+        let p = init_params(&g, 2, 7);
+        assert_eq!(p.len(), 2 + 2 * 9);
+        assert_eq!(p[0].len(), g.vocab * g.m);
+        assert!(p[1].iter().all(|&x| x == 1.0), "n1 is a unit gain");
+        assert!(p[2].iter().any(|&x| x != 0.0), "wq is random");
+        assert_eq!(init_params(&g, 2, 7)[2], p[2], "seeded init is deterministic");
+    }
+
+    #[test]
+    fn argmax_rows_ties_to_smaller_index() {
+        let logits = [0.1, 0.9, 0.9, 0.2, /* row 2 */ 0.5, 0.5, 0.4, 0.3];
+        assert_eq!(argmax_rows(&logits, 4), vec![1, 0]);
+    }
+
+    #[test]
+    fn decode_step_is_deterministic() {
+        let g = tiny_geo();
+        let params = init_params(&g, 2, 3);
+        let run = |params: Vec<Vec<f32>>| {
+            let mut dec = Decoder::new(g, params, 2);
+            let mut ca = KvCache::new(2, 8, g.m, dec.workspace());
+            let mut cb = KvCache::new(2, 8, g.m, dec.workspace());
+            let mut out = Vec::new();
+            let mut toks = vec![5i32, 9i32];
+            for _ in 0..6 {
+                let mut refs = [&mut ca, &mut cb];
+                let next = dec.decode_step(&toks, &mut refs);
+                out.extend(next.iter().copied());
+                toks = next;
+            }
+            out
+        };
+        assert_eq!(run(params.clone()), run(params));
+    }
+}

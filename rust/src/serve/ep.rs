@@ -1,0 +1,295 @@
+//! Expert-parallel serving cluster: attention stays on the driver,
+//! expert FFNs run on dedicated expert workers.
+//!
+//! Serving splits the model the way Expert Kit does (SNIPPETS.md §3):
+//! the attention/gating half of every layer runs where the KV caches
+//! live (the driver), while expert FFNs scale out at **individual
+//! expert granularity** — each worker owns at most one expert's
+//! weights. Spare workers replicate the hottest experts (ranked by the
+//! routing counts the decoder observed during local warmup), and a
+//! replicated expert's capacity rows are split near-evenly across its
+//! replicas.
+//!
+//! Every worker receives exactly one message per (layer, step) round —
+//! its fixed row range of its expert's `(c, M)` dispatch slab — so the
+//! protocol never blocks on an unselected replica, message sizes are
+//! step-invariant (capacity is fixed per run, see
+//! [`super::decode::serve_capacity`]), and because the row split is
+//! fixed and row outputs are independent of band composition (the same
+//! contract the kernel conformance suite pins across thread budgets),
+//! EP output is **bitwise identical** to local decode.
+//!
+//! A2A exchanges are traced as `a2a_dispatch` / `a2a_combine` spans and
+//! worker FFNs as `expert_fwd`, so `flowmoe serve --trace` renders in
+//! the same Comm/Compute lanes as the trainer.
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::backend::kernels as kn;
+use crate::backend::model::Geo;
+use crate::backend::Workspace;
+use crate::cluster::{combine, dispatch};
+use crate::commpool::Collective;
+
+/// Assign experts to worker ranks: every expert gets one worker, then
+/// spare workers replicate the hottest experts (by observed routing
+/// `counts`, ties to the smaller expert id), round-robin, capped at
+/// `cap` replicas per expert (more replicas than capacity rows would
+/// idle). Returns `assignment[e] = worker ranks serving expert e`;
+/// ranks are contiguous from 0 in expert-major order.
+pub fn plan_replicas(e: usize, workers: usize, counts: &[u64], cap: usize) -> Vec<Vec<usize>> {
+    debug_assert_eq!(counts.len(), e);
+    let workers = workers.max(e);
+    let mut replicas = vec![1usize; e];
+    let mut spare = workers - e;
+    let mut order: Vec<usize> = (0..e).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(counts[i]), i));
+    'outer: while spare > 0 {
+        let mut grew = false;
+        for &i in &order {
+            if spare == 0 {
+                break 'outer;
+            }
+            if replicas[i] < cap {
+                replicas[i] += 1;
+                spare -= 1;
+                grew = true;
+            }
+        }
+        if !grew {
+            break; // every expert already at cap; leave the rest unspawned
+        }
+    }
+    let mut assignment = Vec::with_capacity(e);
+    let mut rank = 0usize;
+    for r in replicas {
+        assignment.push((rank..rank + r).collect());
+        rank += r;
+    }
+    assignment
+}
+
+/// Row range `[lo, hi)` of replica `i` of `r` when `c` capacity rows
+/// are split near-evenly (first `c % r` replicas get one extra row).
+fn chunk_range(c: usize, r: usize, i: usize) -> (usize, usize) {
+    let (base, rem) = (c / r, c % r);
+    let lo = i * base + i.min(rem);
+    (lo, lo + base + usize::from(i < rem))
+}
+
+/// Expert worker loop: one (layer, step) round per message. An empty
+/// message is the shutdown sentinel.
+fn expert_worker(
+    coll: Arc<Collective>,
+    rank: usize,
+    driver: usize,
+    l_blocks: usize,
+    geo_mh: (usize, usize),
+    w1: Vec<Vec<f32>>,
+    w2: Vec<Vec<f32>>,
+) {
+    let (m, h) = geo_mh;
+    let mut round: u64 = 0;
+    loop {
+        let chunk = coll.recv(driver, rank, round);
+        if chunk.is_empty() {
+            return;
+        }
+        // the driver issues layers 0..L in order every step, so the
+        // layer is implied by the round counter
+        let l = (round as usize) % l_blocks;
+        let rows = chunk.len() / m;
+        let mut out = vec![0.0f32; rows * m];
+        {
+            let _sp = crate::obs::span("expert_fwd");
+            kn::expert_ffn_into(&chunk, &w1[l], &w2[l], &mut out, 1, rows, m, h);
+        }
+        coll.send(rank, driver, round, out);
+        round += 1;
+    }
+}
+
+/// Handle to a running expert-parallel serving cluster.
+pub struct EpExperts {
+    coll: Arc<Collective>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// `assignment[e]` = worker ranks serving expert `e`.
+    assignment: Vec<Vec<usize>>,
+    n_workers: usize,
+    round: u64,
+    shut: bool,
+}
+
+impl EpExperts {
+    /// Spawn expert workers per [`plan_replicas`] over the observed
+    /// routing `counts`. Each worker clones only its own expert's
+    /// per-layer FFN weights out of the canonical flat `params`.
+    pub fn new(g: &Geo, params: &[Vec<f32>], counts: &[u64], workers: usize, c: usize) -> EpExperts {
+        let l_blocks = (params.len() - 2) / 9;
+        let assignment = plan_replicas(g.e, workers, counts, c);
+        let n_workers: usize = assignment.iter().map(Vec::len).sum();
+        let coll = Collective::new(n_workers + 1);
+        let driver = n_workers;
+        let (m, h) = (g.m, g.h);
+        let disp = kn::active_dispatch();
+        let mut handles = Vec::with_capacity(n_workers);
+        for (ex, ranks) in assignment.iter().enumerate() {
+            for &rank in ranks {
+                let coll = Arc::clone(&coll);
+                let w1: Vec<Vec<f32>> = (0..l_blocks)
+                    .map(|l| params[1 + l * 9 + 7][ex * m * h..(ex + 1) * m * h].to_vec())
+                    .collect();
+                let w2: Vec<Vec<f32>> = (0..l_blocks)
+                    .map(|l| params[1 + l * 9 + 8][ex * h * m..(ex + 1) * h * m].to_vec())
+                    .collect();
+                // flowmoe-lint: allow(thread_spawn) — long-lived expert worker, not a task
+                handles.push(thread::spawn(move || {
+                    kn::with_dispatch(disp, || {
+                        crate::sweep::scope::with_budget(1, || {
+                            expert_worker(coll, rank, driver, l_blocks, (m, h), w1, w2)
+                        })
+                    })
+                }));
+            }
+        }
+        EpExperts {
+            coll,
+            handles,
+            assignment,
+            n_workers,
+            round: 0,
+            shut: false,
+        }
+    }
+
+    /// Replica count per expert (for the bench report header).
+    pub fn replica_counts(&self) -> Vec<usize> {
+        self.assignment.iter().map(Vec::len).collect()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// One MoE sublayer over the cluster: route on the driver, ship
+    /// each expert's capacity rows to its replicas (A2A dispatch), run
+    /// the FFNs remotely, gather (A2A combine), then combine + residual
+    /// exactly like the local path.
+    pub fn moe_step(
+        &mut self,
+        g: &Geo,
+        h: &[f32],
+        u: &[f32],
+        gating: &kn::Gating,
+        c: usize,
+        ws: &mut Workspace,
+    ) -> Vec<f32> {
+        let driver = self.n_workers;
+        let routing = dispatch(u, &gating.idx, gating.gate.len(), g.e, c, g.m);
+        let round = self.round;
+        self.round += 1;
+        {
+            let _sp = crate::obs::span("a2a_dispatch");
+            for (ex, ranks) in self.assignment.iter().enumerate() {
+                for (ri, &rank) in ranks.iter().enumerate() {
+                    let (lo, hi) = chunk_range(c, ranks.len(), ri);
+                    let chunk = routing.disp[(ex * c + lo) * g.m..(ex * c + hi) * g.m].to_vec();
+                    self.coll.send(driver, rank, round, chunk);
+                }
+            }
+        }
+        let mut expert_out = ws.take(g.e * c * g.m);
+        {
+            let _sp = crate::obs::span("a2a_combine");
+            for (ex, ranks) in self.assignment.iter().enumerate() {
+                for (ri, &rank) in ranks.iter().enumerate() {
+                    let (lo, _hi) = chunk_range(c, ranks.len(), ri);
+                    let out = self.coll.recv(rank, driver, round);
+                    expert_out[(ex * c + lo) * g.m..(ex * c + lo) * g.m + out.len()].copy_from_slice(&out);
+                }
+            }
+        }
+        let yc = combine(&expert_out, &routing, &gating.gate);
+        let mut y = ws.take(h.len());
+        for ((yv, &hv), &cv) in y.iter_mut().zip(h).zip(&yc) {
+            *yv = hv + cv;
+        }
+        ws.put_all([routing.disp, expert_out, yc]);
+        y
+    }
+
+    /// Stop all workers (empty-message sentinel at the next round) and
+    /// join them. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        let driver = self.n_workers;
+        for rank in 0..self.n_workers {
+            self.coll.send(driver, rank, self.round, Vec::new());
+        }
+        for hd in self.handles.drain(..) {
+            let _ = hd.join();
+        }
+    }
+}
+
+impl Drop for EpExperts {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_gives_every_expert_one_worker() {
+        let plan = plan_replicas(4, 4, &[10, 0, 5, 1], 16);
+        assert_eq!(plan, vec![vec![0], vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn spares_replicate_hottest_first() {
+        let plan = plan_replicas(4, 6, &[5, 90, 20, 20], 16);
+        // hotness order: 1 (90), 2 (20, smaller id wins tie), 3, 0
+        assert_eq!(plan[1].len(), 2, "hottest expert gets the first spare");
+        assert_eq!(plan[2].len(), 2, "next hottest gets the second");
+        assert_eq!(plan[0].len(), 1);
+        assert_eq!(plan[3].len(), 1);
+        let total: usize = plan.iter().map(Vec::len).sum();
+        assert_eq!(total, 6);
+        // ranks are contiguous and unique
+        let mut all: Vec<usize> = plan.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn replicas_capped_at_capacity_rows() {
+        // cap 2: with 4 experts and 100 workers only 8 are ever useful
+        let plan = plan_replicas(4, 100, &[1, 1, 1, 1], 2);
+        let total: usize = plan.iter().map(Vec::len).sum();
+        assert_eq!(total, 8);
+        assert!(plan.iter().all(|r| r.len() == 2));
+    }
+
+    #[test]
+    fn chunk_ranges_tile_the_capacity() {
+        for c in [1usize, 5, 16] {
+            for r in 1..=c {
+                let mut next = 0;
+                for i in 0..r {
+                    let (lo, hi) = chunk_range(c, r, i);
+                    assert_eq!(lo, next);
+                    assert!(hi > lo, "every replica gets at least one row");
+                    next = hi;
+                }
+                assert_eq!(next, c);
+            }
+        }
+    }
+}

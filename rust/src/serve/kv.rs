@@ -1,0 +1,123 @@
+//! Append-only per-sequence KV cache backed by the workspace pool.
+//!
+//! One [`KvCache`] holds the cached attention keys/values of a single
+//! in-flight sequence: per layer, a flat `(cap, M)` slab for K and one
+//! for V, of which only the first `len` rows are live. Slabs are taken
+//! from [`Workspace`] on admission and retired back into the pool on
+//! eviction, so caches recycle across requests exactly like the
+//! trainer's activation buffers recycle across steps — and because
+//! [`Workspace::take`] hands out zeroed buffers, a recycled cache is
+//! bit-identical to a fresh one.
+
+use crate::backend::Workspace;
+
+/// KV cache of one sequence (all layers). See the module docs.
+pub struct KvCache {
+    /// Per layer: flat `(cap, M)` K rows; rows `[0, len)` are live.
+    k: Vec<Vec<f32>>,
+    /// Per layer: flat `(cap, M)` V rows, same layout.
+    v: Vec<Vec<f32>>,
+    len: usize,
+    cap: usize,
+    m: usize,
+}
+
+impl KvCache {
+    /// A cache with room for `cap` tokens across `l_blocks` layers;
+    /// slabs come zeroed from the workspace pool.
+    pub fn new(l_blocks: usize, cap: usize, m: usize, ws: &mut Workspace) -> KvCache {
+        let k = (0..l_blocks).map(|_| ws.take(cap * m)).collect();
+        let v = (0..l_blocks).map(|_| ws.take(cap * m)).collect();
+        KvCache { k, v, len: 0, cap, m }
+    }
+
+    /// Tokens fully cached (every layer appended and advanced).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Token capacity reserved for this sequence.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Write the in-flight token's K/V rows (length M each) for layer
+    /// `l` at row `len`. Call once per layer, then [`KvCache::advance`]
+    /// once after all layers.
+    pub fn append(&mut self, l: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(self.len < self.cap, "KV cache overflow ({}/{})", self.len, self.cap);
+        let at = self.len * self.m;
+        self.k[l][at..at + self.m].copy_from_slice(krow);
+        self.v[l][at..at + self.m].copy_from_slice(vrow);
+    }
+
+    /// Commit the in-flight token: subsequent appends land on the next row.
+    pub fn advance(&mut self) {
+        debug_assert!(self.len < self.cap);
+        self.len += 1;
+    }
+
+    /// Layer `l`'s K rows *including* the just-appended in-flight row:
+    /// flat `(len + 1, M)` — the attention prefix of the current step.
+    pub fn k_with_pending(&self, l: usize) -> &[f32] {
+        &self.k[l][..(self.len + 1) * self.m]
+    }
+
+    /// Layer `l`'s V rows including the in-flight row, flat `(len + 1, M)`.
+    pub fn v_with_pending(&self, l: usize) -> &[f32] {
+        &self.v[l][..(self.len + 1) * self.m]
+    }
+
+    /// Evict: retire every slab back into the workspace pool.
+    pub fn free(self, ws: &mut Workspace) {
+        ws.put_all(self.k);
+        ws.put_all(self.v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_advance_and_views() {
+        let mut ws = Workspace::new();
+        let m = 4;
+        let mut c = KvCache::new(2, 3, m, &mut ws);
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        let k0 = [1.0, 2.0, 3.0, 4.0];
+        let v0 = [5.0, 6.0, 7.0, 8.0];
+        c.append(0, &k0, &v0);
+        c.append(1, &k0, &v0);
+        assert_eq!(c.k_with_pending(0), &k0);
+        assert_eq!(c.v_with_pending(1), &v0);
+        c.advance();
+        assert_eq!(c.len(), 1);
+        let k1 = [9.0; 4];
+        c.append(0, &k1, &v0);
+        c.append(1, &k1, &v0);
+        assert_eq!(&c.k_with_pending(0)[..m], &k0);
+        assert_eq!(&c.k_with_pending(0)[m..], &k1);
+        c.advance();
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn free_recycles_slabs_into_pool() {
+        let mut ws = Workspace::new();
+        let c = KvCache::new(3, 8, 16, &mut ws);
+        assert_eq!(ws.pooled(), 0);
+        c.free(&mut ws);
+        assert_eq!(ws.pooled(), 6, "2 slabs per layer x 3 layers retired");
+        // the next cache reuses the retired slabs and starts zeroed
+        let c2 = KvCache::new(3, 8, 16, &mut ws);
+        assert_eq!(ws.pooled(), 0);
+        assert!(c2.k_with_pending(0).iter().all(|&x| x == 0.0));
+        c2.free(&mut ws);
+    }
+}

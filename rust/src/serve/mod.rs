@@ -1,0 +1,344 @@
+//! `flowmoe serve` — continuous-batching MoE inference on the native
+//! backend.
+//!
+//! Four layers (bottom up):
+//!
+//! 1. **Incremental decode** ([`kv`], [`decode`]): per-sequence
+//!    append-only KV caches backed by the shared workspace pool,
+//!    and a [`Decoder`] that runs cached attention + gating + expert
+//!    FFN for one new token per sequence, sharing the trainer's
+//!    `model.rs` forward code.
+//! 2. **Continuous batching** ([`sched`]): FIFO admission against a
+//!    max-batch and a KV-token budget; finished sequences retire
+//!    mid-flight and their slot + budget refill immediately.
+//! 3. **Expert-parallel serving** ([`ep`]): attention on the driver,
+//!    ≤ 1 expert per worker, hottest experts replicated from routing
+//!    counts observed during a local warmup; A2A traced like the
+//!    trainer. EP decode is bitwise identical to local decode.
+//! 4. **Synthetic traffic + bench** ([`traffic`], [`run_synthetic`]):
+//!    seeded open-loop Poisson/Zipf load in virtual step time, p50/p99
+//!    per-token and per-request latency + tokens/sec through the
+//!    [`Registry`] histogram machinery, exported as `BENCH_serve.json`
+//!    whose non-timing fields are deterministic per seed.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::backend::kernels as kn;
+use crate::backend::model::Geo;
+use crate::config::preset;
+use crate::obs::{Registry, RegistrySnapshot};
+use crate::sweep::scope;
+use crate::util::{json_escape, percentile};
+
+pub mod decode;
+pub mod ep;
+pub mod kv;
+pub mod sched;
+pub mod traffic;
+
+pub use decode::{argmax_rows, init_params, serve_capacity, Decoder, ExpertBackend};
+pub use ep::EpExperts;
+pub use kv::KvCache;
+pub use sched::{Request, Scheduler};
+pub use traffic::TrafficCfg;
+
+/// Default decode batch width (sequences decoded per step).
+pub const DEFAULT_MAX_BATCH: usize = 8;
+/// Default KV budget: total cached tokens across all in-flight
+/// sequences (each admission reserves its worst case up front).
+pub const DEFAULT_KV_BUDGET: usize = 4096;
+
+/// Knobs of one `flowmoe serve --synthetic` run.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub config: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub max_batch: usize,
+    pub kv_budget: usize,
+    /// Expert workers for the EP phase; `None` = auto (`E + 2`),
+    /// `Some(0)` = stay on the local backend for the whole run.
+    pub workers: Option<usize>,
+    /// Decode steps served locally before switching to EP (the routing
+    /// counts observed here drive hot-expert replication).
+    pub warmup_steps: u64,
+    pub mean_gap_steps: f64,
+    pub max_prompt: usize,
+    pub max_new: usize,
+}
+
+impl ServeOpts {
+    pub fn new(config: &str) -> ServeOpts {
+        ServeOpts {
+            config: config.to_string(),
+            seed: 7,
+            requests: 200,
+            max_batch: DEFAULT_MAX_BATCH,
+            kv_budget: DEFAULT_KV_BUDGET,
+            workers: None,
+            warmup_steps: 16,
+            mean_gap_steps: 2.0,
+            max_prompt: 24,
+            max_new: 16,
+        }
+    }
+}
+
+/// Outcome of a serving run. Everything except `wall_s`,
+/// `tokens_per_s`, the `*_ms_*` latencies and `stats` is a pure
+/// function of the options (virtual-step-time scheduling), which is
+/// what the determinism test pins.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub steps: u64,
+    pub admitted: u64,
+    pub finished: u64,
+    pub prefill_tokens: u64,
+    pub generated_tokens: u64,
+    /// FNV-style rolling hash over emitted tokens in step order.
+    pub token_checksum: u64,
+    pub capacity: usize,
+    pub workers_used: usize,
+    /// Replicas per expert in the EP phase (empty when local-only).
+    pub replicas: Vec<usize>,
+    pub req_latency_steps_p50: f64,
+    pub req_latency_steps_p99: f64,
+    pub queue_wait_steps_p50: f64,
+    pub queue_wait_steps_p99: f64,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub token_ms_p50: f64,
+    pub token_ms_p99: f64,
+    pub req_ms_p50: f64,
+    pub req_ms_p99: f64,
+    pub stats: RegistrySnapshot,
+}
+
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, p)
+    }
+}
+
+/// Drive the decoder with synthetic open-loop traffic to completion.
+pub fn run_synthetic(opts: &ServeOpts) -> Result<ServeReport> {
+    let Some(cfg) = preset(&opts.config) else {
+        bail!("unknown config '{}'", opts.config);
+    };
+    if opts.max_batch == 0 {
+        bail!("--max-batch must be >= 1");
+    }
+    if opts.max_prompt + opts.max_new > opts.kv_budget {
+        bail!(
+            "kv budget {} cannot hold one worst-case request ({} prompt + {} new)",
+            opts.kv_budget,
+            opts.max_prompt,
+            opts.max_new
+        );
+    }
+    let g = Geo::from_cfg(&cfg);
+    let l_blocks = cfg.l;
+    let reqs = traffic::generate(
+        opts.seed,
+        &TrafficCfg {
+            requests: opts.requests,
+            mean_gap_steps: opts.mean_gap_steps,
+            max_prompt: opts.max_prompt,
+            max_new: opts.max_new,
+            len_zipf_s: 1.2,
+            vocab: g.vocab,
+        },
+    );
+    let params = init_params(&g, l_blocks, opts.seed ^ 0x5eed);
+    let mut dec = Decoder::new(g, params, opts.max_batch);
+    let mut sched = Scheduler::new(opts.max_batch, opts.kv_budget);
+    let mut caches: Vec<Option<KvCache>> = (0..opts.max_batch).map(|_| None).collect();
+    let mut admit_wall: Vec<Option<Instant>> = vec![None; opts.max_batch];
+
+    let reg = Registry::new();
+    let step_hist = reg.histogram("serve/step_s");
+    let token_hist = reg.histogram("serve/token_s");
+    let req_hist = reg.histogram("serve/req_s");
+
+    let workers_requested = opts.workers.unwrap_or(g.e + 2);
+    let mut ep_started = false;
+    let mut workers_used = 0usize;
+    let mut replicas: Vec<usize> = Vec::new();
+
+    let mut next_req = 0usize;
+    let mut step: u64 = 0;
+    let (mut prefill_tokens, mut generated_tokens) = (0u64, 0u64);
+    let mut token_checksum: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut req_latency_steps: Vec<f64> = Vec::new();
+    let mut queue_wait_steps: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+
+    loop {
+        while next_req < reqs.len() && reqs[next_req].arrival_step <= step {
+            sched.push(reqs[next_req].clone());
+            next_req += 1;
+        }
+        for slot in sched.admit(step) {
+            let need = sched.slot_kv_need(slot);
+            caches[slot] = Some(KvCache::new(l_blocks, need, g.m, dec.workspace()));
+            admit_wall[slot] = Some(Instant::now());
+        }
+        if !ep_started && step >= opts.warmup_steps && workers_requested > 0 {
+            let ep = EpExperts::new(&g, dec.params(), &dec.expert_counts, workers_requested, dec.capacity());
+            replicas = ep.replica_counts();
+            workers_used = ep.n_workers();
+            dec.set_backend(ExpertBackend::Ep(ep));
+            ep_started = true;
+        }
+        let batch = sched.batch();
+        if batch.is_empty() {
+            if next_req >= reqs.len() && sched.pending_len() == 0 {
+                break;
+            }
+            // nothing in flight: fast-forward virtual time to the next
+            // arrival instead of spinning empty steps
+            let upcoming = sched.next_arrival().or_else(|| reqs.get(next_req).map(|r| r.arrival_step));
+            match upcoming {
+                Some(a) => step = a.max(step + 1),
+                None => break,
+            }
+            continue;
+        }
+        let tokens: Vec<i32> = batch.iter().map(|&(_, t)| t).collect();
+        let step_t = Instant::now();
+        let next = {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().filter_map(Option::as_mut).collect();
+            debug_assert_eq!(refs.len(), tokens.len());
+            dec.decode_step(&tokens, &mut refs)
+        };
+        let step_el = step_t.elapsed().as_secs_f64();
+        step_hist.observe(step_el);
+        for (i, &(slot, _)) in batch.iter().enumerate() {
+            let (emitted, fin) = sched.record(slot, next[i]);
+            if emitted {
+                generated_tokens += 1;
+                token_checksum = token_checksum.wrapping_mul(0x0100_0000_01b3).wrapping_add(next[i] as u64);
+                token_hist.observe(step_el);
+            } else {
+                prefill_tokens += 1;
+            }
+            if let Some(fin) = fin {
+                if let Some(cache) = caches[slot].take() {
+                    cache.free(dec.workspace());
+                }
+                if let Some(t) = admit_wall[slot].take() {
+                    req_hist.observe(t.elapsed().as_secs_f64());
+                }
+                req_latency_steps.push((step + 1 - fin.arrival_step) as f64);
+                queue_wait_steps.push((fin.admit_step - fin.arrival_step) as f64);
+            }
+        }
+        step += 1;
+    }
+
+    if let ExpertBackend::Ep(mut ep) = dec.set_backend(ExpertBackend::Local) {
+        ep.shutdown();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let total_tokens = prefill_tokens + generated_tokens;
+    Ok(ServeReport {
+        steps: step,
+        admitted: sched.admitted,
+        finished: sched.finished,
+        prefill_tokens,
+        generated_tokens,
+        token_checksum,
+        capacity: dec.capacity(),
+        workers_used,
+        replicas,
+        req_latency_steps_p50: pct(&req_latency_steps, 50.0),
+        req_latency_steps_p99: pct(&req_latency_steps, 99.0),
+        queue_wait_steps_p50: pct(&queue_wait_steps, 50.0),
+        queue_wait_steps_p99: pct(&queue_wait_steps, 99.0),
+        wall_s,
+        tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
+        token_ms_p50: token_hist.quantile(0.50) * 1e3,
+        token_ms_p99: token_hist.quantile(0.99) * 1e3,
+        req_ms_p50: req_hist.quantile(0.50) * 1e3,
+        req_ms_p99: req_hist.quantile(0.99) * 1e3,
+        stats: reg.snapshot(),
+    })
+}
+
+/// Render the bench artifact. The `"deterministic"` object is a pure
+/// function of the options; `"timing"` carries wall-clock numbers and
+/// is exempt from the determinism check.
+pub fn bench_json(opts: &ServeOpts, r: &ServeReport) -> String {
+    let replicas = r.replicas.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"serve_synthetic\",\n",
+            "  \"config\": \"{config}\",\n",
+            "  \"seed\": {seed},\n",
+            "  \"requests\": {requests},\n",
+            "  \"max_batch\": {max_batch},\n",
+            "  \"kv_budget\": {kv_budget},\n",
+            "  \"capacity\": {capacity},\n",
+            "  \"warmup_steps\": {warmup},\n",
+            "  \"workers\": {workers},\n",
+            "  \"replicas\": [{replicas}],\n",
+            "  \"kernels\": \"{kernels}\",\n",
+            "  \"threads\": {threads},\n",
+            "  \"avx2\": {avx2},\n",
+            "  \"deterministic\": {{\n",
+            "    \"steps\": {steps},\n",
+            "    \"admitted\": {admitted},\n",
+            "    \"finished\": {finished},\n",
+            "    \"prefill_tokens\": {prefill},\n",
+            "    \"generated_tokens\": {generated},\n",
+            "    \"token_checksum\": {checksum},\n",
+            "    \"req_latency_steps_p50\": {rl50:.3},\n",
+            "    \"req_latency_steps_p99\": {rl99:.3},\n",
+            "    \"queue_wait_steps_p50\": {qw50:.3},\n",
+            "    \"queue_wait_steps_p99\": {qw99:.3}\n",
+            "  }},\n",
+            "  \"timing\": {{\n",
+            "    \"wall_s\": {wall:.6},\n",
+            "    \"tokens_per_s\": {tps:.3},\n",
+            "    \"token_ms_p50\": {t50:.6},\n",
+            "    \"token_ms_p99\": {t99:.6},\n",
+            "    \"req_ms_p50\": {r50:.6},\n",
+            "    \"req_ms_p99\": {r99:.6}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        config = json_escape(&opts.config),
+        seed = opts.seed,
+        requests = opts.requests,
+        max_batch = opts.max_batch,
+        kv_budget = opts.kv_budget,
+        capacity = r.capacity,
+        warmup = opts.warmup_steps,
+        workers = r.workers_used,
+        replicas = replicas,
+        kernels = json_escape(kn::default_dispatch().name()),
+        threads = scope::current_budget(),
+        avx2 = kn::avx2_available(),
+        steps = r.steps,
+        admitted = r.admitted,
+        finished = r.finished,
+        prefill = r.prefill_tokens,
+        generated = r.generated_tokens,
+        checksum = r.token_checksum,
+        rl50 = r.req_latency_steps_p50,
+        rl99 = r.req_latency_steps_p99,
+        qw50 = r.queue_wait_steps_p50,
+        qw99 = r.queue_wait_steps_p99,
+        wall = r.wall_s,
+        tps = r.tokens_per_s,
+        t50 = r.token_ms_p50,
+        t99 = r.token_ms_p99,
+        r50 = r.req_ms_p50,
+        r99 = r.req_ms_p99,
+    )
+}

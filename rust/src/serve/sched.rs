@@ -1,0 +1,306 @@
+//! Continuous-batching scheduler: admit, batch, record, evict.
+//!
+//! Requests queue FIFO; each decode step the scheduler admits as many
+//! queued requests as fit (a free batch slot **and** enough KV-token
+//! budget for the request's worst case, `prompt + max_new`), assembles
+//! the ragged batch — one token per active sequence, either the next
+//! prompt token (prefill) or the last generated token (decode) — and
+//! retires finished sequences so their slot and KV budget refill
+//! mid-flight. Admission is strictly FIFO: if the front request does
+//! not fit, nothing behind it is considered, so a large request can
+//! never starve behind a stream of small ones.
+//!
+//! Slots are a plain `Vec<Option<ActiveSeq>>` and the queue a
+//! `VecDeque` — no hash maps on this hot path (lint FL003), and batch
+//! order (ascending slot id) is deterministic.
+
+use std::collections::VecDeque;
+
+/// One inference request, timed in virtual step time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Decode step at which the request becomes visible to admission.
+    pub arrival_step: u64,
+    pub prompt: Vec<i32>,
+    /// Tokens to generate after the prompt.
+    pub max_new: usize,
+}
+
+impl Request {
+    /// Worst-case KV rows this request can occupy: every prompt token
+    /// plus every generated token is cached. Reserved in full at
+    /// admission so an admitted sequence can never stall mid-flight.
+    pub fn kv_need(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
+}
+
+/// A request occupying a batch slot.
+#[derive(Clone, Debug)]
+pub struct ActiveSeq {
+    pub id: u64,
+    pub arrival_step: u64,
+    pub admit_step: u64,
+    pub prompt: Vec<i32>,
+    /// Prompt tokens already fed (the cached prefix length during prefill).
+    pub pos: usize,
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+}
+
+impl ActiveSeq {
+    /// The token this sequence contributes to the current step's batch.
+    pub fn next_input(&self) -> i32 {
+        if self.pos < self.prompt.len() {
+            self.prompt[self.pos]
+        } else {
+            self.generated[self.generated.len() - 1]
+        }
+    }
+
+    /// Still feeding prompt tokens (model output is discarded).
+    pub fn in_prefill(&self) -> bool {
+        self.pos < self.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+
+    fn kv_need(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
+}
+
+/// Continuous-batching state: fixed slots + FIFO queue + KV budget.
+pub struct Scheduler {
+    slots: Vec<Option<ActiveSeq>>,
+    pending: VecDeque<Request>,
+    kv_budget: usize,
+    kv_used: usize,
+    pub admitted: u64,
+    pub finished: u64,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize, kv_budget: usize) -> Scheduler {
+        Scheduler {
+            slots: (0..max_batch).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            kv_budget,
+            kv_used: 0,
+            admitted: 0,
+            finished: 0,
+        }
+    }
+
+    /// Enqueue an arrived request.
+    pub fn push(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    /// Admit queued requests into free slots, strictly FIFO, while the
+    /// front request fits the KV budget and a slot is free. Returns the
+    /// slot index of each admission (callers allocate a KV cache per
+    /// returned slot).
+    pub fn admit(&mut self, step: u64) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        loop {
+            let Some(req) = self.pending.front() else { break };
+            if self.kv_used + req.kv_need() > self.kv_budget {
+                break;
+            }
+            let Some(slot) = self.slots.iter().position(Option::is_none) else {
+                break;
+            };
+            let Some(req) = self.pending.pop_front() else { break };
+            self.kv_used += req.kv_need();
+            self.admitted += 1;
+            self.slots[slot] = Some(ActiveSeq {
+                id: req.id,
+                arrival_step: req.arrival_step,
+                admit_step: step,
+                prompt: req.prompt,
+                pos: 0,
+                generated: Vec::new(),
+                max_new: req.max_new,
+            });
+            admitted.push(slot);
+        }
+        admitted
+    }
+
+    /// The ragged batch for this step: `(slot, input token)` in
+    /// ascending slot order, one entry per active sequence.
+    pub fn batch(&self) -> Vec<(usize, i32)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|seq| (i, seq.next_input())))
+            .collect()
+    }
+
+    /// Record the model's output for slot `slot` this step. Returns
+    /// `(emitted, finished)`: whether `next` counts as a generated
+    /// token (prefill steps discard it), and the retired sequence if
+    /// this token completed it (its slot and KV budget are freed).
+    pub fn record(&mut self, slot: usize, next: i32) -> (bool, Option<ActiveSeq>) {
+        let Some(seq) = self.slots[slot].as_mut() else {
+            debug_assert!(false, "record on empty slot {slot}");
+            return (false, None);
+        };
+        seq.pos += 1;
+        let emitted = seq.pos >= seq.prompt.len();
+        if emitted {
+            seq.generated.push(next);
+        }
+        if seq.done() {
+            let Some(seq) = self.slots[slot].take() else {
+                return (emitted, None);
+            };
+            self.kv_used -= seq.kv_need();
+            self.finished += 1;
+            return (emitted, Some(seq));
+        }
+        (emitted, None)
+    }
+
+    /// Active sequence count (occupied slots).
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Arrival step of the queue's front request, if any — used to
+    /// fast-forward virtual time when the system drains empty.
+    pub fn next_arrival(&self) -> Option<u64> {
+        self.pending.front().map(|r| r.arrival_step)
+    }
+
+    /// Reserved KV rows of the sequence occupying `slot` (0 if empty) —
+    /// the cache size the engine allocates at admission.
+    pub fn slot_kv_need(&self, slot: usize) -> usize {
+        self.slots[slot].as_ref().map(ActiveSeq::kv_need).unwrap_or(0)
+    }
+
+    pub fn kv_used(&self) -> usize {
+        self.kv_used
+    }
+
+    pub fn kv_budget(&self) -> usize {
+        self.kv_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: u64, plen: usize, max_new: usize) -> Request {
+        Request {
+            id,
+            arrival_step: arrival,
+            prompt: (0..plen as i32).collect(),
+            max_new,
+        }
+    }
+
+    /// Run a sequence to completion by feeding a dummy token each step.
+    fn drain(s: &mut Scheduler) -> Vec<u64> {
+        let mut order = Vec::new();
+        for _ in 0..10_000 {
+            let batch = s.batch();
+            if batch.is_empty() && s.pending_len() == 0 {
+                break;
+            }
+            for (slot, _tok) in batch {
+                if let (_, Some(fin)) = s.record(slot, 1) {
+                    order.push(fin.id);
+                }
+            }
+            s.admit(0);
+        }
+        order
+    }
+
+    #[test]
+    fn admit_is_fifo_and_respects_budget() {
+        let mut s = Scheduler::new(4, 20);
+        s.push(req(0, 0, 8, 8)); // needs 16
+        s.push(req(1, 0, 2, 2)); // needs 4 — fits alongside
+        s.push(req(2, 0, 2, 2)); // needs 4 — would fit, but is behind
+        let slots = s.admit(0);
+        assert_eq!(slots, vec![0, 1]);
+        assert_eq!(s.kv_used(), 20);
+        // front (id 2) does not fit => nothing admitted, no skipping
+        assert_eq!(s.admit(0), Vec::<usize>::new());
+        assert_eq!(s.pending_len(), 1);
+    }
+
+    #[test]
+    fn finish_frees_slot_and_budget_no_leak() {
+        let mut s = Scheduler::new(2, 100);
+        for i in 0..5 {
+            s.push(req(i, 0, 3, 2));
+        }
+        s.admit(0);
+        assert_eq!(s.active(), 2);
+        let order = drain(&mut s);
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "completion follows FIFO admission");
+        assert_eq!(s.active(), 0, "no slot leak");
+        assert_eq!(s.kv_used(), 0, "no KV budget leak");
+        assert_eq!(s.admitted, 5);
+        assert_eq!(s.finished, 5);
+    }
+
+    #[test]
+    fn evict_on_finish_lets_waiting_request_in() {
+        // budget fits exactly one request at a time
+        let mut s = Scheduler::new(4, 6);
+        s.push(req(0, 0, 3, 3));
+        s.push(req(1, 0, 3, 3));
+        assert_eq!(s.admit(0), vec![0]);
+        assert_eq!(s.admit(0), Vec::<usize>::new(), "second blocked on KV budget");
+        // run request 0 to completion: 3 prefill + 3 decode steps
+        for _ in 0..6 {
+            let batch = s.batch();
+            for (slot, _) in batch {
+                s.record(slot, 7);
+            }
+        }
+        assert_eq!(s.kv_used(), 0);
+        assert_eq!(s.admit(6), vec![0], "freed budget admits the waiter");
+    }
+
+    #[test]
+    fn prefill_then_decode_token_stream() {
+        let mut s = Scheduler::new(1, 10);
+        s.push(Request {
+            id: 9,
+            arrival_step: 0,
+            prompt: vec![11, 12, 13],
+            max_new: 2,
+        });
+        s.admit(0);
+        // prefill: inputs are prompt tokens; outputs discarded until the
+        // last prompt token's output, which is the first generated token
+        assert_eq!(s.batch(), vec![(0, 11)]);
+        assert!(!s.record(0, 99).0);
+        assert_eq!(s.batch(), vec![(0, 12)]);
+        assert!(!s.record(0, 99).0);
+        assert_eq!(s.batch(), vec![(0, 13)]);
+        assert!(s.record(0, 21).0, "last prefill step emits");
+        // decode: input is the last generated token
+        assert_eq!(s.batch(), vec![(0, 21)]);
+        let (emitted, fin) = s.record(0, 22);
+        assert!(emitted);
+        let Some(fin) = fin else {
+            panic!("sequence should finish at max_new=2")
+        };
+        assert_eq!(fin.generated, vec![21, 22]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Synthetic open-loop traffic: Poisson arrivals, Zipf lengths.
+//!
+//! Arrivals are open-loop (requests show up regardless of server
+//! backlog) with exponential inter-arrival gaps measured in **virtual
+//! decode steps**, so the full arrival/admission/token schedule is a
+//! pure function of the seed — wall-clock speed only moves the timing
+//! numbers, never the token stream. Prompt and output lengths follow
+//! Zipf laws (most requests short, a heavy tail of long ones), and
+//! prompt tokens follow the same Zipf-over-vocab shape as the training
+//! corpus so routing is realistically skewed. Each random axis draws
+//! from its own split [`Pcg32`] stream, so e.g. changing the length
+//! distribution cannot perturb arrival times.
+
+use crate::util::{rng::zipf_cdf, Pcg32};
+
+use super::sched::Request;
+
+/// Traffic shape knobs (all lengths in tokens, gaps in decode steps).
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficCfg {
+    pub requests: usize,
+    /// Mean exponential inter-arrival gap, in decode steps.
+    pub mean_gap_steps: f64,
+    pub max_prompt: usize,
+    pub max_new: usize,
+    /// Zipf exponent of the prompt/output length laws.
+    pub len_zipf_s: f64,
+    pub vocab: usize,
+}
+
+/// Generate the full request trace for one serving run.
+pub fn generate(seed: u64, cfg: &TrafficCfg) -> Vec<Request> {
+    let mut root = Pcg32::new(seed);
+    let mut arrivals = root.split();
+    let mut lens = root.split();
+    let mut toks = root.split();
+    let prompt_cdf = zipf_cdf(cfg.max_prompt, cfg.len_zipf_s);
+    let out_cdf = zipf_cdf(cfg.max_new, cfg.len_zipf_s);
+    let tok_cdf = zipf_cdf(cfg.vocab, 1.1);
+    let mut t = 0.0f64;
+    let mut reqs = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests as u64 {
+        t += arrivals.exp(cfg.mean_gap_steps);
+        let p_len = lens.zipf(&prompt_cdf) + 1;
+        let max_new = lens.zipf(&out_cdf) + 1;
+        let prompt: Vec<i32> = (0..p_len).map(|_| toks.zipf(&tok_cdf) as i32).collect();
+        reqs.push(Request {
+            id,
+            arrival_step: t as u64,
+            prompt,
+            max_new,
+        });
+    }
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrafficCfg {
+        TrafficCfg {
+            requests: 64,
+            mean_gap_steps: 2.0,
+            max_prompt: 24,
+            max_new: 16,
+            len_zipf_s: 1.2,
+            vocab: 128,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(7, &cfg());
+        let b = generate(7, &cfg());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.arrival_step, &x.prompt, x.max_new), (y.arrival_step, &y.prompt, y.max_new));
+        }
+        let c = generate(8, &cfg());
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt || x.arrival_step != y.arrival_step),
+            "different seed must change the trace"
+        );
+    }
+
+    #[test]
+    fn lengths_and_tokens_within_bounds() {
+        let reqs = generate(3, &cfg());
+        assert_eq!(reqs.len(), 64);
+        for r in &reqs {
+            assert!((1..=24).contains(&r.prompt.len()));
+            assert!((1..=16).contains(&r.max_new));
+            assert!(r.prompt.iter().all(|&t| (0..128).contains(&t)));
+        }
+        // Zipf: short requests dominate
+        let short = reqs.iter().filter(|r| r.prompt.len() <= 4).count();
+        assert!(short * 2 > reqs.len(), "short prompts should dominate ({short}/64)");
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_spread() {
+        let reqs = generate(11, &cfg());
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_step <= w[1].arrival_step);
+            assert!(w[0].id < w[1].id);
+        }
+        let last = reqs[reqs.len() - 1].arrival_step;
+        assert!(last > 32, "64 requests at mean gap 2 should span many steps (got {last})");
+    }
+}

@@ -1,14 +1,17 @@
-//! Small utilities: deterministic PRNG, statistics, formatting, JSON
+//! Small utilities: deterministic PRNGs, statistics, formatting, JSON
 //! string escaping.
 //!
 //! The offline crate set has no `rand`, so we carry our own
 //! xoshiro256**-based PRNG (seeded via SplitMix64) — deterministic across
 //! platforms, which the simulator, the synthetic corpus and the property
-//! tests all rely on.
+//! tests all rely on — plus a splittable PCG32 ([`Pcg32`]) for workloads
+//! that need independent per-consumer streams from a single seed.
 
+pub mod pcg;
 pub mod rng;
 pub mod stats;
 
+pub use pcg::Pcg32;
 pub use rng::Rng;
 pub use stats::{mean, median, percentile, stddev};
 

@@ -1,0 +1,177 @@
+//! PCG32: a seeded, *splittable* PRNG for reproducible synthetic
+//! workloads.
+//!
+//! [`super::Rng`] (xoshiro256**) is the crate's general-purpose
+//! generator, but it has no principled way to derive independent
+//! sub-streams: callers have been XOR-ing worker ids into seeds, which
+//! couples every consumer's draw order to every other's. PCG32
+//! (O'Neill 2014) carries an explicit stream-selector increment, so
+//! [`Pcg32::split`] can hand out a child generator on a fresh stream —
+//! seeded *and* sequenced from the parent's output — without perturbing
+//! the parent's own sequence beyond the two draws that derived the
+//! child. The serving traffic generator ([`crate::serve::traffic`])
+//! splits one `--seed` into arrival/length/token streams this way, and
+//! the synthetic corpus ([`crate::data`]) builds its per-domain bigram
+//! permutations from split streams instead of an ad-hoc LCG.
+//!
+//! The output function is the reference `XSH RR` variant; the test
+//! vector below pins it to the canonical `pcg32_srandom(42, 54)`
+//! sequence from the PCG paper's minimal C implementation.
+
+/// The PCG default multiplier (same LCG family as Knuth's MMIX).
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// 32-bit PCG generator (`XSH RR 64/32`) with an explicit stream.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    /// Stream selector: always odd, so every stream is full-period.
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Seeded generator on stream 0.
+    pub fn new(seed: u64) -> Pcg32 {
+        Pcg32::new_stream(seed, 0)
+    }
+
+    /// Seeded generator on an explicit stream (the canonical
+    /// `pcg32_srandom(seed, stream)` init sequence).
+    pub fn new_stream(seed: u64, stream: u64) -> Pcg32 {
+        let mut p = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        p.next_u32();
+        p.state = p.state.wrapping_add(seed);
+        p.next_u32();
+        p
+    }
+
+    /// Next 32-bit output (`XSH RR`: xorshift-high, random rotate).
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws, high word first).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Derive an independent child generator: seed and stream selector
+    /// both come from the parent's own output, so `split()` advances the
+    /// parent by exactly four 32-bit draws and children taken in
+    /// sequence land on distinct streams.
+    pub fn split(&mut self) -> Pcg32 {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        Pcg32::new_stream(seed, stream)
+    }
+
+    /// Uniform f64 in [0, 1) (53-bit mantissa, same recipe as
+    /// [`super::Rng::f64`]).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponential variate with the given mean (inter-arrival gaps of a
+    /// Poisson process).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        // 1 - f64() is in (0, 1], so the log is finite
+        -(1.0 - self.f64()).ln() * mean
+    }
+
+    /// Sample an index from a CDF built by [`super::rng::zipf_cdf`].
+    pub fn zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.f64();
+        match cdf.binary_search_by(|p| p.total_cmp(&u)) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_pcg32_vector() {
+        // First outputs of the PCG paper's minimal C implementation
+        // after pcg32_srandom(42u, 54u).
+        let mut p = Pcg32::new_stream(42, 54);
+        let got: Vec<u32> = (0..6).map(|_| p.next_u32()).collect();
+        assert_eq!(got, vec![0xa15c02b7, 0x7b47f409, 0xba1d3330, 0x83d2f293, 0xbfa4784b, 0xcbed606e]);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        fn seq(seed: u64) -> Vec<u32> {
+            let mut p = Pcg32::new(seed);
+            (0..8).map(|_| p.next_u32()).collect()
+        }
+        assert_eq!(seq(7), seq(7));
+        assert_ne!(seq(7), seq(8));
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_reproducible() {
+        let mut root1 = Pcg32::new(11);
+        let mut root2 = Pcg32::new(11);
+        let mut a1 = root1.split();
+        let mut b1 = root1.split();
+        let mut a2 = root2.split();
+        let mut b2 = root2.split();
+        let sa1: Vec<u32> = (0..16).map(|_| a1.next_u32()).collect();
+        let sb1: Vec<u32> = (0..16).map(|_| b1.next_u32()).collect();
+        let sa2: Vec<u32> = (0..16).map(|_| a2.next_u32()).collect();
+        let sb2: Vec<u32> = (0..16).map(|_| b2.next_u32()).collect();
+        assert_eq!(sa1, sa2, "same root seed => same first child");
+        assert_eq!(sb1, sb2, "same root seed => same second child");
+        assert_ne!(sa1, sb1, "sibling streams differ");
+        // children do not echo the parent's continuation either
+        let sp: Vec<u32> = (0..16).map(|_| root1.next_u32()).collect();
+        assert_ne!(sa1, sp);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_exp_positive() {
+        let mut p = Pcg32::new(3);
+        for _ in 0..1000 {
+            let u = p.f64();
+            assert!((0.0..1.0).contains(&u));
+            let e = p.exp(2.0);
+            assert!(e.is_finite() && e >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_small_indices() {
+        let cdf = crate::util::rng::zipf_cdf(64, 1.2);
+        let mut p = Pcg32::new(5);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..4000 {
+            counts[p.zipf(&cdf)] += 1;
+        }
+        assert!(counts[0] > counts[10], "head of the Zipf law dominates: {counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 4000);
+    }
+}
