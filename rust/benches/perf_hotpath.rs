@@ -346,12 +346,12 @@ fn main() {
     let s5 = bench_median(2, 8, || {
         let coll = Collective::new(4);
         let mut hs = Vec::new();
-        for _ in 0..4 {
+        for w in 0..4 {
             let c = Arc::clone(&coll);
             hs.push(std::thread::spawn(move || {
                 let mut v = vec![1.0f32; 1 << 20];
                 for tag in 0..4u64 {
-                    c.all_reduce_sum(tag, &mut v);
+                    c.all_reduce_sum(w, tag, &mut v).unwrap();
                 }
                 std::hint::black_box(v[0]);
             }));

@@ -15,11 +15,16 @@
 //! * **FL005** every `pub fn par_*`/`*simd*` kernel in
 //!   `backend/kernels.rs` must be exercised by name in
 //!   `tests/kernel_conformance.rs` or `tests/kernel_parity.rs`.
+//! * **FL006** unbounded zero-arg `.recv()` in the distributed-runtime
+//!   modules (`commpool`, `cluster`, `serve`): a dead peer must surface
+//!   as a typed error within a deadline, never as a hang — use
+//!   `recv_timeout` (or the deadline-bounded `Collective` ops).
 //!
 //! An audited site is silenced with a magic comment on the same line or
 //! the line above: `// flowmoe-lint: allow(<rule-name>) — <why>` where
-//! `<rule-name>` is `safety`, `thread_spawn`, `hashmap`, `unwrap` or
-//! `kernel_coverage`. Code under `#[cfg(test)]` is exempt from every
+//! `<rule-name>` is `safety`, `thread_spawn`, `hashmap`, `unwrap`,
+//! `kernel_coverage` or `recv_unbounded`. Code under `#[cfg(test)]` is
+//! exempt from every
 //! rule. The lexer is intentionally approximate (it does not parse
 //! Rust), but it is token-exact for the constructs the rules inspect —
 //! in particular, nothing inside string literals or comments can ever
@@ -604,6 +609,33 @@ fn lint_file(rel: &str, src: &str, kernel_test_idents: &HashSet<String>) -> Vec<
         }
     }
 
+    // FL006: unbounded zero-arg .recv() in the distributed runtime —
+    // the hang class: a dead peer blocks the caller forever
+    let bounded = ["/commpool/", "/cluster/", "/serve/"];
+    if bounded.iter().any(|d| rel.contains(d)) {
+        for p in 0..fl.code.len() {
+            if fl.cmasked(p) {
+                continue;
+            }
+            if fl.ident(p) == Some("recv")
+                && p > 0
+                && fl.is_punct(p - 1, '.')
+                && p + 2 < fl.code.len()
+                && fl.is_punct(p + 1, '(')
+                && fl.is_punct(p + 2, ')')
+            {
+                let line = fl.cline(p);
+                if !fl.allowed(line, "recv_unbounded") {
+                    push(
+                        line,
+                        "FL006",
+                        "unbounded .recv() in a distributed-runtime module; use recv_timeout so a dead peer errors within a deadline".into(),
+                    );
+                }
+            }
+        }
+    }
+
     // FL005: kernel coverage
     if rel.ends_with("backend/kernels.rs") {
         for p in 0..fl.code.len() {
@@ -759,6 +791,31 @@ fn f<'a>(x: &'a str) -> char {
         assert_eq!(lint_str("src/serve/sched.rs", src).len(), 1, "serving hot path is covered");
         assert_eq!(lint_str("src/analyze/mod.rs", src).len(), 0);
         assert_eq!(lint_str("src/commpool/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn unbounded_recv_flagged_in_distributed_modules() {
+        let src = "fn f(rx: Receiver<u8>) { let _ = rx.recv(); }\n";
+        let vs = lint_str("src/commpool/mod.rs", src);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "FL006");
+        assert_eq!(lint_str("src/cluster/mod.rs", src).len(), 1);
+        assert_eq!(lint_str("src/serve/ep.rs", src).len(), 1);
+        // other modules may poll however they like
+        assert_eq!(lint_str("src/sweep/mod.rs", src).len(), 0);
+        // recv with arguments (e.g. the Collective's tagged recv) and
+        // recv_timeout are bounded by construction
+        assert_eq!(
+            lint_str("src/commpool/mod.rs", "fn f() { coll.recv(0, 1, 7); }\n").len(),
+            0
+        );
+        assert_eq!(
+            lint_str("src/serve/ep.rs", "fn f() { rx.recv_timeout(d); }\n").len(),
+            0
+        );
+        // audited allow is honored
+        let allowed = "fn f(rx: Receiver<u8>) {\n    // flowmoe-lint: allow(recv_unbounded) — sender outlives rx\n    let _ = rx.recv();\n}\n";
+        assert_eq!(lint_str("src/commpool/mod.rs", allowed).len(), 0);
     }
 
     #[test]

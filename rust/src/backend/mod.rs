@@ -104,7 +104,7 @@ impl Backend for NativeBackend {
         // a poisoned lock is harmless here: the workspace has no
         // invariants (take() always returns zeroed buffers), so recover
         // it instead of disabling the backend after one caught panic
-        let mut ws_guard = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let mut ws_guard = crate::util::lock_recover(&self.ws);
         let ws = &mut *ws_guard;
         let f32s = |i: usize| inputs[i].f32();
         let out = match kind {

@@ -250,7 +250,7 @@ pub fn ep_block_fwd_bwd(
     // xd: (el, cw, m) with cw = C*P, source s occupies columns [s*C, (s+1)*C)
     let mut xd = vec![0.0f32; el * geo.cw * m];
     for s in 0..p {
-        let part = coll.recv(s, w, tag_base);
+        let part = coll.recv(s, w, tag_base).map_err(|e| anyhow!("a2a recv from {s}: {e}"))?;
         for e in 0..el {
             let dst = (e * geo.cw + s * c) * m;
             let src = e * c * m;
@@ -278,7 +278,7 @@ pub fn ep_block_fwd_bwd(
     }
     let mut out_full = vec![0.0f32; geo.e * c * m];
     for o in 0..p {
-        let part = coll.recv(o, w, tag_base + 1);
+        let part = coll.recv(o, w, tag_base + 1).map_err(|e| anyhow!("a2a recv from {o}: {e}"))?;
         out_full[o * slab..(o + 1) * slab].copy_from_slice(&part);
     }
     drop(sp);
@@ -298,7 +298,7 @@ pub fn ep_block_fwd_bwd(
     }
     let mut dyd = vec![0.0f32; el * geo.cw * m];
     for s in 0..p {
-        let part = coll.recv(s, w, tag_base + 2);
+        let part = coll.recv(s, w, tag_base + 2).map_err(|e| anyhow!("a2a recv from {s}: {e}"))?;
         for e in 0..el {
             let dst = (e * geo.cw + s * c) * m;
             dyd[dst..dst + c * m].copy_from_slice(&part[e * c * m..(e + 1) * c * m]);
@@ -323,7 +323,7 @@ pub fn ep_block_fwd_bwd(
     }
     let mut d_disp = vec![0.0f32; geo.e * c * m];
     for o in 0..p {
-        let part = coll.recv(o, w, tag_base + 3);
+        let part = coll.recv(o, w, tag_base + 3).map_err(|e| anyhow!("a2a recv from {o}: {e}"))?;
         d_disp[o * slab..(o + 1) * slab].copy_from_slice(&part);
     }
     drop(sp);
@@ -363,7 +363,27 @@ pub fn run_ep_cluster(
     xs: Vec<Vec<f32>>,
     dys: Vec<Vec<f32>>,
 ) -> Result<Vec<EpResult>> {
-    let coll = Collective::new(p);
+    run_ep_cluster_faulty(artifacts, cfg, p, atp, w1_full, w2_full, xs, dys, None, crate::ft::DETECT_TIMEOUT_MS)
+}
+
+/// [`run_ep_cluster`] with seeded fault injection: a planned kill (or
+/// drop/delay plan) turns the A2A exchange into typed `a2a recv` errors
+/// on every survivor within `detect_ms` — the regression surface for the
+/// hang class (a dead peer used to block the whole cluster forever).
+#[allow(clippy::too_many_arguments)]
+pub fn run_ep_cluster_faulty(
+    artifacts: &Path,
+    cfg: &str,
+    p: usize,
+    atp: Vec<Vec<f32>>,
+    w1_full: Vec<f32>,
+    w2_full: Vec<f32>,
+    xs: Vec<Vec<f32>>,
+    dys: Vec<Vec<f32>>,
+    fault: Option<crate::ft::FaultPlan>,
+    detect_ms: u64,
+) -> Result<Vec<EpResult>> {
+    let coll = Collective::with_opts(p, detect_ms, fault, 0);
     let dir = artifacts.to_path_buf();
     // kernel-level threads compose with worker-level parallelism: each
     // worker gets an equal share of the caller's budget (min 1), and the
@@ -384,24 +404,53 @@ pub fn run_ep_cluster(
         // whole collective round; joined below.
         // flowmoe-lint: allow(thread_spawn) — long-lived worker, not a task
         handles.push(std::thread::spawn(move || -> Result<EpResult> {
-            kn::with_dispatch(disp, || {
+            let out = kn::with_dispatch(disp, || {
                 crate::sweep::scope::with_budget(worker_budget, || {
                     let mut engine = Engine::new(&dir)?;
                     let geo = ep_geometry(&engine, &cfg, p)?;
+                    if coll.should_die(w, 0) {
+                        // planned fault: this rank vanishes before the
+                        // dispatch A2A; survivors must error, not hang
+                        coll.mark_dead(w);
+                        return Err(anyhow!("worker {w} killed (planned fault)"));
+                    }
                     let shard = w1_full.len() / p;
                     let shard2 = w2_full.len() / p;
                     let w1 = &w1_full[w * shard..(w + 1) * shard];
                     let w2 = &w2_full[w * shard2..(w + 1) * shard2];
                     ep_block_fwd_bwd(&mut engine, &coll, w, &cfg, &geo, &atp, w1, w2, &x, &dy, 100)
                 })
-            })
+            });
+            if out.is_err() {
+                // a failed worker is gone for good; unblock the peers
+                coll.mark_dead(w);
+            }
+            out
         }));
     }
+    // join *all* workers before reporting: a propagated error must not
+    // leave detached threads blocked on the collective
     let mut out = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
     for h in handles {
-        out.push(h.join().map_err(|_| anyhow!("ep worker panicked"))??);
+        match h.join() {
+            Ok(Ok(r)) => out.push(r),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("ep worker panicked"));
+                }
+            }
+        }
     }
-    Ok(out)
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
 }
 
 #[cfg(test)]

@@ -12,24 +12,47 @@
 //! worker; the trainer guarantees this by enqueueing jobs in the
 //! deterministic schedule order the coordinator computed (DESIGN.md §5 —
 //! the same requirement NCCL imposes on the paper's implementation).
+//!
+//! # Fault tolerance
+//!
+//! Every blocking primitive is deadline-bounded and returns
+//! `Result<_, `[`CommError`]`>` instead of hanging on a dead peer: a
+//! worker that dies is marked via [`Collective::mark_dead`] (by its own
+//! thread wrapper, or by a planned kill from the seeded
+//! [`FaultPlan`]), and every survivor waiting on it wakes with a typed
+//! [`CommError::PeerDead`] within the detection window. Message
+//! drop/delay faults are injected in [`Collective::send`] from the same
+//! seeded plan, so a whole failure scenario is a pure function of
+//! `(plan seed, attempt epoch)` and replays exactly.
+//!
+//! After any collective op returns `Err`, the group's reduce/barrier
+//! state is unspecified (partial arrivals remain); recovery re-forms a
+//! fresh `Collective` at the surviving world size. Point-to-point mail
+//! plus [`Collective::revive`] stay usable, which is what the serving
+//! cluster's in-place worker respawn relies on.
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ft::{Delivery, FaultPlan};
+use crate::util::lock_recover;
 
 /// A communication job (runs on the pool thread).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Poison-tolerant lock: a panicked worker already fails the run through
-/// its join handle, so recover the inner state instead of cascading the
-/// panic into every thread sharing the pool.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// Poison-tolerant condvar wait (same rationale as [`lock_recover`]).
+/// Poison-tolerant condvar wait (same rationale as
+/// [`crate::util::lock_recover`]: a panicked worker already fails the
+/// run through its join handle; don't cascade the panic).
 fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
     cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant bounded condvar wait.
+fn wait_timeout_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>, d: Duration) -> MutexGuard<'a, T> {
+    cv.wait_timeout(g, d).unwrap_or_else(PoisonError::into_inner).0
 }
 
 #[derive(Default)]
@@ -163,10 +186,47 @@ pub fn partition_ranges(len: usize, chunk_elems: usize) -> Vec<(usize, usize)> {
 // Real in-process collectives
 // ---------------------------------------------------------------------------
 
+/// Typed failure of a collective op — the hang class turned into errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// A peer was detected dead while this op waited on it.
+    PeerDead { rank: usize, op: &'static str },
+    /// No progress within the detection deadline (an unresponsive peer
+    /// or a dropped message — indistinguishable from outside).
+    Timeout { op: &'static str, waited_ms: u64 },
+    /// The collective was shut down ([`Collective::poison`]) while
+    /// waiting; stale workers from before a recovery exit through this.
+    Closed,
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::PeerDead { rank, op } => write!(f, "peer {rank} dead during {op}"),
+            CommError::Timeout { op, waited_ms } => write!(f, "{op} timed out after {waited_ms}ms"),
+            CommError::Closed => write!(f, "collective closed"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Per-tag all-reduce rendezvous. Contributions are stored per rank and
+/// reduced in **rank order** by the last arriver, so the f32 sum is
+/// bitwise independent of thread arrival order at any world size.
 struct AllReduceSlot {
+    parts: Vec<Option<Vec<f32>>>,
     buf: Vec<f32>,
+    len: usize,
     arrived: usize,
     copied: usize,
+}
+
+/// An injected-delay message parked until its due time.
+struct DelayedMsg {
+    due: Instant,
+    key: (usize, usize, u64),
+    data: Vec<f32>,
 }
 
 struct CollectiveState {
@@ -174,6 +234,34 @@ struct CollectiveState {
     mail: HashMap<(usize, usize, u64), Vec<f32>>,
     barrier_gen: u64,
     barrier_arrived: usize,
+    /// `dead[r]` = rank r is known dead (its waiters error out).
+    dead: Vec<bool>,
+    /// When the first currently-live death was marked (detection-latency
+    /// measurement anchor; cleared when every rank is revived).
+    death_at: Option<Instant>,
+    /// The planned kill fires exactly once per collective.
+    kill_fired: bool,
+    delayed: Vec<DelayedMsg>,
+    closed: bool,
+}
+
+impl CollectiveState {
+    /// Move every due injected-delay message into the mailbox.
+    fn release_due(&mut self, now: Instant) {
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].due <= now {
+                let m = self.delayed.swap_remove(i);
+                self.mail.insert(m.key, m.data);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn first_dead(&self) -> Option<usize> {
+        self.dead.iter().position(|&d| d)
+    }
 }
 
 /// In-process collective context shared by the P workers.
@@ -181,10 +269,23 @@ pub struct Collective {
     p: usize,
     state: Mutex<CollectiveState>,
     cv: Condvar,
+    /// Detection window: any blocking op errors out after this long.
+    deadline: Duration,
+    /// Seeded fault injection plan (None = faultless).
+    fault: Option<FaultPlan>,
+    /// Attempt epoch mixed into fault decisions, so a recovery re-run of
+    /// the same tags does not deterministically re-drop them.
+    epoch: u64,
 }
 
 impl Collective {
     pub fn new(p: usize) -> Arc<Collective> {
+        Collective::with_opts(p, crate::ft::DETECT_TIMEOUT_MS, None, 0)
+    }
+
+    /// Collective with an explicit detection deadline and an optional
+    /// seeded fault plan (`epoch` distinguishes recovery attempts).
+    pub fn with_opts(p: usize, detect_ms: u64, fault: Option<FaultPlan>, epoch: u64) -> Arc<Collective> {
         Arc::new(Collective {
             p,
             state: Mutex::new(CollectiveState {
@@ -192,8 +293,16 @@ impl Collective {
                 mail: HashMap::new(),
                 barrier_gen: 0,
                 barrier_arrived: 0,
+                dead: vec![false; p],
+                death_at: None,
+                kill_fired: false,
+                delayed: Vec::new(),
+                closed: false,
             }),
             cv: Condvar::new(),
+            deadline: Duration::from_millis(detect_ms.max(1)),
+            fault,
+            epoch,
         })
     }
 
@@ -202,65 +311,169 @@ impl Collective {
     }
 
     /// Flat all-reduce (sum) of `data` across all P workers under `tag`.
-    /// Every worker must call with the same tag and equal lengths; tags
-    /// must be globally ordered consistently (see module docs).
-    pub fn all_reduce_sum(&self, tag: u64, data: &mut [f32]) {
+    /// Every worker must call with its own `rank`, the same tag and
+    /// equal lengths; tags must be globally ordered consistently (see
+    /// module docs). The reduction is performed in rank order, so the
+    /// result is bitwise deterministic at any P. Errors within the
+    /// detection window if a peer dies or stalls.
+    pub fn all_reduce_sum(&self, rank: usize, tag: u64, data: &mut [f32]) -> Result<(), CommError> {
+        let p = self.p;
         let mut st = lock_recover(&self.state);
         {
             let slot = st.reduce.entry(tag).or_insert_with(|| AllReduceSlot {
-                buf: vec![0.0; data.len()],
+                parts: (0..p).map(|_| None).collect(),
+                buf: Vec::new(),
+                len: data.len(),
                 arrived: 0,
                 copied: 0,
             });
-            assert_eq!(slot.buf.len(), data.len(), "all_reduce length mismatch (tag {tag})");
-            for (b, d) in slot.buf.iter_mut().zip(data.iter()) {
-                *b += *d;
-            }
+            assert_eq!(slot.len, data.len(), "all_reduce length mismatch (tag {tag})");
+            slot.parts[rank] = Some(data.to_vec());
             slot.arrived += 1;
+            if slot.arrived == p {
+                let mut buf = vec![0.0f32; slot.len];
+                for part in slot.parts.iter_mut() {
+                    if let Some(v) = part.take() {
+                        for (b, d) in buf.iter_mut().zip(&v) {
+                            *b += *d;
+                        }
+                    }
+                }
+                slot.buf = buf;
+            }
         }
-        if st.reduce[&tag].arrived == self.p {
+        if st.reduce.get(&tag).map(|s| s.arrived) == Some(p) {
             self.cv.notify_all();
         } else {
-            while st.reduce.get(&tag).map(|s| s.arrived) != Some(self.p) {
-                st = wait_recover(&self.cv, st);
+            let start = Instant::now();
+            loop {
+                if st.reduce.get(&tag).map(|s| s.arrived) == Some(p) {
+                    break;
+                }
+                if st.closed {
+                    return Err(CommError::Closed);
+                }
+                if let Some(d) = st.first_dead() {
+                    return Err(CommError::PeerDead { rank: d, op: "all_reduce" });
+                }
+                let waited = start.elapsed();
+                if waited >= self.deadline {
+                    return Err(CommError::Timeout {
+                        op: "all_reduce",
+                        waited_ms: waited.as_millis() as u64,
+                    });
+                }
+                st = wait_timeout_recover(&self.cv, st, self.deadline - waited);
             }
         }
         // copy out; last reader removes the slot
         let remove = {
             let Some(slot) = st.reduce.get_mut(&tag) else {
-                return; // unreachable: the slot exists until the last copy below
+                return Ok(()); // unreachable: the slot exists until the last copy below
             };
             data.copy_from_slice(&slot.buf);
             slot.copied += 1;
-            slot.copied == self.p
+            slot.copied == p
         };
         if remove {
             st.reduce.remove(&tag);
             self.cv.notify_all();
         }
+        Ok(())
     }
 
-    /// Deposit a message for `to` (non-blocking).
+    /// Deposit a message for `to` (non-blocking). Subject to the seeded
+    /// fault plan: the message may be dropped or parked until a delay
+    /// elapses.
     pub fn send(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
+        self.send_inner(from, to, tag, data, false);
+    }
+
+    /// Unconditional deposit: bypasses fault injection and overwrites
+    /// any undelivered previous message under the same key. Recovery
+    /// resends and shutdown sentinels use this — a retransmission *must*
+    /// get through, and the original (possibly in-flight delayed) copy
+    /// must not trip the duplicate-send assert.
+    pub fn send_replace(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
+        self.send_inner(from, to, tag, data, true);
+    }
+
+    fn send_inner(&self, from: usize, to: usize, tag: u64, data: Vec<f32>, replace: bool) {
         let mut st = lock_recover(&self.state);
-        let prev = st.mail.insert((from, to, tag), data);
-        assert!(prev.is_none(), "duplicate send ({from}->{to}, tag {tag})");
+        if !replace {
+            if let Some(plan) = &self.fault {
+                match plan.delivery(self.epoch, from, to, tag) {
+                    Delivery::Drop => return,
+                    Delivery::Delay(ms) => {
+                        st.delayed.push(DelayedMsg {
+                            due: Instant::now() + Duration::from_millis(ms),
+                            key: (from, to, tag),
+                            data,
+                        });
+                        self.cv.notify_all();
+                        return;
+                    }
+                    Delivery::Deliver => {}
+                }
+            }
+            let prev = st.mail.insert((from, to, tag), data);
+            assert!(prev.is_none(), "duplicate send ({from}->{to}, tag {tag})");
+        } else {
+            st.delayed.retain(|m| m.key != (from, to, tag));
+            st.mail.insert((from, to, tag), data);
+        }
         self.cv.notify_all();
     }
 
-    /// Blocking receive from `from`.
-    pub fn recv(&self, from: usize, to: usize, tag: u64) -> Vec<f32> {
+    /// Bounded receive from `from` (default detection deadline).
+    pub fn recv(&self, from: usize, to: usize, tag: u64) -> Result<Vec<f32>, CommError> {
+        self.recv_timeout(from, to, tag, self.deadline)
+    }
+
+    /// Receive with an explicit deadline. Errors with
+    /// [`CommError::PeerDead`] as soon as `from` is known dead (unless a
+    /// delayed message for this key is still in flight), or with
+    /// [`CommError::Timeout`] once the deadline passes.
+    pub fn recv_timeout(&self, from: usize, to: usize, tag: u64, deadline: Duration) -> Result<Vec<f32>, CommError> {
+        let start = Instant::now();
         let mut st = lock_recover(&self.state);
         loop {
+            let now = Instant::now();
+            st.release_due(now);
             if let Some(v) = st.mail.remove(&(from, to, tag)) {
-                return v;
+                return Ok(v);
             }
-            st = wait_recover(&self.cv, st);
+            if st.closed {
+                return Err(CommError::Closed);
+            }
+            let pending = st
+                .delayed
+                .iter()
+                .filter(|m| m.key == (from, to, tag))
+                .map(|m| m.due)
+                .min();
+            if st.dead[from] && pending.is_none() {
+                return Err(CommError::PeerDead { rank: from, op: "recv" });
+            }
+            let waited = now.saturating_duration_since(start);
+            if waited >= deadline {
+                return Err(CommError::Timeout {
+                    op: "recv",
+                    waited_ms: waited.as_millis() as u64,
+                });
+            }
+            let mut wait = deadline - waited;
+            if let Some(due) = pending {
+                let until_due = due.saturating_duration_since(now).max(Duration::from_millis(1));
+                wait = wait.min(until_due);
+            }
+            st = wait_timeout_recover(&self.cv, st, wait);
         }
     }
 
-    /// Generation barrier across all workers.
-    pub fn barrier(&self) {
+    /// Generation barrier across all workers; errors within the
+    /// detection window if a peer dies or stalls.
+    pub fn barrier(&self) -> Result<(), CommError> {
         let mut st = lock_recover(&self.state);
         let gen = st.barrier_gen;
         st.barrier_arrived += 1;
@@ -268,11 +481,90 @@ impl Collective {
             st.barrier_arrived = 0;
             st.barrier_gen += 1;
             self.cv.notify_all();
-        } else {
-            while st.barrier_gen == gen {
-                st = wait_recover(&self.cv, st);
+            return Ok(());
+        }
+        let start = Instant::now();
+        while st.barrier_gen == gen {
+            if st.closed {
+                return Err(CommError::Closed);
+            }
+            if let Some(d) = st.first_dead() {
+                return Err(CommError::PeerDead { rank: d, op: "barrier" });
+            }
+            let waited = start.elapsed();
+            if waited >= self.deadline {
+                return Err(CommError::Timeout {
+                    op: "barrier",
+                    waited_ms: waited.as_millis() as u64,
+                });
+            }
+            st = wait_timeout_recover(&self.cv, st, self.deadline - waited);
+        }
+        Ok(())
+    }
+
+    /// Mark `rank` dead: every op waiting on it wakes with
+    /// [`CommError::PeerDead`]. Idempotent; the first marking anchors
+    /// [`Collective::death_time`].
+    pub fn mark_dead(&self, rank: usize) {
+        let mut st = lock_recover(&self.state);
+        if !st.dead[rank] {
+            st.dead[rank] = true;
+            if st.death_at.is_none() {
+                st.death_at = Some(Instant::now());
             }
         }
+        self.cv.notify_all();
+    }
+
+    /// Clear the dead mark on `rank` (a replacement worker took over its
+    /// slot, as in the serving cluster's in-place respawn).
+    pub fn revive(&self, rank: usize) {
+        let mut st = lock_recover(&self.state);
+        st.dead[rank] = false;
+        if st.first_dead().is_none() {
+            st.death_at = None;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Lowest-numbered rank currently marked dead.
+    pub fn first_dead(&self) -> Option<usize> {
+        lock_recover(&self.state).first_dead()
+    }
+
+    /// When the first currently-live death was marked (for detection
+    /// latency: `death_time().elapsed()` at the moment the error
+    /// surfaced).
+    pub fn death_time(&self) -> Option<Instant> {
+        lock_recover(&self.state).death_at
+    }
+
+    /// True exactly once for the `(rank, step)` named by the fault
+    /// plan's kill — the worker that draws `true` simulates its crash.
+    pub fn should_die(&self, rank: usize, step: usize) -> bool {
+        let Some(plan) = &self.fault else {
+            return false;
+        };
+        if plan.kill != Some((rank, step)) {
+            return false;
+        }
+        let mut st = lock_recover(&self.state);
+        if st.kill_fired {
+            return false;
+        }
+        st.kill_fired = true;
+        true
+    }
+
+    /// Permanently close the collective: every current and future
+    /// blocking op returns [`CommError::Closed`]. Used at shutdown so
+    /// stale pre-recovery workers exit promptly instead of idling out
+    /// their timeout.
+    pub fn poison(&self) {
+        let mut st = lock_recover(&self.state);
+        st.closed = true;
+        self.cv.notify_all();
     }
 }
 
@@ -352,7 +644,7 @@ mod tests {
             let c = Arc::clone(&coll);
             handles.push(std::thread::spawn(move || {
                 let mut v = vec![w as f32 + 1.0; 8];
-                c.all_reduce_sum(1, &mut v);
+                c.all_reduce_sum(w, 1, &mut v).unwrap();
                 v
             }));
         }
@@ -373,7 +665,7 @@ mod tests {
                 let mut out = Vec::new();
                 for tag in 0..20u64 {
                     let mut v = vec![(w + 1) as f32 * (tag + 1) as f32; 4];
-                    c.all_reduce_sum(tag, &mut v);
+                    c.all_reduce_sum(w, tag, &mut v).unwrap();
                     out.push(v[0]);
                 }
                 out
@@ -388,12 +680,39 @@ mod tests {
     }
 
     #[test]
+    fn all_reduce_is_rank_order_deterministic() {
+        // f32 addition is not associative: 1e8 + 1 - 1e8 = 0.0 in rank
+        // order (the 1.0 is absorbed), but -1e8 arriving second would
+        // give 1.0. With per-rank parts reduced in rank order the result
+        // must be exactly 0.0 no matter which thread arrives last.
+        let p = 3;
+        let contrib = [1e8f32, 1.0, -1e8];
+        for round in 0..20u64 {
+            let coll = Collective::new(p);
+            let mut handles = Vec::new();
+            for w in 0..p {
+                let c = Arc::clone(&coll);
+                let x = contrib[w];
+                handles.push(std::thread::spawn(move || {
+                    let mut v = vec![x; 4];
+                    c.all_reduce_sum(w, round, &mut v).unwrap();
+                    v
+                }));
+            }
+            for h in handles {
+                let v = h.join().unwrap();
+                assert!(v.iter().all(|&x| x == 0.0), "round {round}: got {v:?}");
+            }
+        }
+    }
+
+    #[test]
     fn send_recv_roundtrip() {
         let coll = Collective::new(2);
         let c1 = Arc::clone(&coll);
         let t = std::thread::spawn(move || c1.recv(0, 1, 7));
         coll.send(0, 1, 7, vec![1.0, 2.0, 3.0]);
-        assert_eq!(t.join().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.join().unwrap().unwrap(), vec![1.0, 2.0, 3.0]);
     }
 
     #[test]
@@ -407,14 +726,113 @@ mod tests {
             let n = Arc::clone(&counter);
             handles.push(std::thread::spawn(move || {
                 n.fetch_add(1, Ordering::SeqCst);
-                c.barrier();
+                c.barrier().unwrap();
                 // after the barrier every increment must be visible
                 assert_eq!(n.load(Ordering::SeqCst), 3);
-                c.barrier();
+                c.barrier().unwrap();
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn dead_peer_errors_within_deadline() {
+        // 3-worker group, one killed: the survivors' collective ops must
+        // surface a typed error well before the 2s deadline, not hang.
+        let p = 3;
+        let coll = Collective::with_opts(p, 2000, None, 0);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for w in 0..p {
+            let c = Arc::clone(&coll);
+            handles.push(std::thread::spawn(move || {
+                if w == 2 {
+                    c.mark_dead(2); // simulated crash before the barrier
+                    return Ok(());
+                }
+                c.barrier()
+            }));
+        }
+        let mut errs = 0;
+        for h in handles {
+            match h.join().unwrap() {
+                Ok(()) => {}
+                Err(CommError::PeerDead { rank, op }) => {
+                    assert_eq!(rank, 2);
+                    assert_eq!(op, "barrier");
+                    errs += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(errs, 2, "both survivors must observe the death");
+        assert!(t0.elapsed() < Duration::from_millis(1900), "detection must beat the deadline");
+    }
+
+    #[test]
+    fn recv_timeout_on_silent_peer() {
+        let coll = Collective::with_opts(2, 30_000, None, 0);
+        let t0 = Instant::now();
+        let err = coll.recv_timeout(0, 1, 9, Duration::from_millis(100)).unwrap_err();
+        assert!(matches!(err, CommError::Timeout { op: "recv", .. }), "got {err:?}");
+        assert!(t0.elapsed() >= Duration::from_millis(100));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn dropped_message_surfaces_as_timeout() {
+        let plan = FaultPlan {
+            drop_prob: 1.0,
+            ..FaultPlan::default()
+        };
+        let coll = Collective::with_opts(2, 30_000, Some(plan), 0);
+        coll.send(0, 1, 3, vec![1.0]);
+        let err = coll.recv_timeout(0, 1, 3, Duration::from_millis(80)).unwrap_err();
+        assert!(matches!(err, CommError::Timeout { .. }), "got {err:?}");
+        // a replace-send must get through regardless of the plan
+        coll.send_replace(0, 1, 3, vec![2.0]);
+        assert_eq!(coll.recv(0, 1, 3).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn delayed_message_is_delivered_late() {
+        let plan = FaultPlan {
+            delay_prob: 1.0,
+            delay_ms: 50,
+            ..FaultPlan::default()
+        };
+        let coll = Collective::with_opts(2, 30_000, Some(plan), 0);
+        let t0 = Instant::now();
+        coll.send(0, 1, 11, vec![7.0]);
+        let got = coll.recv_timeout(0, 1, 11, Duration::from_secs(10)).unwrap();
+        assert_eq!(got, vec![7.0]);
+        assert!(t0.elapsed() >= Duration::from_millis(40), "delivery was not delayed");
+    }
+
+    #[test]
+    fn should_die_fires_exactly_once() {
+        let plan = FaultPlan {
+            kill: Some((1, 5)),
+            ..FaultPlan::default()
+        };
+        let coll = Collective::with_opts(2, 1000, Some(plan), 0);
+        assert!(!coll.should_die(0, 5), "wrong rank");
+        assert!(!coll.should_die(1, 4), "wrong step");
+        assert!(coll.should_die(1, 5), "planned kill fires");
+        assert!(!coll.should_die(1, 5), "and only once");
+    }
+
+    #[test]
+    fn poison_unblocks_waiters() {
+        let coll = Collective::with_opts(2, 60_000, None, 0);
+        let c1 = Arc::clone(&coll);
+        let t = std::thread::spawn(move || c1.recv(0, 1, 1));
+        std::thread::sleep(Duration::from_millis(20));
+        coll.poison();
+        assert_eq!(t.join().unwrap().unwrap_err(), CommError::Closed);
+        // subsequent ops fail fast too
+        assert_eq!(coll.barrier().unwrap_err(), CommError::Closed);
     }
 }

@@ -92,6 +92,21 @@ impl Corpus {
     pub fn vocab(&self) -> usize {
         self.vocab
     }
+
+    /// Snapshot the data cursor. The corpus tables (`domain_*`, `succ`)
+    /// are a pure function of `(vocab, seed)` fixed at construction; the
+    /// only mutable state is the sampling PRNG, so `(vocab, seed, rng
+    /// state)` fully determines every future sample — that is what the
+    /// trainer checkpoints.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the data cursor from a [`Corpus::rng_state`] snapshot
+    /// taken on a corpus built with the same `(vocab, seed)`.
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
 }
 
 /// Routing-skew generator for the load-imbalance studies (Table A.11):
@@ -128,6 +143,17 @@ mod tests {
         let mut a = Corpus::new(256, 1);
         let mut b = Corpus::new(256, 2);
         assert_ne!(a.batch(2, 32), b.batch(2, 32));
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_mid_stream() {
+        let mut a = Corpus::new(256, 17);
+        a.batch(3, 16); // advance the cursor past construction
+        let snap = a.rng_state();
+        let expect = a.batch(4, 32);
+        let mut b = Corpus::new(256, 17);
+        b.set_rng_state(snap);
+        assert_eq!(expect, b.batch(4, 32), "restored cursor continues bitwise");
     }
 
     #[test]

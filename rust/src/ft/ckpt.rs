@@ -1,0 +1,427 @@
+//! Dep-free, CRC-checked, atomic training checkpoints.
+//!
+//! Binary layout (all integers little-endian):
+//!
+//! ```text
+//! magic  b"FMCK"                      4 bytes
+//! version u32 (= 1)                   4 bytes
+//! crc32   u32 over everything below   4 bytes
+//! cfg     u32 len + UTF-8 bytes
+//! step    u64
+//! workers u32, then workers x [u64; 4] corpus RNG states
+//! params  u32 count, then per tensor: u64 len + len x f32
+//! moms    u32 count, then per tensor: u64 len + len x f32
+//! ```
+//!
+//! The CRC (IEEE 802.3, the zlib polynomial) is verified **before** any
+//! payload parsing, so a bit-flipped or truncated file is rejected with
+//! a typed [`CkptError`] — never a panic, never a silent partial load.
+//! Writes go through a `.tmp` file + `sync_all` + atomic rename, so a
+//! crash mid-write leaves at most a `.tmp` orphan and the previous
+//! checkpoint intact; [`latest_valid`] then picks the newest file that
+//! passes validation.
+
+use std::fmt;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// Full native training state at a step boundary: everything needed to
+/// continue bitwise — parameters, momentum buffers, the step counter,
+/// and each worker's data-cursor PRNG state. The corpus *tables* are a
+/// pure function of `(cfg, seed)` and are reconstructed, not stored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Config preset name; restore refuses a mismatch.
+    pub cfg: String,
+    /// Steps completed when the snapshot was taken.
+    pub step: u64,
+    /// Per-worker corpus RNG state (index = DP rank).
+    pub corpus_rng: Vec<[u64; 4]>,
+    pub params: Vec<Vec<f32>>,
+    pub moms: Vec<Vec<f32>>,
+}
+
+/// Typed checkpoint failure. Corruption is an `Err`, never a panic.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// File shorter than the fixed header.
+    TooShort { len: usize },
+    BadMagic,
+    BadVersion { got: u32 },
+    CrcMismatch { want: u32, got: u32 },
+    /// Payload ended inside `field` (only reachable past a CRC match,
+    /// i.e. on a collision — kept as defense in depth).
+    Truncated { field: &'static str },
+    Malformed { what: String },
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CkptError::TooShort { len } => write!(f, "checkpoint too short ({len} bytes)"),
+            CkptError::BadMagic => write!(f, "not a checkpoint (bad magic)"),
+            CkptError::BadVersion { got } => write!(f, "unsupported checkpoint version {got}"),
+            CkptError::CrcMismatch { want, got } => {
+                write!(f, "checkpoint corrupt: crc {got:08x}, expected {want:08x}")
+            }
+            CkptError::Truncated { field } => write!(f, "checkpoint truncated in {field}"),
+            CkptError::Malformed { what } => write!(f, "checkpoint malformed: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> CkptError {
+        CkptError::Io(e)
+    }
+}
+
+const MAGIC: &[u8; 4] = b"FMCK";
+const VERSION: u32 = 1;
+/// magic + version + crc
+const HEADER: usize = 12;
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 (IEEE, reflected, init/xorout `0xFFFFFFFF` — zlib's crc32).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Bounds-checked little-endian reader over the payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], CkptError> {
+        let end = self.i.checked_add(n).ok_or(CkptError::Truncated { field })?;
+        if end > self.b.len() {
+            return Err(CkptError::Truncated { field });
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, CkptError> {
+        let s = self.take(4, field)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, CkptError> {
+        let s = self.take(8, field)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    /// Length-prefixed f32 vector; the length is validated against the
+    /// remaining bytes *before* allocating, so an absurd corrupt length
+    /// errors instead of attempting a huge allocation.
+    fn f32_vec(&mut self, field: &'static str) -> Result<Vec<f32>, CkptError> {
+        let len = self.u64(field)?;
+        let n: usize = len.try_into().map_err(|_| CkptError::Malformed {
+            what: format!("{field} length {len} overflows usize"),
+        })?;
+        if n > self.remaining() / 4 {
+            return Err(CkptError::Malformed {
+                what: format!("{field} length {n} exceeds remaining payload"),
+            });
+        }
+        let s = self.take(n * 4, field)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Serialize to the on-disk byte layout (header + CRC included).
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut pay = Vec::new();
+    pay.extend_from_slice(&(ck.cfg.len() as u32).to_le_bytes());
+    pay.extend_from_slice(ck.cfg.as_bytes());
+    pay.extend_from_slice(&ck.step.to_le_bytes());
+    pay.extend_from_slice(&(ck.corpus_rng.len() as u32).to_le_bytes());
+    for s in &ck.corpus_rng {
+        for w in s {
+            pay.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    for group in [&ck.params, &ck.moms] {
+        pay.extend_from_slice(&(group.len() as u32).to_le_bytes());
+        for t in group.iter() {
+            pay.extend_from_slice(&(t.len() as u64).to_le_bytes());
+            for x in t {
+                pay.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER + pay.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&crc32(&pay).to_le_bytes());
+    out.extend_from_slice(&pay);
+    out
+}
+
+/// Parse and validate the on-disk byte layout.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CkptError> {
+    if bytes.len() < HEADER {
+        return Err(CkptError::TooShort { len: bytes.len() });
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != VERSION {
+        return Err(CkptError::BadVersion { got: version });
+    }
+    let want = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    let got = crc32(&bytes[HEADER..]);
+    if want != got {
+        return Err(CkptError::CrcMismatch { want, got });
+    }
+    let mut cur = Cur {
+        b: &bytes[HEADER..],
+        i: 0,
+    };
+    let cfg_len = cur.u32("cfg")? as usize;
+    if cfg_len > cur.remaining() {
+        return Err(CkptError::Malformed {
+            what: format!("cfg length {cfg_len} exceeds payload"),
+        });
+    }
+    let cfg = std::str::from_utf8(cur.take(cfg_len, "cfg")?)
+        .map_err(|e| CkptError::Malformed {
+            what: format!("cfg not utf-8: {e}"),
+        })?
+        .to_string();
+    let step = cur.u64("step")?;
+    let n_workers = cur.u32("workers")? as usize;
+    if n_workers > cur.remaining() / 32 {
+        return Err(CkptError::Malformed {
+            what: format!("worker count {n_workers} exceeds payload"),
+        });
+    }
+    let mut corpus_rng = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = cur.u64("corpus_rng")?;
+        }
+        corpus_rng.push(s);
+    }
+    let mut groups: [Vec<Vec<f32>>; 2] = [Vec::new(), Vec::new()];
+    for (gi, name) in [(0, "params"), (1, "moms")] {
+        let n = cur.u32(name)? as usize;
+        if n > cur.remaining() / 8 {
+            return Err(CkptError::Malformed {
+                what: format!("{name} count {n} exceeds payload"),
+            });
+        }
+        groups[gi] = (0..n).map(|_| cur.f32_vec(name)).collect::<Result<_, _>>()?;
+    }
+    if cur.remaining() != 0 {
+        return Err(CkptError::Malformed {
+            what: format!("{} trailing bytes", cur.remaining()),
+        });
+    }
+    let [params, moms] = groups;
+    Ok(Checkpoint {
+        cfg,
+        step,
+        corpus_rng,
+        params,
+        moms,
+    })
+}
+
+fn ckpt_name(step: u64) -> String {
+    format!("ckpt_{step:010}.bin")
+}
+
+/// Write `ck` into `dir` atomically (`.tmp` + fsync + rename). Returns
+/// the final path.
+pub fn save_atomic(dir: &Path, ck: &Checkpoint) -> Result<PathBuf, CkptError> {
+    fs::create_dir_all(dir)?;
+    let name = ckpt_name(ck.step);
+    let path = dir.join(&name);
+    let tmp = dir.join(format!("{name}.tmp"));
+    let bytes = encode(ck);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &path)?;
+    Ok(path)
+}
+
+/// Read and validate one checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+    decode(&fs::read(path)?)
+}
+
+/// Newest *valid* checkpoint in `dir`: candidates are `ckpt_<step>.bin`
+/// files ordered by step descending; the first that passes full
+/// validation wins, corrupt or truncated files are skipped. A missing
+/// directory or no valid candidate is `Ok(None)`.
+pub fn latest_valid(dir: &Path) -> Result<Option<(PathBuf, Checkpoint)>, CkptError> {
+    if !dir.is_dir() {
+        return Ok(None);
+    }
+    let mut steps: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(mid) = name.strip_prefix("ckpt_").and_then(|s| s.strip_suffix(".bin")) else {
+            continue;
+        };
+        if mid.is_empty() || !mid.bytes().all(|b| b.is_ascii_digit()) {
+            continue;
+        }
+        let Ok(step) = mid.parse::<u64>() else { continue };
+        steps.push((step, entry.path()));
+    }
+    steps.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in steps {
+        if let Ok(ck) = load(&path) {
+            return Ok(Some((path, ck)));
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            cfg: "tiny".to_string(),
+            step: 12,
+            corpus_rng: vec![[1, 2, 3, 4], [5, 6, 7, 8]],
+            params: vec![vec![0.5, -1.25, 3.0], vec![2.0; 7]],
+            moms: vec![vec![0.0, 0.125, -0.5], vec![0.25; 7]],
+        }
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bitwise() {
+        let ck = sample();
+        let bytes = encode(&ck);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn empty_tensors_roundtrip() {
+        let ck = Checkpoint {
+            cfg: String::new(),
+            step: 0,
+            corpus_rng: vec![],
+            params: vec![vec![]],
+            moms: vec![vec![]],
+        };
+        assert_eq!(decode(&encode(&ck)).unwrap(), ck);
+    }
+
+    #[test]
+    fn bit_flip_is_rejected_typed() {
+        let bytes = encode(&sample());
+        // flip one bit in a few representative positions across the file
+        for pos in [0, 5, 9, HEADER, HEADER + 7, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            let err = decode(&bad).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    CkptError::BadMagic | CkptError::BadVersion { .. } | CkptError::CrcMismatch { .. }
+                ),
+                "pos {pos}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected_typed() {
+        let bytes = encode(&sample());
+        for keep in [0, 3, 11, HEADER, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode(&bytes[..keep]).unwrap_err();
+            assert!(
+                matches!(err, CkptError::TooShort { .. } | CkptError::CrcMismatch { .. }),
+                "keep {keep}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn save_load_latest_valid() {
+        let dir = std::env::temp_dir().join(format!("flowmoe_ckpt_test_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut a = sample();
+        a.step = 4;
+        let mut b = sample();
+        b.step = 8;
+        b.params[0][0] = 9.0;
+        save_atomic(&dir, &a).unwrap();
+        let pb = save_atomic(&dir, &b).unwrap();
+        assert_eq!(pb.file_name().unwrap().to_str().unwrap(), "ckpt_0000000008.bin");
+        let (path, got) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(path, pb);
+        assert_eq!(got, b);
+        // corrupt the newest: the older valid checkpoint must win
+        let mut bytes = fs::read(&pb).unwrap();
+        let n = bytes.len();
+        bytes[n - 2] ^= 0xFF;
+        fs::write(&pb, &bytes).unwrap();
+        let (_, got) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(got, a, "newest is corrupt; older valid wins");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_none() {
+        let dir = std::env::temp_dir().join("flowmoe_ckpt_never_created_xyzzy");
+        assert!(latest_valid(&dir).unwrap().is_none());
+    }
+}

@@ -1,0 +1,147 @@
+//! Seeded fault-injection plans.
+//!
+//! A [`FaultPlan`] describes one failure scenario as pure data: at most
+//! one planned worker kill, plus per-message drop/delay probabilities.
+//! Every per-message decision is a keyed hash of `(seed, epoch, from,
+//! to, tag)` — no global RNG stream — so injection is insensitive to
+//! thread interleaving and the whole scenario replays bit-for-bit from
+//! the seed. The attempt `epoch` is mixed in so a recovery re-run of the
+//! same tags does not deterministically re-drop the exact messages that
+//! failed the previous attempt.
+
+/// One seeded failure scenario.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Keyed-hash seed for the drop/delay decisions.
+    pub seed: u64,
+    /// `Some((rank, step))`: that worker simulates a crash at that step.
+    /// Fires at most once per collective (see `Collective::should_die`).
+    pub kill: Option<(usize, usize)>,
+    /// Probability a message is silently dropped.
+    pub drop_prob: f64,
+    /// Probability a message is parked for [`FaultPlan::delay_ms`].
+    pub delay_prob: f64,
+    /// Injected delivery delay in milliseconds.
+    pub delay_ms: u64,
+}
+
+/// Fate of one message under a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    Deliver,
+    Drop,
+    Delay(u64),
+}
+
+/// SplitMix64 finalizer — the avalanche stage only (the caller supplies
+/// the already-combined key).
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Keyed, deterministic fate of the `(from, to, tag)` message in
+    /// attempt `epoch`.
+    pub fn delivery(&self, epoch: u64, from: usize, to: usize, tag: u64) -> Delivery {
+        if self.drop_prob <= 0.0 && self.delay_prob <= 0.0 {
+            return Delivery::Deliver;
+        }
+        let mut h = mix(self.seed ^ 0x6F74_5F66_6175_6C74); // "ft_fault"
+        for v in [epoch, from as u64, to as u64, tag] {
+            h = mix(h.wrapping_add(0x9E3779B97F4A7C15).wrapping_add(v));
+        }
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.drop_prob {
+            Delivery::Drop
+        } else if u < self.drop_prob + self.delay_prob {
+            Delivery::Delay(self.delay_ms)
+        } else {
+            Delivery::Deliver
+        }
+    }
+
+    /// The same plan with the kill disarmed — recovery attempts keep the
+    /// message-level faults but must not re-kill the replaced worker.
+    pub fn without_kill(&self) -> FaultPlan {
+        FaultPlan {
+            kill: None,
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_per_key() {
+        let plan = FaultPlan {
+            seed: 42,
+            drop_prob: 0.3,
+            delay_prob: 0.2,
+            delay_ms: 10,
+            ..FaultPlan::default()
+        };
+        for tag in 0..200u64 {
+            assert_eq!(plan.delivery(0, 1, 2, tag), plan.delivery(0, 1, 2, tag));
+        }
+    }
+
+    #[test]
+    fn epoch_decorrelates_attempts() {
+        // the same tag must not share its fate across epochs in lockstep
+        let plan = FaultPlan {
+            seed: 7,
+            drop_prob: 0.5,
+            ..FaultPlan::default()
+        };
+        let differs = (0..400u64)
+            .filter(|&tag| plan.delivery(0, 0, 1, tag) != plan.delivery(1, 0, 1, tag))
+            .count();
+        assert!(differs > 100, "epochs too correlated: {differs}/400 differ");
+    }
+
+    #[test]
+    fn probabilities_are_respected_roughly() {
+        let plan = FaultPlan {
+            seed: 3,
+            drop_prob: 0.25,
+            delay_prob: 0.25,
+            delay_ms: 5,
+            ..FaultPlan::default()
+        };
+        let n = 4000u64;
+        let mut drops = 0;
+        let mut delays = 0;
+        for tag in 0..n {
+            match plan.delivery(0, 0, 1, tag) {
+                Delivery::Drop => drops += 1,
+                Delivery::Delay(ms) => {
+                    assert_eq!(ms, 5);
+                    delays += 1;
+                }
+                Delivery::Deliver => {}
+            }
+        }
+        let (d, y) = (drops as f64 / n as f64, delays as f64 / n as f64);
+        assert!((d - 0.25).abs() < 0.05, "drop rate {d}");
+        assert!((y - 0.25).abs() < 0.05, "delay rate {y}");
+    }
+
+    #[test]
+    fn zero_probability_always_delivers() {
+        let plan = FaultPlan {
+            seed: 11,
+            kill: Some((0, 3)),
+            ..FaultPlan::default()
+        };
+        for tag in 0..100u64 {
+            assert_eq!(plan.delivery(0, 0, 1, tag), Delivery::Deliver);
+        }
+        assert_eq!(plan.without_kill().kill, None);
+        assert_eq!(plan.without_kill().seed, 11);
+    }
+}

@@ -1,0 +1,247 @@
+//! Fault tolerance: deterministic checkpoint/restore, seeded fault
+//! injection, and elastic recovery for the native training path.
+//!
+//! Three pieces (paper Appendix K, made real instead of modeled):
+//!
+//! 1. [`ckpt`] — dep-free CRC-checked atomic snapshots of the full
+//!    training state (params, momenta, step counter, per-worker data
+//!    cursors), with a bitwise resume contract: train 2N steps ==
+//!    train N + checkpoint + restore + train N.
+//! 2. [`fault`] — a seeded [`FaultPlan`] (worker kill at a step,
+//!    per-message drop/delay) injected into
+//!    [`crate::commpool::Collective`], whose deadline-bounded ops turn
+//!    the hang class into typed [`crate::commpool::CommError`]s.
+//! 3. Elastic recovery — on a detected failure the `trainer::train_dp`
+//!    driver aborts the step, re-forms the collective at P−1 (re-sharding
+//!    the casualty's experts via [`reshard_survivors`]), reloads the
+//!    newest valid checkpoint and continues; each phase is timed under
+//!    `ft_detect` / `ft_reshard` / `ft_restore` obs spans and recorded
+//!    in `BENCH_fault.json` ([`bench_json`]).
+
+pub mod ckpt;
+pub mod fault;
+
+pub use ckpt::{latest_valid, load, save_atomic, Checkpoint, CkptError};
+pub use fault::{Delivery, FaultPlan};
+
+/// Default checkpoint cadence (steps) when `--ckpt-dir` is set without
+/// an explicit `--ckpt-every`.
+pub const DEFAULT_CKPT_EVERY: usize = 10;
+
+/// Default failure-detection window: a collective op that makes no
+/// progress for this long surfaces a typed error instead of hanging.
+pub const DETECT_TIMEOUT_MS: u64 = 30_000;
+
+/// One completed recovery, as recorded by the `train_dp` driver. The
+/// non-`*_ms` fields are a pure function of the options + fault seed
+/// (they land in the deterministic block of `BENCH_fault.json`).
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    /// Rank retired from the group (the detected casualty).
+    pub failed_rank: usize,
+    /// Step the failure surfaced at.
+    pub detected_step: usize,
+    /// Step of the checkpoint training restarted from.
+    pub ckpt_step: usize,
+    /// Steps of work discarded: progress past the checkpoint when the
+    /// failure hit.
+    pub steps_lost: usize,
+    /// World size after the recovery.
+    pub p_after: usize,
+    /// `reshard[e]` = survivor ranks serving expert `e` after recovery.
+    pub reshard: Vec<Vec<usize>>,
+    /// Kill -> error-surfaced latency (wall clock).
+    pub detect_ms: f64,
+    pub reshard_ms: f64,
+    pub restore_ms: f64,
+}
+
+/// Re-shard `e` experts across `survivors` ranks after a failure,
+/// ranked by observed routing `counts`. With at least as many survivors
+/// as experts this is exactly the serving planner
+/// ([`crate::serve::ep::plan_replicas`]); with fewer, experts are
+/// assigned hottest-first to the least-loaded survivor (ties to the
+/// smaller rank), so the doubled load of Appendix K.3 lands on as few
+/// ranks as possible. Returns `assignment[e]` = survivor ranks serving
+/// expert `e`.
+pub fn reshard_survivors(e: usize, survivors: usize, counts: &[u64]) -> Vec<Vec<usize>> {
+    debug_assert_eq!(counts.len(), e);
+    assert!(survivors > 0, "cannot reshard onto zero survivors");
+    if survivors >= e {
+        return crate::serve::ep::plan_replicas(e, survivors, counts, survivors);
+    }
+    let mut order: Vec<usize> = (0..e).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(counts[i]), i));
+    let mut load = vec![0u64; survivors];
+    let mut assignment = vec![Vec::new(); e];
+    for &ex in &order {
+        let mut best = 0;
+        for w in 1..survivors {
+            if load[w] < load[best] {
+                best = w;
+            }
+        }
+        assignment[ex].push(best);
+        load[best] += counts[ex].max(1);
+    }
+    assignment
+}
+
+/// Render `BENCH_fault.json`: the `"deterministic"` block is a pure
+/// function of the options + fault seed (steps lost, reshard plans),
+/// the `"timing"` block carries wall-clock recovery latencies — the
+/// same split as `BENCH_serve.json`.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_json(
+    cfg: &str,
+    fault_seed: u64,
+    workers: usize,
+    steps: usize,
+    ckpt_every: usize,
+    detect_ms: u64,
+    events: &[RecoveryEvent],
+    train_s: f64,
+) -> String {
+    let det_events = events
+        .iter()
+        .map(|ev| {
+            let reshard = ev
+                .reshard
+                .iter()
+                .map(|ranks| {
+                    let inner = ranks.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+                    format!("[{inner}]")
+                })
+                .collect::<Vec<_>>()
+                .join(",");
+            format!(
+                concat!(
+                    "      {{\n",
+                    "        \"failed_rank\": {},\n",
+                    "        \"detected_step\": {},\n",
+                    "        \"ckpt_step\": {},\n",
+                    "        \"steps_lost\": {},\n",
+                    "        \"p_after\": {},\n",
+                    "        \"reshard\": [{}]\n",
+                    "      }}"
+                ),
+                ev.failed_rank, ev.detected_step, ev.ckpt_step, ev.steps_lost, ev.p_after, reshard
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let timing_events = events
+        .iter()
+        .map(|ev| {
+            format!(
+                concat!(
+                    "      {{\n",
+                    "        \"detect_ms\": {:.3},\n",
+                    "        \"reshard_ms\": {:.3},\n",
+                    "        \"restore_ms\": {:.3}\n",
+                    "      }}"
+                ),
+                ev.detect_ms, ev.reshard_ms, ev.restore_ms
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let wrap = |body: String| if body.is_empty() { String::new() } else { format!("\n{body}\n    ") };
+    format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"fault_tolerance\",\n",
+            "  \"config\": \"{config}\",\n",
+            "  \"fault_seed\": {seed},\n",
+            "  \"workers\": {workers},\n",
+            "  \"steps\": {steps},\n",
+            "  \"ckpt_every\": {every},\n",
+            "  \"detect_timeout_ms\": {detect},\n",
+            "  \"deterministic\": {{\n",
+            "    \"recoveries\": {n},\n",
+            "    \"events\": [{det}]\n",
+            "  }},\n",
+            "  \"timing\": {{\n",
+            "    \"train_s\": {train:.6},\n",
+            "    \"events\": [{tim}]\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        config = crate::util::json_escape(cfg),
+        seed = fault_seed,
+        workers = workers,
+        steps = steps,
+        every = ckpt_every,
+        detect = detect_ms,
+        n = events.len(),
+        det = wrap(det_events),
+        tim = wrap(timing_events),
+        train = train_s,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshard_with_enough_survivors_matches_serving_planner() {
+        let counts = [10, 0, 5, 1];
+        let got = reshard_survivors(4, 6, &counts);
+        assert_eq!(got, crate::serve::ep::plan_replicas(4, 6, &counts, 6));
+        // every expert still served
+        assert!(got.iter().all(|r| !r.is_empty()));
+    }
+
+    #[test]
+    fn reshard_fewer_survivors_spreads_hot_experts() {
+        // 4 experts onto 2 survivors: the two hottest must land on
+        // different ranks, and every expert keeps exactly one server.
+        let counts = [100, 90, 5, 1];
+        let got = reshard_survivors(4, 2, &counts);
+        assert!(got.iter().all(|r| r.len() == 1));
+        assert_ne!(got[0], got[1], "hottest two experts split across survivors");
+        let mut served = vec![0usize; 2];
+        for r in &got {
+            served[r[0]] += 1;
+        }
+        assert_eq!(served, vec![2, 2], "load balanced two experts per survivor");
+    }
+
+    #[test]
+    fn reshard_single_survivor_takes_everything() {
+        let got = reshard_survivors(3, 1, &[1, 2, 3]);
+        assert_eq!(got, vec![vec![0], vec![0], vec![0]]);
+    }
+
+    #[test]
+    fn bench_json_is_scan_clean_and_split() {
+        let events = vec![RecoveryEvent {
+            failed_rank: 2,
+            detected_step: 5,
+            ckpt_step: 4,
+            steps_lost: 2,
+            p_after: 2,
+            reshard: vec![vec![0], vec![1], vec![0, 1]],
+            detect_ms: 1.25,
+            reshard_ms: 0.5,
+            restore_ms: 3.75,
+        }];
+        let s = bench_json("tiny", 7, 3, 8, 2, 30_000, &events, 1.5);
+        crate::testutil::scan_json(&s).unwrap();
+        assert!(s.contains("\"deterministic\""));
+        assert!(s.contains("\"timing\""));
+        assert!(s.contains("\"steps_lost\": 2"));
+        assert!(s.contains("\"reshard\": [[0],[1],[0,1]]"));
+        // timing fields stay out of the deterministic block
+        let det_end = s.find("\"timing\"").unwrap();
+        assert!(!s[..det_end].contains("detect_ms\":"), "timing leaked into deterministic block");
+    }
+
+    #[test]
+    fn bench_json_no_events_is_scan_clean() {
+        let s = bench_json("tiny", 1, 2, 4, 0, 30_000, &[], 0.25);
+        crate::testutil::scan_json(&s).unwrap();
+        assert!(s.contains("\"recoveries\": 0"));
+    }
+}

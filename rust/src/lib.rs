@@ -34,6 +34,9 @@
 //! * [`serve`] — continuous-batching MoE inference: KV-cached decode,
 //!   FIFO admission against a KV budget, expert-parallel serving with
 //!   hot-expert replication, and a seeded synthetic-traffic bench,
+//! * [`ft`] — fault tolerance: CRC-checked atomic checkpoints with a
+//!   bitwise resume contract, seeded fault injection, and elastic
+//!   P−1 recovery for the native training path,
 //! * [`data`] — deterministic synthetic corpus,
 //! * [`metrics`] — time/energy/memory/occupancy models,
 //! * [`obs`] — runtime span tracing + metrics registry: measured (not
@@ -52,6 +55,7 @@ pub mod commpool;
 pub mod config;
 pub mod cost;
 pub mod data;
+pub mod ft;
 pub mod metrics;
 pub mod obs;
 pub mod report;

@@ -61,6 +61,10 @@ fn main() -> ExitCode {
                                                                     --trace (or FLOWMOE_TRACE) writes a\n\
                                                                     chrome-trace of the run + measured-vs-\n\
                                                                     modeled overlap report\n\
+                          --ckpt-dir D --ckpt-every N --resume       CRC-checked atomic checkpoints; resume\n\
+                                                                    is bitwise (same losses + params)\n\
+                          --kill W@K --drop-prob P --delay-prob P    seeded fault injection (--fault-seed S);\n\
+                          --detect-ms T --die-at K                   elastic P-1 recovery, BENCH_fault.json\n\
                  serve    --synthetic --config tiny --requests N    continuous-batching inference under\n\
                           --seed S --max-batch D --kv-budget T       seeded open-loop load; writes\n\
                           --workers W --warmup K --trace out.json    BENCH_serve.json (--out to rename)\n\
@@ -267,6 +271,44 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.sp_bytes = (args.f64_or("sp", 1.0) * 1e6) as usize;
     opts.overlap = !args.has_flag("centralized");
     opts.log_every = args.usize_or("log-every", 10);
+    opts.seed = args.usize_or("seed", 1234) as u64;
+    // fault tolerance: checkpointing, resume, and seeded fault injection
+    opts.ckpt_dir = args.get("ckpt-dir").map(PathBuf::from);
+    let default_every = if opts.ckpt_dir.is_some() { flowmoe::ft::DEFAULT_CKPT_EVERY } else { 0 };
+    opts.ckpt_every = args.usize_or("ckpt-every", default_every);
+    opts.resume = args.has_flag("resume");
+    opts.die_at = args.get("die-at").and_then(|s| s.parse().ok());
+    opts.detect_ms = args.usize_or("detect-ms", flowmoe::ft::DETECT_TIMEOUT_MS as usize) as u64;
+    let kill = match args.get("kill") {
+        Some(s) => {
+            let (w, k) = s
+                .split_once('@')
+                .ok_or_else(|| anyhow!("--kill expects W@K (worker@step), got '{s}'"))?;
+            let w: usize = w.parse().map_err(|_| anyhow!("--kill: bad worker '{w}'"))?;
+            let k: usize = k.parse().map_err(|_| anyhow!("--kill: bad step '{k}'"))?;
+            if w >= p {
+                bail!("--kill worker {w} out of range (P = {p})");
+            }
+            Some((w, k))
+        }
+        None => None,
+    };
+    let drop_prob = args.f64_or("drop-prob", 0.0);
+    let delay_prob = args.f64_or("delay-prob", 0.0);
+    if kill.is_some() || drop_prob > 0.0 || delay_prob > 0.0 {
+        opts.fault = Some(flowmoe::ft::FaultPlan {
+            seed: args.usize_or("fault-seed", 1) as u64,
+            kill,
+            drop_prob,
+            delay_prob,
+            delay_ms: args.usize_or("delay-ms", 20) as u64,
+        });
+    }
+    if args.has_flag("fused")
+        && (opts.ckpt_dir.is_some() || opts.resume || opts.fault.is_some() || opts.die_at.is_some())
+    {
+        bail!("--fused is the single-process oracle path; checkpoint/resume/fault flags need the dp path");
+    }
     // runtime span tracing: --trace out.json, or the FLOWMOE_TRACE env
     // var (used by CI so the smoke needs no extra plumbing)
     let trace_path: Option<String> = args
@@ -284,11 +326,37 @@ fn cmd_train(args: &Args) -> Result<()> {
     flowmoe::obs::set_enabled(false);
     println!("step,loss,seconds");
     for (i, (l, s)) in report.losses.iter().zip(&report.step_secs).enumerate() {
-        println!("{i},{l:.4},{s:.3}");
+        println!("{},{l:.4},{s:.3}", report.start_step + i);
     }
     let n = report.losses.len();
     if let (Some(first), Some(last)) = (report.losses.first(), report.losses.last()) {
         println!("# first loss {first:.4} -> last loss {last:.4} over {n} steps");
+    }
+    for ev in &report.recoveries {
+        println!(
+            "# recovery: worker {} failed at step {} -> resumed from ckpt step {} at P={} \
+             ({} step(s) lost; detect {:.1} ms, restore {:.1} ms)",
+            ev.failed_rank, ev.detected_step, ev.ckpt_step, ev.p_after, ev.steps_lost, ev.detect_ms, ev.restore_ms
+        );
+    }
+    if let Some(fp) = &opts.fault {
+        let train_s: f64 = report.step_secs.iter().sum();
+        let json = flowmoe::ft::bench_json(
+            &cfg,
+            fp.seed,
+            p,
+            steps,
+            opts.ckpt_every,
+            opts.detect_ms,
+            &report.recoveries,
+            train_s,
+        );
+        if let Err(e) = flowmoe::testutil::scan_json(&json) {
+            bail!("BENCH_fault.json failed the JSON well-formedness scan: {e}");
+        }
+        let out = args.get_or("fault-out", "BENCH_fault.json");
+        std::fs::write(&out, &json)?;
+        println!("# bench: {out}");
     }
     // per-run metrics: step/phase wall-time p50/p95/p99 + counters
     for line in flowmoe::report::stats_lines(&report.stats) {
@@ -476,6 +544,14 @@ fn cmd_info(args: &Args) -> Result<()> {
          --max-batch/--kv-budget to override)",
         flowmoe::serve::DEFAULT_MAX_BATCH,
         flowmoe::serve::DEFAULT_KV_BUDGET
+    );
+    // fault-tolerance defaults, from the same constants the
+    // BENCH_fault.json header uses so `info` and the bench always agree
+    println!(
+        "fault tolerance: checkpoint every {} step(s) when --ckpt-dir is set, failure-detection \
+         timeout {} ms (flowmoe train --ckpt-dir D --resume; --kill W@K / --drop-prob for seeded faults)",
+        flowmoe::ft::DEFAULT_CKPT_EVERY,
+        flowmoe::ft::DETECT_TIMEOUT_MS
     );
     Ok(())
 }

@@ -37,7 +37,7 @@
 //! run is bit-identical to an untraced one.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
 use crate::sim::Timeline;
@@ -47,7 +47,7 @@ use crate::util::json_escape;
 /// Lock a mutex, tolerating poisoning: a panicked recorder thread has
 /// already surfaced its failure elsewhere; the observed data stays valid.
 fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    crate::util::lock_recover(m)
 }
 
 // ---------------------------------------------------------------------------
@@ -115,6 +115,20 @@ thread_local! {
         locked(buffers()).push(Arc::clone(&buf));
         (tid, buf)
     };
+}
+
+/// Record a span between two externally-measured instants (e.g. the
+/// fault-tolerance phases `ft_detect`/`ft_restore`, whose start was
+/// anchored on another thread). Instants before the process epoch clamp
+/// to 0; `end < start` clamps to an empty span. No-op when disabled.
+pub fn record_between(label: &'static str, start: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    let e = epoch();
+    let s_ns = start.saturating_duration_since(e).as_nanos() as u64;
+    let e_ns = end.saturating_duration_since(e).as_nanos() as u64;
+    record(label, s_ns, e_ns.max(s_ns));
 }
 
 fn record(label: &'static str, start_ns: u64, end_ns: u64) {

@@ -19,18 +19,38 @@
 //! contract the kernel conformance suite pins across thread budgets),
 //! EP output is **bitwise identical** to local decode.
 //!
+//! # Fault tolerance
+//!
+//! The driver's round-trip recv is deadline-bounded: a worker that dies
+//! (or whose messages a seeded [`crate::ft::FaultPlan`] drops) surfaces
+//! as a typed [`crate::commpool::CommError`] instead of a hang. The
+//! driver then *heals in place* — it retires the dead thread, respawns
+//! a replacement owning the same expert shard at the current round, and
+//! replays the request; if even the replacement fails, it serves the
+//! rows locally with the same kernel. Every path computes the identical
+//! row range with identical weights, so decode output stays **bitwise
+//! identical** across kills. Healing phases are traced as `ft_detect` /
+//! `ft_reshard` spans.
+//!
 //! A2A exchanges are traced as `a2a_dispatch` / `a2a_combine` spans and
 //! worker FFNs as `expert_fwd`, so `flowmoe serve --trace` renders in
 //! the same Comm/Compute lanes as the trainer.
 
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use crate::backend::kernels as kn;
 use crate::backend::model::Geo;
 use crate::backend::Workspace;
 use crate::cluster::{combine, dispatch};
 use crate::commpool::Collective;
+use crate::ft::FaultPlan;
+
+/// Worker-side idle window: an expert worker that hears nothing from
+/// the driver for this long assumes the driver is gone and exits (the
+/// normal exit paths are the shutdown sentinel and `poison`).
+const WORKER_IDLE_MS: u64 = 120_000;
 
 /// Assign experts to worker ranks: every expert gets one worker, then
 /// spare workers replicate the hottest experts (by observed routing
@@ -79,7 +99,10 @@ fn chunk_range(c: usize, r: usize, i: usize) -> (usize, usize) {
 }
 
 /// Expert worker loop: one (layer, step) round per message. An empty
-/// message is the shutdown sentinel.
+/// message is the shutdown sentinel. Replies use `send_replace` so a
+/// retired predecessor racing a respawned replacement on the same round
+/// can never trip the duplicate-send check — the newest reply wins.
+#[allow(clippy::too_many_arguments)]
 fn expert_worker(
     coll: Arc<Collective>,
     rank: usize,
@@ -88,12 +111,21 @@ fn expert_worker(
     geo_mh: (usize, usize),
     w1: Vec<Vec<f32>>,
     w2: Vec<Vec<f32>>,
+    start_round: u64,
 ) {
     let (m, h) = geo_mh;
-    let mut round: u64 = 0;
+    let mut round: u64 = start_round;
     loop {
-        let chunk = coll.recv(driver, rank, round);
+        let chunk = match coll.recv_timeout(driver, rank, round, Duration::from_millis(WORKER_IDLE_MS)) {
+            Ok(v) => v,
+            Err(_) => return, // driver gone (shutdown poison) or idle too long
+        };
         if chunk.is_empty() {
+            return;
+        }
+        if coll.should_die(rank, round as usize) {
+            // planned fault: vanish mid-request; the driver heals
+            coll.mark_dead(rank);
             return;
         }
         // the driver issues layers 0..L in order every step, so the
@@ -105,7 +137,7 @@ fn expert_worker(
             let _sp = crate::obs::span("expert_fwd");
             kn::expert_ffn_into(&chunk, &w1[l], &w2[l], &mut out, 1, rows, m, h);
         }
-        coll.send(rank, driver, round, out);
+        coll.send_replace(rank, driver, round, out);
         round += 1;
     }
 }
@@ -113,9 +145,22 @@ fn expert_worker(
 /// Handle to a running expert-parallel serving cluster.
 pub struct EpExperts {
     coll: Arc<Collective>,
-    handles: Vec<thread::JoinHandle<()>>,
+    /// `handles[rank]` = the live thread serving that rank (taken on
+    /// respawn/shutdown).
+    handles: Vec<Option<thread::JoinHandle<()>>>,
+    /// Threads displaced by a respawn; possibly still blocked in recv,
+    /// released by `poison` at shutdown.
+    retired: Vec<thread::JoinHandle<()>>,
     /// `assignment[e]` = worker ranks serving expert `e`.
     assignment: Vec<Vec<usize>>,
+    /// `expert_of[rank]` = the expert that rank serves.
+    expert_of: Vec<usize>,
+    /// Per-expert per-layer FFN weights, kept on the driver for
+    /// respawns and the local fallback: `w1[e][l]`, `w2[e][l]`.
+    w1: Vec<Vec<Vec<f32>>>,
+    w2: Vec<Vec<Vec<f32>>>,
+    l_blocks: usize,
+    geo_mh: (usize, usize),
     n_workers: usize,
     round: u64,
     shut: bool,
@@ -126,41 +171,82 @@ impl EpExperts {
     /// routing `counts`. Each worker clones only its own expert's
     /// per-layer FFN weights out of the canonical flat `params`.
     pub fn new(g: &Geo, params: &[Vec<f32>], counts: &[u64], workers: usize, c: usize) -> EpExperts {
+        EpExperts::with_fault(g, params, counts, workers, c, None, crate::ft::DETECT_TIMEOUT_MS)
+    }
+
+    /// [`EpExperts::new`] with seeded fault injection and an explicit
+    /// failure-detection window for the driver's round-trip waits.
+    pub fn with_fault(
+        g: &Geo,
+        params: &[Vec<f32>],
+        counts: &[u64],
+        workers: usize,
+        c: usize,
+        fault: Option<FaultPlan>,
+        detect_ms: u64,
+    ) -> EpExperts {
         let l_blocks = (params.len() - 2) / 9;
         let assignment = plan_replicas(g.e, workers, counts, c);
         let n_workers: usize = assignment.iter().map(Vec::len).sum();
-        let coll = Collective::new(n_workers + 1);
-        let driver = n_workers;
+        let coll = Collective::with_opts(n_workers + 1, detect_ms, fault, 0);
         let (m, h) = (g.m, g.h);
-        let disp = kn::active_dispatch();
-        let mut handles = Vec::with_capacity(n_workers);
+        // canonical per-expert weight shards (driver-side master copy)
+        let w1: Vec<Vec<Vec<f32>>> = (0..g.e)
+            .map(|ex| {
+                (0..l_blocks)
+                    .map(|l| params[1 + l * 9 + 7][ex * m * h..(ex + 1) * m * h].to_vec())
+                    .collect()
+            })
+            .collect();
+        let w2: Vec<Vec<Vec<f32>>> = (0..g.e)
+            .map(|ex| {
+                (0..l_blocks)
+                    .map(|l| params[1 + l * 9 + 8][ex * h * m..(ex + 1) * h * m].to_vec())
+                    .collect()
+            })
+            .collect();
+        let mut expert_of = vec![0usize; n_workers];
         for (ex, ranks) in assignment.iter().enumerate() {
             for &rank in ranks {
-                let coll = Arc::clone(&coll);
-                let w1: Vec<Vec<f32>> = (0..l_blocks)
-                    .map(|l| params[1 + l * 9 + 7][ex * m * h..(ex + 1) * m * h].to_vec())
-                    .collect();
-                let w2: Vec<Vec<f32>> = (0..l_blocks)
-                    .map(|l| params[1 + l * 9 + 8][ex * h * m..(ex + 1) * h * m].to_vec())
-                    .collect();
-                // flowmoe-lint: allow(thread_spawn) — long-lived expert worker, not a task
-                handles.push(thread::spawn(move || {
-                    kn::with_dispatch(disp, || {
-                        crate::sweep::scope::with_budget(1, || {
-                            expert_worker(coll, rank, driver, l_blocks, (m, h), w1, w2)
-                        })
-                    })
-                }));
+                expert_of[rank] = ex;
             }
         }
-        EpExperts {
+        let mut cluster = EpExperts {
             coll,
-            handles,
+            handles: (0..n_workers).map(|_| None).collect(),
+            retired: Vec::new(),
             assignment,
+            expert_of,
+            w1,
+            w2,
+            l_blocks,
+            geo_mh: (m, h),
             n_workers,
             round: 0,
             shut: false,
+        };
+        for rank in 0..n_workers {
+            cluster.spawn_worker(rank, 0);
         }
+        cluster
+    }
+
+    /// Spawn (or respawn) the thread serving `rank`, starting its round
+    /// counter at `start_round`.
+    fn spawn_worker(&mut self, rank: usize, start_round: u64) {
+        let coll = Arc::clone(&self.coll);
+        let ex = self.expert_of[rank];
+        let (w1, w2) = (self.w1[ex].clone(), self.w2[ex].clone());
+        let (l_blocks, geo_mh, driver) = (self.l_blocks, self.geo_mh, self.n_workers);
+        let disp = kn::active_dispatch();
+        // flowmoe-lint: allow(thread_spawn) — long-lived expert worker, not a task
+        self.handles[rank] = Some(thread::spawn(move || {
+            kn::with_dispatch(disp, || {
+                crate::sweep::scope::with_budget(1, || {
+                    expert_worker(coll, rank, driver, l_blocks, geo_mh, w1, w2, start_round)
+                })
+            })
+        }));
     }
 
     /// Replica count per expert (for the bench report header).
@@ -172,10 +258,17 @@ impl EpExperts {
         self.n_workers
     }
 
+    /// Respawns performed so far (0 on a faultless run).
+    pub fn respawns(&self) -> usize {
+        self.retired.len()
+    }
+
     /// One MoE sublayer over the cluster: route on the driver, ship
     /// each expert's capacity rows to its replicas (A2A dispatch), run
     /// the FFNs remotely, gather (A2A combine), then combine + residual
-    /// exactly like the local path.
+    /// exactly like the local path. A worker failure mid-round is
+    /// healed in place (see the module docs) — the returned output is
+    /// bitwise identical either way.
     pub fn moe_step(
         &mut self,
         g: &Geo,
@@ -189,6 +282,8 @@ impl EpExperts {
         let routing = dispatch(u, &gating.idx, gating.gate.len(), g.e, c, g.m);
         let round = self.round;
         self.round += 1;
+        // (expert, rank, lo, hi) per in-flight request, fixed row split
+        let mut fetches: Vec<(usize, usize, usize, usize)> = Vec::with_capacity(self.n_workers);
         {
             let _sp = crate::obs::span("a2a_dispatch");
             for (ex, ranks) in self.assignment.iter().enumerate() {
@@ -196,18 +291,19 @@ impl EpExperts {
                     let (lo, hi) = chunk_range(c, ranks.len(), ri);
                     let chunk = routing.disp[(ex * c + lo) * g.m..(ex * c + hi) * g.m].to_vec();
                     self.coll.send(driver, rank, round, chunk);
+                    fetches.push((ex, rank, lo, hi));
                 }
             }
         }
         let mut expert_out = ws.take(g.e * c * g.m);
         {
             let _sp = crate::obs::span("a2a_combine");
-            for (ex, ranks) in self.assignment.iter().enumerate() {
-                for (ri, &rank) in ranks.iter().enumerate() {
-                    let (lo, _hi) = chunk_range(c, ranks.len(), ri);
-                    let out = self.coll.recv(rank, driver, round);
-                    expert_out[(ex * c + lo) * g.m..(ex * c + lo) * g.m + out.len()].copy_from_slice(&out);
-                }
+            for &(ex, rank, lo, hi) in &fetches {
+                let out = match self.coll.recv(rank, driver, round) {
+                    Ok(v) => v,
+                    Err(_) => self.heal(g, ex, rank, lo, hi, round, &routing.disp, c),
+                };
+                expert_out[(ex * c + lo) * g.m..(ex * c + lo) * g.m + out.len()].copy_from_slice(&out);
             }
         }
         let yc = combine(&expert_out, &routing, &gating.gate);
@@ -219,6 +315,58 @@ impl EpExperts {
         y
     }
 
+    /// Recover rows `[lo, hi)` of expert `ex` after rank `rank` failed
+    /// round `round`: respawn a replacement at the current round, replay
+    /// the request past the fault injector, and if the replacement also
+    /// fails, run the rows on the driver with the same kernel + weights
+    /// (bitwise identical by the row-independence contract).
+    #[allow(clippy::too_many_arguments)]
+    fn heal(
+        &mut self,
+        g: &Geo,
+        ex: usize,
+        rank: usize,
+        lo: usize,
+        hi: usize,
+        round: u64,
+        disp_slab: &[f32],
+        c: usize,
+    ) -> Vec<f32> {
+        let now = std::time::Instant::now();
+        if let Some(t0) = self.coll.death_time() {
+            crate::obs::record_between("ft_detect", t0, now);
+        }
+        let driver = self.n_workers;
+        {
+            let _sp = crate::obs::span("ft_reshard");
+            if let Some(old) = self.handles[rank].take() {
+                // the old thread may still be blocked in recv; it exits
+                // on its idle window or the shutdown poison — parking it
+                // keeps healing latency off the decode path
+                self.retired.push(old);
+            }
+            self.coll.revive(rank);
+            self.spawn_worker(rank, round);
+        }
+        let chunk = disp_slab[(ex * c + lo) * g.m..(ex * c + hi) * g.m].to_vec();
+        // replace-send: must reach the replacement even under a drop
+        // plan, and must overwrite a delayed copy of the original
+        self.coll.send_replace(driver, rank, round, chunk.clone());
+        match self.coll.recv(rank, driver, round) {
+            Ok(v) => v,
+            Err(_) => {
+                // replacement failed too: serve the rows on the driver
+                let l = (round as usize) % self.l_blocks;
+                let (m, hdim) = self.geo_mh;
+                let rows = hi - lo;
+                let mut out = vec![0.0f32; rows * m];
+                let _sp = crate::obs::span("expert_fwd");
+                kn::expert_ffn_into(&chunk, &self.w1[ex][l], &self.w2[ex][l], &mut out, 1, rows, m, hdim);
+                out
+            }
+        }
+    }
+
     /// Stop all workers (empty-message sentinel at the next round) and
     /// join them. Idempotent.
     pub fn shutdown(&mut self) {
@@ -228,9 +376,15 @@ impl EpExperts {
         self.shut = true;
         let driver = self.n_workers;
         for rank in 0..self.n_workers {
-            self.coll.send(driver, rank, self.round, Vec::new());
+            // replace-send: the sentinel must get through the injector
+            self.coll.send_replace(driver, rank, self.round, Vec::new());
         }
-        for hd in self.handles.drain(..) {
+        for hd in self.handles.iter_mut().filter_map(Option::take) {
+            let _ = hd.join();
+        }
+        // release retired threads still blocked on the collective
+        self.coll.poison();
+        for hd in self.retired.drain(..) {
             let _ = hd.join();
         }
     }

@@ -18,27 +18,48 @@
 //! Gradient scaling follows Appendix H: each microbatch loss is scaled by
 //! 1/R so pipelined gradients equal full-batch gradients exactly (the
 //! tiny config is drop-free; see python/compile/configs.py).
+//!
+//! # Fault tolerance (paper Appendix K, real)
+//!
+//! `train_dp` is structured as a driver over *attempts*. Each attempt
+//! spawns the current world and runs until the target step or until a
+//! failure surfaces as a typed [`CommError`] (the collective's ops are
+//! deadline-bounded — see [`crate::commpool`]). On failure the driver
+//! retires the casualty, re-forms the collective at P−1, re-shards the
+//! expert service plan ([`crate::ft::reshard_survivors`]), reloads the
+//! newest valid checkpoint and retries; each phase is traced as
+//! `ft_detect` / `ft_reshard` / `ft_restore` spans and recorded in
+//! [`crate::ft::RecoveryEvent`]s. Checkpoints written with
+//! `ckpt_dir`/`ckpt_every` carry the full training state, and resume is
+//! **bitwise**: train 2N steps == train N + checkpoint + resume N.
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::backend::kernels::{active_dispatch, axpy, scale, with_dispatch};
-use crate::commpool::{partition_ranges, Collective, CommPool};
+use crate::commpool::{partition_ranges, Collective, CommError, CommPool};
 use crate::data::Corpus;
+use crate::ft::{self, Checkpoint, FaultPlan, RecoveryEvent};
 use crate::obs;
 use crate::runtime::{Engine, HostTensor, PjRtBuffer};
 use crate::sweep::scope;
-use crate::util::Rng;
+use crate::util::{lock_recover, Rng};
 
 /// Per-run report.
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
-    /// Mean loss per step (averaged across workers).
+    /// Mean loss per step (averaged across workers). Index 0 is step
+    /// `start_step`.
     pub losses: Vec<f32>,
     /// Wall seconds per step.
     pub step_secs: Vec<f64>,
+    /// First global step of this run (> 0 after `--resume`).
+    pub start_step: usize,
+    /// Elastic recoveries performed during the run (empty = clean run).
+    pub recoveries: Vec<RecoveryEvent>,
     /// Final parameters of worker 0 (for parity tests).
     pub final_params: Vec<Vec<f32>>,
     /// Per-run metrics: step/phase wall-time histograms (p50/p95/p99),
@@ -61,6 +82,19 @@ pub struct TrainOpts {
     /// All-reduce chunk size in bytes (elements = bytes/4).
     pub sp_bytes: usize,
     pub log_every: usize,
+    /// Checkpoint directory (None = checkpointing off).
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint cadence in steps (0 = off even with a dir).
+    pub ckpt_every: usize,
+    /// Resume from the newest valid checkpoint in `ckpt_dir`.
+    pub resume: bool,
+    /// Seeded fault injection (None = faultless).
+    pub fault: Option<FaultPlan>,
+    /// Failure-detection window for the collective's blocking ops.
+    pub detect_ms: u64,
+    /// Worker 0 exits the whole process (code 3) after completing this
+    /// many steps — the CI kill-and-resume smoke's crash hook.
+    pub die_at: Option<usize>,
 }
 
 impl TrainOpts {
@@ -74,6 +108,12 @@ impl TrainOpts {
             overlap: true,
             sp_bytes: 1 << 20,
             log_every: 0,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            resume: false,
+            fault: None,
+            detect_ms: ft::DETECT_TIMEOUT_MS,
+            die_at: None,
         }
     }
 }
@@ -222,6 +262,49 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
     Ok(report)
 }
 
+/// One worker's view of one attempt: per-step results up to either the
+/// target or the step a failure surfaced at.
+struct AttemptRun {
+    losses: Vec<f32>,
+    step_secs: Vec<f64>,
+    /// `Some(step)` = this worker aborted during `step` (planned kill or
+    /// detected peer failure). `None` = ran to the target.
+    stopped_at: Option<usize>,
+    /// This worker was the planned casualty.
+    killed: bool,
+    /// Kill -> error-surfaced latency observed by this worker (ms).
+    detect_ms: Option<f64>,
+    final_params: Vec<Vec<f32>>,
+}
+
+impl AttemptRun {
+    fn new() -> AttemptRun {
+        AttemptRun {
+            losses: Vec::new(),
+            step_secs: Vec::new(),
+            stopped_at: None,
+            killed: false,
+            detect_ms: None,
+            final_params: Vec::new(),
+        }
+    }
+}
+
+/// Record the failure a worker is aborting on: an `ft_detect` span from
+/// the death mark to now (when the casualty is known), plus the
+/// detection latency for the recovery report.
+fn abort_attempt(mut run: AttemptRun, step: usize, coll: &Collective, err: &CommError) -> AttemptRun {
+    let now = Instant::now();
+    if let Some(t0) = coll.death_time() {
+        obs::record_between("ft_detect", t0, now);
+        run.detect_ms = Some(now.saturating_duration_since(t0).as_secs_f64() * 1e3);
+    } else if let CommError::Timeout { waited_ms, .. } = err {
+        run.detect_ms = Some(*waited_ms as f64);
+    }
+    run.stopped_at = Some(step);
+    run
+}
+
 /// Distributed data-parallel path: P workers, per-block pipelined
 /// backward, chunked-AR overlap through the comm pool.
 ///
@@ -229,49 +312,254 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
 /// across the workers: each worker runs its kernels with `budget / P`
 /// threads (min 1), so worker-level and kernel-level parallelism compose
 /// without oversubscribing the host.
+///
+/// With `opts.resume` / `opts.ckpt_dir` / `opts.fault` this is the
+/// fault-tolerance driver described in the module docs: it keeps
+/// retrying at a shrinking world size until the target step is reached
+/// or no survivors remain.
 pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainReport> {
     assert!(p >= 1);
-    let coll = Collective::new(p);
     let dir: PathBuf = artifacts.to_path_buf();
-    let worker_budget = (scope::current_budget() / p).max(1);
-    // re-apply the caller's kernel-dispatch tier inside the workers:
-    // spawned threads start with an empty thread-local override
-    let disp = active_dispatch();
     // one run-wide registry shared by all workers: every worker-step
     // observes into the same phase histograms
     let reg = Arc::new(obs::Registry::new());
-    let mut handles = Vec::new();
-    for w in 0..p {
-        let coll = Arc::clone(&coll);
-        let opts = opts.clone();
-        let dir = dir.clone();
-        let reg = Arc::clone(&reg);
-        // flowmoe-lint: allow(thread_spawn) — DP workers outlive any one scope
-        handles.push(std::thread::spawn(move || {
-            with_dispatch(disp, || {
-                scope::with_budget(worker_budget, || worker_dp(w, p, coll, &dir, &opts, &reg))
-            })
-        }));
+
+    // resume bootstrap: newest valid checkpoint wins
+    let mut boot: Arc<Option<Checkpoint>> = Arc::new(None);
+    let mut start = 0usize;
+    if opts.resume {
+        let Some(ckdir) = &opts.ckpt_dir else {
+            bail!("resume requires a checkpoint directory");
+        };
+        if let Some((path, ck)) = ft::latest_valid(ckdir).map_err(|e| anyhow!("checkpoint scan: {e}"))? {
+            if ck.cfg != opts.cfg_name {
+                bail!(
+                    "checkpoint {} is for config '{}', not '{}'",
+                    path.display(),
+                    ck.cfg,
+                    opts.cfg_name
+                );
+            }
+            if p > ck.corpus_rng.len() {
+                bail!(
+                    "checkpoint {} has {} worker cursors, cannot resume with {p} workers",
+                    path.display(),
+                    ck.corpus_rng.len()
+                );
+            }
+            start = ck.step as usize;
+            eprintln!("[ft] resuming from {} (step {start})", path.display());
+            boot = Arc::new(Some(ck));
+        }
     }
-    let mut reports: Vec<TrainReport> = Vec::new();
-    for h in handles {
-        reports.push(h.join().map_err(|_| anyhow!("worker panicked"))??);
-    }
-    let mut rep = reports.remove(0);
+    let boot0 = Arc::clone(&boot);
+    let first_start = start;
+    let target = first_start + opts.steps;
+
+    let mut active = p;
+    let mut plan = opts.fault.clone();
+    let mut epoch = 0u64;
+    let mut losses: Vec<f32> = Vec::new();
+    let mut step_secs: Vec<f64> = Vec::new();
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+
+    let final_params = loop {
+        let (runs, first_err) = run_attempt(&dir, active, opts, start, target - start, &boot, &plan, epoch, &reg);
+        let detected = runs.iter().flatten().filter_map(|r| r.stopped_at).min();
+        let Some(detected_step) = detected else {
+            // no failure surfaced: clean finish, or a hard error that
+            // hit the whole group (e.g. a bad config)
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            let Some(run0) = runs.into_iter().next().flatten() else {
+                return Err(anyhow!("dp worker 0 produced no report"));
+            };
+            losses.extend_from_slice(&run0.losses);
+            step_secs.extend_from_slice(&run0.step_secs);
+            break run0.final_params;
+        };
+
+        // ---------------- elastic recovery ----------------
+        if active <= 1 {
+            return Err(first_err.unwrap_or_else(|| anyhow!("worker failed with no survivors left")));
+        }
+        // casualty: a worker that returned Err/panicked, else the
+        // planned kill, else (pure timeout, nobody identified) the
+        // highest rank — conservative unresponsive-peer semantics.
+        let failed_rank = runs
+            .iter()
+            .position(|r| r.is_none())
+            .or_else(|| runs.iter().position(|r| r.as_ref().is_some_and(|a| a.killed)))
+            .unwrap_or(active - 1);
+        let detect_ms = runs
+            .iter()
+            .flatten()
+            .filter_map(|r| r.detect_ms)
+            .fold(0.0f64, f64::max);
+
+        let t_restore = Instant::now();
+        let (ck_step, new_boot) = {
+            let _sp = obs::span("ft_restore");
+            let newest = match &opts.ckpt_dir {
+                Some(d) => ft::latest_valid(d).map_err(|e| anyhow!("checkpoint scan during recovery: {e}"))?,
+                None => None,
+            };
+            match newest {
+                Some((_, ck)) if ck.cfg == opts.cfg_name && ck.corpus_rng.len() >= active - 1 => {
+                    let s = ck.step as usize;
+                    (s, Arc::new(Some(ck)))
+                }
+                // no usable checkpoint: the attempt restarts from the
+                // original boot state (step first_start)
+                _ => (first_start, Arc::clone(&boot0)),
+            }
+        };
+        let restore_ms = t_restore.elapsed().as_secs_f64() * 1e3;
+
+        let t_reshard = Instant::now();
+        let reshard = {
+            let _sp = obs::span("ft_reshard");
+            // DP replicates every expert on every worker, so the plan
+            // records expert *service* assignment for the shrunken
+            // group; counts are uniform (no routing skew signal here —
+            // the serving path reshards from real counts).
+            match crate::config::preset(&opts.cfg_name) {
+                Some(cfg) => ft::reshard_survivors(cfg.e, active - 1, &vec![1u64; cfg.e]),
+                None => Vec::new(),
+            }
+        };
+        let reshard_ms = t_reshard.elapsed().as_secs_f64() * 1e3;
+
+        // keep only losses up to the checkpoint we restart from: the
+        // steps past it are discarded work and will be re-run at P−1
+        losses.truncate(ck_step.saturating_sub(first_start));
+        step_secs.truncate(ck_step.saturating_sub(first_start));
+        if ck_step > start {
+            if let Some(sv) = runs.iter().flatten().find(|r| !r.killed) {
+                let take = (ck_step - start).min(sv.losses.len());
+                losses.extend_from_slice(&sv.losses[..take]);
+                step_secs.extend_from_slice(&sv.step_secs[..take.min(sv.step_secs.len())]);
+            }
+        }
+
+        eprintln!(
+            "[ft] worker {failed_rank} failed at step {detected_step}; resuming from checkpoint step {ck_step} with {} workers",
+            active - 1
+        );
+        recoveries.push(RecoveryEvent {
+            failed_rank,
+            detected_step,
+            ckpt_step: ck_step,
+            steps_lost: (detected_step + 1).saturating_sub(ck_step),
+            p_after: active - 1,
+            reshard,
+            detect_ms,
+            reshard_ms,
+            restore_ms,
+        });
+        active -= 1;
+        start = ck_step;
+        boot = new_boot;
+        plan = plan.map(|pl| pl.without_kill());
+        epoch += 1;
+    };
+
+    let mut report = TrainReport {
+        losses,
+        step_secs,
+        start_step: first_start,
+        recoveries,
+        final_params,
+        ..TrainReport::default()
+    };
     // snapshot only after every worker has joined, so the counts are
     // complete and the snapshot is race-free
-    rep.stats = reg.snapshot();
-    Ok(rep)
+    report.stats = reg.snapshot();
+    Ok(report)
 }
 
+/// Spawn `active` workers for steps `[start, start + n_steps)` and join
+/// them all. Returns each rank's run (`None` = the worker returned a
+/// hard error or panicked) plus the first hard error.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
+    artifacts: &Path,
+    active: usize,
+    opts: &TrainOpts,
+    start: usize,
+    n_steps: usize,
+    boot: &Arc<Option<Checkpoint>>,
+    plan: &Option<FaultPlan>,
+    epoch: u64,
+    reg: &Arc<obs::Registry>,
+) -> (Vec<Option<AttemptRun>>, Option<anyhow::Error>) {
+    let coll = Collective::with_opts(active, opts.detect_ms, plan.clone(), epoch);
+    let worker_budget = (scope::current_budget() / active).max(1);
+    // re-apply the caller's kernel-dispatch tier inside the workers:
+    // spawned threads start with an empty thread-local override
+    let disp = active_dispatch();
+    // checkpoint rendezvous: each worker publishes its data cursor here
+    // right before the pre-snapshot barrier
+    let rng_slots: Arc<Mutex<Vec<[u64; 4]>>> = Arc::new(Mutex::new(vec![[0u64; 4]; active]));
+    let mut handles = Vec::new();
+    for w in 0..active {
+        let coll = Arc::clone(&coll);
+        let opts = opts.clone();
+        let dir = artifacts.to_path_buf();
+        let reg = Arc::clone(reg);
+        let boot = Arc::clone(boot);
+        let slots = Arc::clone(&rng_slots);
+        // flowmoe-lint: allow(thread_spawn) — DP workers outlive any one scope
+        handles.push(std::thread::spawn(move || {
+            let out = with_dispatch(disp, || {
+                scope::with_budget(worker_budget, || {
+                    worker_dp(w, active, &coll, &dir, &opts, &reg, start, n_steps, &boot, &slots)
+                })
+            });
+            if out.is_err() {
+                // a hard failure = this worker is gone; unblock the
+                // survivors' collective ops immediately
+                coll.mark_dead(w);
+            }
+            out
+        }));
+    }
+    let mut runs = Vec::with_capacity(active);
+    let mut first_err = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(run)) => runs.push(Some(run)),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+                runs.push(None);
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("dp worker panicked"));
+                }
+                runs.push(None);
+            }
+        }
+    }
+    (runs, first_err)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_dp(
     w: usize,
     p: usize,
-    coll: Arc<Collective>,
+    coll: &Arc<Collective>,
     artifacts: &Path,
     opts: &TrainOpts,
     reg: &obs::Registry,
-) -> Result<TrainReport> {
+    start_step: usize,
+    n_steps: usize,
+    boot: &Arc<Option<Checkpoint>>,
+    rng_slots: &Arc<Mutex<Vec<[u64; 4]>>>,
+) -> Result<AttemptRun> {
     let cfg = opts.cfg_name.clone();
     let mut engine = Engine::new(artifacts)?;
     let b_full = full_batch(&engine, &cfg)?;
@@ -292,10 +580,26 @@ fn worker_dp(
     // distinct data shard per worker
     let vocab = engine.manifest().get(&format!("train_step_{cfg}"))?.inputs[0].shape[0];
     let mut corpus = Corpus::new(vocab, opts.seed ^ (w as u64));
+    if let Some(ck) = boot.as_ref() {
+        if ck.params.len() != n_params {
+            bail!("checkpoint has {} tensors, expected {n_params}", ck.params.len());
+        }
+        for (i, (have, want)) in ck.params.iter().zip(&params).enumerate() {
+            if have.len() != want.len() {
+                bail!("checkpoint tensor {i} has {} elems, expected {}", have.len(), want.len());
+            }
+        }
+        params = ck.params.clone();
+        moms = ck.moms.clone();
+        corpus.set_rng_state(ck.corpus_rng[w]);
+    }
 
     let pool = CommPool::new();
     let chunk_elems = (opts.sp_bytes / 4).max(1);
     let inv_r = 1.0f32 / r_deg as f32;
+    // first AR-chunk failure of the current step (set on the comm-pool
+    // thread, consumed after drain)
+    let ar_fail: Arc<Mutex<Option<CommError>>> = Arc::new(Mutex::new(None));
 
     // buffer specs for the hot-path marshalling (§Perf: parameters are
     // read by 4R block calls per step; marshal each param once per step)
@@ -303,9 +607,12 @@ fn worker_dp(
     let hl_spec = engine.manifest().get(&head_loss)?.clone();
     let x_spec = bf_spec.inputs[9].clone();
 
-    let mut report = TrainReport::default();
-    for step in 0..opts.steps {
-        coll.barrier();
+    let mut run = AttemptRun::new();
+    for i in 0..n_steps {
+        let step = start_step + i;
+        if let Err(e) = coll.barrier() {
+            return Ok(abort_attempt(run, step, coll, &e));
+        }
         let t0 = std::time::Instant::now();
         let _sp_step = obs::span("step");
         // marshal current params once (device buffers — leak-free
@@ -344,6 +651,16 @@ fn worker_dp(
         drop(sp_fwd);
         reg.histogram("fwd_s").observe(t_fwd.elapsed().as_secs_f64());
 
+        // planned kill: this worker crashes mid-step; survivors detect
+        // it through their deadline-bounded collective ops
+        if coll.should_die(w, step) {
+            eprintln!("[ft] worker {w} dying at step {step} (planned fault)");
+            coll.mark_dead(w);
+            run.stopped_at = Some(step);
+            run.killed = true;
+            return Ok(run);
+        }
+
         // ---------------- head / loss ----------------
         let t_head = std::time::Instant::now();
         let mut loss = 0.0f32;
@@ -361,7 +678,7 @@ fn worker_dp(
             let mut dxf = outs[1].f32().to_vec();
             scale(&mut dxf, inv_r);
             dxs.push(HostTensor::F32(dxf));
-            let mut g = locked(&gstore);
+            let mut g = lock_recover(&gstore);
             axpy(&mut g[0], outs[2].f32(), inv_r);
             axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
         }
@@ -385,7 +702,7 @@ fn worker_dp(
                 inp.push(&dy_lit);
                 let outs = engine.run_buffers(&block_bwd, &inp)?;
                 {
-                    let mut g = locked(&gstore);
+                    let mut g = lock_recover(&gstore);
                     for t in 0..9 {
                         axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
                     }
@@ -393,26 +710,26 @@ fn worker_dp(
                 dxs[r] = outs.into_iter().nth(9).ok_or_else(|| anyhow!("{block_bwd}: missing dx output"))?;
             }
             if opts.overlap {
-                ar_chunks += enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                ar_chunks += enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
             }
         }
         // embedding gradient via the input-lookup path
         for r in 0..r_deg {
             let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
-            let mut g = locked(&gstore);
+            let mut g = lock_recover(&gstore);
             axpy(&mut g[0], outs[0].f32(), 1.0);
         }
         // embed + normf AR (layer ids l_blocks, l_blocks+1)
         if opts.overlap {
-            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
-            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
         } else {
             // centralized: everything after backward completes
             for l in (0..l_blocks).rev() {
-                ar_chunks += enqueue_block_ar(&pool, &coll, &gstore, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                ar_chunks += enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
             }
-            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, 0, l_blocks, chunk_elems, &mut ar_tag);
-            ar_chunks += enqueue_tensor_ar(&pool, &coll, &gstore, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
+            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
         }
         drop(sp_bwd);
         reg.histogram("bwd_s").observe(t_bwd.elapsed().as_secs_f64());
@@ -423,11 +740,14 @@ fn worker_dp(
             pool.drain();
             reg.histogram("drain_s").observe(t_drain.elapsed().as_secs_f64());
         }
+        if let Some(e) = lock_recover(&ar_fail).take() {
+            return Ok(abort_attempt(run, step, coll, &e));
+        }
 
         // ---------------- update ----------------
         {
             let t_upd = std::time::Instant::now();
-            let mut g = locked(&gstore);
+            let mut g = lock_recover(&gstore);
             let scale_w = 1.0 / p as f32;
             for gv in g.iter_mut() {
                 scale(gv, scale_w);
@@ -436,11 +756,13 @@ fn worker_dp(
             reg.histogram("update_s").observe(t_upd.elapsed().as_secs_f64());
         }
         let mut lbuf = [loss];
-        coll.all_reduce_sum(u64::MAX - step as u64, &mut lbuf);
+        if let Err(e) = coll.all_reduce_sum(w, u64::MAX - step as u64, &mut lbuf) {
+            return Ok(abort_attempt(run, step, coll, &e));
+        }
         let mean_loss = lbuf[0] / p as f32;
-        report.losses.push(mean_loss);
+        run.losses.push(mean_loss);
         let secs = t0.elapsed().as_secs_f64();
-        report.step_secs.push(secs);
+        run.step_secs.push(secs);
         reg.histogram("step_s").observe(secs);
         reg.counter("worker_steps").inc();
         if w == 0 {
@@ -453,50 +775,88 @@ fn worker_dp(
                 t0.elapsed().as_secs_f64()
             );
         }
+
+        // ---------------- checkpoint ----------------
+        if opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0 {
+            if let Some(dir) = &opts.ckpt_dir {
+                // publish my data cursor, then rendezvous so rank 0
+                // snapshots a consistent cross-worker state
+                lock_recover(rng_slots)[w] = corpus.rng_state();
+                if let Err(e) = coll.barrier() {
+                    return Ok(abort_attempt(run, step, coll, &e));
+                }
+                if w == 0 {
+                    let _sp = obs::span("ckpt_save");
+                    let ck = Checkpoint {
+                        cfg: cfg.clone(),
+                        step: (step + 1) as u64,
+                        corpus_rng: lock_recover(rng_slots).clone(),
+                        params: params.clone(),
+                        moms: moms.clone(),
+                    };
+                    ft::save_atomic(dir, &ck).map_err(|e| anyhow!("checkpoint save: {e}"))?;
+                }
+            }
+        }
+        // CI crash hook: exit the whole process after the checkpoint
+        if w == 0 && opts.die_at == Some(step + 1) {
+            eprintln!("[ft] simulated process crash after step {} (--die-at)", step + 1);
+            std::process::exit(3);
+        }
     }
-    report.final_params = params;
-    Ok(report)
+    run.final_params = params;
+    Ok(run)
 }
 
 // `scale`/`axpy` for the gradient hot loops come from
 // `backend::kernels` (dispatch-routed: f32x8 under the simd tier).
 
-/// Lock the shared gradient store, tolerating poisoning: a panicked
-/// worker already fails the step via its join handle, so recover the
-/// inner data instead of double-panicking in unrelated threads.
-fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
-
 /// Enqueue chunked all-reduce jobs for one tensor of the grad store.
-/// Returns the number of chunks enqueued.
+/// Returns the number of chunks enqueued. An AR failure is parked in
+/// `ar_fail` (first one wins) and later chunks of the step short-circuit.
+#[allow(clippy::too_many_arguments)]
 fn enqueue_tensor_ar(
     pool: &CommPool,
     coll: &Arc<Collective>,
     gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    rank: usize,
+    ar_fail: &Arc<Mutex<Option<CommError>>>,
     tensor_idx: usize,
     layer_id: usize,
     chunk_elems: usize,
     tag: &mut impl FnMut(usize, usize, usize) -> u64,
 ) -> usize {
-    let len = locked(&gstore)[tensor_idx].len();
+    let len = lock_recover(gstore)[tensor_idx].len();
     let ranges = partition_ranges(len, chunk_elems);
     let n = ranges.len();
     for (c, (start, l)) in ranges.into_iter().enumerate() {
         let coll = Arc::clone(coll);
         let gstore = Arc::clone(gstore);
+        let ar_fail = Arc::clone(ar_fail);
         let t = tag(layer_id, tensor_idx, c);
         pool.submit_ar(Box::new(move || {
             // runs on the comm-pool thread: this span is the measured
             // communication time of one AR chunk
             let _sp = obs::span("ar_chunk");
+            if lock_recover(&ar_fail).is_some() {
+                return; // a chunk already failed this step; don't pay the deadline again
+            }
             let mut chunk = {
-                let g = locked(&gstore);
+                let g = lock_recover(&gstore);
                 g[tensor_idx][start..start + l].to_vec()
             };
-            coll.all_reduce_sum(t, &mut chunk);
-            let mut g = locked(&gstore);
-            g[tensor_idx][start..start + l].copy_from_slice(&chunk);
+            match coll.all_reduce_sum(rank, t, &mut chunk) {
+                Ok(()) => {
+                    let mut g = lock_recover(&gstore);
+                    g[tensor_idx][start..start + l].copy_from_slice(&chunk);
+                }
+                Err(e) => {
+                    let mut f = lock_recover(&ar_fail);
+                    if f.is_none() {
+                        *f = Some(e);
+                    }
+                }
+            }
         }));
     }
     n
@@ -509,6 +869,8 @@ fn enqueue_block_ar(
     pool: &CommPool,
     coll: &Arc<Collective>,
     gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    rank: usize,
+    ar_fail: &Arc<Mutex<Option<CommError>>>,
     layer_id: usize,
     first_tensor: usize,
     n_tensors: usize,
@@ -517,7 +879,7 @@ fn enqueue_block_ar(
 ) -> usize {
     let mut n = 0;
     for t in 0..n_tensors {
-        n += enqueue_tensor_ar(pool, coll, gstore, first_tensor + t, layer_id, chunk_elems, tag);
+        n += enqueue_tensor_ar(pool, coll, gstore, rank, ar_fail, first_tensor + t, layer_id, chunk_elems, tag);
     }
     n
 }

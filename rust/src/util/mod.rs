@@ -11,9 +11,21 @@ pub mod pcg;
 pub mod rng;
 pub mod stats;
 
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
 pub use pcg::Pcg32;
 pub use rng::Rng;
 pub use stats::{mean, median, percentile, stddev};
+
+/// Lock a mutex, recovering the guard if a holder panicked. Poisoning
+/// only records that a panic happened while the lock was held — for the
+/// crate's uses (workspace arenas, metric stores, collective mailboxes)
+/// the protected data stays structurally valid, and fault tolerance
+/// requires that one worker's panic must not cascade `PoisonError`
+/// unwraps through the survivors' recovery path.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Escape a string for embedding in a JSON string literal: backslash and
 /// double quote get a backslash prefix, control characters become \u

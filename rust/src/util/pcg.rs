@@ -107,6 +107,20 @@ impl Pcg32 {
             xs.swap(i, j);
         }
     }
+
+    /// Snapshot `(state, inc)` (for checkpoint/restore).
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Pcg32::state`] snapshot; the
+    /// restored stream continues bitwise where the snapshot was taken.
+    pub fn from_state(state: (u64, u64)) -> Pcg32 {
+        Pcg32 {
+            state: state.0,
+            inc: state.1,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +164,19 @@ mod tests {
         // children do not echo the parent's continuation either
         let sp: Vec<u32> = (0..16).map(|_| root1.next_u32()).collect();
         assert_ne!(sa1, sp);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_stream() {
+        let mut a = Pcg32::new_stream(42, 54);
+        for _ in 0..9 {
+            a.next_u32();
+        }
+        let snap = a.state();
+        let expect: Vec<u32> = (0..24).map(|_| a.next_u32()).collect();
+        let mut b = Pcg32::from_state(snap);
+        let got: Vec<u32> = (0..24).map(|_| b.next_u32()).collect();
+        assert_eq!(expect, got);
     }
 
     #[test]

@@ -105,6 +105,17 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
+
+    /// Snapshot the generator state (for checkpoint/restore).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot; the restored
+    /// stream continues bitwise where the snapshot was taken.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
 }
 
 /// Build a Zipf CDF over n items with exponent s.
@@ -189,6 +200,19 @@ mod tests {
         let n = 50_000;
         let low = (0..n).filter(|_| r.zipf(&cdf) < 10).count();
         assert!(low as f64 / n as f64 > 0.3, "low fraction {}", low as f64 / n as f64);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_stream() {
+        let mut a = Rng::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let expect: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snap);
+        let got: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(expect, got);
     }
 
     #[test]

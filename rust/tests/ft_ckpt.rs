@@ -1,0 +1,135 @@
+//! Crash-consistency property tests for the checkpoint codec: random
+//! snapshots survive an encode/decode roundtrip bitwise; random bit
+//! flips and truncations are rejected with a typed error (never a panic,
+//! never a silent partial load); and `latest_valid` always returns the
+//! newest file that still validates.
+
+use flowmoe::ft::ckpt::{decode, encode, save_atomic};
+use flowmoe::ft::{latest_valid, Checkpoint};
+use flowmoe::prop_assert;
+use flowmoe::testutil::prop;
+use flowmoe::util::Rng;
+
+fn random_ckpt(rng: &mut Rng) -> Checkpoint {
+    let n_workers = rng.range(1, 4);
+    let n_tensors = rng.range(1, 5);
+    let mut params = Vec::new();
+    let mut moms = Vec::new();
+    for _ in 0..n_tensors {
+        let len = rng.below(32);
+        params.push((0..len).map(|_| rng.f32() - 0.5).collect());
+        moms.push((0..len).map(|_| rng.f32() - 0.5).collect());
+    }
+    Checkpoint {
+        cfg: ["tiny", "e2e", ""][rng.below(3)].to_string(),
+        step: rng.next_u64() % 10_000,
+        corpus_rng: (0..n_workers)
+            .map(|_| [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+            .collect(),
+        params,
+        moms,
+    }
+}
+
+#[test]
+fn roundtrip_is_bitwise() {
+    prop::check(40, |rng| {
+        let ck = random_ckpt(rng);
+        let back = decode(&encode(&ck)).map_err(|e| format!("decode: {e}"))?;
+        prop_assert!(back == ck, "roundtrip changed the checkpoint");
+        Ok(())
+    });
+}
+
+#[test]
+fn random_bit_flip_is_typed_error() {
+    prop::check(60, |rng| {
+        let ck = random_ckpt(rng);
+        let mut bytes = encode(&ck);
+        let pos = rng.below(bytes.len());
+        let bit = 1u8 << rng.below(8);
+        bytes[pos] ^= bit;
+        // Any single-bit flip must surface as Err: header flips hit the
+        // magic/version/CRC checks, payload flips hit the CRC (CRC-32
+        // detects all single-bit errors). Must not panic.
+        prop_assert!(
+            decode(&bytes).is_err(),
+            "bit flip at byte {pos} (mask {bit:#04x}) decoded cleanly"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn random_truncation_is_typed_error() {
+    prop::check(60, |rng| {
+        let ck = random_ckpt(rng);
+        let bytes = encode(&ck);
+        let keep = rng.below(bytes.len()); // strictly shorter prefix
+        prop_assert!(
+            decode(&bytes[..keep]).is_err(),
+            "truncation to {keep}/{} bytes decoded cleanly",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn garbage_is_typed_error_without_huge_alloc() {
+    // Adversarial payloads with absurd length prefixes must error out
+    // before any giant allocation is attempted.
+    prop::check(40, |rng| {
+        let n = rng.range(16, 64);
+        let mut bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        bytes[0..4].copy_from_slice(b"FMCK");
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        // absurd cfg length prefix, far beyond the payload
+        bytes[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        // make the CRC match so decode reaches the payload parser
+        let crc = flowmoe::ft::ckpt::crc32(&bytes[12..]);
+        bytes[8..12].copy_from_slice(&crc.to_le_bytes());
+        prop_assert!(decode(&bytes).is_err(), "random payload decoded cleanly");
+        Ok(())
+    });
+}
+
+#[test]
+fn newest_valid_wins_under_random_corruption() {
+    prop::check(20, |rng| {
+        let dir = std::env::temp_dir().join(format!(
+            "flowmoe_ft_prop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Save 4 checkpoints at increasing steps, then corrupt a random
+        // suffix of the newest ones; latest_valid must return the newest
+        // untouched file.
+        let mut paths = Vec::new();
+        let mut cks = Vec::new();
+        for step in [3u64, 7, 11, 19] {
+            let mut ck = random_ckpt(rng);
+            ck.step = step;
+            paths.push(save_atomic(&dir, &ck).map_err(|e| format!("save: {e}"))?);
+            cks.push(ck);
+        }
+        let corrupt_from = rng.range(1, 4); // leave at least the oldest intact
+        for path in &paths[corrupt_from..] {
+            let mut bytes = std::fs::read(path).map_err(|e| format!("read: {e}"))?;
+            let pos = rng.below(bytes.len());
+            bytes[pos] ^= 1 << rng.below(8);
+            std::fs::write(path, &bytes).map_err(|e| format!("write: {e}"))?;
+        }
+        let got = latest_valid(&dir).map_err(|e| format!("latest_valid: {e}"))?;
+        let _ = std::fs::remove_dir_all(&dir);
+        let (path, ck) = got.ok_or("no valid checkpoint found")?;
+        prop_assert!(
+            path == paths[corrupt_from - 1],
+            "expected {:?}, got {path:?}",
+            paths[corrupt_from - 1]
+        );
+        prop_assert!(ck == cks[corrupt_from - 1], "payload mismatch for newest valid");
+        Ok(())
+    });
+}

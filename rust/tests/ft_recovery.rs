@@ -1,0 +1,194 @@
+//! Fault-tolerance integration: the bitwise resume contract
+//! (train 2N == train N + checkpoint + restore + train N), the full
+//! kill -> typed detection -> re-shard to P-1 -> restore -> continue
+//! recovery loop, and the cluster A2A hang-class regression (a killed
+//! worker surfaces as a typed error within the detection window, never
+//! a hang).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use flowmoe::cluster::{ep_geometry, run_ep_cluster_faulty};
+use flowmoe::ft::FaultPlan;
+use flowmoe::runtime::Engine;
+use flowmoe::trainer::{init_params, train_dp, TrainOpts};
+use flowmoe::util::Rng;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flowmoe_ft_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bitwise_losses(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: step {i}: {x} vs {y}");
+    }
+}
+
+fn assert_bitwise_params(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.len(), pb.len(), "{what}: tensor {i} length");
+        for (j, (x, y)) in pa.iter().zip(pb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}[{j}]: {x} vs {y}");
+        }
+    }
+}
+
+/// The resume contract, bitwise: an uninterrupted 2N-step run and an
+/// N-step run + checkpoint + fresh-process restore + N more steps must
+/// produce the same loss CSV and the same final parameters bit for bit.
+#[test]
+fn resume_parity_bitwise() {
+    let dir = artifacts();
+    let ckdir = tmp_ckpt_dir("resume");
+    let n = 3usize;
+
+    let mut full = TrainOpts::new("tiny", 2 * n);
+    full.seed = 17;
+    let a = train_dp(&dir, 2, &full).unwrap();
+    assert_eq!(a.losses.len(), 2 * n);
+
+    let mut first = TrainOpts::new("tiny", n);
+    first.seed = 17;
+    first.ckpt_dir = Some(ckdir.clone());
+    first.ckpt_every = n;
+    let b1 = train_dp(&dir, 2, &first).unwrap();
+    assert!(b1.recoveries.is_empty());
+
+    let mut second = TrainOpts::new("tiny", n);
+    second.seed = 17;
+    second.ckpt_dir = Some(ckdir.clone());
+    second.resume = true;
+    let b2 = train_dp(&dir, 2, &second).unwrap();
+    let _ = std::fs::remove_dir_all(&ckdir);
+
+    assert_eq!(b2.start_step, n, "resume must pick up at the checkpoint step");
+    assert_bitwise_losses(&a.losses[..n], &b1.losses, "first half");
+    assert_bitwise_losses(&a.losses[n..], &b2.losses, "resumed half");
+    assert_bitwise_params(&a.final_params, &b2.final_params, "final params");
+}
+
+/// Kill worker 2 of 3 at step 5 with checkpoints every 2 steps: the
+/// survivors must detect the death as a typed error, re-shard to P-1,
+/// reload the step-4 checkpoint, and finish all 8 steps. The recovered
+/// segment must match a clean P-1 run resumed from a byte-identical
+/// checkpoint — recovery is a restart, not an approximation.
+#[test]
+fn kill_recovery_matches_fresh_p_minus_1_run() {
+    let dir = artifacts();
+    let ck_kill = tmp_ckpt_dir("kill");
+    let ck_ref = tmp_ckpt_dir("kill_ref");
+    let steps = 8usize;
+
+    let mut opts = TrainOpts::new("tiny", steps);
+    opts.seed = 29;
+    opts.ckpt_dir = Some(ck_kill.clone());
+    opts.ckpt_every = 2;
+    opts.detect_ms = 5000;
+    opts.fault = Some(FaultPlan {
+        seed: 7,
+        kill: Some((2, 5)),
+        ..FaultPlan::default()
+    });
+    let killed = train_dp(&dir, 3, &opts).unwrap();
+
+    assert_eq!(killed.recoveries.len(), 1, "exactly one recovery");
+    let ev = &killed.recoveries[0];
+    assert_eq!(ev.failed_rank, 2);
+    assert_eq!(ev.detected_step, 5);
+    assert_eq!(ev.ckpt_step, 4, "newest checkpoint before the fault is step 4");
+    assert_eq!(ev.steps_lost, 2, "steps 4 and 5 are re-run");
+    assert_eq!(ev.p_after, 2);
+    assert!(
+        ev.reshard.iter().all(|ranks| !ranks.is_empty() && ranks.iter().all(|&w| w < 2)),
+        "every expert must be re-assigned to a survivor: {:?}",
+        ev.reshard
+    );
+    assert_eq!(killed.losses.len(), steps, "the run must still finish all steps");
+
+    // A clean P=3 run of 4 steps writes the same step-4 checkpoint —
+    // the fault cannot have perturbed anything before it fired.
+    let mut pre = TrainOpts::new("tiny", 4);
+    pre.seed = 29;
+    pre.ckpt_dir = Some(ck_ref.clone());
+    pre.ckpt_every = 2;
+    train_dp(&dir, 3, &pre).unwrap();
+    let ck_a = std::fs::read(ck_kill.join("ckpt_0000000004.bin")).unwrap();
+    let ck_b = std::fs::read(ck_ref.join("ckpt_0000000004.bin")).unwrap();
+    assert_eq!(ck_a, ck_b, "pre-fault checkpoints must be byte-identical");
+
+    // Fresh P-1 continuation from that checkpoint.
+    let mut rest = TrainOpts::new("tiny", 4);
+    rest.seed = 29;
+    rest.ckpt_dir = Some(ck_ref.clone());
+    rest.resume = true;
+    let fresh = train_dp(&dir, 2, &rest).unwrap();
+    let _ = std::fs::remove_dir_all(&ck_kill);
+    let _ = std::fs::remove_dir_all(&ck_ref);
+
+    assert_eq!(fresh.start_step, 4);
+    assert_bitwise_losses(&killed.losses[4..], &fresh.losses, "post-recovery segment");
+    assert_bitwise_params(&killed.final_params, &fresh.final_params, "post-recovery params");
+}
+
+/// Hang-class regression on the EP cluster path: a worker killed before
+/// the dispatch A2A must surface as a typed error within the detection
+/// window — the survivors' `a2a recv` calls error out instead of
+/// blocking forever.
+#[test]
+fn ep_cluster_kill_surfaces_typed_error_within_deadline() {
+    let dir = artifacts();
+    let engine = Engine::new(&dir).unwrap();
+    let p = 2;
+    let geo = ep_geometry(&engine, "tiny", p).unwrap();
+    let params = init_params(&engine, "tiny", 55).unwrap();
+    let bp = &params[1..10];
+    let atp: Vec<Vec<f32>> = bp[..7].to_vec();
+    let (w1_full, w2_full) = (bp[7].clone(), bp[8].clone());
+
+    let mut rng = Rng::new(77);
+    let t_m = geo.t * geo.m;
+    let xs: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..t_m).map(|_| rng.normal() as f32 * 0.5).collect())
+        .collect();
+    let dys: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..t_m).map(|_| rng.normal() as f32 * 0.5).collect())
+        .collect();
+
+    let t0 = Instant::now();
+    let err = run_ep_cluster_faulty(
+        &dir,
+        "tiny",
+        p,
+        atp,
+        w1_full,
+        w2_full,
+        xs,
+        dys,
+        Some(FaultPlan {
+            seed: 3,
+            kill: Some((1, 0)),
+            ..FaultPlan::default()
+        }),
+        3000,
+    )
+    .unwrap_err();
+    let waited = t0.elapsed();
+
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("killed") || msg.contains("dead") || msg.contains("a2a recv"),
+        "expected a typed kill/peer-dead error, got: {msg}"
+    );
+    assert!(
+        waited < Duration::from_secs(30),
+        "detection took {waited:?}, deadline semantics are broken"
+    );
+}

@@ -13,6 +13,7 @@ use flowmoe::backend::kernels as kn;
 use flowmoe::backend::model::{block_forward, lm_head_logits_ws, BlockParams, Geo};
 use flowmoe::backend::Workspace;
 use flowmoe::config::preset;
+use flowmoe::ft::FaultPlan;
 use flowmoe::serve::{
     argmax_rows, init_params, run_synthetic, traffic, Decoder, EpExperts, ExpertBackend, KvCache, Scheduler, ServeOpts,
     TrafficCfg,
@@ -109,6 +110,57 @@ fn ep_decode_identical_to_local() {
     let (ep_toks, ep_logits) = run(true);
     assert_eq!(local_toks, ep_toks, "token streams must be identical");
     assert_eq!(local_logits, ep_logits, "final-step logits must be bitwise identical");
+}
+
+/// A worker killed mid-decode is healed in place (respawn + replay) and
+/// the output stream stays **bitwise** identical to a faultless run —
+/// the row-independence contract makes recovery invisible to clients.
+#[test]
+fn ep_decode_survives_worker_kill_bitwise() {
+    let (g, l_blocks) = tiny_geo();
+    let params = init_params(&g, l_blocks, 3);
+    let run = |fault: Option<FaultPlan>| -> (Vec<i32>, Vec<f32>, usize) {
+        let mut dec = Decoder::new(g, params.clone(), 2);
+        let counts: Vec<u64> = (0..g.e as u64).collect();
+        let cluster =
+            EpExperts::with_fault(&g, dec.params(), &counts, g.e, dec.capacity(), fault, 2000);
+        dec.set_backend(ExpertBackend::Ep(cluster));
+        let mut ca = KvCache::new(l_blocks, 16, g.m, dec.workspace());
+        let mut cb = KvCache::new(l_blocks, 16, g.m, dec.workspace());
+        let mut toks = vec![3i32, 17i32];
+        let mut all = Vec::new();
+        let mut last_logits = Vec::new();
+        for _ in 0..12 {
+            let logits = {
+                let mut refs = [&mut ca, &mut cb];
+                dec.decode_logits(&toks, &mut refs)
+            };
+            let next = argmax_rows(&logits, g.vocab);
+            all.extend(next.iter().copied());
+            last_logits = logits.clone();
+            dec.workspace().put(logits);
+            toks = next;
+        }
+        let respawns = match dec.set_backend(ExpertBackend::Local) {
+            ExpertBackend::Ep(mut cluster) => {
+                let r = cluster.respawns();
+                cluster.shutdown();
+                r
+            }
+            _ => 0,
+        };
+        (all, last_logits, respawns)
+    };
+    let (clean_toks, clean_logits, clean_resp) = run(None);
+    assert_eq!(clean_resp, 0, "faultless run must not respawn anyone");
+    let (ft_toks, ft_logits, ft_resp) = run(Some(FaultPlan {
+        seed: 11,
+        kill: Some((0, 3)),
+        ..FaultPlan::default()
+    }));
+    assert_eq!(ft_resp, 1, "the killed worker must be respawned exactly once");
+    assert_eq!(clean_toks, ft_toks, "token streams must survive the kill bitwise");
+    assert_eq!(clean_logits, ft_logits, "final-step logits must survive the kill bitwise");
 }
 
 /// Pushing a realistic traffic trace through the scheduler with a dummy
