@@ -19,12 +19,17 @@
 //!   modules (`commpool`, `cluster`, `serve`): a dead peer must surface
 //!   as a typed error within a deadline, never as a hang — use
 //!   `recv_timeout` (or the deadline-bounded `Collective` ops).
+//! * **FL007** direct `Collective`/`CommPool` all-reduce submission
+//!   (`.all_reduce_sum(` / `.submit_ar(`) inside `trainer/`: gradient AR
+//!   chunks must be enqueued by executing the policy-built DAG (the
+//!   `exec` module), never ad hoc — otherwise the executed schedule can
+//!   silently diverge from the one `analyze::check_dag` certified.
 //!
 //! An audited site is silenced with a magic comment on the same line or
 //! the line above: `// flowmoe-lint: allow(<rule-name>) — <why>` where
 //! `<rule-name>` is `safety`, `thread_spawn`, `hashmap`, `unwrap`,
-//! `kernel_coverage` or `recv_unbounded`. Code under `#[cfg(test)]` is
-//! exempt from every
+//! `kernel_coverage`, `recv_unbounded` or `trainer_direct_ar`. Code under
+//! `#[cfg(test)]` is exempt from every
 //! rule. The lexer is intentionally approximate (it does not parse
 //! Rust), but it is token-exact for the constructs the rules inspect —
 //! in particular, nothing inside string literals or comments can ever
@@ -636,6 +641,33 @@ fn lint_file(rel: &str, src: &str, kernel_test_idents: &HashSet<String>) -> Vec<
         }
     }
 
+    // FL007: direct all-reduce submission in the trainer — gradient AR
+    // chunks must come from executing the policy-built DAG (the `exec`
+    // module owns the enqueue helpers and the Plan driver), or the
+    // executed schedule can diverge from the certified one
+    if rel.contains("/trainer/") {
+        for p in 0..fl.code.len() {
+            if fl.cmasked(p) {
+                continue;
+            }
+            if matches!(fl.ident(p), Some("all_reduce_sum") | Some("submit_ar"))
+                && p > 0
+                && fl.is_punct(p - 1, '.')
+                && p + 1 < fl.code.len()
+                && fl.is_punct(p + 1, '(')
+            {
+                let line = fl.cline(p);
+                if !fl.allowed(line, "trainer_direct_ar") {
+                    push(
+                        line,
+                        "FL007",
+                        "direct Collective AR call in the trainer; route it through exec (enqueue_* / Plan::run_native) or add an audited allow".into(),
+                    );
+                }
+            }
+        }
+    }
+
     // FL005: kernel coverage
     if rel.ends_with("backend/kernels.rs") {
         for p in 0..fl.code.len() {
@@ -816,6 +848,23 @@ fn f<'a>(x: &'a str) -> char {
         // audited allow is honored
         let allowed = "fn f(rx: Receiver<u8>) {\n    // flowmoe-lint: allow(recv_unbounded) — sender outlives rx\n    let _ = rx.recv();\n}\n";
         assert_eq!(lint_str("src/commpool/mod.rs", allowed).len(), 0);
+    }
+
+    #[test]
+    fn trainer_direct_ar_confined_to_executor() {
+        let src = "fn f() { coll.all_reduce_sum(w, tag, &mut buf); pool.submit_ar(job); }\n";
+        let vs = lint_str("src/trainer/mod.rs", src);
+        assert_eq!(vs.len(), 2, "{vs:?}");
+        assert!(vs.iter().all(|v| v.rule == "FL007"));
+        // the executor module owns these calls; other modules are out of scope
+        assert_eq!(lint_str("src/exec/mod.rs", src).len(), 0);
+        assert_eq!(lint_str("src/commpool/mod.rs", src).len(), 0);
+        // a TaskRunner impl *defines* submit_ar — a definition is not a call
+        let def = "impl TaskRunner for S { fn submit_ar(&mut self, t: &Task) -> Result<()> { Ok(()) } }\n";
+        assert_eq!(lint_str("src/trainer/mod.rs", def).len(), 0);
+        // audited allow is honored (the trainer's scalar loss mean)
+        let allowed = "fn f() {\n    // flowmoe-lint: allow(trainer_direct_ar) — scalar loss mean\n    coll.all_reduce_sum(w, tag, &mut b);\n}\n";
+        assert_eq!(lint_str("src/trainer/mod.rs", allowed).len(), 0);
     }
 
     #[test]

@@ -1,0 +1,543 @@
+//! The task-graph executor — one scheduling engine for both the modeled
+//! and the measured pipeline.
+//!
+//! A [`crate::sched::Policy`] builds a multi-type task [`Dag`] (Eqs. 2–5:
+//! MHA+gating, dispatch A2A, expert compute, combine A2A, priority-ranked
+//! AR chunks). Historically that DAG was only ever *simulated*; the real
+//! trainer hand-coded its own overlap structure behind an `overlap: bool`
+//! flag, so the schedule the analyzer certified and the schedule the
+//! runtime executed could silently diverge. This module closes that gap:
+//! the same statically verified [`Plan`] drives
+//!
+//! * [`run_modeled`] — the discrete-event engine over the cost model's
+//!   durations (what [`crate::sim::simulate`] now delegates to), and
+//! * [`Plan::run_native`] — real execution: DAG nodes dispatched in the
+//!   same ready-set/priority order to a [`TaskRunner`] that binds compute
+//!   nodes to native kernels and hands AR-chunk nodes to the
+//!   [`crate::commpool`] FIFO thread (Algorithm 2's asynchronous lane).
+//!
+//! [`Plan::new`] is the mandatory pre-flight: it runs the **full**
+//! [`crate::analyze::check_dag`] rule set (S001–S007) on every DAG the
+//! runtime will execute — not just the simulated ones — and refuses to
+//! construct a plan from an invalid schedule. (`run_modeled` itself keeps
+//! only the policy-free structural half in debug builds, because the
+//! simulator's unit fixtures deliberately violate the policy rules.)
+//!
+//! The chunked all-reduce submission helpers ([`enqueue_tensor_ar`] /
+//! [`enqueue_block_ar`]) live here too: they are the runtime realization
+//! of the DAG's `Ar{l, c}` nodes, shared by every [`TaskRunner`].
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::commpool::{partition_ranges, Collective, CommError, CommPool};
+use crate::obs;
+use crate::sched::Policy;
+use crate::sim::{Span, Timeline};
+use crate::tasks::{Dag, Stream, Task, TaskId};
+use crate::util::lock_recover;
+
+/// A statically verified, executable schedule: the policy-built DAG plus
+/// the policy it was built under. Construction *is* the pre-flight — a
+/// `Plan` cannot exist for a DAG that fails `analyze::check_dag`.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub dag: Dag,
+    pub policy: Policy,
+}
+
+impl Plan {
+    /// Verify `(dag, policy)` under the full S001–S007 rule set and wrap
+    /// it. Unlike the simulator's debug-only structural assert, this runs
+    /// unconditionally (release builds included): a schedule the runtime
+    /// is about to execute must be provably well-formed.
+    pub fn new(dag: Dag, policy: Policy) -> Result<Plan> {
+        let vs = crate::analyze::check_dag(&dag, &policy);
+        if let Some(v) = vs.first() {
+            bail!(
+                "schedule pre-flight failed for policy {} ({} violation(s), first: {v})",
+                policy.name,
+                vs.len()
+            );
+        }
+        Ok(Plan { dag, policy })
+    }
+
+    /// Execute the plan against the cost model (modeled durations).
+    pub fn modeled(&self) -> Timeline {
+        run_modeled(&self.dag)
+    }
+
+    /// Execute the plan for real: walk the DAG in ready-set priority
+    /// order, dispatching each node to `runner`.
+    pub fn run_native<R: TaskRunner + ?Sized>(&self, runner: &mut R) -> Result<()> {
+        run_native(&self.dag, runner)
+    }
+}
+
+/// Binds DAG nodes to real work. [`run_native`] calls `run` for compute
+/// and A2A nodes (executed inline, to completion) and `submit_ar` for AR
+/// chunk nodes (handed to an asynchronous communication lane — typically
+/// [`CommPool`] — and considered complete on submission, matching
+/// Algorithm 2's no-preemption FIFO comm thread).
+pub trait TaskRunner {
+    /// Execute one inline (compute / A2A) task to completion.
+    fn run(&mut self, task: &Task) -> Result<()>;
+    /// Hand one AR-chunk task to the asynchronous comm lane.
+    fn submit_ar(&mut self, task: &Task) -> Result<()>;
+}
+
+fn complete(
+    dag: &Dag,
+    dependents: &[Vec<TaskId>],
+    indeg: &mut [u32],
+    heap: &mut BinaryHeap<Reverse<(u64, TaskId)>>,
+    ar_fifo: &mut VecDeque<TaskId>,
+    id: TaskId,
+) {
+    for &dep in &dependents[id] {
+        indeg[dep] -= 1;
+        if indeg[dep] == 0 {
+            let t = &dag.tasks[dep];
+            if t.kind.is_ar() {
+                ar_fifo.push_back(t.id);
+            } else {
+                heap.push(Reverse((t.seq, t.id)));
+            }
+        }
+    }
+}
+
+/// Drive the DAG through a [`TaskRunner`] on the calling thread.
+///
+/// Ready non-AR tasks run inline in ascending `(seq, id)` order — the
+/// Eqs. 2–5 FIFO rank, which for `sched::build_dag` output equals
+/// emission order. Ready AR chunks are drained to `submit_ar` *before*
+/// every inline task (and submission completes the node, so a chained
+/// chunk unlocked by it is picked up by the same drain): the runner's
+/// comm lane owns in-flight chunks from then on, which is exactly the
+/// paper's compute-proceeds-while-AR-runs overlap. The caller decides
+/// when to block on the lane (e.g. `CommPool::drain` at step end).
+pub fn run_native<R: TaskRunner + ?Sized>(dag: &Dag, runner: &mut R) -> Result<()> {
+    #[cfg(debug_assertions)]
+    {
+        let vs = crate::analyze::check_dag_structure(dag);
+        assert!(vs.is_empty(), "run_native() given an invalid DAG: {}", vs[0]);
+    }
+    let n = dag.tasks.len();
+    let mut indeg: Vec<u32> = vec![0; n];
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for t in &dag.tasks {
+        indeg[t.id] = t.deps.len() as u32;
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<(u64, TaskId)>> = BinaryHeap::new();
+    let mut ar_fifo: VecDeque<TaskId> = VecDeque::new();
+    for t in &dag.tasks {
+        if t.deps.is_empty() {
+            if t.kind.is_ar() {
+                ar_fifo.push_back(t.id);
+            } else {
+                heap.push(Reverse((t.seq, t.id)));
+            }
+        }
+    }
+    let mut done = 0usize;
+    while done < n {
+        while let Some(id) = ar_fifo.pop_front() {
+            runner.submit_ar(&dag.tasks[id])?;
+            done += 1;
+            complete(dag, &dependents, &mut indeg, &mut heap, &mut ar_fifo, id);
+        }
+        if done >= n {
+            break;
+        }
+        let Some(Reverse((_, id))) = heap.pop() else {
+            bail!("executor deadlock: {done}/{n} tasks complete but none ready");
+        };
+        runner.run(&dag.tasks[id])?;
+        done += 1;
+        complete(dag, &dependents, &mut indeg, &mut heap, &mut ar_fifo, id);
+    }
+    Ok(())
+}
+
+/// Execute the DAG against the cost model: the discrete-event two-stream
+/// engine on exactly the resource model the paper's theorems assume
+/// (Sec. 3.3) — one compute stream and one communication stream, one task
+/// at a time per stream, no preemption, compute and comm may overlap.
+/// When a stream frees up, it picks among *ready* tasks of its stream:
+/// the lowest-`seq` A2A-or-compute task; AR chunks run only when no A2A
+/// task is ready (Algorithm 2's priority rule).
+///
+/// Panics on invalid DAGs (structurally validated in debug builds only —
+/// the policy-aware rules belong to [`Plan::new`] / `flowmoe analyze`,
+/// and the simulator's unit fixtures violate them on purpose).
+pub fn run_modeled(dag: &Dag) -> Timeline {
+    #[cfg(debug_assertions)]
+    {
+        // Static pre-flight (policy-free half of the analyzer): cycles,
+        // duplicate/out-of-range edges, AR FIFO discipline. Policy-aware
+        // rules (streams, shape, AR partition) run via `flowmoe analyze`.
+        let vs = crate::analyze::check_dag_structure(dag);
+        assert!(vs.is_empty(), "simulate() given an invalid DAG: {}", vs[0]);
+    }
+    let n = dag.tasks.len();
+    let mut indeg: Vec<u32> = vec![0; n];
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for t in &dag.tasks {
+        indeg[t.id] = t.deps.len() as u32;
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+
+    // Ready structures per stream (§Perf: a flat ready-vector scan was
+    // O(ready^2) and pushed the scheduler past the paper's <1 % overhead
+    // bound once thousands of AR chunks were in flight):
+    //  * a min-heap on (seq, id) for non-AR tasks — Eqs. 2-5 FIFO order,
+    //  * a FIFO queue for AR chunks (they are created, become ready and
+    //    must run in seq order), consulted only when the heap is empty —
+    //    exactly Algorithm 2's A2A-before-AR rule.
+    let mut heap: [BinaryHeap<Reverse<(u64, TaskId)>>; 3] = Default::default();
+    let mut ar_fifo: [VecDeque<TaskId>; 3] = Default::default();
+    let idx = |s: Stream| match s {
+        Stream::Compute => 0usize,
+        Stream::Comm => 1usize,
+        Stream::ArComm => 2usize,
+    };
+    let push_ready = |heap: &mut [BinaryHeap<Reverse<(u64, TaskId)>>; 3],
+                      ar_fifo: &mut [VecDeque<TaskId>; 3],
+                      t: &Task| {
+        let s = idx(t.stream);
+        if t.kind.is_ar() {
+            ar_fifo[s].push_back(t.id);
+        } else {
+            heap[s].push(Reverse((t.seq, t.id)));
+        }
+    };
+    for t in &dag.tasks {
+        if t.deps.is_empty() {
+            push_ready(&mut heap, &mut ar_fifo, t);
+        }
+    }
+
+    let mut free_at = [0.0f64; 3]; // per-stream next-free time
+    let mut running: [Option<(TaskId, f64)>; 3] = [None, None, None]; // (task, end)
+    let mut spans: Vec<Span> = Vec::with_capacity(n);
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+
+    while done < n {
+        // start tasks on any idle stream with ready work
+        for s in 0..3 {
+            if running[s].is_none() {
+                let id = if let Some(Reverse((_, id))) = heap[s].pop() {
+                    Some(id)
+                } else {
+                    ar_fifo[s].pop_front()
+                };
+                if let Some(id) = id {
+                    let start = now.max(free_at[s]);
+                    let end = start + dag.tasks[id].dur;
+                    running[s] = Some((id, end));
+                    spans.push(Span {
+                        task: id,
+                        start,
+                        end,
+                        stream: dag.tasks[id].stream,
+                    });
+                }
+            }
+        }
+        // advance to the earliest completion
+        let next_end = running
+            .iter()
+            .flatten()
+            .map(|&(_, e)| e)
+            .fold(f64::INFINITY, f64::min);
+        if !next_end.is_finite() {
+            // no task running but not all done => DAG has a cycle or
+            // unreachable tasks (validate() prevents this).
+            panic!("simulator deadlock: {done}/{n} tasks done");
+        }
+        now = next_end;
+        for s in 0..3 {
+            if let Some((id, end)) = running[s] {
+                if end <= now {
+                    running[s] = None;
+                    free_at[s] = end;
+                    done += 1;
+                    for &dep in &dependents[id] {
+                        indeg[dep] -= 1;
+                        if indeg[dep] == 0 {
+                            push_ready(&mut heap, &mut ar_fifo, &dag.tasks[dep]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+    Timeline { spans, makespan }
+}
+
+// ---------------------------------------------------------------------------
+// AR-chunk submission: the runtime realization of the DAG's Ar{l, c} nodes
+// ---------------------------------------------------------------------------
+
+/// Enqueue chunked all-reduce jobs for one tensor of the grad store.
+/// Returns the number of chunks enqueued. An AR failure is parked in
+/// `ar_fail` (first one wins) and later chunks of the step short-circuit.
+#[allow(clippy::too_many_arguments)]
+pub fn enqueue_tensor_ar(
+    pool: &CommPool,
+    coll: &Arc<Collective>,
+    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    rank: usize,
+    ar_fail: &Arc<Mutex<Option<CommError>>>,
+    tensor_idx: usize,
+    layer_id: usize,
+    chunk_elems: usize,
+    tag: &mut impl FnMut(usize, usize, usize) -> u64,
+) -> usize {
+    let len = lock_recover(gstore)[tensor_idx].len();
+    let ranges = partition_ranges(len, chunk_elems);
+    let n = ranges.len();
+    for (c, (start, l)) in ranges.into_iter().enumerate() {
+        let coll = Arc::clone(coll);
+        let gstore = Arc::clone(gstore);
+        let ar_fail = Arc::clone(ar_fail);
+        let t = tag(layer_id, tensor_idx, c);
+        pool.submit_ar(Box::new(move || {
+            // runs on the comm-pool thread: this span is the measured
+            // communication time of one AR chunk
+            let _sp = obs::span("ar_chunk");
+            if lock_recover(&ar_fail).is_some() {
+                return; // a chunk already failed this step; don't pay the deadline again
+            }
+            let mut chunk = {
+                let g = lock_recover(&gstore);
+                g[tensor_idx][start..start + l].to_vec()
+            };
+            match coll.all_reduce_sum(rank, t, &mut chunk) {
+                Ok(()) => {
+                    let mut g = lock_recover(&gstore);
+                    g[tensor_idx][start..start + l].copy_from_slice(&chunk);
+                }
+                Err(e) => {
+                    let mut f = lock_recover(&ar_fail);
+                    if f.is_none() {
+                        *f = Some(e);
+                    }
+                }
+            }
+        }));
+    }
+    n
+}
+
+/// Enqueue chunked AR for all tensors of one block. Returns the number
+/// of chunks enqueued.
+#[allow(clippy::too_many_arguments)]
+pub fn enqueue_block_ar(
+    pool: &CommPool,
+    coll: &Arc<Collective>,
+    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
+    rank: usize,
+    ar_fail: &Arc<Mutex<Option<CommError>>>,
+    layer_id: usize,
+    first_tensor: usize,
+    n_tensors: usize,
+    chunk_elems: usize,
+    tag: &mut impl FnMut(usize, usize, usize) -> u64,
+) -> usize {
+    let mut n = 0;
+    for t in 0..n_tensors {
+        n += enqueue_tensor_ar(pool, coll, gstore, rank, ar_fail, first_tensor + t, layer_id, chunk_elems, tag);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, ClusterProfile};
+    use crate::cost::TaskCosts;
+    use crate::sched::build_dag;
+    use crate::tasks::{Phase, TaskKind};
+
+    fn fixture(policy: &Policy) -> Dag {
+        let cfg = preset("GPT2-Tiny-MoE").expect("preset");
+        let costs = TaskCosts::build(&cfg, &ClusterProfile::cluster1(16));
+        build_dag(&cfg, &costs, policy)
+    }
+
+    /// Records the exact dispatch order run_native produces.
+    struct Recorder {
+        order: Vec<(TaskId, bool)>, // (task, submitted-as-AR)
+    }
+
+    impl TaskRunner for Recorder {
+        fn run(&mut self, task: &Task) -> Result<()> {
+            self.order.push((task.id, false));
+            Ok(())
+        }
+        fn submit_ar(&mut self, task: &Task) -> Result<()> {
+            self.order.push((task.id, true));
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn plan_preflight_accepts_matching_policy() {
+        let pol = Policy::flow_moe(2, 0.5e6);
+        let dag = fixture(&pol);
+        assert!(Plan::new(dag, pol).is_ok());
+    }
+
+    #[test]
+    fn plan_preflight_rejects_policy_mismatch() {
+        // a FlowMoE-CC DAG places AR chunks on the concurrent channel,
+        // which is illegal under strict FlowMoE — the pre-flight must
+        // refuse to build a plan for it (S003)
+        let cc = Policy::flow_moe_cc(2, 2.5e6);
+        let dag = fixture(&cc);
+        let err = Plan::new(dag, Policy::flow_moe(2, 2.5e6)).unwrap_err();
+        assert!(err.to_string().contains("pre-flight"), "{err}");
+    }
+
+    #[test]
+    fn run_native_respects_deps_and_fifo_order() {
+        let pol = Policy::flow_moe(2, 0.5e6);
+        let plan = Plan::new(fixture(&pol), pol).expect("plan");
+        let dag = &plan.dag;
+        let mut rec = Recorder { order: Vec::new() };
+        plan.run_native(&mut rec).expect("run");
+        assert_eq!(rec.order.len(), dag.tasks.len(), "every task exactly once");
+        let mut pos = vec![usize::MAX; dag.tasks.len()];
+        for (i, &(id, is_ar)) in rec.order.iter().enumerate() {
+            assert_eq!(pos[id], usize::MAX, "task {id} dispatched twice");
+            pos[id] = i;
+            assert_eq!(is_ar, dag.tasks[id].kind.is_ar(), "lane routing for task {id}");
+        }
+        // deps always dispatched first
+        for t in &dag.tasks {
+            for &d in &t.deps {
+                assert!(pos[d] < pos[t.id], "task {} ran before dep {}", t.id, d);
+            }
+        }
+        // inline tasks in strictly ascending FIFO rank (Eqs. 2–5)
+        let inline_seqs: Vec<u64> = rec
+            .order
+            .iter()
+            .filter(|&&(_, ar)| !ar)
+            .map(|&(id, _)| dag.tasks[id].seq)
+            .collect();
+        assert!(inline_seqs.windows(2).all(|w| w[0] < w[1]), "inline FIFO order");
+        // AR chunks submitted in FIFO (seq) order — Algorithm 2
+        let ar_seqs: Vec<u64> = rec
+            .order
+            .iter()
+            .filter(|&&(_, ar)| ar)
+            .map(|&(id, _)| dag.tasks[id].seq)
+            .collect();
+        assert!(ar_seqs.len() >= 2, "fixture must have chunked AR");
+        assert!(ar_seqs.windows(2).all(|w| w[0] < w[1]), "AR FIFO order");
+        // Pipe-AR: layer l's chunks are all submitted before layer l-1's
+        // first backward-AT completes its chunks (emission is l DESC)
+        let ar_layers: Vec<usize> = rec
+            .order
+            .iter()
+            .filter(|&&(_, ar)| ar)
+            .map(|&(id, _)| match dag.tasks[id].kind {
+                TaskKind::Ar { l, .. } => l,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert!(ar_layers.windows(2).all(|w| w[0] >= w[1]), "AR layers descend");
+    }
+
+    #[test]
+    fn centralized_plan_submits_ar_after_all_compute() {
+        let pol = Policy::flow_moe_at(2);
+        let plan = Plan::new(fixture(&pol), pol).expect("plan");
+        let mut rec = Recorder { order: Vec::new() };
+        plan.run_native(&mut rec).expect("run");
+        let first_ar = rec.order.iter().position(|&(_, ar)| ar).expect("has AR");
+        let last_inline = rec
+            .order
+            .iter()
+            .rposition(|&(_, ar)| !ar)
+            .expect("has inline work");
+        assert!(
+            last_inline < first_ar,
+            "centralized AR must start only after the full backward pass"
+        );
+    }
+
+    #[test]
+    fn pipelined_plan_interleaves_ar_with_compute() {
+        let pol = Policy::flow_moe(2, 0.5e6);
+        let plan = Plan::new(fixture(&pol), pol).expect("plan");
+        let mut rec = Recorder { order: Vec::new() };
+        plan.run_native(&mut rec).expect("run");
+        let first_ar = rec.order.iter().position(|&(_, ar)| ar).expect("has AR");
+        let last_inline = rec.order.iter().rposition(|&(_, ar)| !ar).expect("inline");
+        assert!(
+            first_ar < last_inline,
+            "Pipe-AR must submit block chunks while earlier blocks still run backward"
+        );
+    }
+
+    #[test]
+    fn run_native_head_runs_between_phases() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let plan = Plan::new(fixture(&pol), pol).expect("plan");
+        let dag = &plan.dag;
+        let mut rec = Recorder { order: Vec::new() };
+        plan.run_native(&mut rec).expect("run");
+        let mut pos = vec![0usize; dag.tasks.len()];
+        for (i, &(id, _)) in rec.order.iter().enumerate() {
+            pos[id] = i;
+        }
+        let head = dag
+            .tasks
+            .iter()
+            .position(|t| matches!(t.kind, TaskKind::Head))
+            .expect("head");
+        for t in &dag.tasks {
+            match t.kind {
+                TaskKind::At { phase: Phase::Fwd, .. }
+                | TaskKind::Disp { phase: Phase::Fwd, .. }
+                | TaskKind::Exp { phase: Phase::Fwd, .. }
+                | TaskKind::Comb { phase: Phase::Fwd, .. } => {
+                    assert!(pos[t.id] < pos[head], "fwd task after head");
+                }
+                TaskKind::At { phase: Phase::Bwd, .. }
+                | TaskKind::Disp { phase: Phase::Bwd, .. }
+                | TaskKind::Exp { phase: Phase::Bwd, .. }
+                | TaskKind::Comb { phase: Phase::Bwd, .. } => {
+                    assert!(pos[t.id] > pos[head], "bwd task before head");
+                }
+                TaskKind::Ar { .. } | TaskKind::Head => {}
+            }
+        }
+    }
+
+    #[test]
+    fn modeled_matches_simulator_delegate() {
+        let pol = Policy::flow_moe(2, 2.5e6);
+        let plan = Plan::new(fixture(&pol), pol).expect("plan");
+        let a = plan.modeled();
+        let b = crate::sim::simulate(&plan.dag);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.spans.len(), b.spans.len());
+    }
+}

@@ -15,6 +15,10 @@
 //! * [`sim`] — a discrete-event two-stream cluster simulator (the exact
 //!   resource model the paper's theorems assume),
 //! * [`sched`] — FlowMoE and the five baseline scheduling policies,
+//! * [`exec`] — the task-graph executor unifying both worlds: one
+//!   statically verified [`exec::Plan`] per policy-built DAG, driven
+//!   either by the cost model (what [`sim::simulate`] delegates to) or
+//!   by real kernels + collectives (what [`trainer`] executes),
 //! * [`commpool`] — the runtime communication pool (Algorithm 2),
 //! * [`sweep`] — the multi-core work-stealing sweep engine driving the
 //!   675-layer evaluation grid (Fig. 6) and the other table benches,
@@ -55,6 +59,7 @@ pub mod commpool;
 pub mod config;
 pub mod cost;
 pub mod data;
+pub mod exec;
 pub mod ft;
 pub mod metrics;
 pub mod obs;

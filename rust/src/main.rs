@@ -23,7 +23,7 @@ use flowmoe::metrics::{energy_joules, peak_memory, sm_utilization};
 use flowmoe::report::Table;
 use flowmoe::sched::{build_dag, iteration_time, Policy};
 use flowmoe::sim::simulate;
-use flowmoe::trainer::{train_dp, train_fused, TrainOpts};
+use flowmoe::trainer::{train_dp, train_fused, ExecMode, TrainOpts};
 use flowmoe::util::fmt_ms;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -61,6 +61,9 @@ fn main() -> ExitCode {
                                                                     --trace (or FLOWMOE_TRACE) writes a\n\
                                                                     chrome-trace of the run + measured-vs-\n\
                                                                     modeled overlap report\n\
+                          --exec graph|legacy                        graph (default) executes the policy-built\n\
+                                                                    task DAG; legacy is the pre-executor\n\
+                                                                    reference loop (bitwise identical)\n\
                           --ckpt-dir D --ckpt-every N --resume       CRC-checked atomic checkpoints; resume\n\
                                                                     is bitwise (same losses + params)\n\
                           --kill W@K --drop-prob P --delay-prob P    seeded fault injection (--fault-seed S);\n\
@@ -272,6 +275,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.overlap = !args.has_flag("centralized");
     opts.log_every = args.usize_or("log-every", 10);
     opts.seed = args.usize_or("seed", 1234) as u64;
+    opts.exec = match args.get_or("exec", "graph").as_str() {
+        "graph" => ExecMode::Graph,
+        "legacy" => ExecMode::Legacy,
+        other => bail!("--exec expects graph|legacy, got '{other}'"),
+    };
     // fault tolerance: checkpointing, resume, and seeded fault injection
     opts.ckpt_dir = args.get("ckpt-dir").map(PathBuf::from);
     let default_every = if opts.ckpt_dir.is_some() { flowmoe::ft::DEFAULT_CKPT_EVERY } else { 0 };
@@ -375,26 +383,26 @@ fn cmd_train(args: &Args) -> Result<()> {
             spans.len()
         );
         // the payoff: measured overlap from real spans, side by side with
-        // the simulator's prediction for the same config
+        // the cost model's prediction for the SAME policy-built plan the
+        // trainer just executed (not a separately hand-built dag)
         let measured = flowmoe::obs::OverlapStats::from_spans(&spans);
-        if let Some(model_cfg) = preset(&cfg) {
-            let cluster = ClusterProfile::cluster1(p.max(2));
-            let costs = TaskCosts::build(&model_cfg, &cluster);
-            let r = flowmoe::backend::NATIVE_MICRO_R;
-            let pol = if opts.overlap {
-                Policy::flow_moe(r, opts.sp_bytes as f64)
-            } else {
-                Policy::tutel(r)
-            };
-            let dag = build_dag(&model_cfg, &costs, &pol);
-            let modeled = flowmoe::obs::OverlapStats::from_timeline(&simulate(&dag));
-            print!("{}", flowmoe::obs::overlap_report(&measured, &modeled));
+        let plan = if args.has_flag("fused") {
+            flowmoe::trainer::fused_step_plan(&dir, &opts)
         } else {
-            println!("# (no sim preset named {cfg}: measured overlap only)");
-            print!(
-                "{}",
-                flowmoe::obs::overlap_report(&measured, &flowmoe::obs::OverlapStats::default())
-            );
+            flowmoe::trainer::native_step_plan(&dir, &opts, p)
+        };
+        match plan {
+            Ok(plan) => {
+                let modeled = flowmoe::obs::OverlapStats::from_timeline(&plan.modeled());
+                print!("{}", flowmoe::obs::overlap_report(&measured, &modeled));
+            }
+            Err(e) => {
+                println!("# (no schedule plan: {e:#}; measured overlap only)");
+                print!(
+                    "{}",
+                    flowmoe::obs::overlap_report(&measured, &flowmoe::obs::OverlapStats::default())
+                );
+            }
         }
     }
     Ok(())

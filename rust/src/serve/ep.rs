@@ -19,6 +19,12 @@
 //! contract the kernel conformance suite pins across thread budgets),
 //! EP output is **bitwise identical** to local decode.
 //!
+//! Messages carry a one-element control tag ([`MSG_DATA`] /
+//! [`MSG_SHUTDOWN`]) in front of the payload: a replica's fixed row
+//! range can legitimately be empty (more replicas than this round's
+//! capacity rows), so "no rows" and "shut down" must be distinguishable
+//! by more than payload length.
+//!
 //! # Fault tolerance
 //!
 //! The driver's round-trip recv is deadline-bounded: a worker that dies
@@ -51,6 +57,26 @@ use crate::ft::FaultPlan;
 /// the driver for this long assumes the driver is gone and exits (the
 /// normal exit paths are the shutdown sentinel and `poison`).
 const WORKER_IDLE_MS: u64 = 120_000;
+
+/// Control/data tag prepended as element 0 of every driver→worker
+/// message. The payload alone cannot carry this bit: a replica whose
+/// fixed row split is empty this round (more replicas of an expert
+/// than this call's capacity rows) legitimately receives zero data
+/// elements, which used to be indistinguishable from the empty-message
+/// shutdown sentinel — the replica would silently exit mid-serve and
+/// the driver would burn a detection timeout + respawn on a healthy
+/// round.
+const MSG_DATA: f32 = 1.0;
+/// Shutdown sentinel tag (the message carries no payload).
+const MSG_SHUTDOWN: f32 = 0.0;
+
+/// Wrap `chunk` as a tagged data message (`[MSG_DATA, rows...]`).
+fn data_msg(chunk: &[f32]) -> Vec<f32> {
+    let mut msg = Vec::with_capacity(1 + chunk.len());
+    msg.push(MSG_DATA);
+    msg.extend_from_slice(chunk);
+    msg
+}
 
 /// Assign experts to worker ranks: every expert gets one worker, then
 /// spare workers replicate the hottest experts (by observed routing
@@ -98,10 +124,13 @@ fn chunk_range(c: usize, r: usize, i: usize) -> (usize, usize) {
     (lo, lo + base + usize::from(i < rem))
 }
 
-/// Expert worker loop: one (layer, step) round per message. An empty
-/// message is the shutdown sentinel. Replies use `send_replace` so a
-/// retired predecessor racing a respawned replacement on the same round
-/// can never trip the duplicate-send check — the newest reply wins.
+/// Expert worker loop: one (layer, step) round per message. Element 0
+/// of every message is the control tag — [`MSG_SHUTDOWN`] exits,
+/// [`MSG_DATA`] carries this round's rows (possibly zero of them, which
+/// still gets a reply so the driver never mistakes an idle replica for
+/// a dead one). Replies use `send_replace` so a retired predecessor
+/// racing a respawned replacement on the same round can never trip the
+/// duplicate-send check — the newest reply wins.
 #[allow(clippy::too_many_arguments)]
 fn expert_worker(
     coll: Arc<Collective>,
@@ -116,11 +145,14 @@ fn expert_worker(
     let (m, h) = geo_mh;
     let mut round: u64 = start_round;
     loop {
-        let chunk = match coll.recv_timeout(driver, rank, round, Duration::from_millis(WORKER_IDLE_MS)) {
+        let msg = match coll.recv_timeout(driver, rank, round, Duration::from_millis(WORKER_IDLE_MS)) {
             Ok(v) => v,
             Err(_) => return, // driver gone (shutdown poison) or idle too long
         };
-        if chunk.is_empty() {
+        let Some((&tag, chunk)) = msg.split_first() else {
+            return; // malformed (untagged empty) message: treat as shutdown
+        };
+        if tag == MSG_SHUTDOWN {
             return;
         }
         if coll.should_die(rank, round as usize) {
@@ -133,10 +165,12 @@ fn expert_worker(
         let l = (round as usize) % l_blocks;
         let rows = chunk.len() / m;
         let mut out = vec![0.0f32; rows * m];
-        {
+        if rows > 0 {
             let _sp = crate::obs::span("expert_fwd");
-            kn::expert_ffn_into(&chunk, &w1[l], &w2[l], &mut out, 1, rows, m, h);
+            kn::expert_ffn_into(chunk, &w1[l], &w2[l], &mut out, 1, rows, m, h);
         }
+        // zero-row rounds still reply: the empty result is what tells
+        // the driver this replica is alive
         coll.send_replace(rank, driver, round, out);
         round += 1;
     }
@@ -289,7 +323,7 @@ impl EpExperts {
             for (ex, ranks) in self.assignment.iter().enumerate() {
                 for (ri, &rank) in ranks.iter().enumerate() {
                     let (lo, hi) = chunk_range(c, ranks.len(), ri);
-                    let chunk = routing.disp[(ex * c + lo) * g.m..(ex * c + hi) * g.m].to_vec();
+                    let chunk = data_msg(&routing.disp[(ex * c + lo) * g.m..(ex * c + hi) * g.m]);
                     self.coll.send(driver, rank, round, chunk);
                     fetches.push((ex, rank, lo, hi));
                 }
@@ -351,7 +385,7 @@ impl EpExperts {
         let chunk = disp_slab[(ex * c + lo) * g.m..(ex * c + hi) * g.m].to_vec();
         // replace-send: must reach the replacement even under a drop
         // plan, and must overwrite a delayed copy of the original
-        self.coll.send_replace(driver, rank, round, chunk.clone());
+        self.coll.send_replace(driver, rank, round, data_msg(&chunk));
         match self.coll.recv(rank, driver, round) {
             Ok(v) => v,
             Err(_) => {
@@ -367,8 +401,8 @@ impl EpExperts {
         }
     }
 
-    /// Stop all workers (empty-message sentinel at the next round) and
-    /// join them. Idempotent.
+    /// Stop all workers ([`MSG_SHUTDOWN`]-tagged sentinel at the next
+    /// round) and join them. Idempotent.
     pub fn shutdown(&mut self) {
         if self.shut {
             return;
@@ -377,7 +411,7 @@ impl EpExperts {
         let driver = self.n_workers;
         for rank in 0..self.n_workers {
             // replace-send: the sentinel must get through the injector
-            self.coll.send_replace(driver, rank, self.round, Vec::new());
+            self.coll.send_replace(driver, rank, self.round, vec![MSG_SHUTDOWN]);
         }
         for hd in self.handles.iter_mut().filter_map(Option::take) {
             let _ = hd.join();
@@ -429,6 +463,54 @@ mod tests {
         let total: usize = plan.iter().map(Vec::len).sum();
         assert_eq!(total, 8);
         assert!(plan.iter().all(|r| r.len() == 2));
+    }
+
+    /// Regression: a replica whose fixed row split is empty this round
+    /// (more replicas of an expert than this call's capacity rows) must
+    /// stay alive and keep serving later rounds. Before the control tag
+    /// was added, the empty data payload looked exactly like the
+    /// shutdown sentinel: the replica exited mid-serve, the driver's
+    /// recv timed out, and a heal/respawn fired on a perfectly healthy
+    /// round.
+    #[test]
+    fn empty_row_split_is_not_a_shutdown() {
+        let g = Geo { m: 4, e: 1, h: 8, top_k: 1, n_heads: 1, n_seq: 2, f: 1.0, vocab: 16 };
+        let l_blocks = 1usize;
+        let params = crate::serve::init_params(&g, l_blocks, 7);
+        // plan capacity 4 admits up to 4 replicas; 3 workers => expert 0
+        // gets 3 replicas. Serving with per-call c = 2 then makes
+        // replica 2's chunk_range(2, 3, 2) empty — the bug trigger.
+        let plan_c = 4usize;
+        let c = 2usize;
+        let mut cluster =
+            EpExperts::with_fault(&g, &params, &[10], 3, plan_c, None, 1_500);
+        assert_eq!(cluster.replica_counts(), vec![3]);
+        let t = 2usize; // tokens this round, both routed to expert 0
+        let u: Vec<f32> = (0..t * g.m).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let hres: Vec<f32> = (0..t * g.m).map(|i| (i as f32) * 0.1).collect();
+        let gating = kn::Gating {
+            probs: vec![1.0; t],
+            idx: vec![0, 0],
+            gate: vec![1.0, 1.0],
+        };
+        // local reference: same routing, same kernel, same weights
+        let reference = {
+            let routing = dispatch(&u, &gating.idx, gating.gate.len(), g.e, c, g.m);
+            let mut expert_out = vec![0.0f32; g.e * c * g.m];
+            kn::expert_ffn_into(&routing.disp, &params[8], &params[9], &mut expert_out, 1, c, g.m, g.h);
+            let yc = combine(&expert_out, &routing, &gating.gate);
+            hres.iter().zip(&yc).map(|(a, b)| a + b).collect::<Vec<f32>>()
+        };
+        let mut ws = Workspace::new();
+        // two rounds: the empty-split replica must survive round 0 for
+        // round 1 to complete without a detection timeout
+        for round in 0..2 {
+            let y = cluster.moe_step(&g, &hres, &u, &gating, c, &mut ws);
+            assert_eq!(y, reference, "round {round}: EP output must match local decode bitwise");
+            ws.put(y);
+        }
+        assert_eq!(cluster.respawns(), 0, "no healthy replica may be mistaken for dead");
+        cluster.shutdown(); // must join all three replicas cleanly
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! its stream: the lowest-`seq` A2A-or-compute task; AR chunks run only
 //! when no A2A task is ready (Algorithm 2's priority rule).
 
-use crate::tasks::{Dag, Stream, Task, TaskId};
+use crate::tasks::{Dag, Stream, TaskId};
 
 /// Execution record of one task.
 #[derive(Clone, Copy, Debug)]
@@ -133,116 +133,14 @@ impl Timeline {
 pub use crate::util::json_escape;
 
 /// Simulate the DAG; panics on invalid DAGs (validated in debug).
+///
+/// Since the executor unification this is a thin delegate: the event loop
+/// lives in [`crate::exec::run_modeled`], the cost-model driver of the
+/// same task-graph executor whose native driver
+/// ([`crate::exec::Plan::run_native`]) runs the real trainer. One engine,
+/// two clocks — modeled and measured overlap describe the same schedule.
 pub fn simulate(dag: &Dag) -> Timeline {
-    #[cfg(debug_assertions)]
-    {
-        // Static pre-flight (policy-free half of the analyzer): cycles,
-        // duplicate/out-of-range edges, AR FIFO discipline. Policy-aware
-        // rules (streams, shape, AR partition) run via `flowmoe analyze`.
-        let vs = crate::analyze::check_dag_structure(dag);
-        assert!(vs.is_empty(), "simulate() given an invalid DAG: {}", vs[0]);
-    }
-    let n = dag.tasks.len();
-    let mut indeg: Vec<u32> = vec![0; n];
-    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
-    for t in &dag.tasks {
-        indeg[t.id] = t.deps.len() as u32;
-        for &d in &t.deps {
-            dependents[d].push(t.id);
-        }
-    }
-
-    // Ready structures per stream (§Perf: a flat ready-vector scan was
-    // O(ready^2) and pushed the scheduler past the paper's <1 % overhead
-    // bound once thousands of AR chunks were in flight):
-    //  * a min-heap on (seq, id) for non-AR tasks — Eqs. 2-5 FIFO order,
-    //  * a FIFO queue for AR chunks (they are created, become ready and
-    //    must run in seq order), consulted only when the heap is empty —
-    //    exactly Algorithm 2's A2A-before-AR rule.
-    use std::cmp::Reverse;
-    use std::collections::{BinaryHeap, VecDeque};
-    let mut heap: [BinaryHeap<Reverse<(u64, TaskId)>>; 3] = Default::default();
-    let mut ar_fifo: [VecDeque<TaskId>; 3] = Default::default();
-    let idx = |s: Stream| match s {
-        Stream::Compute => 0usize,
-        Stream::Comm => 1usize,
-        Stream::ArComm => 2usize,
-    };
-    let push_ready = |heap: &mut [BinaryHeap<Reverse<(u64, TaskId)>>; 3],
-                      ar_fifo: &mut [VecDeque<TaskId>; 3],
-                      t: &Task| {
-        let s = idx(t.stream);
-        if t.kind.is_ar() {
-            ar_fifo[s].push_back(t.id);
-        } else {
-            heap[s].push(Reverse((t.seq, t.id)));
-        }
-    };
-    for t in &dag.tasks {
-        if t.deps.is_empty() {
-            push_ready(&mut heap, &mut ar_fifo, t);
-        }
-    }
-
-    let mut free_at = [0.0f64; 3]; // per-stream next-free time
-    let mut running: [Option<(TaskId, f64)>; 3] = [None, None, None]; // (task, end)
-    let mut spans: Vec<Span> = Vec::with_capacity(n);
-    let mut done = 0usize;
-    let mut now = 0.0f64;
-
-    while done < n {
-        // start tasks on any idle stream with ready work
-        for s in 0..3 {
-            if running[s].is_none() {
-                let id = if let Some(Reverse((_, id))) = heap[s].pop() {
-                    Some(id)
-                } else {
-                    ar_fifo[s].pop_front()
-                };
-                if let Some(id) = id {
-                    let start = now.max(free_at[s]);
-                    let end = start + dag.tasks[id].dur;
-                    running[s] = Some((id, end));
-                    spans.push(Span {
-                        task: id,
-                        start,
-                        end,
-                        stream: dag.tasks[id].stream,
-                    });
-                }
-            }
-        }
-        // advance to the earliest completion
-        let next_end = running
-            .iter()
-            .flatten()
-            .map(|&(_, e)| e)
-            .fold(f64::INFINITY, f64::min);
-        if !next_end.is_finite() {
-            // no task running but not all done => DAG has a cycle or
-            // unreachable tasks (validate() prevents this).
-            panic!("simulator deadlock: {done}/{n} tasks done");
-        }
-        now = next_end;
-        for s in 0..3 {
-            if let Some((id, end)) = running[s] {
-                if end <= now {
-                    running[s] = None;
-                    free_at[s] = end;
-                    done += 1;
-                    for &dep in &dependents[id] {
-                        indeg[dep] -= 1;
-                        if indeg[dep] == 0 {
-                            push_ready(&mut heap, &mut ar_fifo, &dag.tasks[dep]);
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
-    Timeline { spans, makespan }
+    crate::exec::run_modeled(dag)
 }
 
 /// Verify a timeline respects the model: no same-stream overlap, all deps

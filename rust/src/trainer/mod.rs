@@ -9,11 +9,19 @@
 //! * [`train_dp`] — P in-process workers, each owning a full replica and
 //!   a private PJRT engine; every step runs microbatched per-block
 //!   forward/backward pieces and all-reduces gradients through the
-//!   [`crate::commpool`] machinery. With `overlap = true` the AR chunks of
-//!   block *l* are enqueued the moment its gradients are accumulated —
-//!   while the compute thread proceeds to block *l−1* — which is the
-//!   paper's Pipe-AR behaviour; with `overlap = false` all AR happens
-//!   after the full backward pass (the baselines' centralized behaviour).
+//!   [`crate::commpool`] machinery.
+//!
+//! Since the executor unification the step structure is not hand-coded:
+//! each worker builds the same [`crate::sched::build_dag`] task graph the
+//! simulator consumes — `overlap = true` selects the FlowMoE policy
+//! (Pipe-AR: the AR chunks of block *l* are enqueued the moment its
+//! gradients are accumulated, while the compute thread proceeds to block
+//! *l−1*), `overlap = false` the FlowMoE-AT policy (centralized: one
+//! whole-block AR after the full backward pass) — pre-flights it through
+//! [`crate::analyze::check_dag`] and executes it with
+//! [`crate::exec::Plan::run_native`]. [`ExecMode::Legacy`] keeps the
+//! pre-executor hand-rolled loop selectable (`--exec legacy`) as the
+//! bitwise reference for the parity suite and the CI smoke.
 //!
 //! Gradient scaling follows Appendix H: each microbatch loss is scaled by
 //! 1/R so pipelined gradients equal full-batch gradients exactly (the
@@ -40,12 +48,17 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::kernels::{active_dispatch, axpy, scale, with_dispatch};
-use crate::commpool::{partition_ranges, Collective, CommError, CommPool};
+use crate::commpool::{Collective, CommError, CommPool};
+use crate::config::ClusterProfile;
+use crate::cost::TaskCosts;
 use crate::data::Corpus;
+use crate::exec::{self, TaskRunner};
 use crate::ft::{self, Checkpoint, FaultPlan, RecoveryEvent};
 use crate::obs;
-use crate::runtime::{Engine, HostTensor, PjRtBuffer};
+use crate::runtime::{ArtifactSpec, BufSpec, Engine, HostTensor, PjRtBuffer};
+use crate::sched::Policy;
 use crate::sweep::scope;
+use crate::tasks::{Phase, Task, TaskKind};
 use crate::util::{lock_recover, Rng};
 
 /// Per-run report.
@@ -67,6 +80,17 @@ pub struct TrainReport {
     /// observations from **all** workers (each worker-step observes
     /// once), taken after every worker has joined.
     pub stats: obs::RegistrySnapshot,
+}
+
+/// How the per-step work is driven.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Execute a policy-built, `analyze::check_dag`-verified task graph
+    /// through [`crate::exec::Plan::run_native`] (the default).
+    Graph,
+    /// The pre-executor hand-rolled step loop, kept as the bitwise
+    /// reference the parity tests and the CI smoke compare against.
+    Legacy,
 }
 
 /// Training options.
@@ -95,6 +119,8 @@ pub struct TrainOpts {
     /// Worker 0 exits the whole process (code 3) after completing this
     /// many steps — the CI kill-and-resume smoke's crash hook.
     pub die_at: Option<usize>,
+    /// Step engine: graph-driven (default) or the legacy reference loop.
+    pub exec: ExecMode,
 }
 
 impl TrainOpts {
@@ -114,6 +140,7 @@ impl TrainOpts {
             fault: None,
             detect_ms: ft::DETECT_TIMEOUT_MS,
             die_at: None,
+            exec: ExecMode::Graph,
         }
     }
 }
@@ -182,6 +209,56 @@ fn full_batch(engine: &Engine, cfg: &str) -> Result<usize> {
     Ok(tok.shape[0])
 }
 
+/// The scheduling policy `TrainOpts` implies: Pipe-AR overlap is full
+/// FlowMoE; centralized is FlowMoE-AT (identical MHA+MoE pipelining with
+/// `r_at == r_moe`, one whole-block AR per layer after backward).
+fn step_policy(r_deg: usize, overlap: bool, sp_bytes: usize) -> Policy {
+    if overlap {
+        Policy::flow_moe(r_deg, sp_bytes as f64)
+    } else {
+        Policy::flow_moe_at(r_deg)
+    }
+}
+
+/// Build and statically verify the per-step schedule plan for a config.
+/// Durations come from the cost model — they matter for the modeled
+/// timeline, not for native correctness; what `run_native` executes is
+/// the *structure*: layer count, microbatch degree, AR placement and the
+/// Eqs. 2–5 priority ranks.
+fn build_plan(cfg_name: &str, l_blocks: usize, policy: Policy, p: usize) -> Result<exec::Plan> {
+    let mut cfg = crate::config::preset(cfg_name)
+        .ok_or_else(|| anyhow!("no model preset named '{cfg_name}' to build a schedule from"))?;
+    cfg.l = l_blocks;
+    let costs = TaskCosts::build(&cfg, &ClusterProfile::cluster1(p.max(2)));
+    let dag = crate::sched::build_dag(&cfg, &costs, &policy);
+    exec::Plan::new(dag, policy)
+}
+
+/// The schedule plan [`train_dp`] executes, geometry read back from the
+/// manifest. Public so `flowmoe train`'s overlap report can compute the
+/// modeled stats from the *same* verified DAG the runtime ran.
+pub fn native_step_plan(artifacts: &Path, opts: &TrainOpts, p: usize) -> Result<exec::Plan> {
+    let engine = Engine::new(artifacts)?;
+    let b_full = full_batch(&engine, &opts.cfg_name)?;
+    let geo = geometry(&engine, &opts.cfg_name, b_full)?;
+    build_plan(
+        &opts.cfg_name,
+        geo.l_blocks,
+        step_policy(geo.r, opts.overlap, opts.sp_bytes),
+        p,
+    )
+}
+
+/// The fused path's plan: the manifest's `train_step` HLO is one
+/// monolithic kernel, so the plan is the Vanilla-EP policy (R = 1,
+/// centralized AR) over the same block count.
+pub fn fused_step_plan(artifacts: &Path, opts: &TrainOpts) -> Result<exec::Plan> {
+    let engine = Engine::new(artifacts)?;
+    let spec = engine.manifest().get(&format!("train_step_{}", opts.cfg_name))?;
+    let n_params = spec.inputs.iter().filter(|b| b.name.starts_with("param.")).count();
+    build_plan(&opts.cfg_name, (n_params - 2) / 9, Policy::vanilla_ep(), 2)
+}
+
 /// SGD + momentum update (matches the HLO train_step formula exactly).
 /// The per-tensor updates are independent, so they fan out across the
 /// worker's thread budget (identical results for any budget).
@@ -223,6 +300,14 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
         opts.seed ^ 0x0,
     );
 
+    // graph mode: the whole fused step binds to the HEAD node of a
+    // statically verified Vanilla-EP plan (R = 1 — the fused HLO is one
+    // monolithic kernel); legacy calls the engine directly
+    let plan = match opts.exec {
+        ExecMode::Graph => Some(build_plan(cfg, (n_params - 2) / 9, Policy::vanilla_ep(), 2)?),
+        ExecMode::Legacy => None,
+    };
+
     let reg = obs::Registry::new();
     let step_hist = reg.histogram("step_s");
     let mut report = TrainReport::default();
@@ -241,7 +326,20 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
         inputs.push(tokens);
         inputs.push(lr);
         let refs: Vec<&HostTensor> = inputs.iter().collect();
-        let outs = engine.run(&name, &refs)?;
+        let outs = match &plan {
+            Some(plan) => {
+                let mut fs = FusedStep {
+                    engine: &mut engine,
+                    name: &name,
+                    inputs: &refs,
+                    outs: None,
+                };
+                plan.run_native(&mut fs)?;
+                fs.outs
+                    .ok_or_else(|| anyhow!("{name}: plan executed without reaching HEAD"))?
+            }
+            None => engine.run(&name, &refs)?,
+        };
         for i in 0..n_params {
             params[i] = outs[i].f32().to_vec();
             moms[i] = outs[n_params + i].f32().to_vec();
@@ -260,6 +358,30 @@ pub fn train_fused(artifacts: &Path, opts: &TrainOpts) -> Result<TrainReport> {
     report.final_params = params;
     report.stats = reg.snapshot();
     Ok(report)
+}
+
+/// [`TaskRunner`] for the fused path: the manifest's `train_step` HLO is
+/// one monolithic kernel, so the whole step binds to the HEAD node and
+/// every other node is an ordering marker realized inside the fused
+/// kernel (its AR happens in the update formula itself — P = 1).
+struct FusedStep<'a, 'b> {
+    engine: &'a mut Engine,
+    name: &'a str,
+    inputs: &'a [&'b HostTensor],
+    outs: Option<Vec<HostTensor>>,
+}
+
+impl TaskRunner for FusedStep<'_, '_> {
+    fn run(&mut self, task: &Task) -> Result<()> {
+        if matches!(task.kind, TaskKind::Head) {
+            self.outs = Some(self.engine.run(self.name, self.inputs)?);
+        }
+        Ok(())
+    }
+
+    fn submit_ar(&mut self, _task: &Task) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// One worker's view of one attempt: per-step results up to either the
@@ -364,7 +486,14 @@ pub fn train_dp(artifacts: &Path, p: usize, opts: &TrainOpts) -> Result<TrainRep
     let mut recoveries: Vec<RecoveryEvent> = Vec::new();
 
     let final_params = loop {
-        let (runs, first_err) = run_attempt(&dir, active, opts, start, target - start, &boot, &plan, epoch, &reg);
+        // `start` can exceed the target: a stale checkpoint from a longer
+        // earlier run wins `latest_valid`, or `--resume --steps 0`. Both
+        // must be a clean no-op run of 0 steps, not an underflow.
+        let remaining = target.saturating_sub(start);
+        if start > target {
+            eprintln!("[ft] checkpoint step {start} is already past the target {target}: nothing to do");
+        }
+        let (runs, first_err) = run_attempt(&dir, active, opts, start, remaining, &boot, &plan, epoch, &reg);
         let detected = runs.iter().flatten().filter_map(|r| r.stopped_at).min();
         let Some(detected_step) = detected else {
             // no failure surfaced: clean finish, or a hard error that
@@ -547,6 +676,196 @@ fn run_attempt(
     (runs, first_err)
 }
 
+/// [`TaskRunner`] for the DP worker: binds each DAG node of the verified
+/// step plan to the native per-block entry points.
+///
+/// * `At(l, r, Fwd)` — microbatch `r`'s embedding (at the first layer)
+///   then the fused block-forward kernel. The block kernel realizes the
+///   whole At→Disp→Exp→Comb stage, so the layer's MoE nodes are ordering
+///   markers here — their measured footprint is the `dispatch` /
+///   `expert_fwd` / `combine` spans the kernel emits.
+/// * `Head` — closes the forward phase, runs the planned-fault hook,
+///   then the per-microbatch head/loss accumulation (Appendix H's 1/R
+///   scaling) and opens the backward phase.
+/// * `At(l, r, Bwd)` — `block_bwd` + gradient accumulation. Eq. 5 ranks
+///   backward microbatches in reverse FIFO order, so node `r` maps to
+///   accumulation microbatch `R−1−r`: execution order equals the legacy
+///   ascending-microbatch loop and the f32 gradient sums stay bitwise
+///   identical.
+/// * `Ar(l, c)` — chunk 0 enqueues the whole block's chunked all-reduce
+///   on the comm pool ([`exec::enqueue_block_ar`]). The DAG's chunk
+///   count follows the cost model's S_p partition of the block's AR
+///   bytes, while the pool re-partitions per tensor at the same chunk
+///   size (`prop_theorems` pins the boundary agreement), so chunks
+///   `c > 0` mark work already enqueued.
+struct GraphStep<'a> {
+    engine: &'a mut Engine,
+    corpus: &'a mut Corpus,
+    coll: &'a Arc<Collective>,
+    pool: &'a CommPool,
+    reg: &'a obs::Registry,
+    gstore: &'a Arc<Mutex<Vec<Vec<f32>>>>,
+    ar_fail: &'a Arc<Mutex<Option<CommError>>>,
+    params: &'a [Vec<f32>],
+    block_lits: &'a [Vec<PjRtBuffer>],
+    embed_lit: &'a PjRtBuffer,
+    normf_lit: &'a PjRtBuffer,
+    hl_spec: &'a ArtifactSpec,
+    x_spec: &'a BufSpec,
+    embed_fwd: &'a str,
+    block_fwd: &'a str,
+    block_bwd: &'a str,
+    head_loss: &'a str,
+    toks: Vec<HostTensor>,
+    acts: Vec<Vec<HostTensor>>, // acts[r][l]
+    dxs: Vec<HostTensor>,
+    loss: f32,
+    ar_chunks: usize,
+    killed: bool,
+    w: usize,
+    step: usize,
+    r_deg: usize,
+    l_blocks: usize,
+    n_params: usize,
+    bm: usize,
+    n_tok: usize,
+    chunk_elems: usize,
+    inv_r: f32,
+    sp_fwd: Option<obs::SpanGuard>,
+    t_fwd: Instant,
+    sp_bwd: Option<obs::SpanGuard>,
+    t_bwd: Instant,
+}
+
+impl GraphStep<'_> {
+    fn at_fwd(&mut self, l: usize, r: usize) -> Result<()> {
+        if l == 0 {
+            // forward At nodes run in ascending (layer, microbatch)
+            // order, so layer 0 draws the microbatches in the exact
+            // corpus-RNG order the legacy loop used
+            let t = HostTensor::I32(self.corpus.batch(self.bm, self.n_tok));
+            let x0 = self
+                .engine
+                .run(self.embed_fwd, &[&HostTensor::F32(self.params[0].clone()), &t])?;
+            self.toks.push(t);
+            self.acts.push(vec![x0
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("{}: no output", self.embed_fwd))?]);
+        }
+        let x_lit = self.engine.buffer_f32(self.acts[r][l].f32(), self.x_spec)?;
+        let mut inp: Vec<&PjRtBuffer> = self.block_lits[l].iter().collect();
+        inp.push(&x_lit);
+        let y = self.engine.run_buffers(self.block_fwd, &inp)?;
+        self.acts[r].push(
+            y.into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("{}: no output", self.block_fwd))?,
+        );
+        Ok(())
+    }
+
+    fn head(&mut self) -> Result<()> {
+        // forward phase ends exactly where the legacy loop ended it
+        drop(self.sp_fwd.take());
+        self.reg.histogram("fwd_s").observe(self.t_fwd.elapsed().as_secs_f64());
+
+        // planned kill: this worker crashes mid-step; survivors detect
+        // it through their deadline-bounded collective ops
+        if self.coll.should_die(self.w, self.step) {
+            eprintln!("[ft] worker {} dying at step {} (planned fault)", self.w, self.step);
+            self.coll.mark_dead(self.w);
+            self.killed = true;
+            bail!("planned fault at step {}", self.step);
+        }
+
+        let t_head = std::time::Instant::now();
+        for r in 0..self.r_deg {
+            let xf_lit = self
+                .engine
+                .buffer_f32(self.acts[r][self.l_blocks].f32(), &self.hl_spec.inputs[2])?;
+            let tok_lit = self.engine.buffer(&self.toks[r], &self.hl_spec.inputs[3])?;
+            let outs = self
+                .engine
+                .run_buffers(self.head_loss, &[self.embed_lit, self.normf_lit, &xf_lit, &tok_lit])?;
+            self.loss += outs[0].scalar_f32() * self.inv_r;
+            let mut dxf = outs[1].f32().to_vec();
+            scale(&mut dxf, self.inv_r);
+            self.dxs.push(HostTensor::F32(dxf));
+            let mut g = lock_recover(self.gstore);
+            axpy(&mut g[0], outs[2].f32(), self.inv_r);
+            axpy(&mut g[self.n_params - 1], outs[3].f32(), self.inv_r);
+        }
+        self.reg.histogram("head_s").observe(t_head.elapsed().as_secs_f64());
+        self.sp_bwd = Some(obs::span("bwd"));
+        self.t_bwd = std::time::Instant::now();
+        Ok(())
+    }
+
+    fn at_bwd(&mut self, l: usize, r_node: usize) -> Result<()> {
+        let r = self.r_deg - 1 - r_node; // Eq. 5 reverse-FIFO rank -> microbatch
+        let x_lit = self.engine.buffer_f32(self.acts[r][l].f32(), self.x_spec)?;
+        let dy_lit = self.engine.buffer_f32(self.dxs[r].f32(), self.x_spec)?;
+        let mut inp: Vec<&PjRtBuffer> = self.block_lits[l].iter().collect();
+        inp.push(&x_lit);
+        inp.push(&dy_lit);
+        let outs = self.engine.run_buffers(self.block_bwd, &inp)?;
+        {
+            let mut g = lock_recover(self.gstore);
+            for t in 0..9 {
+                axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
+            }
+        }
+        self.dxs[r] = outs
+            .into_iter()
+            .nth(9)
+            .ok_or_else(|| anyhow!("{}: missing dx output", self.block_bwd))?;
+        Ok(())
+    }
+}
+
+impl TaskRunner for GraphStep<'_> {
+    fn run(&mut self, task: &Task) -> Result<()> {
+        match task.kind {
+            TaskKind::At { l, r, phase: Phase::Fwd } => self.at_fwd(l, r),
+            TaskKind::At { l, r, phase: Phase::Bwd } => self.at_bwd(l, r),
+            TaskKind::Head => self.head(),
+            // realized inside the fused block kernels the At nodes run;
+            // the nodes order the schedule, the kernels' dispatch /
+            // expert / combine spans measure them
+            TaskKind::Disp { .. } | TaskKind::Exp { .. } | TaskKind::Comb { .. } => Ok(()),
+            TaskKind::Ar { .. } => bail!("AR node routed to the inline lane"),
+        }
+    }
+
+    fn submit_ar(&mut self, task: &Task) -> Result<()> {
+        let TaskKind::Ar { l, c } = task.kind else {
+            bail!("non-AR node routed to the AR lane");
+        };
+        if c == 0 {
+            let (step, l_blocks) = (self.step, self.l_blocks);
+            let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
+                (((step * (l_blocks + 2) + layer) as u64) << 24)
+                    | ((tensor as u64) << 16)
+                    | chunk as u64
+            };
+            self.ar_chunks += exec::enqueue_block_ar(
+                self.pool,
+                self.coll,
+                self.gstore,
+                self.w,
+                self.ar_fail,
+                l,
+                1 + l * 9,
+                9,
+                self.chunk_elems,
+                &mut ar_tag,
+            );
+        }
+        Ok(())
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_dp(
     w: usize,
@@ -607,6 +926,19 @@ fn worker_dp(
     let hl_spec = engine.manifest().get(&head_loss)?.clone();
     let x_spec = bf_spec.inputs[9].clone();
 
+    // graph mode: build + statically verify the step schedule once per
+    // attempt; every step executes this plan. Legacy skips it and runs
+    // the pre-executor hand-rolled loop below.
+    let plan = match opts.exec {
+        ExecMode::Graph => Some(build_plan(
+            &cfg,
+            l_blocks,
+            step_policy(r_deg, opts.overlap, opts.sp_bytes),
+            p,
+        )?),
+        ExecMode::Legacy => None,
+    };
+
     let mut run = AttemptRun::new();
     for i in 0..n_steps {
         let step = start_step + i;
@@ -628,111 +960,200 @@ fn worker_dp(
         let embed_lit = engine.buffer_f32(&params[0], &hl_spec.inputs[0])?;
         let normf_lit = engine.buffer_f32(&params[n_params - 1], &hl_spec.inputs[1])?;
 
-        // ---------------- forward (all microbatches) ----------------
-        let sp_fwd = obs::span("fwd");
-        let t_fwd = std::time::Instant::now();
-        let mut toks: Vec<HostTensor> = Vec::with_capacity(r_deg);
-        let mut acts: Vec<Vec<HostTensor>> = Vec::with_capacity(r_deg); // acts[r][l]
-        for _ in 0..r_deg {
-            let t = HostTensor::I32(corpus.batch(bm, n_tok));
-            let mut xs = Vec::with_capacity(l_blocks + 1);
-            let x0 = engine.run(&embed_fwd, &[&HostTensor::F32(params[0].clone()), &t])?;
-            xs.push(x0.into_iter().next().ok_or_else(|| anyhow!("{embed_fwd}: no output"))?);
-            for l in 0..l_blocks {
-                let x_lit = engine.buffer_f32(xs[l].f32(), &x_spec)?;
-                let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
-                inp.push(&x_lit);
-                let y = engine.run_buffers(&block_fwd, &inp)?;
-                xs.push(y.into_iter().next().ok_or_else(|| anyhow!("{block_fwd}: no output"))?);
-            }
-            toks.push(t);
-            acts.push(xs);
-        }
-        drop(sp_fwd);
-        reg.histogram("fwd_s").observe(t_fwd.elapsed().as_secs_f64());
-
-        // planned kill: this worker crashes mid-step; survivors detect
-        // it through their deadline-bounded collective ops
-        if coll.should_die(w, step) {
-            eprintln!("[ft] worker {w} dying at step {step} (planned fault)");
-            coll.mark_dead(w);
-            run.stopped_at = Some(step);
-            run.killed = true;
-            return Ok(run);
-        }
-
-        // ---------------- head / loss ----------------
-        let t_head = std::time::Instant::now();
-        let mut loss = 0.0f32;
-        let mut dxs: Vec<HostTensor> = Vec::with_capacity(r_deg);
         // gradient store shared with the comm pool: [n_params] tensors
         let gstore: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(
             params.iter().map(|q| vec![0.0f32; q.len()]).collect(),
         ));
-        for r in 0..r_deg {
-            let xf_lit = engine.buffer_f32(acts[r][l_blocks].f32(), &hl_spec.inputs[2])?;
-            let tok_lit = engine.buffer(&toks[r], &hl_spec.inputs[3])?;
-            let outs =
-                engine.run_buffers(&head_loss, &[&embed_lit, &normf_lit, &xf_lit, &tok_lit])?;
-            loss += outs[0].scalar_f32() * inv_r;
-            let mut dxf = outs[1].f32().to_vec();
-            scale(&mut dxf, inv_r);
-            dxs.push(HostTensor::F32(dxf));
-            let mut g = lock_recover(&gstore);
-            axpy(&mut g[0], outs[2].f32(), inv_r);
-            axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
-        }
-        reg.histogram("head_s").observe(t_head.elapsed().as_secs_f64());
 
-        // ---------------- backward per block, AR overlap ----------------
-        let sp_bwd = obs::span("bwd");
-        let t_bwd = std::time::Instant::now();
-        let mut ar_chunks = 0usize;
-        let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
-            (((step * (l_blocks + 2) + layer) as u64) << 24)
-                | ((tensor as u64) << 16)
-                | chunk as u64
-        };
-        for l in (0..l_blocks).rev() {
-            for r in 0..r_deg {
-                let x_lit = engine.buffer_f32(acts[r][l].f32(), &x_spec)?;
-                let dy_lit = engine.buffer_f32(dxs[r].f32(), &x_spec)?;
-                let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
-                inp.push(&x_lit);
-                inp.push(&dy_lit);
-                let outs = engine.run_buffers(&block_bwd, &inp)?;
-                {
-                    let mut g = lock_recover(&gstore);
-                    for t in 0..9 {
-                        axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
-                    }
+        let (loss, ar_chunks) = if let Some(plan) = &plan {
+            // ---------------- graph-driven step ----------------
+            // run_native walks the verified DAG: forward At nodes bind to
+            // embed + block kernels, Head to the loss turnaround (which
+            // also hosts the planned-fault hook), backward At nodes to
+            // block_bwd + gradient accumulation, Ar nodes to comm-pool
+            // submission; MoE nodes are realized inside the fused block
+            // kernels (see [`GraphStep`]).
+            let mut gs = GraphStep {
+                engine: &mut engine,
+                corpus: &mut corpus,
+                coll,
+                pool: &pool,
+                reg,
+                gstore: &gstore,
+                ar_fail: &ar_fail,
+                params: &params,
+                block_lits: &block_lits,
+                embed_lit: &embed_lit,
+                normf_lit: &normf_lit,
+                hl_spec: &hl_spec,
+                x_spec: &x_spec,
+                embed_fwd: &embed_fwd,
+                block_fwd: &block_fwd,
+                block_bwd: &block_bwd,
+                head_loss: &head_loss,
+                toks: Vec::with_capacity(r_deg),
+                acts: Vec::with_capacity(r_deg),
+                dxs: Vec::with_capacity(r_deg),
+                loss: 0.0,
+                ar_chunks: 0,
+                killed: false,
+                w,
+                step,
+                r_deg,
+                l_blocks,
+                n_params,
+                bm,
+                n_tok,
+                chunk_elems,
+                inv_r,
+                sp_fwd: Some(obs::span("fwd")),
+                t_fwd: std::time::Instant::now(),
+                sp_bwd: None,
+                t_bwd: std::time::Instant::now(),
+            };
+            match plan.run_native(&mut gs) {
+                Ok(()) => {}
+                Err(_) if gs.killed => {
+                    // the planned fault surfaced inside the Head node
+                    run.stopped_at = Some(step);
+                    run.killed = true;
+                    return Ok(run);
                 }
-                dxs[r] = outs.into_iter().nth(9).ok_or_else(|| anyhow!("{block_bwd}: missing dx output"))?;
+                Err(e) => return Err(e),
             }
-            if opts.overlap {
-                ar_chunks += enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+            let GraphStep {
+                toks,
+                dxs,
+                loss,
+                mut ar_chunks,
+                sp_bwd,
+                t_bwd,
+                ..
+            } = gs;
+            // epilogue outside the DAG (embedding/head tensors are not
+            // per-block nodes): embedding gradient via the input-lookup
+            // path, then the embed + normf ARs under the same tag scheme
+            // (layer ids l_blocks, l_blocks+1)
+            for r in 0..r_deg {
+                let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
+                let mut g = lock_recover(&gstore);
+                axpy(&mut g[0], outs[0].f32(), 1.0);
             }
-        }
-        // embedding gradient via the input-lookup path
-        for r in 0..r_deg {
-            let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
-            let mut g = lock_recover(&gstore);
-            axpy(&mut g[0], outs[0].f32(), 1.0);
-        }
-        // embed + normf AR (layer ids l_blocks, l_blocks+1)
-        if opts.overlap {
-            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
-            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
+                (((step * (l_blocks + 2) + layer) as u64) << 24)
+                    | ((tensor as u64) << 16)
+                    | chunk as u64
+            };
+            ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
+            ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            drop(sp_bwd);
+            reg.histogram("bwd_s").observe(t_bwd.elapsed().as_secs_f64());
+            (loss, ar_chunks)
         } else {
-            // centralized: everything after backward completes
-            for l in (0..l_blocks).rev() {
-                ar_chunks += enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+            // ---------------- legacy hand-rolled step ----------------
+            // forward (all microbatches)
+            let sp_fwd = obs::span("fwd");
+            let t_fwd = std::time::Instant::now();
+            let mut toks: Vec<HostTensor> = Vec::with_capacity(r_deg);
+            let mut acts: Vec<Vec<HostTensor>> = Vec::with_capacity(r_deg); // acts[r][l]
+            for _ in 0..r_deg {
+                let t = HostTensor::I32(corpus.batch(bm, n_tok));
+                let mut xs = Vec::with_capacity(l_blocks + 1);
+                let x0 = engine.run(&embed_fwd, &[&HostTensor::F32(params[0].clone()), &t])?;
+                xs.push(x0.into_iter().next().ok_or_else(|| anyhow!("{embed_fwd}: no output"))?);
+                for l in 0..l_blocks {
+                    let x_lit = engine.buffer_f32(xs[l].f32(), &x_spec)?;
+                    let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
+                    inp.push(&x_lit);
+                    let y = engine.run_buffers(&block_fwd, &inp)?;
+                    xs.push(y.into_iter().next().ok_or_else(|| anyhow!("{block_fwd}: no output"))?);
+                }
+                toks.push(t);
+                acts.push(xs);
             }
-            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
-            ar_chunks += enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
-        }
-        drop(sp_bwd);
-        reg.histogram("bwd_s").observe(t_bwd.elapsed().as_secs_f64());
+            drop(sp_fwd);
+            reg.histogram("fwd_s").observe(t_fwd.elapsed().as_secs_f64());
+
+            // planned kill: this worker crashes mid-step; survivors
+            // detect it through their deadline-bounded collective ops
+            if coll.should_die(w, step) {
+                eprintln!("[ft] worker {w} dying at step {step} (planned fault)");
+                coll.mark_dead(w);
+                run.stopped_at = Some(step);
+                run.killed = true;
+                return Ok(run);
+            }
+
+            // head / loss
+            let t_head = std::time::Instant::now();
+            let mut loss = 0.0f32;
+            let mut dxs: Vec<HostTensor> = Vec::with_capacity(r_deg);
+            for r in 0..r_deg {
+                let xf_lit = engine.buffer_f32(acts[r][l_blocks].f32(), &hl_spec.inputs[2])?;
+                let tok_lit = engine.buffer(&toks[r], &hl_spec.inputs[3])?;
+                let outs =
+                    engine.run_buffers(&head_loss, &[&embed_lit, &normf_lit, &xf_lit, &tok_lit])?;
+                loss += outs[0].scalar_f32() * inv_r;
+                let mut dxf = outs[1].f32().to_vec();
+                scale(&mut dxf, inv_r);
+                dxs.push(HostTensor::F32(dxf));
+                let mut g = lock_recover(&gstore);
+                axpy(&mut g[0], outs[2].f32(), inv_r);
+                axpy(&mut g[n_params - 1], outs[3].f32(), inv_r);
+            }
+            reg.histogram("head_s").observe(t_head.elapsed().as_secs_f64());
+
+            // backward per block, AR overlap
+            let sp_bwd = obs::span("bwd");
+            let t_bwd = std::time::Instant::now();
+            let mut ar_chunks = 0usize;
+            let mut ar_tag = |layer: usize, tensor: usize, chunk: usize| -> u64 {
+                (((step * (l_blocks + 2) + layer) as u64) << 24)
+                    | ((tensor as u64) << 16)
+                    | chunk as u64
+            };
+            for l in (0..l_blocks).rev() {
+                for r in 0..r_deg {
+                    let x_lit = engine.buffer_f32(acts[r][l].f32(), &x_spec)?;
+                    let dy_lit = engine.buffer_f32(dxs[r].f32(), &x_spec)?;
+                    let mut inp: Vec<&PjRtBuffer> = block_lits[l].iter().collect();
+                    inp.push(&x_lit);
+                    inp.push(&dy_lit);
+                    let outs = engine.run_buffers(&block_bwd, &inp)?;
+                    {
+                        let mut g = lock_recover(&gstore);
+                        for t in 0..9 {
+                            axpy(&mut g[1 + l * 9 + t], outs[t].f32(), 1.0);
+                        }
+                    }
+                    dxs[r] = outs.into_iter().nth(9).ok_or_else(|| anyhow!("{block_bwd}: missing dx output"))?;
+                }
+                if opts.overlap {
+                    ar_chunks += exec::enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                }
+            }
+            // embedding gradient via the input-lookup path
+            for r in 0..r_deg {
+                let outs = engine.run(&embed_bwd, &[&toks[r], &dxs[r]])?;
+                let mut g = lock_recover(&gstore);
+                axpy(&mut g[0], outs[0].f32(), 1.0);
+            }
+            // embed + normf AR (layer ids l_blocks, l_blocks+1)
+            if opts.overlap {
+                ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
+                ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            } else {
+                // centralized: everything after backward completes
+                for l in (0..l_blocks).rev() {
+                    ar_chunks += exec::enqueue_block_ar(&pool, coll, &gstore, w, &ar_fail, l, 1 + l * 9, 9, chunk_elems, &mut ar_tag);
+                }
+                ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, 0, l_blocks, chunk_elems, &mut ar_tag);
+                ar_chunks += exec::enqueue_tensor_ar(&pool, coll, &gstore, w, &ar_fail, n_params - 1, l_blocks + 1, chunk_elems, &mut ar_tag);
+            }
+            drop(sp_bwd);
+            reg.histogram("bwd_s").observe(t_bwd.elapsed().as_secs_f64());
+            (loss, ar_chunks)
+        };
         reg.counter("ar_chunks").add(ar_chunks as u64);
         {
             let _sp = obs::span("ar_drain");
@@ -756,6 +1177,8 @@ fn worker_dp(
             reg.histogram("update_s").observe(t_upd.elapsed().as_secs_f64());
         }
         let mut lbuf = [loss];
+        // scalar loss mean, not a gradient chunk: not part of the scheduled DAG
+        // flowmoe-lint: allow(trainer_direct_ar) — see above
         if let Err(e) = coll.all_reduce_sum(w, u64::MAX - step as u64, &mut lbuf) {
             return Ok(abort_attempt(run, step, coll, &e));
         }
@@ -810,79 +1233,9 @@ fn worker_dp(
 
 // `scale`/`axpy` for the gradient hot loops come from
 // `backend::kernels` (dispatch-routed: f32x8 under the simd tier).
-
-/// Enqueue chunked all-reduce jobs for one tensor of the grad store.
-/// Returns the number of chunks enqueued. An AR failure is parked in
-/// `ar_fail` (first one wins) and later chunks of the step short-circuit.
-#[allow(clippy::too_many_arguments)]
-fn enqueue_tensor_ar(
-    pool: &CommPool,
-    coll: &Arc<Collective>,
-    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
-    rank: usize,
-    ar_fail: &Arc<Mutex<Option<CommError>>>,
-    tensor_idx: usize,
-    layer_id: usize,
-    chunk_elems: usize,
-    tag: &mut impl FnMut(usize, usize, usize) -> u64,
-) -> usize {
-    let len = lock_recover(gstore)[tensor_idx].len();
-    let ranges = partition_ranges(len, chunk_elems);
-    let n = ranges.len();
-    for (c, (start, l)) in ranges.into_iter().enumerate() {
-        let coll = Arc::clone(coll);
-        let gstore = Arc::clone(gstore);
-        let ar_fail = Arc::clone(ar_fail);
-        let t = tag(layer_id, tensor_idx, c);
-        pool.submit_ar(Box::new(move || {
-            // runs on the comm-pool thread: this span is the measured
-            // communication time of one AR chunk
-            let _sp = obs::span("ar_chunk");
-            if lock_recover(&ar_fail).is_some() {
-                return; // a chunk already failed this step; don't pay the deadline again
-            }
-            let mut chunk = {
-                let g = lock_recover(&gstore);
-                g[tensor_idx][start..start + l].to_vec()
-            };
-            match coll.all_reduce_sum(rank, t, &mut chunk) {
-                Ok(()) => {
-                    let mut g = lock_recover(&gstore);
-                    g[tensor_idx][start..start + l].copy_from_slice(&chunk);
-                }
-                Err(e) => {
-                    let mut f = lock_recover(&ar_fail);
-                    if f.is_none() {
-                        *f = Some(e);
-                    }
-                }
-            }
-        }));
-    }
-    n
-}
-
-/// Enqueue chunked AR for all tensors of one block. Returns the number
-/// of chunks enqueued.
-#[allow(clippy::too_many_arguments)]
-fn enqueue_block_ar(
-    pool: &CommPool,
-    coll: &Arc<Collective>,
-    gstore: &Arc<Mutex<Vec<Vec<f32>>>>,
-    rank: usize,
-    ar_fail: &Arc<Mutex<Option<CommError>>>,
-    layer_id: usize,
-    first_tensor: usize,
-    n_tensors: usize,
-    chunk_elems: usize,
-    tag: &mut impl FnMut(usize, usize, usize) -> u64,
-) -> usize {
-    let mut n = 0;
-    for t in 0..n_tensors {
-        n += enqueue_tensor_ar(pool, coll, gstore, rank, ar_fail, first_tensor + t, layer_id, chunk_elems, tag);
-    }
-    n
-}
+// The chunked-AR submission helpers moved to `exec::enqueue_tensor_ar` /
+// `exec::enqueue_block_ar`: they are the runtime realization of the
+// DAG's Ar nodes, owned by the executor that schedules them.
 
 #[cfg(test)]
 mod tests {

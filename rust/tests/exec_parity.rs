@@ -1,0 +1,99 @@
+//! Executor parity: the graph-driven step engine (a policy-built,
+//! `analyze::check_dag`-verified DAG walked by `exec::Plan::run_native`)
+//! must be bitwise identical to the legacy hand-rolled step loop it
+//! replaced — same losses, same final parameters, for every worker
+//! count, both AR placements (Pipe-AR overlap and centralized), and the
+//! fused single-kernel path. Any divergence means the schedule the
+//! analyzer certifies and the schedule the runtime executes have
+//! drifted apart again — the exact bug the executor exists to close.
+
+use std::path::PathBuf;
+
+use flowmoe::trainer::{train_dp, train_fused, ExecMode, TrainOpts, TrainReport};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn assert_bitwise_losses(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: step {i}: {x} vs {y}");
+    }
+}
+
+fn assert_bitwise_params(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.len(), pb.len(), "{what}: tensor {i} length");
+        for (j, (x, y)) in pa.iter().zip(pb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}[{j}]: {x} vs {y}");
+        }
+    }
+}
+
+fn assert_reports_match(graph: &TrainReport, legacy: &TrainReport, what: &str) {
+    assert_bitwise_losses(&graph.losses, &legacy.losses, what);
+    assert_bitwise_params(&graph.final_params, &legacy.final_params, what);
+}
+
+/// Run the same config twice — graph-driven and legacy — and return both.
+fn dp_pair(p: usize, mut opts: TrainOpts) -> (TrainReport, TrainReport) {
+    let dir = artifacts();
+    opts.exec = ExecMode::Graph;
+    let graph = train_dp(&dir, p, &opts).expect("graph run");
+    opts.exec = ExecMode::Legacy;
+    let legacy = train_dp(&dir, p, &opts).expect("legacy run");
+    (graph, legacy)
+}
+
+/// Pipe-AR overlap (the FlowMoE policy) across worker counts, including
+/// the degenerate single-worker pipeline.
+#[test]
+fn dp_overlap_graph_matches_legacy_across_worker_counts() {
+    for p in [1usize, 2, 3] {
+        let mut opts = TrainOpts::new("tiny", 4);
+        opts.seed = 100 + p as u64;
+        let (graph, legacy) = dp_pair(p, opts);
+        assert_reports_match(&graph, &legacy, &format!("overlap P={p}"));
+    }
+}
+
+/// Centralized AR (the FlowMoE-AT policy): every chunk is submitted only
+/// after the full backward pass, so the graph engine must reproduce the
+/// legacy post-backward enqueue order exactly.
+#[test]
+fn dp_centralized_graph_matches_legacy() {
+    let mut opts = TrainOpts::new("tiny", 4);
+    opts.seed = 211;
+    opts.overlap = false;
+    let (graph, legacy) = dp_pair(2, opts);
+    assert_reports_match(&graph, &legacy, "centralized P=2");
+}
+
+/// A small AR chunk size forces every gradient tensor through multiple
+/// `Ar{l, c}` nodes, exercising the chunk-chain dependencies and the
+/// executor's submit-before-inline drain order.
+#[test]
+fn dp_small_chunks_graph_matches_legacy() {
+    let mut opts = TrainOpts::new("tiny", 3);
+    opts.seed = 307;
+    opts.sp_bytes = 2048;
+    let (graph, legacy) = dp_pair(2, opts);
+    assert_reports_match(&graph, &legacy, "sp_bytes=2048 P=2");
+}
+
+/// The fused single-kernel trainer: graph mode binds the whole step to
+/// the Head node of a Vanilla-EP plan, and must match the legacy direct
+/// kernel loop bit for bit.
+#[test]
+fn fused_graph_matches_legacy() {
+    let dir = artifacts();
+    let mut opts = TrainOpts::new("tiny", 4);
+    opts.seed = 409;
+    opts.exec = ExecMode::Graph;
+    let graph = train_fused(&dir, &opts).expect("graph run");
+    opts.exec = ExecMode::Legacy;
+    let legacy = train_fused(&dir, &opts).expect("legacy run");
+    assert_reports_match(&graph, &legacy, "fused");
+}

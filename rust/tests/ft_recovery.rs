@@ -138,6 +138,83 @@ fn kill_recovery_matches_fresh_p_minus_1_run() {
     assert_bitwise_params(&killed.final_params, &fresh.final_params, "post-recovery params");
 }
 
+/// Regression: recovery restores the *newest valid* checkpoint, and a
+/// stale directory can hold one from a longer earlier run whose step is
+/// already past this run's target. The remaining-steps math must then
+/// be a clean zero-step no-op (finish with the checkpoint's params) —
+/// not an underflow that panics or spins the workers on a wrapped-around
+/// step count.
+#[test]
+fn recovery_from_checkpoint_past_target_is_clean_noop() {
+    let dir = artifacts();
+    let ckdir = tmp_ckpt_dir("stale_newer");
+
+    // A longer earlier run leaves checkpoints at steps 2, 4 and 6.
+    let mut long = TrainOpts::new("tiny", 6);
+    long.seed = 41;
+    long.ckpt_dir = Some(ckdir.clone());
+    long.ckpt_every = 2;
+    train_dp(&dir, 3, &long).unwrap();
+    let ck6 = flowmoe::ft::latest_valid(&ckdir).unwrap().expect("step-6 checkpoint").1;
+    assert_eq!(ck6.step, 6);
+
+    // A shorter rerun against the same directory targets step 4 and is
+    // killed at step 3: recovery scans the directory, finds step 6 — a
+    // checkpoint *past* the target — and must finish as a no-op.
+    let mut short = TrainOpts::new("tiny", 4);
+    short.seed = 41;
+    short.ckpt_dir = Some(ckdir.clone());
+    short.ckpt_every = 0; // never write: keep step 6 the newest
+    short.detect_ms = 5000;
+    short.fault = Some(FaultPlan {
+        seed: 13,
+        kill: Some((2, 3)),
+        ..FaultPlan::default()
+    });
+    let report = train_dp(&dir, 3, &short).unwrap();
+    let _ = std::fs::remove_dir_all(&ckdir);
+
+    assert_eq!(report.recoveries.len(), 1, "exactly one recovery");
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.detected_step, 3);
+    assert_eq!(ev.ckpt_step, 6, "the stale step-6 checkpoint is the newest valid one");
+    assert_eq!(ev.steps_lost, 0, "nothing re-run: the checkpoint is ahead of the fault");
+    assert_bitwise_params(
+        &report.final_params,
+        &ck6.params,
+        "no-op run must finish with the checkpoint's params",
+    );
+}
+
+/// `--resume --steps 0` (target == checkpoint step) is the boundary of
+/// the same math: zero remaining steps, empty loss CSV, checkpoint
+/// params returned untouched.
+#[test]
+fn resume_with_zero_steps_is_clean_noop() {
+    let dir = artifacts();
+    let ckdir = tmp_ckpt_dir("resume_zero");
+
+    let mut first = TrainOpts::new("tiny", 3);
+    first.seed = 23;
+    first.ckpt_dir = Some(ckdir.clone());
+    first.ckpt_every = 3;
+    train_dp(&dir, 2, &first).unwrap();
+    let ck = flowmoe::ft::latest_valid(&ckdir).unwrap().expect("step-3 checkpoint").1;
+    assert_eq!(ck.step, 3);
+
+    let mut zero = TrainOpts::new("tiny", 0);
+    zero.seed = 23;
+    zero.ckpt_dir = Some(ckdir.clone());
+    zero.resume = true;
+    let report = train_dp(&dir, 2, &zero).unwrap();
+    let _ = std::fs::remove_dir_all(&ckdir);
+
+    assert_eq!(report.start_step, 3, "resume picks up at the checkpoint step");
+    assert!(report.losses.is_empty(), "zero steps requested, zero steps run");
+    assert!(report.recoveries.is_empty());
+    assert_bitwise_params(&report.final_params, &ck.params, "params pass through untouched");
+}
+
 /// Hang-class regression on the EP cluster path: a worker killed before
 /// the dispatch A2A must surface as a typed error within the detection
 /// window — the survivors' `a2a recv` calls error out instead of

@@ -268,12 +268,111 @@ fn prop_cost_ar_chunks_matches_partition_count() {
         let chunk_elems = rng.range(1, 1 << 21);
         let sp_bytes = (chunk_elems * 4) as f64;
         let elems = (costs.ar_bytes / 4.0) as usize;
-        let parts = flowmoe::commpool::partition_ranges(elems, chunk_elems).len().max(1);
+        let ranges = flowmoe::commpool::partition_ranges(elems, chunk_elems);
+        let parts = ranges.len().max(1);
         let chunks = costs.ar_chunks(sp_bytes);
         prop_assert!(
             chunks == parts,
             "ar_chunks({sp_bytes}) = {chunks} but partition_ranges({elems}, {chunk_elems}) has {parts}"
         );
+        // Boundary agreement (executor unification): the DAG's AR node
+        // `Ar { l, c }` stands for the element range starting at
+        // c*chunk_elems, so the collective's partitions must tile exactly
+        // that grid — same starts, full chunks everywhere except a final
+        // remainder, covering [0, elems) with no gap or overlap. With
+        // f32 gradients the byte boundaries are then exactly 4x the
+        // element boundaries, i.e. chunk c starts at byte c*sp_bytes.
+        let mut pos = 0usize;
+        for (c, &(start, len)) in ranges.iter().enumerate() {
+            prop_assert!(
+                start == c * chunk_elems,
+                "chunk {c} starts at element {start}, executor node expects {}",
+                c * chunk_elems
+            );
+            prop_assert!(start == pos, "gap/overlap at chunk {c}: start {start} != {pos}");
+            let want = chunk_elems.min(elems - start);
+            prop_assert!(len == want && len > 0, "chunk {c} len {len} != {want}");
+            prop_assert!(
+                (start * 4) as f64 == c as f64 * sp_bytes,
+                "chunk {c} byte offset {} != c*sp_bytes {}",
+                start * 4,
+                c as f64 * sp_bytes
+            );
+            pos = start + len;
+        }
+        prop_assert!(pos == elems, "partitions cover {pos} of {elems} elements");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlap_measured_equals_modeled_on_shared_fixture() {
+    // Guard for the unified executor's report: one schedule rendered both
+    // ways — as measured `obs::SpanRec`s (whole-second ns timestamps, as
+    // the runtime tracer would record them) and as the equivalent
+    // simulated `Timeline` — must yield the same OverlapStats from
+    // `from_spans` and `from_timeline`. `from_timeline`'s compute busy is
+    // a per-span *sum*, so the fixture keeps each stream's spans
+    // non-overlapping (exactly what a one-task-at-a-time stream produces);
+    // Comm and ArComm spans may still overlap *each other*, exercising
+    // the union sweep identically on both sides.
+    use flowmoe::obs::{OverlapStats, SpanRec};
+    use flowmoe::sim::{Span, Timeline};
+    check(120, |rng| {
+        let compute_labels: &[&'static str] = &["mha_fwd", "expert_fwd", "head_loss"];
+        let comm_labels: &[&'static str] = &["dispatch", "combine", "a2a_dispatch"];
+        let ar_labels: &[&'static str] = &["ar_chunk"];
+        let mut spans: Vec<Span> = Vec::new();
+        let mut recs: Vec<SpanRec> = Vec::new();
+        let mut makespan = 0u64;
+        let mut task = 0usize;
+        for (stream, labels, tid) in [
+            (Stream::Compute, compute_labels, 0u32),
+            (Stream::Comm, comm_labels, 1u32),
+            (Stream::ArComm, ar_labels, 2u32),
+        ] {
+            // the compute lane always has work and is anchored at t=0 so
+            // both walls measure from the same origin
+            let anchored = stream == Stream::Compute;
+            let n = if anchored { 1 + rng.below(4) } else { rng.below(4) };
+            let mut cursor: u64 = if anchored { 0 } else { rng.below(3) as u64 };
+            for i in 0..n {
+                let start = cursor;
+                let end = start + 1 + rng.below(5) as u64;
+                spans.push(Span {
+                    task,
+                    start: start as f64,
+                    end: end as f64,
+                    stream,
+                });
+                recs.push(SpanRec {
+                    label: *rng.choose(labels),
+                    tid,
+                    seq: i as u32,
+                    start_ns: start * 1_000_000_000,
+                    end_ns: end * 1_000_000_000,
+                });
+                task += 1;
+                makespan = makespan.max(end);
+                cursor = end + rng.below(3) as u64;
+            }
+        }
+        let measured = OverlapStats::from_spans(&recs);
+        let modeled = OverlapStats::from_timeline(&Timeline {
+            spans,
+            makespan: makespan as f64,
+        });
+        for (a, b, name) in [
+            (measured.wall_s, modeled.wall_s, "wall"),
+            (measured.compute_busy_s, modeled.compute_busy_s, "compute busy"),
+            (measured.comm_busy_s, modeled.comm_busy_s, "comm busy"),
+            (measured.overlap_s, modeled.overlap_s, "overlap"),
+        ] {
+            prop_assert!(
+                (a - b).abs() < 1e-9,
+                "{name}: measured {a} != modeled {b}"
+            );
+        }
         Ok(())
     });
 }
